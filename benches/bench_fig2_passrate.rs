@@ -1,0 +1,72 @@
+//! Figure 2 regeneration:
+//!   (left / middle) pass-rate histograms of 1000 synth-dapo17k prompts at
+//!   50 samples per prompt, for the sim-1.5b and sim-7b base models;
+//!   (right) average per-step inference vs training time for RLOO.
+//!
+//!     cargo bench --bench bench_fig2_passrate
+//!
+//! Paper shape: a dominant spike at pass rate exactly 0 (34% / 25.8%), a
+//! smaller spike near 1, mass spread over the middle; inference time ~2x
+//! training time per step.
+
+use speed_rl::bench::Table;
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::data::dataset::{Dataset, DatasetKind};
+use speed_rl::driver;
+use speed_rl::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
+use speed_rl::util::rng::Rng;
+
+fn histogram(spec: SimModelSpec) -> ([usize; 11], f64) {
+    let data = Dataset::training(DatasetKind::SynthDapo17k, 1000, 0, 20);
+    let policy = SimPolicy::new(spec, SimCostModel::default(), 7);
+    let mut rng = Rng::new(99);
+    let mut bins = [0usize; 11]; // bin i: pass rate in [i/10-0.05, i/10+0.05); bin 0 = exactly 0 handled below
+    let mut zero = 0usize;
+    for t in &data.instances {
+        let p = policy.pass_prob(t);
+        // 50-sample empirical pass rate, like the paper's protocol
+        let hits = (0..50).filter(|_| rng.bool(p)).count();
+        if hits == 0 {
+            zero += 1;
+        }
+        let rate = hits as f64 / 50.0;
+        let bin = ((rate * 10.0).round() as usize).min(10);
+        bins[bin] += 1;
+    }
+    (bins, zero as f64 / data.len() as f64)
+}
+
+fn main() {
+    println!("Figure 2 (left/middle): pass-rate histograms, 1000 prompts x 50 samples\n");
+    for (spec, paper_zero) in
+        [(SimModelSpec::qwen_15b(), 0.34), (SimModelSpec::qwen_7b(), 0.258)]
+    {
+        let (bins, zero) = histogram(spec);
+        println!("{} (paper zero-pass mass: {paper_zero}):", spec.name);
+        let max = *bins.iter().max().unwrap();
+        for (i, n) in bins.iter().enumerate() {
+            let bar = "#".repeat((n * 50 / max.max(1)).max(usize::from(*n > 0)));
+            println!("  {:>4.1} | {:<50} {}", i as f64 / 10.0, bar, n);
+        }
+        println!("  zero-pass mass (exactly 0/50): {:.1}%\n", zero * 100.0);
+    }
+
+    println!("Figure 2 (right): average per-step inference vs training time (RLOO)\n");
+    let mut cfg = RunConfig::default();
+    cfg.curriculum = CurriculumKind::Uniform;
+    cfg.max_steps = 40;
+    cfg.eval_every = 0;
+    cfg.dataset_size = 8000;
+    cfg.label = "RLOO".into();
+    let rec = driver::run_sim(&cfg).expect("run");
+    let last = rec.steps.last().unwrap();
+    let n = rec.steps.len() as f64;
+    let mut t = Table::new(&["phase", "s/step", "share"]);
+    let inf = last.inference_s / n;
+    let upd = last.update_s / n;
+    t.row(vec!["inference".into(), format!("{inf:.1}"), format!("{:.0}%", 100.0 * inf / (inf + upd))]);
+    t.row(vec!["training".into(), format!("{upd:.1}"), format!("{:.0}%", 100.0 * upd / (inf + upd))]);
+    t.print();
+    println!("\npaper shape: inference ~2x training per step (Fig 2 right). ratio here: {:.1}x", inf / upd);
+}

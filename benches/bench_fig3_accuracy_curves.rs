@@ -1,0 +1,92 @@
+//! Figure 3 + Figure 6 regeneration: validation-accuracy-vs-wall-clock
+//! curves for SPEED variants against their base algorithms.
+//!
+//! Fig 3: sim-7b on synth-deepscale, RLOO vs SPEED-RLOO (top) and DAPO vs
+//! SPEED-DAPO (bottom), across all four benchmarks.
+//! Fig 6 (grid mode): all seven paper configuration rows.
+//!
+//!     cargo bench --bench bench_fig3_accuracy_curves [--grid]
+
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::data::dataset::DatasetKind;
+use speed_rl::driver;
+use speed_rl::metrics::RunRecord;
+use speed_rl::rl::algo::BaseAlgo;
+use speed_rl::util::stats::ema_curve;
+
+fn run(model: &str, dataset: DatasetKind, curriculum: CurriculumKind, algo: BaseAlgo, label: &str) -> RunRecord {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.to_string();
+    cfg.dataset = dataset;
+    cfg.dataset_size = 16_000;
+    cfg.curriculum = curriculum;
+    cfg.algo = algo;
+    cfg.label = label.to_string();
+    cfg.max_steps = 200;
+    cfg.eval_every = 10;
+    driver::run_sim(&cfg).expect("sim run")
+}
+
+fn print_curves(recs: &[RunRecord]) {
+    for bench in ["dapo1k", "math500", "amc2023", "aime"] {
+        println!("  benchmark {bench}:");
+        for rec in recs {
+            let curve = rec.curve(bench);
+            let accs: Vec<f64> = curve.iter().map(|(_, a)| *a).collect();
+            let smooth = ema_curve(&accs, 0.5); // bold EMA curves like Fig 6
+            let pts: Vec<String> = curve
+                .iter()
+                .zip(&smooth)
+                .step_by(2)
+                .map(|((t, _), a)| format!("({:.1}h,{a:.3})", t / 3600.0))
+                .collect();
+            println!("    {:<12} {}", rec.label, pts.join(" "));
+        }
+    }
+}
+
+fn main() {
+    let grid = std::env::args().any(|a| a == "--grid");
+
+    println!("Figure 3: sim-7b on synth-deepscale\n");
+    let rows = [
+        ("RLOO", CurriculumKind::Uniform, BaseAlgo::Rloo),
+        ("SPEED-RLOO", CurriculumKind::Speed, BaseAlgo::Rloo),
+        ("DAPO", CurriculumKind::DapoFilter, BaseAlgo::Dapo),
+        ("SPEED-DAPO", CurriculumKind::Speed, BaseAlgo::Dapo),
+    ];
+    let recs: Vec<RunRecord> = rows
+        .iter()
+        .map(|(l, c, a)| {
+            eprintln!("[fig3] {l}");
+            run("sim-7b", DatasetKind::SynthDeepScale, *c, *a, l)
+        })
+        .collect();
+    print_curves(&recs);
+
+    if grid {
+        println!("\nFigure 6: full configuration grid\n");
+        let configs: [(&str, DatasetKind, BaseAlgo); 7] = [
+            ("sim-7b", DatasetKind::SynthDeepScale, BaseAlgo::Rloo),
+            ("sim-7b", DatasetKind::SynthDeepScale, BaseAlgo::Dapo),
+            ("sim-7b", DatasetKind::SynthDapo17k, BaseAlgo::Rloo),
+            ("sim-7b", DatasetKind::SynthDapo17k, BaseAlgo::Dapo),
+            ("sim-1.5b", DatasetKind::SynthNumina, BaseAlgo::Rloo),
+            ("sim-1.5b", DatasetKind::SynthNumina, BaseAlgo::Dapo),
+            ("sim-1.5b", DatasetKind::SynthDapo17k, BaseAlgo::Rloo),
+        ];
+        for (model, dataset, algo) in configs {
+            let base_kind = match algo {
+                BaseAlgo::Dapo => CurriculumKind::DapoFilter,
+                _ => CurriculumKind::Uniform,
+            };
+            println!("\nconfig: {model} + {} + {}", dataset.name(), algo.name());
+            let recs = vec![
+                run(model, dataset, base_kind, algo, algo.name()),
+                run(model, dataset, CurriculumKind::Speed, algo, &format!("SPEED-{}", algo.name())),
+            ];
+            print_curves(&recs);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Figure 4 regeneration: average training accuracy (left) and gradient
+//! norm (right) during training — RLOO vs SPEED-RLOO, sim-7b on
+//! synth-dapo17k.
+//!
+//!     cargo bench --bench bench_fig4_gradnorm
+//!
+//! Paper shape: SPEED keeps training pass rates much closer to 0.5
+//! (especially early) and produces substantially larger gradient norms.
+
+use speed_rl::bench::Table;
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::driver;
+use speed_rl::util::stats::ema_curve;
+
+fn main() {
+    let mut recs = Vec::new();
+    for (label, kind) in [("RLOO", CurriculumKind::Uniform), ("SPEED-RLOO", CurriculumKind::Speed)] {
+        let mut cfg = RunConfig::default();
+        cfg.curriculum = kind;
+        cfg.label = label.to_string();
+        cfg.max_steps = 150;
+        cfg.eval_every = 0;
+        cfg.dataset_size = 16_000;
+        eprintln!("[fig4] {label}");
+        recs.push(driver::run_sim(&cfg).expect("run"));
+    }
+
+    println!("Figure 4 (left): average training pass rate (EMA, every 10 steps)\n");
+    let mut t = Table::new(&["step", "RLOO", "SPEED-RLOO", "|RLOO-0.5|", "|SPEED-0.5|"]);
+    let curves: Vec<Vec<f64>> = recs
+        .iter()
+        .map(|r| ema_curve(&r.steps.iter().map(|s| s.train_pass_rate).collect::<Vec<_>>(), 0.2))
+        .collect();
+    for i in (0..curves[0].len()).step_by(10) {
+        t.row(vec![
+            i.to_string(),
+            format!("{:.3}", curves[0][i]),
+            format!("{:.3}", curves[1][i]),
+            format!("{:.3}", (curves[0][i] - 0.5).abs()),
+            format!("{:.3}", (curves[1][i] - 0.5).abs()),
+        ]);
+    }
+    t.print();
+
+    println!("\nFigure 4 (right): gradient norm (EMA, every 10 steps)\n");
+    let mut t = Table::new(&["step", "RLOO", "SPEED-RLOO", "ratio"]);
+    let gcurves: Vec<Vec<f64>> = recs
+        .iter()
+        .map(|r| ema_curve(&r.steps.iter().map(|s| s.grad_norm).collect::<Vec<_>>(), 0.2))
+        .collect();
+    for i in (0..gcurves[0].len()).step_by(10) {
+        t.row(vec![
+            i.to_string(),
+            format!("{:.3}", gcurves[0][i]),
+            format!("{:.3}", gcurves[1][i]),
+            format!("{:.2}x", gcurves[1][i] / gcurves[0][i].max(1e-9)),
+        ]);
+    }
+    t.print();
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let d_rloo = mean(&recs[0].steps.iter().map(|s| (s.train_pass_rate - 0.5).abs()).collect::<Vec<_>>());
+    let d_speed = mean(&recs[1].steps.iter().map(|s| (s.train_pass_rate - 0.5).abs()).collect::<Vec<_>>());
+    let g_rloo = mean(&recs[0].steps.iter().map(|s| s.grad_norm).collect::<Vec<_>>());
+    let g_speed = mean(&recs[1].steps.iter().map(|s| s.grad_norm).collect::<Vec<_>>());
+    println!(
+        "\nsummary: mean |train acc - 0.5|: RLOO {d_rloo:.3} vs SPEED {d_speed:.3}; \
+         mean grad norm: RLOO {g_rloo:.3} vs SPEED {g_speed:.3} ({:.1}x)",
+        g_speed / g_rloo
+    );
+}

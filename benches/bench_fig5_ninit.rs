@@ -1,0 +1,64 @@
+//! Figure 5 regeneration: the N_init ablation (4 / 6 / 8) for SPEED-RLOO
+//! on sim-1.5b over synth-dapo17k — validation accuracy on dapo1k (left),
+//! average gradient norm (middle), average training pass rate (right).
+//!
+//!     cargo bench --bench bench_fig5_ninit
+//!
+//! Paper shape (§5.2): larger N_init => smaller gradient norms, training
+//! accuracy drifting away from 0.5, slower accuracy rise.
+
+use speed_rl::bench::Table;
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::driver;
+use speed_rl::metrics::RunRecord;
+
+fn main() {
+    let n_total = 24;
+    let mut recs: Vec<(usize, RunRecord)> = Vec::new();
+    for n_init in [4usize, 6, 8] {
+        let mut cfg = RunConfig::default();
+        cfg.model = "sim-1.5b".into();
+        cfg.curriculum = CurriculumKind::Speed;
+        cfg.n_init = n_init;
+        cfg.n_cont = n_total - n_init;
+        cfg.max_steps = 150;
+        cfg.eval_every = 10;
+        cfg.dataset_size = 16_000;
+        cfg.label = format!("N_init={n_init}");
+        eprintln!("[fig5] {}", cfg.label);
+        recs.push((n_init, driver::run_sim(&cfg).expect("run")));
+    }
+
+    println!("Figure 5 (left): dapo1k validation accuracy vs time\n");
+    for (_, rec) in &recs {
+        let pts: Vec<String> = rec
+            .curve("dapo1k")
+            .iter()
+            .step_by(2)
+            .map(|(t, a)| format!("({:.1}h,{a:.3})", t / 3600.0))
+            .collect();
+        println!("  {:<10} {}", rec.label, pts.join(" "));
+    }
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    println!("\nFigure 5 (middle/right): averages over training\n");
+    let mut t = Table::new(&[
+        "N_init", "avg grad norm", "avg train acc", "|acc-0.5|", "accept rate", "dapo1k@0.30",
+    ]);
+    for (n_init, rec) in &recs {
+        let g = mean(&rec.steps.iter().map(|s| s.grad_norm).collect::<Vec<_>>());
+        let a = mean(&rec.steps.iter().map(|s| s.train_pass_rate).collect::<Vec<_>>());
+        t.row(vec![
+            n_init.to_string(),
+            format!("{g:.3}"),
+            format!("{a:.3}"),
+            format!("{:.3}", (a - 0.5).abs()),
+            format!("{:.2}", rec.counters.acceptance_rate()),
+            rec.time_to_target("dapo1k", 0.30)
+                .map(|x| format!("{:.2}h", x / 3600.0))
+                .unwrap_or("t".into()),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,166 @@
+//! L3 micro-benchmarks: the coordinator's own hot paths (everything that
+//! runs between PJRT calls). Used by the §Perf pass — the coordinator must
+//! stay <5% of a real step's budget.
+//!
+//!     cargo bench --bench bench_micro_coordinator
+
+use std::collections::VecDeque;
+
+use speed_rl::bench::BenchRunner;
+use speed_rl::coordinator::batcher::{plan_call, PendingContinuation};
+use speed_rl::coordinator::screening::ScreeningRule;
+use speed_rl::data::dataset::{Dataset, DatasetKind};
+use speed_rl::data::tasks::{generate, ALL_FAMILIES};
+use speed_rl::data::tokenizer::{Tokenizer, EOS};
+use speed_rl::data::verifier::verify;
+use speed_rl::policy::sampler::pack_requests;
+use speed_rl::policy::GenRequest;
+use speed_rl::rl::advantage::{grpo, rloo};
+use speed_rl::rl::theory::{phi, snr_bound_exact};
+use speed_rl::rl::update::{PromptGroup, Rollout, TrainBatch};
+use speed_rl::rl::AdvantageEstimator;
+use speed_rl::util::rng::Rng;
+
+fn mk_groups(rng: &mut Rng, n_groups: usize, n_rollouts: usize, glen: usize) -> Vec<PromptGroup> {
+    (0..n_groups)
+        .map(|i| {
+            let task = generate(rng, ALL_FAMILIES[i % 7], 4, 20);
+            PromptGroup {
+                prompt_idx: i,
+                task,
+                rollouts: (0..n_rollouts)
+                    .map(|_| {
+                        let mut toks: Vec<i32> =
+                            (0..glen).map(|_| rng.range_i64(3, 12) as i32).collect();
+                        toks[glen / 2] = EOS;
+                        Rollout {
+                            gen_tokens: toks,
+                            gen_logprobs: vec![-0.7; glen],
+                            reward: if rng.bool(0.5) { 1.0 } else { 0.0 },
+                        }
+                    })
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let r = BenchRunner::new(3, 25);
+    let mut rng = Rng::new(0);
+    let tok = Tokenizer::new();
+
+    // --- task generation + tokenization + verification ---
+    r.run("task-generate x1000", || {
+        let mut g = Rng::new(1);
+        for i in 0..1000 {
+            std::hint::black_box(generate(&mut g, ALL_FAMILIES[i % 7], (i % 10 + 1) as u8, 20));
+        }
+    });
+    let tasks: Vec<_> = (0..1000).map(|i| generate(&mut rng, ALL_FAMILIES[i % 7], 5, 20)).collect();
+    r.run("tokenize x1000 prompts", || {
+        for t in &tasks {
+            std::hint::black_box(tok.encode(&t.prompt).unwrap());
+        }
+    });
+    let gen: Vec<i32> = {
+        let mut ids = tok.encode("1234").unwrap();
+        ids.push(EOS);
+        ids
+    };
+    r.run("verify x1000 rollouts", || {
+        for t in &tasks {
+            std::hint::black_box(verify(&tok, t, &gen));
+        }
+    });
+
+    // --- dataset generation (startup cost) ---
+    r.run("dataset synth-dapo17k 16k", || {
+        std::hint::black_box(Dataset::training(DatasetKind::SynthDapo17k, 16_000, 1, 20));
+    });
+
+    // --- advantage estimators ---
+    let rewards: Vec<f32> = (0..24).map(|i| (i % 2) as f32).collect();
+    r.run("rloo x10000 groups of 24", || {
+        for _ in 0..10_000 {
+            std::hint::black_box(rloo(&rewards));
+        }
+    });
+    r.run("grpo x10000 groups of 24", || {
+        for _ in 0..10_000 {
+            std::hint::black_box(grpo(&rewards));
+        }
+    });
+
+    // --- theory kernels ---
+    r.run("snr_bound_exact x100k", || {
+        for i in 0..100_000 {
+            std::hint::black_box(snr_bound_exact(24, (i % 99 + 1) as f64 / 100.0));
+        }
+    });
+    r.run("phi x100k", || {
+        for i in 0..100_000 {
+            std::hint::black_box(phi((i % 99 + 1) as f64 / 100.0, 8, 16));
+        }
+    });
+
+    // --- pre-fetch batcher ---
+    let mut grng = Rng::new(3);
+    r.run("plan_call 384-row capacity x1000", || {
+        let rule = ScreeningRule::new(4, 20);
+        for _ in 0..1000 {
+            let mut pending: VecDeque<PendingContinuation> = (0..8)
+                .map(|i| PendingContinuation {
+                    prompt_idx: i,
+                    task: tasks[i].clone(),
+                    screening: vec![],
+                    born_step: 0,
+                })
+                .collect();
+            let mut k = 0usize;
+            let plan = plan_call(
+                &mut pending,
+                || {
+                    k += 1;
+                    (k, tasks[k % tasks.len()].clone())
+                },
+                &rule,
+                384,
+                usize::MAX,
+            );
+            std::hint::black_box(plan);
+        }
+    });
+
+    // --- train batch assembly (the pre-PJRT hot path) ---
+    let groups = mk_groups(&mut grng, 16, 24, 24);
+    r.run("TrainBatch::assemble 384x48", || {
+        std::hint::black_box(
+            TrainBatch::assemble(&groups, &tok, AdvantageEstimator::Rloo, 0.0, 384, 48).unwrap(),
+        );
+    });
+
+    // --- prompt packing for rollout calls ---
+    let requests: Vec<GenRequest> = tasks[..16]
+        .iter()
+        .enumerate()
+        .map(|(i, t)| GenRequest { prompt_idx: i, task: t.clone(), n_samples: 24 })
+        .collect();
+    r.run("pack_requests 384 rows", || {
+        std::hint::black_box(pack_requests(&tok, &requests, 384, 24).unwrap());
+    });
+
+    // --- SimPolicy end-to-end step throughput (drives all figure benches) ---
+    {
+        use speed_rl::config::RunConfig;
+        use speed_rl::coordinator::curriculum::CurriculumKind;
+        let mut cfg = RunConfig::default();
+        cfg.max_steps = 20;
+        cfg.eval_every = 0;
+        cfg.dataset_size = 8000;
+        cfg.curriculum = CurriculumKind::Speed;
+        r.run("sim SPEED 20 train steps", || {
+            std::hint::black_box(speed_rl::driver::run_sim(&cfg).unwrap());
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! Runtime (L2/L3 boundary) benchmarks on the real PJRT artifacts: rollout
+//! call latency, train/sft step latency, eval throughput, literal
+//! marshalling. Skips gracefully when artifacts are absent.
+//!
+//!     cargo bench --bench bench_runtime
+
+use std::path::PathBuf;
+
+use speed_rl::bench::BenchRunner;
+use speed_rl::data::dataset::{Dataset, DatasetKind};
+use speed_rl::policy::real::RealPolicy;
+use speed_rl::policy::{GenRequest, Policy};
+use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
+use speed_rl::rl::update::PromptGroup;
+use speed_rl::runtime::Tensor;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let mut policy = RealPolicy::load(&dir, 0).expect("load policy");
+    let plan = policy.runtime.manifest.plan.clone();
+    let r = BenchRunner::new(2, 10);
+
+    let data = Dataset::training(DatasetKind::SynthDapo17k, 64, 5, plan.prompt_len.min(20));
+    let n_prompts = plan.rollout_rows / 4;
+    let requests: Vec<GenRequest> = data.instances[..n_prompts]
+        .iter()
+        .enumerate()
+        .map(|(i, t)| GenRequest { prompt_idx: i, task: t.clone(), n_samples: 4 })
+        .collect();
+
+    // --- rollout call (the request-path hot spot) ---
+    let res = r.run(
+        &format!("rollout call {} rows x {} tokens", plan.rollout_rows, plan.gen_len),
+        || {
+            std::hint::black_box(policy.generate(&requests, 1.0).unwrap());
+        },
+    );
+    println!(
+        "    -> {:.0} rollouts/s, {:.0} tokens/s decode",
+        res.throughput(plan.rollout_rows as f64),
+        res.throughput((plan.rollout_rows * plan.gen_len) as f64)
+    );
+
+    // --- train step ---
+    let gen = policy.generate(&requests, 1.0).unwrap();
+    let groups: Vec<PromptGroup> = requests
+        .iter()
+        .zip(gen.groups)
+        .map(|(req, rollouts)| PromptGroup {
+            prompt_idx: req.prompt_idx,
+            task: req.task.clone(),
+            rollouts,
+        })
+        .collect();
+    let mut algo = AlgoConfig::new(BaseAlgo::Rloo);
+    algo.lr = 0.0; // keep weights frozen while timing
+    let res = r.run(&format!("train step {} rows", plan.train_rows), || {
+        std::hint::black_box(policy.train(&groups, &algo).unwrap());
+    });
+    println!("    -> {:.0} rows/s", res.throughput(plan.train_rows as f64));
+
+    // --- sft step ---
+    let easy: Vec<_> = data.instances.iter().take(plan.sft_rows).cloned().collect();
+    let res = r.run(&format!("sft step {} rows", plan.sft_rows), || {
+        std::hint::black_box(policy.sft_step(&easy, 0.0).unwrap());
+    });
+    println!("    -> {:.0} rows/s", res.throughput(plan.sft_rows as f64));
+
+    // --- greedy eval ---
+    let tasks: Vec<_> = data.instances[..plan.rollout_rows.min(64)].to_vec();
+    let res = r.run(&format!("greedy eval {} tasks", tasks.len()), || {
+        std::hint::black_box(policy.evaluate(&tasks).unwrap());
+    });
+    println!("    -> {:.0} tasks/s", res.throughput(tasks.len() as f64));
+
+    // --- rollout size variants (the §Perf optimization): a 12-row call on
+    // the smallest fitting artifact vs. the full-batch artifact ---
+    {
+        let small_reqs: Vec<GenRequest> = data.instances[..3]
+            .iter()
+            .enumerate()
+            .map(|(i, t)| GenRequest { prompt_idx: i, task: t.clone(), n_samples: 4 })
+            .collect();
+        let opts = policy.runtime.manifest.rollout_row_options();
+        println!("\n    rollout variants compiled: {opts:?}");
+        let res_small = r.run("rollout 12 rows -> smallest variant", || {
+            std::hint::black_box(policy.generate(&small_reqs, 1.0).unwrap());
+        });
+        // Force the full-batch artifact by padding the request list with a
+        // throwaway request so rows_needed exceeds the smaller variants.
+        let mut full_reqs = small_reqs.clone();
+        if let Some(&max_rows) = opts.last() {
+            let filler = max_rows - 12;
+            full_reqs.push(GenRequest {
+                prompt_idx: 99,
+                task: data.instances[10].clone(),
+                n_samples: filler,
+            });
+        }
+        let res_full = r.run("rollout 12+filler rows -> full batch", || {
+            std::hint::black_box(policy.generate(&full_reqs, 1.0).unwrap());
+        });
+        println!(
+            "    -> small-call speedup {:.2}x (before: every call paid the full batch)",
+            res_full.median_s / res_small.median_s
+        );
+    }
+
+    // --- literal marshalling (host <-> device boundary) ---
+    let t = Tensor::f32(vec![64, 48], vec![0.5; 64 * 48]);
+    r.run("tensor->literal 64x48 f32 x1000", || {
+        for _ in 0..1000 {
+            std::hint::black_box(t.to_literal().unwrap());
+        }
+    });
+    let store_params = policy.store.param_literals();
+    r.run("clone param literals (28 tensors)", || {
+        std::hint::black_box(store_params.clone());
+    });
+}

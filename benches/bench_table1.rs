@@ -1,0 +1,171 @@
+//! Table 1 regeneration: wall-clock training hours to reach each
+//! benchmark's target accuracy, for every (model, dataset, algorithm) row
+//! of the paper, on the simulated substrate — plus the Figure 1 (right)
+//! summary bars (average accuracy at a fixed time budget).
+//!
+//!     cargo bench --bench bench_table1
+//!
+//! Paper shape to reproduce: SPEED variants reach targets 2-6x faster;
+//! average speedup ~3x; DAPO baselines occasionally miss targets entirely
+//! ("t" marks, like the paper's dagger).
+
+use speed_rl::bench::Table;
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::data::dataset::DatasetKind;
+use speed_rl::driver;
+use speed_rl::metrics::RunRecord;
+use speed_rl::rl::algo::BaseAlgo;
+
+struct Row {
+    model: &'static str,
+    dataset: DatasetKind,
+    algo_pairs: Vec<(&'static str, CurriculumKind, BaseAlgo)>,
+}
+
+fn run(
+    model: &str,
+    dataset: DatasetKind,
+    curriculum: CurriculumKind,
+    algo: BaseAlgo,
+    label: &str,
+) -> RunRecord {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.to_string();
+    cfg.dataset = dataset;
+    cfg.dataset_size = 16_000;
+    cfg.curriculum = curriculum;
+    cfg.algo = algo;
+    cfg.label = label.to_string();
+    cfg.max_steps = 250;
+    cfg.eval_every = 5;
+    driver::run_sim(&cfg).expect("sim run")
+}
+
+fn main() {
+    let rloo_pair = |_: ()| {
+        vec![
+            ("RLOO", CurriculumKind::Uniform, BaseAlgo::Rloo),
+            ("SPEED-RLOO", CurriculumKind::Speed, BaseAlgo::Rloo),
+        ]
+    };
+    let all_pairs = |_: ()| {
+        vec![
+            ("RLOO", CurriculumKind::Uniform, BaseAlgo::Rloo),
+            ("SPEED-RLOO", CurriculumKind::Speed, BaseAlgo::Rloo),
+            ("DAPO", CurriculumKind::DapoFilter, BaseAlgo::Dapo),
+            ("SPEED-DAPO", CurriculumKind::Speed, BaseAlgo::Dapo),
+        ]
+    };
+    let rows = vec![
+        Row { model: "sim-1.5b", dataset: DatasetKind::SynthNumina, algo_pairs: all_pairs(()) },
+        Row { model: "sim-1.5b", dataset: DatasetKind::SynthDapo17k, algo_pairs: rloo_pair(()) },
+        Row { model: "sim-7b", dataset: DatasetKind::SynthDapo17k, algo_pairs: all_pairs(()) },
+        Row { model: "sim-7b", dataset: DatasetKind::SynthDeepScale, algo_pairs: all_pairs(()) },
+    ];
+
+    let benches = ["dapo1k", "math500", "amc2023", "aime"];
+    let mut table = Table::new(&[
+        "model", "data", "algorithm", "dapo1k", "math500", "amc2023", "aime", "avg speedup",
+    ]);
+    let mut all_speedups: Vec<f64> = Vec::new();
+    let mut fig1: Vec<(String, f64)> = Vec::new(); // label -> avg accuracy @ budget
+
+    for row in &rows {
+        let targets = driver::paper_targets(row.model);
+        let mut records: Vec<(&str, RunRecord)> = Vec::new();
+        for (label, curriculum, algo) in &row.algo_pairs {
+            eprintln!("[table1] {} {} {label}", row.model, row.dataset.name());
+            records.push((label, run(row.model, row.dataset, *curriculum, *algo, label)));
+        }
+        // fixed-budget average accuracy for Fig 1 (right)
+        let budget = records
+            .iter()
+            .map(|(_, r)| r.total_time())
+            .fold(f64::INFINITY, f64::min);
+        for (label, rec) in &records {
+            let accs: Vec<f64> = benches
+                .iter()
+                .map(|b| {
+                    rec.curve(b)
+                        .iter()
+                        .take_while(|(t, _)| *t <= budget)
+                        .last()
+                        .map(|(_, a)| *a)
+                        .unwrap_or(0.0)
+                })
+                .collect();
+            fig1.push((
+                format!("{}/{}/{}", row.model, row.dataset.name(), label),
+                accs.iter().sum::<f64>() / accs.len() as f64,
+            ));
+        }
+
+        for pair in records.chunks(2) {
+            let (base_label, base) = &pair[0];
+            let (speed_label, speed) = &pair[1];
+            let fmt_cell =
+                |rec: &RunRecord, bench: &str, target: f64| match rec.time_to_target(bench, target)
+                {
+                    Some(t) => format!("{:.1}", t / 3600.0),
+                    None => "t".to_string(),
+                };
+            let mut speedups = Vec::new();
+            let mut base_cells = vec![
+                row.model.to_string(),
+                row.dataset.name().to_string(),
+                base_label.to_string(),
+            ];
+            let mut speed_cells = vec![String::new(), String::new(), speed_label.to_string()];
+            for (bench, target) in benches.iter().zip(targets.iter().map(|(_, t)| *t)) {
+                base_cells.push(fmt_cell(base, bench, target));
+                let cell = match (
+                    base.time_to_target(bench, target),
+                    speed.time_to_target(bench, target),
+                ) {
+                    (Some(b), Some(s)) => {
+                        let f = b / s;
+                        speedups.push(f);
+                        format!("{} ({:.1}x)", fmt_cell(speed, bench, target), f)
+                    }
+                    (None, Some(_)) => format!("{} (t)", fmt_cell(speed, bench, target)),
+                    _ => fmt_cell(speed, bench, target),
+                };
+                speed_cells.push(cell);
+            }
+            base_cells.push(String::new());
+            let avg = if speedups.is_empty() {
+                "-".to_string()
+            } else {
+                let a = speedups.iter().sum::<f64>() / speedups.len() as f64;
+                all_speedups.extend(&speedups);
+                format!("{a:.1}x")
+            };
+            speed_cells.push(avg);
+            table.row(base_cells);
+            table.row(speed_cells);
+        }
+    }
+
+    println!("\nTable 1 (simulated substrate; hours to target accuracy; 't' = not reached):");
+    println!("targets: 1.5b {:?}", driver::paper_targets("sim-1.5b"));
+    println!("targets: 7b   {:?}\n", driver::paper_targets("sim-7b"));
+    table.print();
+    if !all_speedups.is_empty() {
+        let avg = all_speedups.iter().sum::<f64>() / all_speedups.len() as f64;
+        let min = all_speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = all_speedups.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "\noverall: {} speedup measurements, avg {avg:.1}x, range {min:.1}x-{max:.1}x \
+             (paper: avg 3.3x, range 1.1x-6.1x)",
+            all_speedups.len()
+        );
+    }
+
+    println!("\nFigure 1 (right) — average accuracy across benchmarks at a fixed time budget:");
+    let mut f1 = Table::new(&["configuration", "avg accuracy"]);
+    for (label, acc) in &fig1 {
+        f1.row(vec![label.clone(), format!("{acc:.3}")]);
+    }
+    f1.print();
+}

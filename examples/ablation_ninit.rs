@@ -1,0 +1,61 @@
+//! Figure 5 regeneration: the N_init ablation (4 / 6 / 8) for SPEED-RLOO
+//! on the 1.5B analogue over synth-dapo17k — validation accuracy, average
+//! gradient norm, and average training pass rate.
+//!
+//!     cargo run --release --example ablation_ninit
+
+use speed_rl::bench::Table;
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::driver;
+
+fn main() -> anyhow::Result<()> {
+    let n_total = 24;
+    let mut rows = Vec::new();
+    for n_init in [4usize, 6, 8] {
+        let mut cfg = RunConfig::default();
+        cfg.model = "sim-1.5b".into();
+        cfg.curriculum = CurriculumKind::Speed;
+        cfg.n_init = n_init;
+        cfg.n_cont = n_total - n_init;
+        cfg.max_steps = 120;
+        cfg.eval_every = 5;
+        cfg.label = format!("SPEED-RLOO N_init={n_init}");
+        eprintln!("running {} ...", cfg.label);
+        let rec = driver::run_sim(&cfg)?;
+        let mean = |f: &dyn Fn(&speed_rl::metrics::StepRecord) -> f64| {
+            rec.steps.iter().map(|s| f(s)).sum::<f64>() / rec.steps.len().max(1) as f64
+        };
+        rows.push((
+            n_init,
+            rec.time_to_target("dapo1k", 0.30),
+            mean(&|s| s.grad_norm),
+            mean(&|s| s.train_pass_rate),
+            rec.final_accuracy("dapo1k").unwrap_or(0.0),
+        ));
+    }
+
+    let mut table = Table::new(&[
+        "N_init",
+        "dapo1k@0.30",
+        "avg grad norm",
+        "avg train pass rate",
+        "final dapo1k",
+    ]);
+    for (n, t, g, p, f) in &rows {
+        table.row(vec![
+            n.to_string(),
+            t.map(|x| format!("{:.2} h", x / 3600.0)).unwrap_or("t".into()),
+            format!("{g:.3}"),
+            format!("{p:.3}"),
+            format!("{f:.3}"),
+        ]);
+    }
+    println!("\nFigure 5 (N_init ablation, sim-1.5b on synth-dapo17k):");
+    table.print();
+    println!(
+        "\npaper check: larger N_init => smaller grad norms, training pass rate\n\
+         drifting from 0.5, slower rise (§5.2 'Effect of N_init')."
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: the smallest end-to-end SPEED run.
+//!
+//! Runs SPEED-RLOO against vanilla RLOO on the simulated 7B substrate for a
+//! few dozen steps and prints the headline comparison. No artifacts needed.
+//!
+//!     cargo run --release --example quickstart
+
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::driver;
+
+fn main() -> anyhow::Result<()> {
+    let mut base = RunConfig::default();
+    base.dataset_size = 8000;
+    base.max_steps = 60;
+    base.eval_every = 5;
+
+    let mut results = Vec::new();
+    for kind in [CurriculumKind::Uniform, CurriculumKind::Speed] {
+        let mut cfg = base.clone();
+        cfg.curriculum = kind;
+        cfg.label = match kind {
+            CurriculumKind::Speed => "SPEED-RLOO".to_string(),
+            _ => "RLOO".to_string(),
+        };
+        println!("running {} ...", cfg.label);
+        let record = driver::run_sim(&cfg)?;
+        results.push(record);
+    }
+
+    println!("\n{:<12} {:>10} {:>14} {:>14}", "run", "time", "dapo1k@0.50", "math500@0.90");
+    for rec in &results {
+        let fmt = |t: Option<f64>| {
+            t.map(|x| format!("{:.0}s", x)).unwrap_or_else(|| "-".to_string())
+        };
+        println!(
+            "{:<12} {:>9.0}s {:>14} {:>14}",
+            rec.label,
+            rec.total_time(),
+            fmt(rec.time_to_target("dapo1k", 0.50)),
+            fmt(rec.time_to_target("math500", 0.90)),
+        );
+    }
+    let speedup = |bench: &str, target: f64| -> Option<f64> {
+        Some(results[0].time_to_target(bench, target)? / results[1].time_to_target(bench, target)?)
+    };
+    if let Some(s) = speedup("dapo1k", 0.50) {
+        println!("\nSPEED speedup to dapo1k accuracy 0.50: {s:.1}x");
+    }
+    if let Some(s) = speedup("math500", 0.90) {
+        println!("SPEED speedup to math500 accuracy 0.90: {s:.1}x");
+    }
+    Ok(())
+}

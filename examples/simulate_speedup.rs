@@ -1,0 +1,83 @@
+//! Table 1 regeneration (example-sized): wall-clock time to target accuracy
+//! for {RLOO, SPEED-RLOO, DAPO, SPEED-DAPO} across the three dataset
+//! analogues, on the simulated 7B/1.5B substrates.
+//!
+//! The full sweep lives in `benches/bench_table1.rs`; this example runs one
+//! dataset for a quick look.
+//!
+//!     cargo run --release --example simulate_speedup [dataset]
+
+use speed_rl::bench::Table;
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::data::dataset::DatasetKind;
+use speed_rl::driver;
+use speed_rl::rl::algo::BaseAlgo;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = std::env::args()
+        .nth(1)
+        .and_then(|s| DatasetKind::parse(&s))
+        .unwrap_or(DatasetKind::SynthDeepScale);
+
+    let arms: [(&str, CurriculumKind, BaseAlgo); 4] = [
+        ("RLOO", CurriculumKind::Uniform, BaseAlgo::Rloo),
+        ("SPEED-RLOO", CurriculumKind::Speed, BaseAlgo::Rloo),
+        ("DAPO", CurriculumKind::DapoFilter, BaseAlgo::Dapo),
+        ("SPEED-DAPO", CurriculumKind::Speed, BaseAlgo::Dapo),
+    ];
+
+    let mut records = Vec::new();
+    for (label, curriculum, algo) in arms {
+        let mut cfg = RunConfig::default();
+        cfg.dataset = dataset;
+        cfg.dataset_size = 16_000;
+        cfg.curriculum = curriculum;
+        cfg.algo = algo;
+        cfg.label = label.to_string();
+        cfg.max_steps = 150;
+        cfg.eval_every = 5;
+        eprintln!("running {label} on {} ...", dataset.name());
+        records.push(driver::run_sim(&cfg)?);
+    }
+
+    let targets = driver::paper_targets("sim-7b");
+    let mut table = Table::new(&["algorithm", "dapo1k", "math500", "amc2023", "aime", "total h"]);
+    for rec in &records {
+        let mut cells = vec![rec.label.clone()];
+        for (bench, target) in &targets {
+            cells.push(match rec.time_to_target(bench, *target) {
+                Some(t) => format!("{:.2} h", t / 3600.0),
+                None => "t".to_string(), // dagger: target not reached
+            });
+        }
+        cells.push(format!("{:.2}", rec.total_time() / 3600.0));
+        table.row(cells);
+    }
+    println!("\nSim-7B on {} (targets {:?}):", dataset.name(), targets);
+    table.print();
+
+    // speedups, paper-style (vanilla / SPEED-variant)
+    for (base, speed) in [(0usize, 1usize), (2, 3)] {
+        let mut speedups = Vec::new();
+        for (bench, target) in &targets {
+            if let (Some(b), Some(s)) = (
+                records[base].time_to_target(bench, *target),
+                records[speed].time_to_target(bench, *target),
+            ) {
+                speedups.push(b / s);
+            }
+        }
+        if !speedups.is_empty() {
+            let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
+            println!(
+                "{} vs {}: avg speedup {:.1}x (per-benchmark {:?})",
+                records[speed].label,
+                records[base].label,
+                avg,
+                speedups.iter().map(|s| format!("{s:.1}x")).collect::<Vec<_>>()
+            );
+        }
+    }
+    Ok(())
+}

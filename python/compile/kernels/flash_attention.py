@@ -1,0 +1,285 @@
+"""Tiled causal flash-attention as a Pallas kernel (forward + backward).
+
+TPU adaptation of the paper's GPU inference hot spot (see DESIGN.md
+§Hardware-Adaptation): instead of warp-level tiling into shared memory, the
+HBM↔VMEM schedule is expressed with ``BlockSpec``s — a ``[block_q, D]`` query
+tile is resident in VMEM while KV tiles of ``[block_k, D]`` stream through an
+online-softmax accumulator. Matmul tiles target the MXU systolic array
+(block sizes are multiples of 8 in the sublane dim and D is the lane dim).
+
+On this image the kernel always runs ``interpret=True`` — real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute. The interpret
+path lowers to plain HLO, so the kernel participates in the AOT artifacts.
+
+The public entrypoint :func:`flash_attention` carries a ``custom_vjp`` whose
+backward pass is also implemented as Pallas kernels (dq kernel + dkv kernel,
+standard recompute-from-(O, logsumexp) formulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Default VMEM tile sizes. For the model configs used in this repo
+# (T <= 160, D <= 64) a whole row of queries fits in a single tile; larger
+# sequences stream in MXU-aligned tiles.
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+
+def _choose_block(t: int, block: int) -> int:
+    """Largest tile <= `block` that divides T (T is padded upstream to 8n)."""
+    b = min(block, t)
+    while t % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, scale, block_k, causal, t_kv):
+    """One (batch, head, q-tile) program: stream KV tiles, online softmax."""
+    block_q = q_ref.shape[0]
+    d = q_ref.shape[1]
+    iq = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32) * scale  # [bq, d]
+
+    num_kb = t_kv // block_k
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)  # global q rows
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (pl.ds(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.ds(kb * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # [bq, bk] — MXU matmul tile
+        if causal:
+            k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])  # [bq, bk]
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+
+    # Rows that saw no unmasked key (never happens with causal self-attn,
+    # defensive for the non-causal path with tiny T) get l == 0.
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m + jnp.log(l_safe)).astype(lse_ref.dtype)
+
+
+def _fwd(q, k, v, *, scale, block_q, block_k, causal):
+    b, h, t, d = q.shape
+    t_kv = k.shape[2]
+    bq = _choose_block(t, block_q)
+    bk = _choose_block(t_kv, block_k)
+    grid = (b, h, t // bq)
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_k=bk, causal=causal, t_kv=t_kv
+    )
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((None, None, t_kv, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, t_kv, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((None, None, bq), lambda b_, h_, i: (b_, h_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+            jax.ShapeDtypeStruct((b, h, t), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, scale, block_k, causal, t_kv
+):
+    """dq for one (b, h, q-tile): dq = scale * sum_k (p * (dp - delta)) @ k."""
+    block_q = q_ref.shape[0]
+    iq = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...].astype(jnp.float32)
+    delta = delta_ref[...].astype(jnp.float32)
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    num_kb = t_kv // block_k
+
+    def body(kb, dq):
+        k = pl.load(k_ref, (pl.ds(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(kb * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = (q @ k.T) * scale
+        if causal:
+            k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # [bq, bk]
+        dp = do @ v.T  # [bq, bk]
+        ds = p * (dp - delta[:, None])
+        return dq + ds @ k
+
+    dq0 = jnp.zeros_like(q)
+    dq = jax.lax.fori_loop(0, num_kb, body, dq0)
+    dq_ref[...] = (dq * scale).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, scale, block_q, causal, t_q
+):
+    """dk, dv for one (b, h, k-tile): stream q tiles."""
+    block_k = k_ref.shape[0]
+    ik = pl.program_id(2)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+    num_qb = t_q // block_q
+
+    def body(qb, carry):
+        dk, dv = carry
+        q = pl.load(q_ref, (pl.ds(qb * block_q, block_q), slice(None))).astype(jnp.float32)
+        do = pl.load(do_ref, (pl.ds(qb * block_q, block_q), slice(None))).astype(jnp.float32)
+        lse = pl.load(lse_ref, (pl.ds(qb * block_q, block_q),)).astype(jnp.float32)
+        delta = pl.load(delta_ref, (pl.ds(qb * block_q, block_q),)).astype(jnp.float32)
+        s = (q @ k.T) * scale  # [bq, bk]
+        if causal:
+            q_pos = qb * block_q + jax.lax.iota(jnp.int32, block_q)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # [bq, bk]
+        dv_new = dv + p.T @ do
+        dp = do @ v.T  # [bq, bk]
+        ds = p * (dp - delta[:, None])
+        dk_new = dk + (ds.T @ q) * scale
+        return dk_new, dv_new
+
+    dk0 = jnp.zeros_like(k)
+    dv0 = jnp.zeros_like(v)
+    dk, dv = jax.lax.fori_loop(0, num_qb, body, (dk0, dv0))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _bwd(q, k, v, o, lse, do, *, scale, block_q, block_k, causal):
+    b, h, t, d = q.shape
+    t_kv = k.shape[2]
+    bq = _choose_block(t, block_q)
+    bk = _choose_block(t_kv, block_k)
+    # delta_i = rowsum(dO_i * O_i); tiny elementwise reduce, done in jnp.
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # [b,h,t]
+
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, scale=scale, block_k=bk, causal=causal, t_kv=t_kv
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(b, h, t // bq),
+        in_specs=[
+            pl.BlockSpec((None, None, bq, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((None, None, t_kv, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, t_kv, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, bq, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((None, None, bq), lambda b_, h_, i: (b_, h_, i)),
+            pl.BlockSpec((None, None, bq), lambda b_, h_, i: (b_, h_, i)),
+        ],
+        out_specs=pl.BlockSpec((None, None, bq, d), lambda b_, h_, i: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, scale=scale, block_q=bq, causal=causal, t_q=t
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(b, h, t_kv // bk),
+        in_specs=[
+            pl.BlockSpec((None, None, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, bk, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((None, None, bk, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((None, None, t, d), lambda b_, h_, i: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, t), lambda b_, h_, i: (b_, h_, 0)),
+            pl.BlockSpec((None, None, t), lambda b_, h_, i: (b_, h_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, bk, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((None, None, bk, d), lambda b_, h_, i: (b_, h_, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t_kv, d), k.dtype),
+            jax.ShapeDtypeStruct((b, h, t_kv, d), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public entrypoint with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Causal flash attention over ``[B, H, T, D]`` tensors (Pallas, interpret).
+
+    Differentiable via a custom VJP whose backward pass is also Pallas.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    o, _ = _fwd(q, k, v, scale=scale, block_q=block_q, block_k=block_k, causal=causal)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, scale, block_q, block_k):
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    o, lse = _fwd(q, k, v, scale=scale, block_q=block_q, block_k=block_k, causal=causal)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, scale, block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    dq, dk, dv = _bwd(
+        q, k, v, o, lse, do, scale=scale, block_q=block_q, block_k=block_k, causal=causal
+    )
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

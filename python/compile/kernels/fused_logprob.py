@@ -1,0 +1,137 @@
+"""Fused log-softmax + target gather as a Pallas kernel (forward + backward).
+
+The RL loss needs ``log pi(y_t | .)`` for the *chosen* tokens only. The naive
+graph materializes a full ``[B, T, V]`` log-softmax and gathers one column —
+wasted HBM traffic and a full extra logits-sized buffer. This kernel fuses
+max/logsumexp/gather into one pass over each logits row tile; the gather is
+expressed as a one-hot contraction (MXU/VPU friendly — TPU has no efficient
+scatter/gather lane op).
+
+Backward (``d logits = (onehot - softmax) * g``) is also a Pallas kernel, so
+the fused form participates in the AOT-lowered training graph end to end.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _choose_block(n: int, block: int) -> int:
+    b = min(block, n)
+    while n % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _fwd_kernel(logits_ref, targets_ref, out_ref, lse_ref):
+    logits = logits_ref[...].astype(jnp.float32)  # [rows, V]
+    targets = targets_ref[...]  # [rows]
+    v = logits.shape[1]
+    m = jnp.max(logits, axis=1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=1))
+    onehot = (jax.lax.iota(jnp.int32, v)[None, :] == targets[:, None]).astype(jnp.float32)
+    tgt = jnp.sum(logits * onehot, axis=1)
+    out_ref[...] = (tgt - lse).astype(out_ref.dtype)
+    lse_ref[...] = lse.astype(lse_ref.dtype)
+
+
+def _bwd_kernel(logits_ref, targets_ref, lse_ref, g_ref, dlogits_ref):
+    logits = logits_ref[...].astype(jnp.float32)
+    targets = targets_ref[...]
+    lse = lse_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    v = logits.shape[1]
+    softmax = jnp.exp(logits - lse[:, None])
+    onehot = (jax.lax.iota(jnp.int32, v)[None, :] == targets[:, None]).astype(jnp.float32)
+    dlogits_ref[...] = ((onehot - softmax) * g[:, None]).astype(dlogits_ref.dtype)
+
+
+def _run_fwd(logits2d, targets1d, block_rows):
+    n, v = logits2d.shape
+    br = _choose_block(n, block_rows)
+    out, lse = pl.pallas_call(
+        _fwd_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, v), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits2d, targets1d)
+    return out, lse
+
+
+def _run_bwd(logits2d, targets1d, lse1d, g1d, block_rows):
+    n, v = logits2d.shape
+    br = _choose_block(n, block_rows)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, v), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v), logits2d.dtype),
+        interpret=True,
+    )(logits2d, targets1d, lse1d, g1d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fused_logprob(
+    logits: jax.Array, targets: jax.Array, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> jax.Array:
+    """``log softmax(logits)[..., targets]`` without materializing log-softmax.
+
+    Args:
+      logits: ``[B, T, V]`` (or ``[N, V]``).
+      targets: ``[B, T]`` (or ``[N]``) int32.
+
+    Returns:
+      per-token logprobs with targets' shape, float32.
+    """
+    out, _ = _fused_fwd_impl(logits, targets, block_rows)
+    return out
+
+
+def _fused_fwd_impl(logits, targets, block_rows):
+    shape = targets.shape
+    v = logits.shape[-1]
+    logits2d = logits.reshape(-1, v)
+    targets1d = targets.reshape(-1)
+    out, lse = _run_fwd(logits2d, targets1d, block_rows)
+    return out.reshape(shape), lse
+
+
+def _fused_fwd(logits, targets, block_rows):
+    out, lse = _fused_fwd_impl(logits, targets, block_rows)
+    return out, (logits, targets, lse)
+
+
+def _fused_bwd(block_rows, res, g):
+    logits, targets, lse = res
+    v = logits.shape[-1]
+    logits2d = logits.reshape(-1, v)
+    targets1d = targets.reshape(-1)
+    g1d = g.reshape(-1)
+    dlogits = _run_bwd(logits2d, targets1d, lse, g1d, block_rows)
+    return dlogits.reshape(logits.shape), None
+
+
+fused_logprob.defvjp(_fused_fwd, _fused_bwd)

@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/test_kernels.py` sweeps
+shapes/dtypes/seeds (hypothesis) and asserts the Pallas kernels (interpret
+mode) match these references within tolerance, for both forward values and
+gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Plain softmax attention.
+
+    Args:
+      q, k, v: ``[B, H, T, D]`` (same T for q and kv here).
+      causal: apply a lower-triangular mask.
+      scale: logit scale; defaults to ``1/sqrt(D)``.
+
+    Returns:
+      ``[B, H, T, D]`` attention output.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        t_q, t_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((t_q, t_k), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-query attention against a fixed-shape KV cache with validity mask.
+
+    Args:
+      q: ``[B, H, D]`` the current decode-step query.
+      k_cache, v_cache: ``[B, H, S, D]`` fixed-size cache buffers.
+      lengths: ``[B]`` int32; positions ``>= lengths[b]`` are masked out.
+      scale: logit scale; defaults to ``1/sqrt(D)``.
+
+    Returns:
+      ``[B, H, D]``.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    s = k_cache.shape[2]
+    logits = jnp.einsum("bhd,bhsd->bhs", q, k_cache) * scale
+    valid = jnp.arange(s)[None, :] < lengths[:, None]  # [B, S]
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v_cache)
+
+
+def logprob_ref(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-token log-probability of `targets` under `logits`.
+
+    Args:
+      logits: ``[B, T, V]``.
+      targets: ``[B, T]`` int32 token ids.
+
+    Returns:
+      ``[B, T]`` log softmax(logits) gathered at targets.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return tgt - logz
+
+
+def softmax_ref(logits: jax.Array) -> jax.Array:
+    """Row softmax (used in sampler tests)."""
+    return jax.nn.softmax(logits, axis=-1)

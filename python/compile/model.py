@@ -1,0 +1,476 @@
+"""L2: the reasoning model — a decoder-only transformer in JAX.
+
+This is the substitute for Qwen2.5-Math (see DESIGN.md §3): a char-level
+decoder-only transformer over a 32-token math vocabulary, sized to be
+CPU-tractable (`nano`/`tiny`/`small` presets). The L1 Pallas kernels
+(`flash_attention`, `decode_attention`, `fused_logprob`) sit on the hot paths.
+
+Entrypoints AOT-lowered by `compile.aot` (Python never runs at request time):
+
+* :func:`rollout`      — prefill + KV-cache `lax.scan` decode, temperature
+                         sampling with per-step PRNG folding; returns sampled
+                         tokens and their behavior logprobs.
+* :func:`train_step`   — clipped token-level policy-gradient loss (PPO-style
+                         ratio vs. behavior logprobs; reduces to REINFORCE /
+                         RLOO / GRPO / DAPO depending on the advantages and
+                         clip thresholds the Rust L3 supplies) + global-norm
+                         clipping + AdamW.
+* :func:`sft_step`     — masked cross-entropy warmup step (the "base model"
+                         phase) + AdamW.
+* :func:`forward_logits` — plain forward pass (golden tests / debugging).
+
+Parameter layout is a *flat, ordered* list (see :func:`param_specs`); the
+same order is recorded in `artifacts/manifest.json` and mirrored by the Rust
+parameter store. The LM head is tied to the embedding table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.fused_logprob import fused_logprob
+from compile.kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Vocabulary — must match rust/src/data/tokenizer.rs exactly.
+# ---------------------------------------------------------------------------
+
+PAD, BOS, EOS = 0, 1, 2
+CHARS = "0123456789+-*/%=()<>, #?"  # 24 printable chars -> ids 3..26
+VOCAB = ["<pad>", "<bos>", "<eos>"] + list(CHARS)
+VOCAB_SIZE = 32  # padded to 32 for MXU lane alignment; ids 27..31 unused
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters (one of the presets below)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    vocab: int = VOCAB_SIZE
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+PRESETS: dict[str, ModelConfig] = {
+    # ~0.2M params; CI/test scale.
+    "nano": ModelConfig(name="nano", d_model=64, n_layers=2, n_heads=2, d_ff=256, max_seq=96),
+    # ~1.1M params; the Qwen2.5-Math-1.5B analogue in experiments.
+    "tiny": ModelConfig(name="tiny", d_model=128, n_layers=4, n_heads=4, d_ff=512, max_seq=128),
+    # ~5.5M params; the Qwen2.5-Math-7B analogue.
+    "small": ModelConfig(name="small", d_model=256, n_layers=6, n_heads=8, d_ff=1024, max_seq=160),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Flat ordered (name, shape) list — the Rust/Python param interface."""
+    d, f = cfg.d_model, cfg.d_ff
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, d)),
+        ("pos", (cfg.max_seq, d)),
+    ]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.ln1_scale", (d,)),
+            (f"l{l}.ln1_bias", (d,)),
+            (f"l{l}.wq", (d, d)),
+            (f"l{l}.wk", (d, d)),
+            (f"l{l}.wv", (d, d)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.ln2_scale", (d,)),
+            (f"l{l}.ln2_bias", (d,)),
+            (f"l{l}.w1", (d, f)),
+            (f"l{l}.b1", (f,)),
+            (f"l{l}.w2", (f, d)),
+            (f"l{l}.b2", (d,)),
+        ]
+    specs += [("ln_f_scale", (d,)), ("ln_f_bias", (d,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> list[jax.Array]:
+    """He-style init; scale/bias params at 1/0."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("scale",)):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(("bias", "b1", "b2")) or ".b" in name:
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name == "pos":
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.01)
+        else:
+            fan_in = shape[0]
+            std = fan_in**-0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+def _as_tree(cfg: ModelConfig, flat: list[jax.Array]) -> dict[str, Any]:
+    """Flat ordered list -> name->array dict."""
+    names = [n for n, _ in param_specs(cfg)]
+    assert len(names) == len(flat), (len(names), len(flat))
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (full sequence, used by prefill and training)
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _split_heads(x, n_heads):  # [B,T,D] -> [B,H,T,Dh]
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):  # [B,H,T,Dh] -> [B,T,D]
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: list[jax.Array],
+    tokens: jax.Array,
+    *,
+    use_pallas: bool = True,
+    return_kv: bool = False,
+):
+    """Causal transformer forward.
+
+    Args:
+      tokens: ``[B, T]`` int32.
+      use_pallas: route attention through the L1 flash-attention kernel
+        (False falls back to the jnp oracle; used in A/B tests).
+      return_kv: additionally return per-layer K/V ``[L, B, H, T, Dh]`` for
+        prefill cache population.
+
+    Returns:
+      logits ``[B, T, V]`` (and optionally the KV stack).
+    """
+    p = _as_tree(cfg, params)
+    b, t = tokens.shape
+    x = p["embed"][tokens] + p["pos"][:t][None]
+    kv_stack = []
+    for l in range(cfg.n_layers):
+        h = _layer_norm(x, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"])
+        q = _split_heads(h @ p[f"l{l}.wq"], cfg.n_heads)
+        k = _split_heads(h @ p[f"l{l}.wk"], cfg.n_heads)
+        v = _split_heads(h @ p[f"l{l}.wv"], cfg.n_heads)
+        if use_pallas:
+            attn = flash_attention(q, k, v, True)
+        else:
+            attn = kref.attention_ref(q, k, v, causal=True)
+        x = x + _merge_heads(attn) @ p[f"l{l}.wo"]
+        h2 = _layer_norm(x, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+        if return_kv:
+            kv_stack.append((k, v))
+    x = _layer_norm(x, p["ln_f_scale"], p["ln_f_bias"])
+    logits = x @ p["embed"].T
+    if return_kv:
+        ks = jnp.stack([k for k, _ in kv_stack])  # [L,B,H,T,Dh]
+        vs = jnp.stack([v for _, v in kv_stack])
+        return logits, (ks, vs)
+    return logits
+
+
+def forward_logits(cfg: ModelConfig, params: list[jax.Array], tokens: jax.Array) -> jax.Array:
+    """AOT entrypoint: plain logits (golden tests)."""
+    return forward(cfg, params, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Rollout: prefill + KV-cache scan decode with sampling
+# ---------------------------------------------------------------------------
+
+
+def _decode_one(
+    cfg: ModelConfig,
+    p: dict[str, Any],
+    token: jax.Array,  # [R] int32 current input token
+    pos: jax.Array,  # [R] int32 its position
+    k_cache: jax.Array,  # [L,R,H,S,Dh]
+    v_cache: jax.Array,
+    *,
+    use_pallas: bool,
+):
+    """One decode step: returns next-token logits + updated caches."""
+    l_, r, h_, s, dh = k_cache.shape
+    x = p["embed"][token] + p["pos"][pos]  # [R, D]
+    onehot = (jax.lax.iota(jnp.int32, s)[None, :] == pos[:, None]).astype(jnp.float32)
+    lengths = pos + 1  # attend over everything written so far, incl. self
+    new_k, new_v = [], []
+    for l in range(cfg.n_layers):
+        hx = _layer_norm(x, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"])
+        q = (hx @ p[f"l{l}.wq"]).reshape(r, cfg.n_heads, dh)
+        k = (hx @ p[f"l{l}.wk"]).reshape(r, cfg.n_heads, dh)
+        v = (hx @ p[f"l{l}.wv"]).reshape(r, cfg.n_heads, dh)
+        # Scatter this step's K/V into the fixed-shape cache at per-row pos.
+        kc = k_cache[l] * (1.0 - onehot[:, None, :, None]) + k[:, :, None, :] * onehot[:, None, :, None]
+        vc = v_cache[l] * (1.0 - onehot[:, None, :, None]) + v[:, :, None, :] * onehot[:, None, :, None]
+        new_k.append(kc)
+        new_v.append(vc)
+        if use_pallas:
+            attn = decode_attention(q, kc, vc, lengths)
+        else:
+            attn = kref.decode_attention_ref(q, kc, vc, lengths)
+        x = x + attn.reshape(r, cfg.d_model) @ p[f"l{l}.wo"]
+        h2 = _layer_norm(x, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"])
+        x = x + jax.nn.gelu(h2 @ p[f"l{l}.w1"] + p[f"l{l}.b1"]) @ p[f"l{l}.w2"] + p[f"l{l}.b2"]
+    x = _layer_norm(x, p["ln_f_scale"], p["ln_f_bias"])
+    logits = x @ p["embed"].T  # [R, V]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def _sample(key, logits, temperature):
+    """Temperature sampling; temperature <= 0 selects argmax (greedy eval)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temp = jnp.maximum(temperature, 1e-6)
+    sampled = jax.random.categorical(key, logits / temp, axis=-1).astype(jnp.int32)
+    tok = jnp.where(temperature > 0.0, sampled, greedy)
+    # Behavior logprob under the *sampling* distribution.
+    logp = kref.logprob_ref(
+        (logits / temp)[:, None, :], tok[:, None]
+    )[:, 0]
+    return tok, logp
+
+
+def rollout(
+    cfg: ModelConfig,
+    params: list[jax.Array],
+    prompt_tokens: jax.Array,  # [R, P] int32, left-aligned, PAD tail
+    prompt_lens: jax.Array,  # [R] int32 (>=1)
+    rng: jax.Array,  # [2] uint32 PRNG key data
+    temperature: jax.Array,  # scalar f32; <=0 -> greedy
+    *,
+    gen_len: int,
+    use_pallas: bool = True,
+):
+    """AOT entrypoint: batched generation.
+
+    Returns:
+      gen_tokens ``[R, G]`` int32 and gen_logprobs ``[R, G]`` float32
+      (logprob of each sampled token under the behavior distribution).
+      Rust is responsible for EOS truncation + verification.
+    """
+    p = _as_tree(cfg, params)
+    r, plen = prompt_tokens.shape
+    s = plen + gen_len  # cache capacity
+    key = jax.random.wrap_key_data(rng.astype(jnp.uint32), impl="threefry2x32")
+
+    # ---- prefill ----
+    logits_all, (ks, vs) = forward(cfg, params, prompt_tokens, use_pallas=use_pallas, return_kv=True)
+    pad = jnp.zeros((cfg.n_layers, r, cfg.n_heads, gen_len, cfg.d_head), jnp.float32)
+    k_cache = jnp.concatenate([ks, pad], axis=3)  # [L,R,H,S,Dh]
+    v_cache = jnp.concatenate([vs, pad], axis=3)
+    last_idx = jnp.clip(prompt_lens - 1, 0, plen - 1)
+    logits0 = jnp.take_along_axis(logits_all, last_idx[:, None, None], axis=1)[:, 0]  # [R,V]
+    k0 = jax.random.fold_in(key, 0)
+    tok0, logp0 = _sample(k0, logits0, temperature)
+
+    # ---- decode scan ----
+    def step(carry, g):
+        token, k_cache, v_cache = carry
+        pos = prompt_lens + g  # the position of `token`
+        logits, k_cache, v_cache = _decode_one(
+            cfg, p, token, pos, k_cache, v_cache, use_pallas=use_pallas
+        )
+        kg = jax.random.fold_in(key, g + 1)
+        nxt, logp = _sample(kg, logits, temperature)
+        return (nxt, k_cache, v_cache), (nxt, logp)
+
+    (_, _, _), (toks, logps) = jax.lax.scan(
+        step, (tok0, k_cache, v_cache), jnp.arange(gen_len - 1)
+    )
+    gen_tokens = jnp.concatenate([tok0[:, None], toks.T], axis=1)  # [R, G]
+    gen_logprobs = jnp.concatenate([logp0[:, None], logps.T], axis=1)
+    return gen_tokens, gen_logprobs
+
+
+# ---------------------------------------------------------------------------
+# Losses + optimizer
+# ---------------------------------------------------------------------------
+
+
+def rl_loss(
+    cfg: ModelConfig,
+    params: list[jax.Array],
+    tokens: jax.Array,  # [B, T] full sequences (prompt + generation)
+    loss_mask: jax.Array,  # [B, T] 1.0 on generated tokens (incl. EOS)
+    old_logprobs: jax.Array,  # [B, T] behavior logprobs aligned with tokens
+    advantages: jax.Array,  # [B]
+    clip_low: jax.Array,  # scalar, e.g. 0.2  (DAPO eps_low)
+    clip_high: jax.Array,  # scalar, e.g. 0.28 (DAPO clip-higher)
+    *,
+    use_pallas: bool = True,
+):
+    """Token-level clipped policy-gradient loss (eq. 4/8 + DAPO clipping).
+
+    With `old_logprobs ==` current logprobs (single update per batch, as RLOO /
+    REINFORCE do) the ratio is 1 and this reduces exactly to the REINFORCE
+    estimator; the clip thresholds then have no effect.
+    """
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    mask = loss_mask[:, 1:]
+    old_lp = old_logprobs[:, 1:]
+    logits = forward(cfg, params, inp, use_pallas=use_pallas)
+    if use_pallas:
+        logp = fused_logprob(logits, tgt)
+    else:
+        logp = kref.logprob_ref(logits, tgt)
+    ratio = jnp.exp(logp - old_lp)
+    adv = advantages[:, None]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_low, 1.0 + clip_high) * adv
+    per_tok = jnp.minimum(unclipped, clipped)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(per_tok * mask) / denom
+    clip_frac = jnp.sum((unclipped > clipped).astype(jnp.float32) * mask) / denom
+    return loss, clip_frac
+
+
+def sft_loss(
+    cfg: ModelConfig,
+    params: list[jax.Array],
+    tokens: jax.Array,
+    loss_mask: jax.Array,
+    *,
+    use_pallas: bool = True,
+):
+    """Masked next-token cross-entropy (warmup / "base model" phase)."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    mask = loss_mask[:, 1:]
+    logits = forward(cfg, params, inp, use_pallas=use_pallas)
+    if use_pallas:
+        logp = fused_logprob(logits, tgt)
+    else:
+        logp = kref.logprob_ref(logits, tgt)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.sum(logp * mask) / denom
+
+
+def _global_norm(grads: list[jax.Array]) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads))
+
+
+def _adamw_update(
+    params: list[jax.Array],
+    grads: list[jax.Array],
+    m: list[jax.Array],
+    v: list[jax.Array],
+    step: jax.Array,  # scalar i32 (0-based before this update)
+    lr: jax.Array,
+    weight_decay: jax.Array,
+    max_grad_norm: jax.Array,
+):
+    """AdamW with global-norm clipping. Returns (params, m, v, grad_norm)."""
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-12))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_p, new_m, new_v = [], [], []
+    for pi, gi, mi, vi in zip(params, grads, m, v):
+        g = gi * clip
+        mi2 = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi2 = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi2 / bc1
+        vhat = vi2 / bc2
+        upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + weight_decay * pi
+        new_p.append(pi - lr * upd)
+        new_m.append(mi2)
+        new_v.append(vi2)
+    return new_p, new_m, new_v, gnorm
+
+
+def train_step(
+    cfg: ModelConfig,
+    params: list[jax.Array],
+    m: list[jax.Array],
+    v: list[jax.Array],
+    step: jax.Array,
+    tokens: jax.Array,
+    loss_mask: jax.Array,
+    old_logprobs: jax.Array,
+    advantages: jax.Array,
+    lr: jax.Array,
+    clip_low: jax.Array,
+    clip_high: jax.Array,
+    weight_decay: jax.Array,
+    max_grad_norm: jax.Array,
+    *,
+    use_pallas: bool = True,
+):
+    """AOT entrypoint: one RL update. Returns new (params, m, v, step) + stats."""
+
+    def loss_fn(ps):
+        return rl_loss(
+            cfg, ps, tokens, loss_mask, old_logprobs, advantages, clip_low, clip_high,
+            use_pallas=use_pallas,
+        )
+
+    (loss, clip_frac), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_p, new_m, new_v, gnorm = _adamw_update(
+        params, grads, m, v, step, lr, weight_decay, max_grad_norm
+    )
+    return new_p, new_m, new_v, step + 1, loss, gnorm, clip_frac
+
+
+def sft_step(
+    cfg: ModelConfig,
+    params: list[jax.Array],
+    m: list[jax.Array],
+    v: list[jax.Array],
+    step: jax.Array,
+    tokens: jax.Array,
+    loss_mask: jax.Array,
+    lr: jax.Array,
+    weight_decay: jax.Array,
+    max_grad_norm: jax.Array,
+    *,
+    use_pallas: bool = True,
+):
+    """AOT entrypoint: one supervised warmup update."""
+
+    def loss_fn(ps):
+        return sft_loss(cfg, ps, tokens, loss_mask, use_pallas=use_pallas)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_p, new_m, new_v, gnorm = _adamw_update(
+        params, grads, m, v, step, lr, weight_decay, max_grad_norm
+    )
+    return new_p, new_m, new_v, step + 1, loss, gnorm

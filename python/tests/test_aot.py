@@ -1,0 +1,130 @@
+"""AOT compile-path tests: manifest integrity, signatures, HLO text shape.
+
+These run against freshly-built (temp dir) artifacts for the nano preset —
+they validate the *contract* the Rust runtime depends on without requiring
+`make artifacts` to have run first.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.PRESETS["nano"]
+PLAN = aot.PLANS["nano"]
+
+
+@pytest.fixture(scope="module")
+def entrypoints():
+    return aot.build_entrypoints(CFG, PLAN)
+
+
+def test_entrypoint_names_and_prefix_uniqueness(entrypoints):
+    names = sorted(entrypoints)
+    assert any(n.startswith("rollout") for n in names)
+    assert any(n.startswith("train") for n in names)
+    assert any(n.startswith("sft") for n in names)
+    assert any(n.startswith("forward") for n in names)
+    # the Rust runtime resolves train/sft/forward by unique prefix and
+    # rollout variants by exact row count
+    for prefix in ["train", "sft", "forward"]:
+        assert sum(n.startswith(prefix) for n in names) == 1
+    rollout_rows = sorted(
+        int(n.split("_r")[1]) for n in names if n.startswith("rollout")
+    )
+    assert rollout_rows == sorted(set([PLAN["rollout_rows"]] + PLAN["rollout_variants"]))
+
+
+def test_signatures_are_consistent(entrypoints):
+    n = len(M.param_specs(CFG))
+    for name, (_, args, outputs, _) in entrypoints.items():
+        # all params come first, in spec order
+        for (pname, shape, dtype), (sname, sshape) in zip(args, M.param_specs(CFG)):
+            assert pname == f"param.{sname}"
+            assert tuple(shape) == tuple(sshape)
+            assert dtype == "f32"
+        if name.startswith(("train", "sft")):
+            # adam m/v follow, then step
+            assert args[n][0].startswith("adam_m.")
+            assert args[2 * n][0].startswith("adam_v.")
+            # outputs echo the state: params + m + v + step + stats
+            assert len(outputs) > 3 * n
+            assert outputs[0][0].startswith("param.")
+            assert outputs[3 * n][0] == "step"
+
+
+def test_lowering_produces_parseable_hlo(tmp_path):
+    # Lower only the cheapest entrypoint to keep the test fast.
+    arts = aot.lower_all(
+        CFG, PLAN, str(tmp_path), skip=[n for n in aot.build_entrypoints(CFG, PLAN) if not n.startswith("forward")]
+    )
+    assert len(arts) == 1
+    (name, meta), = arts.items()
+    text = (tmp_path / meta["file"]).read_text()
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+    # arg count must match the signature
+    assert len(meta["args"]) == len(M.param_specs(CFG)) + 1
+
+
+def test_init_params_file_size(tmp_path):
+    fname = aot.export_init_params(CFG, str(tmp_path), seed=0)
+    size = os.path.getsize(tmp_path / fname)
+    assert size == 4 * M.num_params(CFG)
+
+
+def test_init_params_deterministic(tmp_path):
+    for sub in ["a", "b", "c"]:
+        os.makedirs(tmp_path / sub, exist_ok=True)
+    a = aot.export_init_params(CFG, str(tmp_path / "a"), seed=0)
+    b = aot.export_init_params(CFG, str(tmp_path / "b"), seed=0)
+    ba = (tmp_path / "a" / a).read_bytes()
+    bb = (tmp_path / "b" / b).read_bytes()
+    assert ba == bb
+    c = aot.export_init_params(CFG, str(tmp_path / "c"), seed=1)
+    assert (tmp_path / "c" / c).read_bytes() != ba
+
+
+def test_built_manifest_matches_contract():
+    """If `make artifacts` has run, validate the real manifest."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art_dir, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert manifest["vocab"] == M.VOCAB
+    assert manifest["special"] == {"pad": M.PAD, "bos": M.BOS, "eos": M.EOS}
+    specs = [(p["name"], tuple(p["shape"])) for p in manifest["param_specs"]]
+    cfg = M.PRESETS[manifest["preset"]]
+    assert specs == [(n, tuple(s)) for n, s in M.param_specs(cfg)]
+    for art in manifest["artifacts"].values():
+        assert os.path.exists(os.path.join(art_dir, art["file"]))
+    params_file = os.path.join(art_dir, manifest["init_params_file"])
+    assert os.path.getsize(params_file) == 4 * M.num_params(cfg)
+
+
+def test_golden_fixture_reproducible():
+    """Golden values regenerate identically from the same seed (guards the
+    Rust runtime test against drift)."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    golden_path = os.path.join(art_dir, "golden.json")
+    if not os.path.exists(golden_path):
+        pytest.skip("artifacts not built")
+    with open(golden_path) as f:
+        golden = json.load(f)
+    import jax
+    import jax.numpy as jnp
+
+    params = M.init_params(CFG, jax.random.PRNGKey(golden["seed"]))
+    tok = np.array(golden["forward"]["tokens"], np.int32).reshape(
+        golden["forward"]["tokens_shape"]
+    )
+    logits = np.asarray(M.forward_logits(CFG, params, jnp.asarray(tok)))
+    np.testing.assert_allclose(
+        logits[0, 0], np.array(golden["forward"]["logits_row0"]), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,243 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs. pure-jnp oracles.
+
+Hypothesis sweeps shapes/seeds; every property asserts allclose against
+`compile.kernels.ref`. These tests are the core correctness signal for the
+kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.fused_logprob import fused_logprob
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    t=st.sampled_from([8, 16, 24, 48, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_forward_matches_ref(b, h, t, d, causal, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(kk, (b, h, t, d)) for kk in ks)
+    out = flash_attention(q, k, v, causal)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([8, 16]),
+    block_q=st.sampled_from([4, 8, 16, 64]),
+    block_k=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_block_size_invariance(t, d, block_q, block_k, seed):
+    """The tiling schedule must not change the numerics."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (rand(kk, (2, 2, t, d)) for kk in ks)
+    out = flash_attention(q, k, v, True, None, block_q, block_k)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_grads_match_ref(t, d, causal, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q, k, v = (rand(kk, (2, 2, t, d)) for kk in ks[:3])
+    w = rand(ks[3], (d,))
+
+    def f_pallas(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal) * w)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=causal) * w)
+
+    got = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    expect = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for g, e, name in zip(got, expect, "qkv"):
+        np.testing.assert_allclose(g, e, atol=5e-5, rtol=5e-5, err_msg=f"d{name}")
+
+
+def test_flash_attention_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (rand(kk, (1, 2, 16, 8)) for kk in ks)
+    base = flash_attention(q, k, v, True)
+    k2 = k.at[:, :, 10:].set(99.0)
+    v2 = v.at[:, :, 10:].set(-99.0)
+    pert = flash_attention(q, k2, v2, True)
+    np.testing.assert_allclose(base[:, :, :10], pert[:, :, :10], atol=1e-6)
+    assert not np.allclose(base[:, :, 10:], pert[:, :, 10:])
+
+
+def test_flash_attention_scale_override():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (rand(kk, (1, 1, 16, 8)) for kk in ks)
+    out = flash_attention(q, k, v, True, 0.25)
+    expect = ref.attention_ref(q, k, v, causal=True, scale=0.25)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_large_logits_stable():
+    """Online softmax must survive large-magnitude logits (no inf/nan)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (rand(kk, (1, 1, 16, 8), scale=30.0) for kk in ks)
+    out = flash_attention(q, k, v, True)
+    assert np.isfinite(np.asarray(out)).all()
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 3),
+    s=st.sampled_from([8, 16, 32, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, s, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = rand(ks[0], (b, h, d))
+    kc = rand(ks[1], (b, h, s, d))
+    vc = rand(ks[2], (b, h, s, d))
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    out = decode_attention(q, kc, vc, lengths)
+    expect = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ignores_invalid_tail():
+    """Cache positions beyond `lengths` must have zero influence."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = rand(ks[0], (2, 2, 8))
+    kc = rand(ks[1], (2, 2, 16, 8))
+    vc = rand(ks[2], (2, 2, 16, 8))
+    lengths = jnp.array([4, 9], jnp.int32)
+    base = decode_attention(q, kc, vc, lengths)
+    kc2 = kc.at[0, :, 4:].set(123.0).at[1, :, 9:].set(123.0)
+    vc2 = vc.at[0, :, 4:].set(-55.0).at[1, :, 9:].set(-55.0)
+    pert = decode_attention(q, kc2, vc2, lengths)
+    np.testing.assert_allclose(base, pert, atol=1e-6)
+
+
+def test_decode_attention_consistent_with_full_attention():
+    """Decode step t must equal row t of full causal attention."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    b, h, t, d = 2, 2, 12, 8
+    q, k, v = (rand(kk, (b, h, t, d)) for kk in ks)
+    full = ref.attention_ref(q, k, v, causal=True)
+    for step in [0, 3, 11]:
+        out = decode_attention(
+            q[:, :, step],
+            k,
+            v,
+            jnp.full((b,), step + 1, jnp.int32),
+        )
+        np.testing.assert_allclose(out, full[:, :, step], atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused logprob
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    t=st.sampled_from([4, 8, 16]),
+    v=st.sampled_from([8, 16, 32, 40]),
+    scale=st.sampled_from([1.0, 5.0, 20.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_logprob_matches_ref(b, t, v, scale, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    logits = rand(ks[0], (b, t, v), scale=scale)
+    targets = jax.random.randint(ks[1], (b, t), 0, v)
+    out = fused_logprob(logits, targets)
+    expect = ref.logprob_ref(logits, targets)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    v=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_logprob_grad_matches_ref(v, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    logits = rand(ks[0], (2, 6, v), scale=3.0)
+    targets = jax.random.randint(ks[1], (2, 6), 0, v)
+    w = rand(ks[2], (2, 6))
+
+    def f_pallas(l):
+        return jnp.sum(fused_logprob(l, targets) * w)
+
+    def f_ref(l):
+        return jnp.sum(ref.logprob_ref(l, targets) * w)
+
+    got = jax.grad(f_pallas)(logits)
+    expect = jax.grad(f_ref)(logits)
+    np.testing.assert_allclose(got, expect, atol=5e-5, rtol=5e-5)
+
+
+def test_fused_logprob_is_normalized():
+    """exp(logprob) summed over all possible targets must equal 1."""
+    logits = rand(jax.random.PRNGKey(1), (1, 1, 12), scale=4.0)
+    total = sum(
+        float(jnp.exp(fused_logprob(logits, jnp.full((1, 1), c, jnp.int32)))[0, 0])
+        for c in range(12)
+    )
+    assert abs(total - 1.0) < 1e-5
+
+
+def test_fused_logprob_grad_rows_sum_to_zero():
+    """d logprob / d logits rows sum to zero (softmax gradient identity)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    logits = rand(ks[0], (3, 4, 16), scale=2.0)
+    targets = jax.random.randint(ks[1], (3, 4), 0, 16)
+    g = jax.grad(lambda l: jnp.sum(fused_logprob(l, targets)))(logits)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), jnp.zeros((3, 4)), atol=1e-5)
+
+
+def test_fused_logprob_inside_jit_and_vmap():
+    ks = jax.random.split(jax.random.PRNGKey(9), 2)
+    logits = rand(ks[0], (2, 4, 8))
+    targets = jax.random.randint(ks[1], (2, 4), 0, 8)
+    jit_out = jax.jit(fused_logprob, static_argnums=2)(logits, targets, 64)
+    np.testing.assert_allclose(jit_out, ref.logprob_ref(logits, targets), atol=2e-5)

@@ -1,0 +1,151 @@
+//! In-tree benchmark harness (criterion is unavailable offline).
+//!
+//! `harness = false` benches call [`BenchRunner`] for timed micro-sections
+//! and use plain stdout tables for the paper-figure regenerations. Timing
+//! methodology: warmup, then fixed-count timed iterations, reporting
+//! median and MAD (robust to scheduler noise).
+
+use std::time::Instant;
+
+use crate::util::stats::{mad, median};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median_s
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters   median {:>12}   mad {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+        );
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        BenchRunner { warmup: 3, iters: 15 }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(warmup: usize, iters: usize) -> BenchRunner {
+        BenchRunner { warmup, iters }
+    }
+
+    /// Time `f` (which should perform one unit of work per call).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            median_s: median(&times),
+            mad_s: mad(&times),
+        };
+        res.print();
+        res
+    }
+}
+
+/// Markdown-ish table printer for the paper-figure benches.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (cell, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {cell:<w$} |"));
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("{}", line(&sep));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_times_work() {
+        let r = BenchRunner::new(1, 5).run("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.median_s >= 0.0);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn table_checks_width() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

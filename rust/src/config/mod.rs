@@ -1,0 +1,228 @@
+//! Typed run configuration + JSON presets (`configs/*.json`).
+//!
+//! A `RunConfig` fully determines one training run: substrate (sim/real),
+//! model scale, dataset, curriculum, base RL algorithm, SPEED split
+//! (N_init/N_cont), batch sizes and stop conditions. Paper setups are
+//! available as named presets (see [`RunConfig::paper_preset`]).
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::curriculum::CurriculumKind;
+use crate::data::dataset::DatasetKind;
+use crate::rl::algo::BaseAlgo;
+use crate::util::json::Json;
+
+/// Which policy substrate executes the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Substrate {
+    /// IRT simulator at paper scale (default for benches).
+    Sim,
+    /// AOT transformer through PJRT (the E2E examples).
+    Real,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub label: String,
+    pub substrate: Substrate,
+    /// "sim-1.5b" / "sim-7b" for Sim; artifacts dir preset for Real.
+    pub model: String,
+    pub dataset: DatasetKind,
+    pub dataset_size: usize,
+    pub curriculum: CurriculumKind,
+    pub algo: BaseAlgo,
+    /// SPEED split. Non-SPEED curricula use n_init + n_cont rollouts.
+    pub n_init: usize,
+    pub n_cont: usize,
+    /// Screening thresholds (paper default 0/1 strict).
+    pub p_low: f64,
+    pub p_high: f64,
+    pub batch_size: usize,
+    pub temperature: f32,
+    pub lr: f64,
+    pub eval_every: usize,
+    pub max_steps: usize,
+    pub max_seconds: f64,
+    pub seed: u64,
+    /// VarianceMax pool factor.
+    pub pool_factor: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            label: "run".into(),
+            substrate: Substrate::Sim,
+            model: "sim-7b".into(),
+            dataset: DatasetKind::SynthDapo17k,
+            dataset_size: 16_000,
+            curriculum: CurriculumKind::Speed,
+            algo: BaseAlgo::Rloo,
+            n_init: 4,
+            n_cont: 20,
+            p_low: 0.0,
+            p_high: 1.0,
+            batch_size: 16,
+            temperature: 1.0,
+            lr: 1e-6,
+            eval_every: 10,
+            max_steps: 400,
+            max_seconds: f64::INFINITY,
+            seed: 0,
+            pool_factor: 4,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Total rollouts per trained prompt (paper: 24).
+    pub fn n_total(&self) -> usize {
+        self.n_init + self.n_cont
+    }
+
+    /// A paper experimental setup by name, e.g. "7b-deepscale-speed-rloo".
+    /// Grammar: `<model>-<dataset>-<curriculum>-<algo>`.
+    pub fn paper_preset(name: &str) -> Result<RunConfig> {
+        let parts: Vec<&str> = name.split('-').collect();
+        if parts.len() != 4 {
+            bail!("preset '{name}' must be <model>-<dataset>-<curriculum>-<algo>");
+        }
+        let mut cfg = RunConfig::default();
+        cfg.label = name.to_string();
+        cfg.model = match parts[0] {
+            "1.5b" | "15b" => "sim-1.5b".into(),
+            "7b" => "sim-7b".into(),
+            other => bail!("unknown model '{other}'"),
+        };
+        cfg.dataset = DatasetKind::parse(parts[1]).context("dataset")?;
+        cfg.dataset_size = cfg.dataset.default_size().min(40_000);
+        cfg.curriculum = CurriculumKind::parse(parts[2]).context("curriculum")?;
+        cfg.algo = BaseAlgo::parse(parts[3]).context("algo")?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            (
+                "substrate",
+                Json::str(match self.substrate {
+                    Substrate::Sim => "sim",
+                    Substrate::Real => "real",
+                }),
+            ),
+            ("model", Json::str(self.model.clone())),
+            ("dataset", Json::str(self.dataset.name())),
+            ("dataset_size", Json::num(self.dataset_size as f64)),
+            ("curriculum", Json::str(self.curriculum.name())),
+            ("algo", Json::str(self.algo.name())),
+            ("n_init", Json::num(self.n_init as f64)),
+            ("n_cont", Json::num(self.n_cont as f64)),
+            ("p_low", Json::num(self.p_low)),
+            ("p_high", Json::num(self.p_high)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("temperature", Json::num(self.temperature as f64)),
+            ("lr", Json::num(self.lr)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("max_steps", Json::num(self.max_steps as f64)),
+            ("max_seconds", Json::num(self.max_seconds)),
+            ("seed", Json::num(self.seed as f64)),
+            ("pool_factor", Json::num(self.pool_factor as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let get_str = |k: &str| j.get(k).and_then(|x| x.as_str());
+        let get_num = |k: &str| j.get(k).and_then(|x| x.as_f64());
+        if let Some(v) = get_str("label") {
+            cfg.label = v.to_string();
+        }
+        if let Some(v) = get_str("substrate") {
+            cfg.substrate = match v {
+                "sim" => Substrate::Sim,
+                "real" => Substrate::Real,
+                other => bail!("unknown substrate '{other}'"),
+            };
+        }
+        if let Some(v) = get_str("model") {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = get_str("dataset") {
+            cfg.dataset = DatasetKind::parse(v).with_context(|| format!("dataset '{v}'"))?;
+        }
+        if let Some(v) = get_str("curriculum") {
+            cfg.curriculum =
+                CurriculumKind::parse(v).with_context(|| format!("curriculum '{v}'"))?;
+        }
+        if let Some(v) = get_str("algo") {
+            cfg.algo = BaseAlgo::parse(v).with_context(|| format!("algo '{v}'"))?;
+        }
+        macro_rules! num_field {
+            ($key:literal, $field:ident, $ty:ty) => {
+                if let Some(v) = get_num($key) {
+                    cfg.$field = v as $ty;
+                }
+            };
+        }
+        num_field!("dataset_size", dataset_size, usize);
+        num_field!("n_init", n_init, usize);
+        num_field!("n_cont", n_cont, usize);
+        num_field!("p_low", p_low, f64);
+        num_field!("p_high", p_high, f64);
+        num_field!("batch_size", batch_size, usize);
+        num_field!("temperature", temperature, f32);
+        num_field!("lr", lr, f64);
+        num_field!("eval_every", eval_every, usize);
+        num_field!("max_steps", max_steps, usize);
+        num_field!("max_seconds", max_seconds, f64);
+        num_field!("seed", seed, u64);
+        num_field!("pool_factor", pool_factor, usize);
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunConfig> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.label = "x".into();
+        cfg.n_init = 4;
+        cfg.max_seconds = 100.0;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.label, "x");
+        assert_eq!(back.n_init, 4);
+        assert_eq!(back.n_total(), 4 + cfg.n_cont);
+        assert_eq!(back.max_seconds, 100.0);
+        assert_eq!(back.curriculum, cfg.curriculum);
+    }
+
+    #[test]
+    fn paper_presets_parse() {
+        let cfg = RunConfig::paper_preset("7b-deepscale-speed-rloo").unwrap();
+        assert_eq!(cfg.model, "sim-7b");
+        assert_eq!(cfg.dataset, DatasetKind::SynthDeepScale);
+        assert_eq!(cfg.curriculum, CurriculumKind::Speed);
+        assert_eq!(cfg.algo, BaseAlgo::Rloo);
+        let cfg = RunConfig::paper_preset("1.5b-numina-uniform-dapo").unwrap();
+        assert_eq!(cfg.model, "sim-1.5b");
+        assert_eq!(cfg.algo, BaseAlgo::Dapo);
+        assert!(RunConfig::paper_preset("bad").is_err());
+        assert!(RunConfig::paper_preset("7b-nope-speed-rloo").is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! The pre-fetch batcher (paper §4.3): one fixed-shape inference call packs
+//! the *continuation* rows of already-qualified prompts together with the
+//! *screening* rows of the next wave of prompts. This is what turns the
+//! two-phase scheme into a single engine invocation per cycle instead of
+//! two (and is where SPEED's wall-clock win over naive screening comes
+//! from).
+
+use std::collections::VecDeque;
+
+use crate::coordinator::screening::ScreeningRule;
+use crate::data::tasks::TaskInstance;
+use crate::policy::GenRequest;
+
+/// Why a request is in the call (drives result routing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Purpose {
+    Screen,
+    Continue,
+}
+
+/// One planned inference call.
+#[derive(Debug)]
+pub struct CallPlan {
+    pub requests: Vec<GenRequest>,
+    pub purposes: Vec<Purpose>,
+    /// The pending entries consumed by this plan, in the same order as the
+    /// `Purpose::Continue` requests (their screening rollouts get merged
+    /// with the continuation results).
+    pub continuations: Vec<PendingContinuation>,
+    pub rows_used: usize,
+    pub capacity: usize,
+}
+
+impl CallPlan {
+    pub fn utilization(&self) -> f64 {
+        self.rows_used as f64 / self.capacity as f64
+    }
+
+    pub fn n_screen(&self) -> usize {
+        self.purposes.iter().filter(|p| **p == Purpose::Screen).count()
+    }
+
+    pub fn n_continue(&self) -> usize {
+        self.purposes.iter().filter(|p| **p == Purpose::Continue).count()
+    }
+}
+
+/// A prompt that passed screening and awaits its continuation rollouts.
+#[derive(Clone, Debug)]
+pub struct PendingContinuation {
+    pub prompt_idx: usize,
+    pub task: TaskInstance,
+    /// Screening rollouts to be merged with the continuation ones.
+    pub screening: Vec<crate::rl::update::Rollout>,
+    pub born_step: usize,
+}
+
+/// Pack the next inference call: continuations first (they complete groups
+/// and unblock training), then screening rows for fresh prompts from
+/// `supply` until the call is full.
+///
+/// `max_screen` caps how many new prompts are screened in this call (used
+/// to stop pulling data when the buffer already overflows the target batch;
+/// `usize::MAX` = fill the call).
+pub fn plan_call(
+    pending: &mut VecDeque<PendingContinuation>,
+    mut supply: impl FnMut() -> (usize, TaskInstance),
+    rule: &ScreeningRule,
+    capacity: usize,
+    max_screen: usize,
+) -> CallPlan {
+    assert!(rule.n_init <= capacity, "N_init exceeds call capacity");
+    assert!(rule.n_cont <= capacity, "N_cont exceeds call capacity");
+    let mut requests = Vec::new();
+    let mut purposes = Vec::new();
+    let mut continuations = Vec::new();
+    let mut rows = 0usize;
+
+    // Phase A: continuation rows for previously-qualified prompts (FIFO).
+    while pending.front().is_some() {
+        if rows + rule.n_cont > capacity {
+            break;
+        }
+        let p = pending.pop_front().unwrap();
+        requests.push(GenRequest {
+            prompt_idx: p.prompt_idx,
+            task: p.task.clone(),
+            n_samples: rule.n_cont,
+        });
+        purposes.push(Purpose::Continue);
+        continuations.push(p);
+        rows += rule.n_cont;
+    }
+
+    // Phase B: screening rows for the next wave of prompts.
+    let mut screened = 0usize;
+    while rows + rule.n_init <= capacity && screened < max_screen {
+        let (prompt_idx, task) = supply();
+        requests.push(GenRequest { prompt_idx, task, n_samples: rule.n_init });
+        purposes.push(Purpose::Screen);
+        rows += rule.n_init;
+        screened += 1;
+    }
+
+    CallPlan { requests, purposes, continuations, rows_used: rows, capacity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{generate, TaskFamily};
+    use crate::rl::update::Rollout;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+    use crate::prop_assert;
+
+    fn task(rng: &mut Rng) -> TaskInstance {
+        generate(rng, TaskFamily::Add, 3, 24)
+    }
+
+    fn pend(rng: &mut Rng, idx: usize, n_init: usize) -> PendingContinuation {
+        PendingContinuation {
+            prompt_idx: idx,
+            task: task(rng),
+            screening: vec![
+                Rollout { gen_tokens: vec![2], gen_logprobs: vec![-0.2], reward: 1.0 };
+                n_init
+            ],
+            born_step: 0,
+        }
+    }
+
+    #[test]
+    fn continuations_take_priority() {
+        let mut rng = Rng::new(0);
+        let rule = ScreeningRule::new(4, 12);
+        let mut pending: VecDeque<_> = (0..2).map(|i| pend(&mut rng, i, 4)).collect();
+        let mut rng2 = Rng::new(1);
+        let mut next = 100usize;
+        let plan = plan_call(
+            &mut pending,
+            || {
+                next += 1;
+                (next, task(&mut rng2))
+            },
+            &rule,
+            64,
+            usize::MAX,
+        );
+        // 2 continuations (24 rows) + 10 screenings (40 rows) = 64 rows
+        assert_eq!(plan.n_continue(), 2);
+        assert_eq!(plan.n_screen(), 10);
+        assert_eq!(plan.rows_used, 64);
+        assert!(pending.is_empty());
+        assert_eq!(plan.purposes[0], Purpose::Continue);
+    }
+
+    #[test]
+    fn oversized_pending_spills_to_next_call() {
+        let mut rng = Rng::new(3);
+        let rule = ScreeningRule::new(8, 24);
+        let mut pending: VecDeque<_> = (0..5).map(|i| pend(&mut rng, i, 8)).collect();
+        let mut rng2 = Rng::new(4);
+        let plan = plan_call(&mut pending, || (0, task(&mut rng2)), &rule, 64, usize::MAX);
+        // two continuations fit (48 rows), then screening fills 2x8 = 16
+        assert_eq!(plan.n_continue(), 2);
+        assert_eq!(plan.n_screen(), 2);
+        assert_eq!(pending.len(), 3); // spilled
+    }
+
+    #[test]
+    fn max_screen_zero_disables_prefetch() {
+        let mut rng = Rng::new(5);
+        let rule = ScreeningRule::new(4, 12);
+        let mut pending: VecDeque<_> = vec![pend(&mut rng, 0, 4)].into();
+        let mut rng2 = Rng::new(6);
+        let plan = plan_call(&mut pending, || (0, task(&mut rng2)), &rule, 64, 0);
+        assert_eq!(plan.n_continue(), 1);
+        assert_eq!(plan.n_screen(), 0);
+        assert_eq!(plan.rows_used, 12);
+    }
+
+    #[test]
+    fn packing_invariants() {
+        check("batcher-packing", 80, |rng| {
+            let n_init = rng.range_usize(2, 8);
+            let n_cont = rng.range_usize(4, 24);
+            let capacity = rng.range_usize(n_init.max(n_cont), 96);
+            let rule = ScreeningRule::new(n_init, n_cont);
+            let n_pending = rng.range_usize(0, 6);
+            let mut seed_rng = Rng::new(rng.next_u64());
+            let mut pending: VecDeque<_> =
+                (0..n_pending).map(|i| pend(&mut seed_rng, i, n_init)).collect();
+            let mut supply_rng = Rng::new(rng.next_u64());
+            let before = pending.len();
+            let plan = plan_call(&mut pending, || (7, task(&mut supply_rng)), &rule, capacity, usize::MAX);
+            // rows accounting is exact
+            let rows: usize = plan.requests.iter().map(|r| r.n_samples).sum();
+            prop_assert!(rows == plan.rows_used, "row accounting mismatch");
+            prop_assert!(plan.rows_used <= capacity, "over capacity");
+            // no screening row could have been added
+            prop_assert!(
+                plan.rows_used + n_init > capacity,
+                "call left unfilled: {} + {} <= {}",
+                plan.rows_used,
+                n_init,
+                capacity
+            );
+            // continuations consumed FIFO from the front
+            prop_assert!(plan.n_continue() == before - pending.len(), "pending accounting");
+            // all continuations precede all screenings
+            let first_screen = plan.purposes.iter().position(|p| *p == Purpose::Screen);
+            if let Some(fs) = first_screen {
+                prop_assert!(
+                    plan.purposes[fs..].iter().all(|p| *p == Purpose::Screen),
+                    "interleaved purposes"
+                );
+            }
+            Ok(())
+        });
+    }
+}

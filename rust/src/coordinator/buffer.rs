@@ -1,0 +1,141 @@
+//! The sampling buffer (paper §4.3, Algorithm 2's `D_buffer`).
+//!
+//! The number of qualified prompts per inference call fluctuates with the
+//! live pass-rate distribution; the buffer absorbs the surplus so every
+//! training step sees exactly `B` groups, at the price of a bounded amount
+//! of off-policy staleness (tracked per group for diagnostics).
+
+use std::collections::VecDeque;
+
+use crate::rl::update::PromptGroup;
+
+/// A completed group waiting for a training slot.
+#[derive(Clone, Debug)]
+struct Buffered {
+    group: PromptGroup,
+    /// Optimizer step at which the group's rollouts were generated.
+    born_step: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct SamplingBuffer {
+    q: VecDeque<Buffered>,
+    /// Sum over consumed groups of (train_step - born_step); staleness
+    /// diagnostic for the off-policy trade-off discussed in §4.3.
+    staleness_sum: u64,
+    consumed: u64,
+}
+
+impl SamplingBuffer {
+    pub fn new() -> SamplingBuffer {
+        SamplingBuffer::default()
+    }
+
+    pub fn push(&mut self, group: PromptGroup, born_step: usize) {
+        self.q.push_back(Buffered { group, born_step });
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Pop exactly `b` groups (FIFO: oldest first, bounding staleness).
+    /// Returns None when fewer than `b` are buffered — the caller keeps
+    /// running inference (Alg. 2 line 4).
+    pub fn take_batch(&mut self, b: usize, train_step: usize) -> Option<Vec<PromptGroup>> {
+        if self.q.len() < b {
+            return None;
+        }
+        let mut out = Vec::with_capacity(b);
+        for _ in 0..b {
+            let item = self.q.pop_front().unwrap();
+            self.staleness_sum += (train_step.saturating_sub(item.born_step)) as u64;
+            self.consumed += 1;
+            out.push(item.group);
+        }
+        Some(out)
+    }
+
+    /// Mean steps-in-buffer over all consumed groups.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.consumed == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.consumed as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::update::Rollout;
+    use crate::util::proptest::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn group(idx: usize) -> PromptGroup {
+        PromptGroup {
+            prompt_idx: idx,
+            task: crate::data::tasks::TaskInstance {
+                family: crate::data::tasks::TaskFamily::Add,
+                level: 1,
+                prompt: "1+1=".into(),
+                answer: 2,
+            },
+            rollouts: vec![Rollout { gen_tokens: vec![2], gen_logprobs: vec![-0.1], reward: 1.0 }],
+        }
+    }
+
+    #[test]
+    fn returns_none_until_full_batch() {
+        let mut buf = SamplingBuffer::new();
+        buf.push(group(0), 0);
+        assert!(buf.take_batch(2, 0).is_none());
+        assert_eq!(buf.len(), 1); // nothing consumed by the failed take
+        buf.push(group(1), 0);
+        let batch = buf.take_batch(2, 1).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn fifo_order_bounds_staleness() {
+        let mut buf = SamplingBuffer::new();
+        for i in 0..5 {
+            buf.push(group(i), i);
+        }
+        let batch = buf.take_batch(3, 10).unwrap();
+        let idxs: Vec<usize> = batch.iter().map(|g| g.prompt_idx).collect();
+        assert_eq!(idxs, vec![0, 1, 2]); // oldest first
+        assert!((buf.mean_staleness() - (10.0 + 9.0 + 8.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conservation_property() {
+        // pushes == pops + remaining, across random interleavings
+        check("buffer-conservation", 50, |rng| {
+            let mut buf = SamplingBuffer::new();
+            let mut pushed = 0usize;
+            let mut popped = 0usize;
+            for step in 0..rng.range_usize(5, 40) {
+                if rng.bool(0.6) {
+                    buf.push(group(pushed), step);
+                    pushed += 1;
+                }
+                if rng.bool(0.4) {
+                    let b = rng.range_usize(1, 4);
+                    if let Some(batch) = buf.take_batch(b, step) {
+                        prop_assert_eq!(batch.len(), b);
+                        popped += batch.len();
+                    }
+                }
+            }
+            prop_assert!(pushed == popped + buf.len(), "conservation violated");
+            Ok(())
+        });
+    }
+}

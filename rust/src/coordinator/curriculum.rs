@@ -1,0 +1,368 @@
+//! Curriculum strategies: how training batches are collected from the
+//! inference engine.
+//!
+//! * [`Uniform`]     — vanilla RL: every sampled prompt gets all N rollouts
+//!                     and is trained on (RLOO / GRPO / REINFORCE baselines).
+//! * [`DapoFilter`]  — DAPO's dynamic sampling: full inference first, then
+//!                     discard uniform-reward groups and resample until the
+//!                     batch is full (post-hoc filtering — pays full
+//!                     inference for rejected prompts).
+//! * [`Speed`]       — the paper's Algorithm 2: screening with `N_init`
+//!                     rollouts, continuation only for qualified prompts,
+//!                     sampling buffer + pre-fetch batcher.
+//! * [`VarianceMax`] — Foster & Foerster (2025): full inference on a pool,
+//!                     train on the top-B by reward variance.
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{plan_call, Purpose};
+use crate::coordinator::buffer::SamplingBuffer;
+use crate::coordinator::screening::ScreeningRule;
+use crate::data::dataset::Dataset;
+use crate::data::loader::Loader;
+use crate::data::tasks::TaskInstance;
+use crate::metrics::InferenceCounters;
+use crate::policy::{GenRequest, Policy};
+use crate::rl::update::PromptGroup;
+
+/// Strategy selector (CLI / config name).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CurriculumKind {
+    Uniform,
+    DapoFilter,
+    Speed,
+    /// Algorithm 1 without §4.3's pre-fetching/buffering (ablation).
+    SpeedNaive,
+    VarianceMax,
+}
+
+impl CurriculumKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CurriculumKind::Uniform => "uniform",
+            CurriculumKind::DapoFilter => "dapo-filter",
+            CurriculumKind::Speed => "speed",
+            CurriculumKind::SpeedNaive => "speed-naive",
+            CurriculumKind::VarianceMax => "variance-max",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CurriculumKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" | "vanilla" => Some(CurriculumKind::Uniform),
+            "dapo-filter" | "dapo" => Some(CurriculumKind::DapoFilter),
+            "speed" => Some(CurriculumKind::Speed),
+            "speed-naive" | "naive" => Some(CurriculumKind::SpeedNaive),
+            "variance-max" | "varmax" => Some(CurriculumKind::VarianceMax),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a curriculum needs to drive one batch collection.
+pub struct StepContext<'a> {
+    pub policy: &'a mut dyn Policy,
+    pub dataset: &'a Dataset,
+    pub loader: &'a mut Loader,
+    pub train_step: usize,
+    pub temperature: f32,
+    pub counters: &'a mut InferenceCounters,
+}
+
+impl<'a> StepContext<'a> {
+    pub(crate) fn next_prompt(&mut self) -> (usize, TaskInstance) {
+        let idx = self.loader.next_index();
+        (idx, self.dataset.instances[idx].clone())
+    }
+
+    /// Execute one batched generation call and account for it.
+    pub(crate) fn run_call(&mut self, requests: &[GenRequest]) -> Result<crate::policy::GenResult> {
+        let res = self.policy.generate(requests, self.temperature)?;
+        self.counters.calls += 1;
+        self.counters.rows_used += res.rows_used as u64;
+        self.counters.rows_capacity += self.policy.rollout_capacity() as u64;
+        self.counters.cost_s += res.cost_s;
+        self.counters.rollouts += res.groups.iter().map(|g| g.len() as u64).sum::<u64>();
+        Ok(res)
+    }
+}
+
+/// A curriculum collects complete training batches of `B` prompt groups.
+pub trait Curriculum {
+    fn collect_batch(
+        &mut self,
+        ctx: &mut StepContext<'_>,
+        batch_size: usize,
+    ) -> Result<Vec<PromptGroup>>;
+
+    fn kind(&self) -> CurriculumKind;
+
+    /// Groups waiting in internal buffers (SPEED's sampling buffer).
+    fn buffered(&self) -> usize {
+        0
+    }
+}
+
+/// Construct a strategy. `rule` supplies (N_init, N_cont) — non-SPEED
+/// strategies use `rule.n_total()` rollouts per prompt.
+pub fn make(kind: CurriculumKind, rule: ScreeningRule, pool_factor: usize) -> Box<dyn Curriculum> {
+    match kind {
+        CurriculumKind::Uniform => Box::new(Uniform { n_total: rule.n_total() }),
+        CurriculumKind::DapoFilter => Box::new(DapoFilter { n_total: rule.n_total() }),
+        CurriculumKind::Speed => Box::new(Speed::new(rule)),
+        CurriculumKind::SpeedNaive => {
+            Box::new(crate::coordinator::naive::SpeedNaive::new(rule))
+        }
+        CurriculumKind::VarianceMax => {
+            Box::new(VarianceMax { n_total: rule.n_total(), pool_factor })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Uniform (vanilla)
+// ---------------------------------------------------------------------------
+
+/// Vanilla RL: sample B prompts, N rollouts each, train on all of them.
+pub struct Uniform {
+    pub n_total: usize,
+}
+
+/// Generate full-N groups for `prompts`, splitting across as many calls as
+/// capacity requires. Shared by Uniform / DapoFilter / VarianceMax.
+fn full_inference(
+    ctx: &mut StepContext<'_>,
+    prompts: Vec<(usize, TaskInstance)>,
+    n_total: usize,
+) -> Result<Vec<PromptGroup>> {
+    let capacity = ctx.policy.rollout_capacity();
+    assert!(n_total <= capacity, "N={n_total} exceeds inference call capacity {capacity}");
+    let per_call = capacity / n_total;
+    let mut groups = Vec::with_capacity(prompts.len());
+    for chunk in prompts.chunks(per_call) {
+        let requests: Vec<GenRequest> = chunk
+            .iter()
+            .map(|(idx, task)| GenRequest {
+                prompt_idx: *idx,
+                task: task.clone(),
+                n_samples: n_total,
+            })
+            .collect();
+        let res = ctx.run_call(&requests)?;
+        for (req, rollouts) in requests.into_iter().zip(res.groups) {
+            groups.push(PromptGroup { prompt_idx: req.prompt_idx, task: req.task, rollouts });
+        }
+    }
+    Ok(groups)
+}
+
+impl Curriculum for Uniform {
+    fn collect_batch(
+        &mut self,
+        ctx: &mut StepContext<'_>,
+        batch_size: usize,
+    ) -> Result<Vec<PromptGroup>> {
+        let prompts: Vec<_> = (0..batch_size).map(|_| ctx.next_prompt()).collect();
+        full_inference(ctx, prompts, self.n_total)
+    }
+
+    fn kind(&self) -> CurriculumKind {
+        CurriculumKind::Uniform
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DAPO dynamic sampling
+// ---------------------------------------------------------------------------
+
+/// DAPO: full inference, then discard groups whose rewards are uniform
+/// (pass rate exactly 0 or 1) and keep sampling until B survive.
+pub struct DapoFilter {
+    pub n_total: usize,
+}
+
+impl Curriculum for DapoFilter {
+    fn collect_batch(
+        &mut self,
+        ctx: &mut StepContext<'_>,
+        batch_size: usize,
+    ) -> Result<Vec<PromptGroup>> {
+        let mut kept: Vec<PromptGroup> = Vec::with_capacity(batch_size);
+        // Safety valve: stop resampling after many waves (e.g. a dataset the
+        // model fully saturates) and train on whatever survived.
+        let max_waves = 64;
+        for _wave in 0..max_waves {
+            let need = batch_size - kept.len();
+            if need == 0 {
+                break;
+            }
+            let prompts: Vec<_> = (0..need).map(|_| ctx.next_prompt()).collect();
+            let groups = full_inference(ctx, prompts, self.n_total)?;
+            for g in groups {
+                ctx.counters.prompts_screened += 1;
+                let p = g.pass_rate();
+                if p > 0.0 && p < 1.0 {
+                    ctx.counters.prompts_accepted += 1;
+                    kept.push(g);
+                }
+            }
+        }
+        Ok(kept)
+    }
+
+    fn kind(&self) -> CurriculumKind {
+        CurriculumKind::DapoFilter
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SPEED (Algorithm 2)
+// ---------------------------------------------------------------------------
+
+/// The paper's method: two-phase inference with pre-fetching and a sampling
+/// buffer.
+pub struct Speed {
+    pub rule: ScreeningRule,
+    pending: std::collections::VecDeque<crate::coordinator::batcher::PendingContinuation>,
+    buffer: SamplingBuffer,
+    /// Cap on (buffer + pending) in units of training batches before
+    /// screening pauses; bounds off-policy staleness.
+    pub backlog_batches: usize,
+}
+
+impl Speed {
+    pub fn new(rule: ScreeningRule) -> Speed {
+        Speed {
+            rule,
+            pending: std::collections::VecDeque::new(),
+            buffer: SamplingBuffer::new(),
+            backlog_batches: 4,
+        }
+    }
+
+    pub fn mean_staleness(&self) -> f64 {
+        self.buffer.mean_staleness()
+    }
+}
+
+impl Curriculum for Speed {
+    fn collect_batch(
+        &mut self,
+        ctx: &mut StepContext<'_>,
+        batch_size: usize,
+    ) -> Result<Vec<PromptGroup>> {
+        loop {
+            if let Some(batch) = self.buffer.take_batch(batch_size, ctx.train_step) {
+                return Ok(batch);
+            }
+            // Algorithm 2 lines 4-14: one unified inference call mixing the
+            // continuation phase of qualified prompts with the screening
+            // phase of the next prompt wave.
+            let backlog = self.buffer.len() + self.pending.len();
+            let screening_on = backlog < self.backlog_batches * batch_size;
+            let capacity = ctx.policy.rollout_capacity();
+            let pending = &mut self.pending;
+            let rule = self.rule;
+            // The supply closure pulls straight from the loader.
+            let loader = &mut *ctx.loader;
+            let dataset = ctx.dataset;
+            let plan = plan_call(
+                pending,
+                || {
+                    let idx = loader.next_index();
+                    (idx, dataset.instances[idx].clone())
+                },
+                &rule,
+                capacity,
+                if screening_on { usize::MAX } else { 0 },
+            );
+            anyhow::ensure!(
+                !plan.requests.is_empty(),
+                "SPEED planned an empty call (capacity {capacity}, N_init {}, N_cont {})",
+                self.rule.n_init,
+                self.rule.n_cont
+            );
+            let res = ctx.run_call(&plan.requests)?;
+
+            let mut cont_iter = plan.continuations.into_iter();
+            for ((req, purpose), rollouts) in
+                plan.requests.into_iter().zip(plan.purposes).zip(res.groups)
+            {
+                match purpose {
+                    Purpose::Screen => {
+                        ctx.counters.prompts_screened += 1;
+                        let rewards: Vec<f32> = rollouts.iter().map(|r| r.reward).collect();
+                        if self.rule.qualified(&rewards) {
+                            ctx.counters.prompts_accepted += 1;
+                            self.pending.push_back(
+                                crate::coordinator::batcher::PendingContinuation {
+                                    prompt_idx: req.prompt_idx,
+                                    task: req.task,
+                                    screening: rollouts,
+                                    born_step: ctx.train_step,
+                                },
+                            );
+                        }
+                        // Unqualified prompts are dropped here: their would-be
+                        // N_cont continuation rollouts are the compute SPEED
+                        // saves relative to full inference.
+                    }
+                    Purpose::Continue => {
+                        let pend = cont_iter.next().expect("continuation bookkeeping");
+                        let mut all = pend.screening;
+                        all.extend(rollouts);
+                        debug_assert_eq!(all.len(), self.rule.n_total());
+                        self.buffer.push(
+                            PromptGroup { prompt_idx: req.prompt_idx, task: req.task, rollouts: all },
+                            pend.born_step,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn kind(&self) -> CurriculumKind {
+        CurriculumKind::Speed
+    }
+
+    fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Variance-max baseline (Foster & Foerster 2025)
+// ---------------------------------------------------------------------------
+
+/// Full inference on `pool_factor * B` prompts; train on the top-B by
+/// reward variance p(1-p).
+pub struct VarianceMax {
+    pub n_total: usize,
+    pub pool_factor: usize,
+}
+
+impl Curriculum for VarianceMax {
+    fn collect_batch(
+        &mut self,
+        ctx: &mut StepContext<'_>,
+        batch_size: usize,
+    ) -> Result<Vec<PromptGroup>> {
+        let pool_size = batch_size * self.pool_factor.max(1);
+        let prompts: Vec<_> = (0..pool_size).map(|_| ctx.next_prompt()).collect();
+        let mut groups = full_inference(ctx, prompts, self.n_total)?;
+        ctx.counters.prompts_screened += groups.len() as u64;
+        groups.sort_by(|a, b| {
+            let va = a.pass_rate() * (1.0 - a.pass_rate());
+            let vb = b.pass_rate() * (1.0 - b.pass_rate());
+            vb.partial_cmp(&va).unwrap()
+        });
+        groups.truncate(batch_size);
+        ctx.counters.prompts_accepted += groups.len() as u64;
+        Ok(groups)
+    }
+
+    fn kind(&self) -> CurriculumKind {
+        CurriculumKind::VarianceMax
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's system contribution (SPEED, §4): online curriculum
+//! scheduling of inference and training.
+//!
+//! * [`screening`]  — the lightweight pass-rate test over `N_init` rollouts
+//! * [`buffer`]     — the sampling buffer decoupling qualified-prompt supply
+//!                    from the fixed training batch size (Alg. 2)
+//! * [`batcher`]    — the pre-fetch batcher packing continuation rows of
+//!                    batch *t* with screening rows of batch *t+1* into one
+//!                    fixed-shape inference call (§4.3)
+//! * [`curriculum`] — strategy trait: `Uniform` (vanilla), `DapoFilter`,
+//!                    `Speed` (Alg. 2), `VarianceMax` (Foster–Foerster)
+//! * [`trainer`]    — the outer loop: inference → verify → select → update,
+//!                    with per-phase wall-clock accounting
+
+pub mod batcher;
+pub mod naive;
+pub mod buffer;
+pub mod curriculum;
+pub mod screening;
+pub mod trainer;
+
+pub use curriculum::{Curriculum, CurriculumKind};
+pub use screening::ScreeningRule;
+pub use trainer::{Trainer, TrainerConfig};

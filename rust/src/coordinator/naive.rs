@@ -1,0 +1,89 @@
+//! The *naive* two-phase variant (paper §4.3's strawman): screening and
+//! continuation issued as **separate** inference calls, no pre-fetching, no
+//! sampling buffer. Paper's point: this realizes little wall-clock gain
+//! because each half-empty call still pays the engine overhead — the
+//! pre-fetch batcher is what converts screening into actual speedup.
+//! Kept as a first-class ablation (`--curriculum speed-naive`).
+
+use anyhow::Result;
+
+use crate::coordinator::curriculum::{Curriculum, CurriculumKind, StepContext};
+use crate::coordinator::screening::ScreeningRule;
+use crate::policy::GenRequest;
+use crate::rl::update::PromptGroup;
+
+pub struct SpeedNaive {
+    pub rule: ScreeningRule,
+}
+
+impl SpeedNaive {
+    pub fn new(rule: ScreeningRule) -> SpeedNaive {
+        SpeedNaive { rule }
+    }
+}
+
+impl Curriculum for SpeedNaive {
+    fn collect_batch(
+        &mut self,
+        ctx: &mut StepContext<'_>,
+        batch_size: usize,
+    ) -> Result<Vec<PromptGroup>> {
+        let capacity = ctx.policy.rollout_capacity();
+        let mut qualified: Vec<(GenRequest, Vec<crate::rl::update::Rollout>)> = Vec::new();
+
+        // Phase 1: screening calls until enough prompts qualify.
+        while qualified.len() < batch_size {
+            let per_call = capacity / self.rule.n_init;
+            let requests: Vec<GenRequest> = (0..per_call)
+                .map(|_| {
+                    let idx = ctx.loader.next_index();
+                    GenRequest {
+                        prompt_idx: idx,
+                        task: ctx.dataset.instances[idx].clone(),
+                        n_samples: self.rule.n_init,
+                    }
+                })
+                .collect();
+            let res = ctx.run_call(&requests)?;
+            for (req, rollouts) in requests.into_iter().zip(res.groups) {
+                ctx.counters.prompts_screened += 1;
+                let rewards: Vec<f32> = rollouts.iter().map(|r| r.reward).collect();
+                if self.rule.qualified(&rewards) {
+                    ctx.counters.prompts_accepted += 1;
+                    qualified.push((req, rollouts));
+                }
+            }
+        }
+        qualified.truncate(batch_size);
+
+        // Phase 2: a separate continuation call per wave of qualified
+        // prompts (the second engine invocation the paper's batcher avoids).
+        let per_call = capacity / self.rule.n_cont;
+        let mut groups = Vec::with_capacity(batch_size);
+        for wave in qualified.chunks(per_call) {
+            let requests: Vec<GenRequest> = wave
+                .iter()
+                .map(|(req, _)| GenRequest {
+                    prompt_idx: req.prompt_idx,
+                    task: req.task.clone(),
+                    n_samples: self.rule.n_cont,
+                })
+                .collect();
+            let res = ctx.run_call(&requests)?;
+            for ((req, screening), cont) in wave.iter().zip(res.groups) {
+                let mut all = screening.clone();
+                all.extend(cont);
+                groups.push(PromptGroup {
+                    prompt_idx: req.prompt_idx,
+                    task: req.task.clone(),
+                    rollouts: all,
+                });
+            }
+        }
+        Ok(groups)
+    }
+
+    fn kind(&self) -> CurriculumKind {
+        CurriculumKind::SpeedNaive
+    }
+}

@@ -1,0 +1,98 @@
+//! The screening phase (paper §4.1): a lightweight statistical test on
+//! `N_init` rollouts that decides whether a prompt's difficulty is in the
+//! informative band before any continuation compute is spent.
+
+use crate::rl::advantage::pass_rate;
+
+/// Pass-rate acceptance test. Paper defaults: `P_low = 0`, `P_high = 1`
+/// (strict inequalities — Algorithm 1 line 7: `0 < PASSRATE(x) < 1`).
+#[derive(Clone, Copy, Debug)]
+pub struct ScreeningRule {
+    pub n_init: usize,
+    pub n_cont: usize,
+    pub p_low: f64,
+    pub p_high: f64,
+}
+
+impl ScreeningRule {
+    /// Paper's default thresholds with the given split.
+    pub fn new(n_init: usize, n_cont: usize) -> ScreeningRule {
+        ScreeningRule { n_init, n_cont, p_low: 0.0, p_high: 1.0 }
+    }
+
+    pub fn with_thresholds(mut self, p_low: f64, p_high: f64) -> ScreeningRule {
+        self.p_low = p_low;
+        self.p_high = p_high;
+        self
+    }
+
+    /// Total rollouts per qualified prompt.
+    pub fn n_total(&self) -> usize {
+        self.n_init + self.n_cont
+    }
+
+    /// The screening decision (Algorithm 1 line 7 / Algorithm 2 line 14).
+    pub fn qualified(&self, screening_rewards: &[f32]) -> bool {
+        debug_assert_eq!(screening_rewards.len(), self.n_init);
+        let p = pass_rate(screening_rewards);
+        p > self.p_low && p < self.p_high
+    }
+
+    /// Probability a prompt with true pass rate `p` survives screening
+    /// (used by the simulator and the Fig. 5 analysis).
+    pub fn acceptance_probability(&self, p: f64) -> f64 {
+        crate::rl::theory::acceptance_probability(self.n_init, p, self.p_low, self.p_high)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::prop_assert;
+
+    #[test]
+    fn strict_bounds_default() {
+        let rule = ScreeningRule::new(4, 20);
+        assert!(!rule.qualified(&[0.0, 0.0, 0.0, 0.0]));
+        assert!(!rule.qualified(&[1.0, 1.0, 1.0, 1.0]));
+        assert!(rule.qualified(&[1.0, 0.0, 0.0, 0.0]));
+        assert!(rule.qualified(&[1.0, 1.0, 1.0, 0.0]));
+        assert_eq!(rule.n_total(), 24);
+    }
+
+    #[test]
+    fn custom_thresholds() {
+        // e.g. only the 25%-75% band
+        let rule = ScreeningRule::new(8, 16).with_thresholds(0.25, 0.75);
+        assert!(!rule.qualified(&[1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])); // 0.25 not > 0.25
+        assert!(rule.qualified(&[1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0])); // 0.375
+        assert!(!rule.qualified(&[1.0; 8][..6].iter().chain([0.0, 0.0].iter()).cloned().collect::<Vec<_>>().as_slice())); // 0.75 not < 0.75
+    }
+
+    #[test]
+    fn acceptance_probability_consistent_with_qualified() {
+        // Monte-Carlo frequency of `qualified` must match the closed form.
+        check("screening-acceptance-mc", 10, |rng| {
+            let n_init = rng.range_usize(3, 8);
+            let p = rng.f64();
+            let rule = ScreeningRule::new(n_init, 8);
+            let trials = 4000;
+            let mut hits = 0;
+            for _ in 0..trials {
+                let rewards: Vec<f32> =
+                    (0..n_init).map(|_| if rng.bool(p) { 1.0 } else { 0.0 }).collect();
+                if rule.qualified(&rewards) {
+                    hits += 1;
+                }
+            }
+            let freq = hits as f64 / trials as f64;
+            let expect = rule.acceptance_probability(p);
+            prop_assert!(
+                (freq - expect).abs() < 0.05,
+                "freq {freq} vs closed-form {expect} (p={p}, n_init={n_init})"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! The training loop: curriculum → inference → RL update → periodic eval,
+//! with the paper's wall-clock accounting (training time = inference +
+//! update; validation and checkpointing excluded, §5.1).
+
+use anyhow::Result;
+
+use crate::coordinator::curriculum::{Curriculum, StepContext};
+use crate::data::dataset::Dataset;
+use crate::data::loader::Loader;
+use crate::metrics::{EvalRecord, InferenceCounters, RunRecord, StepRecord};
+use crate::policy::Policy;
+use crate::rl::algo::AlgoConfig;
+use crate::util::stats::Ema;
+
+/// Stop conditions + cadence for one run.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    /// Training batch size B (prompts per update). Paper default: 16.
+    pub batch_size: usize,
+    /// Sampling temperature for training rollouts.
+    pub temperature: f32,
+    /// Evaluate every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    pub max_steps: usize,
+    /// Stop when cumulative training time exceeds this (seconds; the
+    /// simulator's virtual seconds for SimPolicy runs).
+    pub max_seconds: f64,
+    /// Stop early when a benchmark hits a target: (benchmark name, target).
+    pub stop_at_target: Option<(String, f64)>,
+    pub seed: u64,
+    /// Label recorded in the run record (e.g. "SPEED-RLOO").
+    pub label: String,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            batch_size: 16,
+            temperature: 1.0,
+            eval_every: 10,
+            max_steps: 200,
+            max_seconds: f64::INFINITY,
+            stop_at_target: None,
+            seed: 0,
+            label: "run".to_string(),
+        }
+    }
+}
+
+/// One benchmark to track during training.
+pub struct EvalSet {
+    pub name: String,
+    pub tasks: Vec<crate::data::tasks::TaskInstance>,
+}
+
+pub struct Trainer {
+    pub config: TrainerConfig,
+    pub algo: AlgoConfig,
+}
+
+impl Trainer {
+    pub fn new(config: TrainerConfig, algo: AlgoConfig) -> Trainer {
+        Trainer { config, algo }
+    }
+
+    /// Run the full loop; returns the complete run record.
+    pub fn run(
+        &self,
+        policy: &mut dyn Policy,
+        curriculum: &mut dyn Curriculum,
+        dataset: &Dataset,
+        evals: &[EvalSet],
+    ) -> Result<RunRecord> {
+        let mut loader = Loader::new(dataset.len(), self.config.seed);
+        let mut counters = InferenceCounters::default();
+        let mut record = RunRecord { label: self.config.label.clone(), ..Default::default() };
+        let mut inference_s = 0.0f64;
+        let mut update_s = 0.0f64;
+        let mut baseline_ema = Ema::new(0.1); // REINFORCE global baseline
+
+        // Step-0 evaluation so every curve starts at the base model.
+        self.evaluate_all(policy, evals, 0, 0.0, &mut record)?;
+
+        for step in 0..self.config.max_steps {
+            // ---- collect one batch via the curriculum (inference phase) ----
+            let inf_before = counters.cost_s;
+            let groups = {
+                let mut ctx = StepContext {
+                    policy,
+                    dataset,
+                    loader: &mut loader,
+                    train_step: step,
+                    temperature: self.config.temperature,
+                    counters: &mut counters,
+                };
+                curriculum.collect_batch(&mut ctx, self.config.batch_size)?
+            };
+            inference_s += counters.cost_s - inf_before;
+
+            // ---- algorithm-level group filter (DAPO keeps it on too when
+            // run through Uniform; harmless for SPEED since screening
+            // already removed uniform groups) ----
+            let groups: Vec<_> =
+                groups.into_iter().filter(|g| self.algo.keep_group(&g.rewards())).collect();
+
+            let train_pass_rate = if groups.is_empty() {
+                0.0
+            } else {
+                groups.iter().map(|g| g.pass_rate()).sum::<f64>() / groups.len() as f64
+            };
+            let mean_reward = {
+                let all: Vec<f32> = groups.iter().flat_map(|g| g.rewards()).collect();
+                if all.is_empty() {
+                    0.0
+                } else {
+                    all.iter().sum::<f32>() / all.len() as f32
+                }
+            };
+            baseline_ema.update(mean_reward as f64);
+
+            // ---- RL update ----
+            let mut algo = self.algo;
+            algo.lr = self.algo.lr_at(step);
+            let tr = policy.train(&groups, &algo)?;
+            update_s += tr.cost_s;
+
+            let time_s = inference_s + update_s;
+            record.steps.push(StepRecord {
+                step,
+                time_s,
+                inference_s,
+                update_s,
+                train_pass_rate,
+                grad_norm: tr.grad_norm,
+                loss: tr.loss,
+                clip_frac: tr.clip_frac,
+                prompts_consumed: loader.consumed(),
+                buffer_len: curriculum.buffered(),
+            });
+
+            // ---- periodic evaluation (excluded from training time) ----
+            if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
+                self.evaluate_all(policy, evals, step + 1, time_s, &mut record)?;
+                if let Some((bench, target)) = &self.config.stop_at_target {
+                    if record
+                        .evals
+                        .iter()
+                        .rev()
+                        .find(|e| &e.benchmark == bench)
+                        .map(|e| e.accuracy >= *target)
+                        .unwrap_or(false)
+                    {
+                        crate::info!(
+                            "trainer",
+                            "{}: target {target} on {bench} reached at step {} ({:.1}s)",
+                            self.config.label,
+                            step + 1,
+                            time_s
+                        );
+                        break;
+                    }
+                }
+            }
+            if time_s >= self.config.max_seconds {
+                break;
+            }
+        }
+        record.counters = counters;
+        Ok(record)
+    }
+
+    fn evaluate_all(
+        &self,
+        policy: &mut dyn Policy,
+        evals: &[EvalSet],
+        step: usize,
+        time_s: f64,
+        record: &mut RunRecord,
+    ) -> Result<()> {
+        for set in evals {
+            let res = policy.evaluate(&set.tasks)?;
+            record.evals.push(EvalRecord {
+                step,
+                time_s,
+                benchmark: set.name.clone(),
+                accuracy: res.accuracy,
+            });
+        }
+        Ok(())
+    }
+}

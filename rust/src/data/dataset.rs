@@ -1,0 +1,231 @@
+//! Dataset mixtures — the synthetic analogues of the paper's training
+//! corpora and evaluation benchmarks (DESIGN.md §3).
+//!
+//! Each training mixture is defined by a difficulty profile (weights over
+//! generator levels 1..=10) and a family mix; each evaluation benchmark is a
+//! held-out set at a difficulty band, sized like the paper's
+//! (DAPO-1k=1000, MATH500=500, AMC2023=40, AIME=30).
+
+use crate::data::tasks::{self, TaskFamily, TaskInstance, ALL_FAMILIES, MAX_LEVEL};
+use crate::util::rng::Rng;
+
+/// Training mixtures (paper: NuminaMath / DAPO-17k / DeepScaleR).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// 220k-scale, GSM8k-to-competition spread (easy-skewed).
+    SynthNumina,
+    /// 16k-scale, medium-hard with a large unsolvable-for-base-model mass.
+    SynthDapo17k,
+    /// 40k-scale, competition-heavy (AIME/AMC-derived in the paper).
+    SynthDeepScale,
+}
+
+impl DatasetKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::SynthNumina => "synth-numina",
+            DatasetKind::SynthDapo17k => "synth-dapo17k",
+            DatasetKind::SynthDeepScale => "synth-deepscale",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DatasetKind> {
+        match s {
+            "synth-numina" | "numina" => Some(DatasetKind::SynthNumina),
+            "synth-dapo17k" | "dapo17k" => Some(DatasetKind::SynthDapo17k),
+            "synth-deepscale" | "deepscale" => Some(DatasetKind::SynthDeepScale),
+            _ => None,
+        }
+    }
+
+    /// Default training-set size (scaled-down analogue of the paper's).
+    pub fn default_size(&self) -> usize {
+        match self {
+            DatasetKind::SynthNumina => 220_000,
+            DatasetKind::SynthDapo17k => 16_000,
+            DatasetKind::SynthDeepScale => 40_000,
+        }
+    }
+
+    /// Difficulty profile: unnormalized weights for levels 1..=10.
+    pub fn level_weights(&self) -> [f64; 10] {
+        match self {
+            DatasetKind::SynthNumina => [10.0, 10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0],
+            DatasetKind::SynthDapo17k => [1.0, 2.0, 3.0, 5.0, 7.0, 8.0, 8.0, 7.0, 6.0, 5.0],
+            DatasetKind::SynthDeepScale => [0.0, 1.0, 1.0, 2.0, 4.0, 6.0, 8.0, 9.0, 9.0, 8.0],
+        }
+    }
+}
+
+/// Evaluation benchmarks (paper: DAPO-1k / MATH500 / AMC2023 / AIME).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalBenchmark {
+    Dapo1k,
+    Math500,
+    Amc2023,
+    Aime,
+}
+
+pub const ALL_BENCHMARKS: [EvalBenchmark; 4] = [
+    EvalBenchmark::Dapo1k,
+    EvalBenchmark::Math500,
+    EvalBenchmark::Amc2023,
+    EvalBenchmark::Aime,
+];
+
+impl EvalBenchmark {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvalBenchmark::Dapo1k => "dapo1k",
+            EvalBenchmark::Math500 => "math500",
+            EvalBenchmark::Amc2023 => "amc2023",
+            EvalBenchmark::Aime => "aime",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EvalBenchmark> {
+        match s {
+            "dapo1k" => Some(EvalBenchmark::Dapo1k),
+            "math500" => Some(EvalBenchmark::Math500),
+            "amc2023" => Some(EvalBenchmark::Amc2023),
+            "aime" => Some(EvalBenchmark::Aime),
+            _ => None,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            EvalBenchmark::Dapo1k => 1000,
+            EvalBenchmark::Math500 => 500,
+            EvalBenchmark::Amc2023 => 40,
+            EvalBenchmark::Aime => 30,
+        }
+    }
+
+    /// Difficulty band (inclusive level range).
+    pub fn level_band(&self) -> (u8, u8) {
+        match self {
+            EvalBenchmark::Dapo1k => (3, 10), // held-out slice of dapo17k
+            EvalBenchmark::Math500 => (2, 6),
+            EvalBenchmark::Amc2023 => (5, 8),
+            EvalBenchmark::Aime => (7, 10),
+        }
+    }
+}
+
+/// A materialized set of task instances.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub instances: Vec<TaskInstance>,
+}
+
+fn sample_level(rng: &mut Rng, weights: &[f64; 10]) -> u8 {
+    let total: f64 = weights.iter().sum();
+    let mut x = rng.f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        x -= w;
+        if x <= 0.0 {
+            return (i + 1) as u8;
+        }
+    }
+    MAX_LEVEL
+}
+
+fn sample_family(rng: &mut Rng) -> TaskFamily {
+    ALL_FAMILIES[rng.range_usize(0, ALL_FAMILIES.len() - 1)]
+}
+
+impl Dataset {
+    /// Generate a training mixture. Deterministic in `seed`.
+    pub fn training(kind: DatasetKind, size: usize, seed: u64, max_prompt_chars: usize) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0x5a5a_0000);
+        let weights = kind.level_weights();
+        let instances = (0..size)
+            .map(|_| {
+                let fam = sample_family(&mut rng);
+                let lvl = sample_level(&mut rng, &weights);
+                tasks::generate(&mut rng, fam, lvl, max_prompt_chars)
+            })
+            .collect();
+        Dataset { name: kind.name().to_string(), instances }
+    }
+
+    /// Generate an evaluation benchmark. Seeds are offset from the training
+    /// stream so benchmarks are held out.
+    pub fn benchmark(bench: EvalBenchmark, seed: u64, max_prompt_chars: usize) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0xeeee_1111 ^ (bench.size() as u64) << 17);
+        let (lo, hi) = bench.level_band();
+        let instances = (0..bench.size())
+            .map(|_| {
+                let fam = sample_family(&mut rng);
+                let lvl = rng.range_i64(lo as i64, hi as i64) as u8;
+                tasks::generate(&mut rng, fam, lvl, max_prompt_chars)
+            })
+            .collect();
+        Dataset { name: bench.name().to_string(), instances }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    /// Mean difficulty level (diagnostics / DESIGN.md calibration table).
+    pub fn mean_level(&self) -> f64 {
+        if self.instances.is_empty() {
+            return 0.0;
+        }
+        self.instances.iter().map(|t| t.level as f64).sum::<f64>() / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_sets_deterministic_and_sized() {
+        let a = Dataset::training(DatasetKind::SynthDapo17k, 500, 42, 24);
+        let b = Dataset::training(DatasetKind::SynthDapo17k, 500, 42, 24);
+        assert_eq!(a.instances, b.instances);
+        assert_eq!(a.len(), 500);
+    }
+
+    #[test]
+    fn difficulty_profiles_ordered() {
+        let numina = Dataset::training(DatasetKind::SynthNumina, 4000, 1, 24).mean_level();
+        let dapo = Dataset::training(DatasetKind::SynthDapo17k, 4000, 1, 24).mean_level();
+        let deep = Dataset::training(DatasetKind::SynthDeepScale, 4000, 1, 24).mean_level();
+        assert!(numina < dapo && dapo < deep, "{numina} {dapo} {deep}");
+    }
+
+    #[test]
+    fn benchmarks_sized_like_paper() {
+        for b in ALL_BENCHMARKS {
+            let d = Dataset::benchmark(b, 0, 24);
+            assert_eq!(d.len(), b.size());
+            let (lo, hi) = b.level_band();
+            assert!(d.instances.iter().all(|t| (lo..=hi).contains(&t.level) || t.level < lo),
+                "levels out of band for {}", b.name());
+        }
+    }
+
+    #[test]
+    fn benchmark_bands_ordered_by_difficulty() {
+        let m = Dataset::benchmark(EvalBenchmark::Math500, 0, 24).mean_level();
+        let a = Dataset::benchmark(EvalBenchmark::Amc2023, 0, 24).mean_level();
+        let i = Dataset::benchmark(EvalBenchmark::Aime, 0, 24).mean_level();
+        assert!(m < a && a < i, "{m} {a} {i}");
+    }
+
+    #[test]
+    fn seeds_change_content() {
+        let a = Dataset::training(DatasetKind::SynthNumina, 100, 1, 24);
+        let b = Dataset::training(DatasetKind::SynthNumina, 100, 2, 24);
+        assert_ne!(a.instances, b.instances);
+    }
+}

@@ -1,0 +1,15 @@
+//! Data substrate: tokenizer, synthetic math-task families, dataset
+//! mixtures (the NuminaMath / DAPO-17k / DeepScaleR analogues), verifier,
+//! and the streaming loader. See DESIGN.md §3 for the substitution argument.
+
+pub mod dataset;
+pub mod loader;
+pub mod tasks;
+pub mod tokenizer;
+pub mod verifier;
+
+pub use dataset::{Dataset, DatasetKind, EvalBenchmark};
+pub use loader::Loader;
+pub use tasks::{Difficulty, TaskFamily, TaskInstance};
+pub use tokenizer::Tokenizer;
+pub use verifier::{verify, VerifyOutcome};

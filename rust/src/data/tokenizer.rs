@@ -1,0 +1,161 @@
+//! Char-level tokenizer. The vocabulary is the *compile-time contract* with
+//! `python/compile/model.py` (`VOCAB`): ids are baked into the AOT
+//! artifacts, so this table must match exactly — the runtime cross-checks
+//! it against `manifest.json` at startup.
+
+use anyhow::{bail, Result};
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Printable characters at ids 3..=26 (same order as python).
+pub const CHARS: &str = "0123456789+-*/%=()<>, #?";
+
+/// Vocabulary padded to 32 for MXU lane alignment (ids 27..31 unused).
+pub const VOCAB_SIZE: usize = 32;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// char -> id for the printable range.
+    map: [i32; 128],
+    /// id -> char.
+    chars: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let mut map = [-1i32; 128];
+        let chars: Vec<char> = CHARS.chars().collect();
+        for (i, c) in chars.iter().enumerate() {
+            map[*c as usize] = (i + 3) as i32;
+        }
+        Tokenizer { map, chars }
+    }
+
+    /// Cross-check against the manifest's vocab list (defense against a
+    /// stale artifact directory).
+    pub fn validate_against(&self, vocab: &[String]) -> Result<()> {
+        if vocab.len() < 3 + self.chars.len() {
+            bail!("manifest vocab too short: {}", vocab.len());
+        }
+        for (i, expect) in ["<pad>", "<bos>", "<eos>"].iter().enumerate() {
+            if vocab[i] != *expect {
+                bail!("vocab[{i}] is '{}', expected '{expect}'", vocab[i]);
+            }
+        }
+        for (i, c) in self.chars.iter().enumerate() {
+            let got = &vocab[i + 3];
+            if got.chars().next() != Some(*c) || got.len() != c.len_utf8() {
+                bail!("vocab[{}] is '{}', expected '{}'", i + 3, got, c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Encode a prompt string (no BOS/EOS added).
+    pub fn encode(&self, text: &str) -> Result<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                let id = if (c as usize) < 128 { self.map[c as usize] } else { -1 };
+                if id < 0 {
+                    bail!("character '{c}' not in vocabulary");
+                }
+                Ok(id)
+            })
+            .collect()
+    }
+
+    /// Decode ids to a string; PAD/BOS are dropped, EOS stops decoding,
+    /// out-of-range ids render as '?'.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            match id {
+                PAD | BOS => continue,
+                EOS => break,
+                i if (3..3 + self.chars.len() as i32).contains(&i) => {
+                    s.push(self.chars[(i - 3) as usize]);
+                }
+                _ => s.push('?'),
+            }
+        }
+        s
+    }
+
+    /// Encode into a fixed-width row: returns (tokens, len). Errors if the
+    /// prompt does not fit.
+    pub fn encode_padded(&self, text: &str, width: usize) -> Result<(Vec<i32>, usize)> {
+        let ids = self.encode(text)?;
+        if ids.len() > width {
+            bail!("prompt '{text}' ({} tokens) exceeds width {width}", ids.len());
+        }
+        let len = ids.len();
+        let mut row = vec![PAD; width];
+        row[..len].copy_from_slice(&ids);
+        Ok((row, len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tok = Tokenizer::new();
+        let s = "37+85=142";
+        let ids = tok.encode(s).unwrap();
+        assert_eq!(tok.decode(&ids), s);
+    }
+
+    #[test]
+    fn special_chars_covered() {
+        let tok = Tokenizer::new();
+        for c in CHARS.chars() {
+            assert!(tok.encode(&c.to_string()).is_ok(), "char {c}");
+        }
+    }
+
+    #[test]
+    fn rejects_oov() {
+        let tok = Tokenizer::new();
+        assert!(tok.encode("abc").is_err());
+        assert!(tok.encode("x=1").is_err());
+    }
+
+    #[test]
+    fn eos_stops_decode() {
+        let tok = Tokenizer::new();
+        let mut ids = tok.encode("12").unwrap();
+        ids.push(EOS);
+        ids.extend(tok.encode("99").unwrap());
+        assert_eq!(tok.decode(&ids), "12");
+    }
+
+    #[test]
+    fn padded_encode() {
+        let tok = Tokenizer::new();
+        let (row, len) = tok.encode_padded("7+8=", 10).unwrap();
+        assert_eq!(len, 4);
+        assert_eq!(row.len(), 10);
+        assert_eq!(&row[4..], &[PAD; 6]);
+        assert!(tok.encode_padded("123456789012", 5).is_err());
+    }
+
+    #[test]
+    fn ids_match_python_vocab_layout() {
+        let tok = Tokenizer::new();
+        // '0' is id 3, '9' is 12, '+' 13, '=' 18 — mirrors model.py VOCAB.
+        assert_eq!(tok.encode("0").unwrap(), vec![3]);
+        assert_eq!(tok.encode("9").unwrap(), vec![12]);
+        assert_eq!(tok.encode("+").unwrap(), vec![13]);
+        assert_eq!(tok.encode("=").unwrap(), vec![18]);
+    }
+}

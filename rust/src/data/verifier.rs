@@ -1,0 +1,130 @@
+//! Binary reward verifier (paper eq. 2): exact integer-answer matching.
+//!
+//! The model's generation is a token row; a response is *correct* iff the
+//! decoded text up to the first EOS, with surrounding spaces stripped,
+//! parses as exactly the ground-truth integer. Missing EOS (truncated
+//! ramble) is incorrect — the same convention DAPO's overlong filtering
+//! penalizes.
+
+use crate::data::tasks::TaskInstance;
+use crate::data::tokenizer::{Tokenizer, EOS};
+
+/// Verification outcome (kept richer than the 0/1 reward for diagnostics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VerifyOutcome {
+    Correct,
+    /// Parsed an integer but the wrong one.
+    WrongAnswer,
+    /// No EOS within the generation budget.
+    Truncated,
+    /// Decoded text is not an integer.
+    Malformed,
+}
+
+impl VerifyOutcome {
+    pub fn reward(&self) -> f32 {
+        match self {
+            VerifyOutcome::Correct => 1.0,
+            _ => 0.0,
+        }
+    }
+
+    pub fn is_correct(&self) -> bool {
+        matches!(self, VerifyOutcome::Correct)
+    }
+}
+
+/// Verify one generated row against the task's ground truth.
+pub fn verify(tok: &Tokenizer, task: &TaskInstance, gen_tokens: &[i32]) -> VerifyOutcome {
+    if !gen_tokens.contains(&EOS) {
+        return VerifyOutcome::Truncated;
+    }
+    let text = tok.decode(gen_tokens);
+    let trimmed = text.trim();
+    match trimmed.parse::<i64>() {
+        Ok(x) if x == task.answer => VerifyOutcome::Correct,
+        Ok(_) => VerifyOutcome::WrongAnswer,
+        Err(_) => VerifyOutcome::Malformed,
+    }
+}
+
+/// Number of tokens that count toward the RL loss: everything up to and
+/// including the first EOS (or the full row when truncated).
+pub fn loss_token_count(gen_tokens: &[i32]) -> usize {
+    match gen_tokens.iter().position(|&t| t == EOS) {
+        Some(idx) => idx + 1,
+        None => gen_tokens.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::TaskFamily;
+
+    fn task(answer: i64) -> TaskInstance {
+        TaskInstance { family: TaskFamily::Add, level: 1, prompt: "1+1=".into(), answer }
+    }
+
+    fn toks(tok: &Tokenizer, s: &str, eos: bool) -> Vec<i32> {
+        let mut ids = tok.encode(s).unwrap();
+        if eos {
+            ids.push(EOS);
+        }
+        ids
+    }
+
+    #[test]
+    fn correct_answer() {
+        let tok = Tokenizer::new();
+        assert_eq!(verify(&tok, &task(42), &toks(&tok, "42", true)), VerifyOutcome::Correct);
+    }
+
+    #[test]
+    fn negative_answer() {
+        let tok = Tokenizer::new();
+        assert_eq!(verify(&tok, &task(-7), &toks(&tok, "-7", true)), VerifyOutcome::Correct);
+    }
+
+    #[test]
+    fn wrong_answer() {
+        let tok = Tokenizer::new();
+        assert_eq!(verify(&tok, &task(42), &toks(&tok, "41", true)), VerifyOutcome::WrongAnswer);
+    }
+
+    #[test]
+    fn truncated_without_eos() {
+        let tok = Tokenizer::new();
+        assert_eq!(verify(&tok, &task(42), &toks(&tok, "42", false)), VerifyOutcome::Truncated);
+    }
+
+    #[test]
+    fn malformed_text() {
+        let tok = Tokenizer::new();
+        assert_eq!(verify(&tok, &task(42), &toks(&tok, "4+2", true)), VerifyOutcome::Malformed);
+        assert_eq!(verify(&tok, &task(42), &toks(&tok, "", true)), VerifyOutcome::Malformed);
+    }
+
+    #[test]
+    fn spaces_are_tolerated() {
+        let tok = Tokenizer::new();
+        assert_eq!(verify(&tok, &task(5), &toks(&tok, " 5 ", true)), VerifyOutcome::Correct);
+    }
+
+    #[test]
+    fn trailing_tokens_after_eos_ignored() {
+        let tok = Tokenizer::new();
+        let mut ids = toks(&tok, "42", true);
+        ids.extend(toks(&tok, "999", false));
+        assert_eq!(verify(&tok, &task(42), &ids), VerifyOutcome::Correct);
+    }
+
+    #[test]
+    fn loss_token_counting() {
+        let tok = Tokenizer::new();
+        let ids = toks(&tok, "42", true); // 2 digits + EOS
+        assert_eq!(loss_token_count(&ids), 3);
+        let no_eos = toks(&tok, "4242", false);
+        assert_eq!(loss_token_count(&no_eos), 4);
+    }
+}

@@ -1,0 +1,59 @@
+//! Held-out evaluation: builds the paper's benchmark suite and scores a
+//! policy on it (greedy decode, exact-match accuracy).
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::EvalSet;
+use crate::data::dataset::{Dataset, EvalBenchmark, ALL_BENCHMARKS};
+use crate::policy::Policy;
+
+/// Materialize all four paper benchmarks (DAPO-1k / MATH500 / AMC2023 /
+/// AIME analogues) as trainer eval sets.
+pub fn benchmark_suite(seed: u64, max_prompt_chars: usize) -> Vec<EvalSet> {
+    ALL_BENCHMARKS
+        .iter()
+        .map(|b| {
+            let d = Dataset::benchmark(*b, seed, max_prompt_chars);
+            EvalSet { name: b.name().to_string(), tasks: d.instances }
+        })
+        .collect()
+}
+
+/// A subset of the suite by name (e.g. only the cheap ones during training).
+pub fn benchmarks_by_name(names: &[&str], seed: u64, max_prompt_chars: usize) -> Vec<EvalSet> {
+    names
+        .iter()
+        .filter_map(|n| EvalBenchmark::parse(n))
+        .map(|b| {
+            let d = Dataset::benchmark(b, seed, max_prompt_chars);
+            EvalSet { name: b.name().to_string(), tasks: d.instances }
+        })
+        .collect()
+}
+
+/// Score a policy on every benchmark; returns (name, accuracy).
+pub fn score_all(policy: &mut dyn Policy, sets: &[EvalSet]) -> Result<Vec<(String, f64)>> {
+    sets.iter()
+        .map(|s| Ok((s.name.clone(), policy.evaluate(&s.tasks)?.accuracy)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_all_benchmarks() {
+        let suite = benchmark_suite(0, 24);
+        let names: Vec<&str> = suite.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["dapo1k", "math500", "amc2023", "aime"]);
+        assert_eq!(suite[0].tasks.len(), 1000);
+        assert_eq!(suite[3].tasks.len(), 30);
+    }
+
+    #[test]
+    fn by_name_filters() {
+        let sets = benchmarks_by_name(&["math500", "aime"], 0, 24);
+        assert_eq!(sets.len(), 2);
+    }
+}

@@ -1,0 +1,40 @@
+//! SPEED-RL: Faster Training of Reasoning Models via Online Curriculum
+//! Learning — a full-system reproduction (Zhang, Arora, Mei, Zanette, 2025).
+//!
+//! Layer 3 of the three-layer Rust + JAX + Pallas stack. This crate owns the
+//! whole request path: the SPEED online-curriculum scheduler (screening +
+//! continuation + sampling buffer + pre-fetch batcher, paper §4), the RL
+//! algorithms (RLOO / GRPO / REINFORCE / REINFORCE++ / DAPO), the synthetic
+//! math-task substrate, and the PJRT runtime that executes the AOT-compiled
+//! JAX/Pallas artifacts. Python never runs at request time.
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//!
+//! * [`util`]        — substrates the offline environment lacks: PRNG, JSON,
+//!                     stats, CLI parsing, thread pool, logging, mini
+//!                     property-testing harness.
+//! * [`config`]      — typed run/model/algo configuration + JSON presets.
+//! * [`data`]        — tokenizer, synthetic task families, datasets, verifier.
+//! * [`rl`]          — advantage estimators, algorithm definitions, the
+//!                     SNR/Φ theory of §3 and Appendix A/B.
+//! * [`coordinator`] — the paper's contribution: SPEED scheduler (Alg. 2),
+//!                     curricula, sampling buffer, pre-fetch batcher, trainer.
+//! * [`policy`]      — `RolloutEngine`/`Trainable` traits with the PJRT
+//!                     transformer (`real`) and the IRT simulator (`sim`).
+//! * [`runtime`]     — PJRT client, artifact manifest, device-resident
+//!                     parameter store.
+//! * [`metrics`]     — phase timers, run records, curve logging.
+//! * [`eval`]        — held-out benchmark evaluation.
+//! * [`bench`]       — in-tree benchmark harness (no criterion offline).
+
+pub mod bench;
+pub mod config;
+pub mod driver;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod policy;
+pub mod rl;
+pub mod runtime;
+pub mod util;

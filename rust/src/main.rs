@@ -1,0 +1,359 @@
+//! `speed-rl` — the leader binary.
+//!
+//! Subcommands:
+//!   simulate   run a paper-scale simulated training run (Table 1 configs)
+//!   train      RL-train the real AOT transformer through PJRT
+//!   sft        supervised warmup of the real transformer ("base model")
+//!   eval       score a (checkpointed) real model on the benchmark suite
+//!   info       print the artifact manifest summary
+//!
+//! Run `speed-rl <subcommand> --help` for options.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use speed_rl::config::{RunConfig, Substrate};
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::data::dataset::{Dataset, DatasetKind};
+use speed_rl::driver;
+use speed_rl::eval::benchmark_suite;
+use speed_rl::info;
+use speed_rl::metrics::RunRecord;
+use speed_rl::policy::real::RealPolicy;
+use speed_rl::policy::Policy;
+use speed_rl::rl::algo::BaseAlgo;
+use speed_rl::util::cli::Cli;
+use speed_rl::util::logging::{self, level_from_str};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = argv.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "simulate" => cmd_simulate(rest),
+        "train" => cmd_train(rest),
+        "sft" => cmd_sft(rest),
+        "eval" => cmd_eval(rest),
+        "info" => cmd_info(rest),
+        "report" => cmd_report(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (see --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "speed-rl — SPEED-RL reproduction (online curriculum RL for reasoning models)\n\n\
+         Subcommands:\n\
+         \x20 simulate   paper-scale simulated run (Table 1 configs)\n\
+         \x20 train      RL-train the real AOT transformer via PJRT\n\
+         \x20 sft        supervised warmup of the real transformer\n\
+         \x20 eval       score a real model checkpoint on the benchmarks\n\
+         \x20 info       print the artifact manifest summary\n\
+         \x20 report     ASCII accuracy-vs-time charts from run records\n"
+    );
+}
+
+fn common_cli(name: &'static str, about: &'static str) -> Cli {
+    Cli::new(name, about)
+        .opt("log-level", Some("info"), "debug|info|warn|error")
+        .opt("seed", Some("0"), "PRNG seed")
+        .opt("out", None, "write the run record JSON to this path")
+}
+
+fn write_record(args_out: Option<&str>, record: &RunRecord) -> Result<()> {
+    if let Some(path) = args_out {
+        std::fs::write(path, record.to_json().to_string_pretty())
+            .with_context(|| format!("write {path}"))?;
+        info!("main", "run record written to {path}");
+    }
+    Ok(())
+}
+
+fn print_summary(record: &RunRecord, model: &str) {
+    println!("\n== {} ==", record.label);
+    println!(
+        "steps {}  time {:.1}s (inference {:.1}s / update {:.1}s)  calls {}  rollouts {}",
+        record.steps.len(),
+        record.total_time(),
+        record.steps.last().map(|s| s.inference_s).unwrap_or(0.0),
+        record.steps.last().map(|s| s.update_s).unwrap_or(0.0),
+        record.counters.calls,
+        record.counters.rollouts,
+    );
+    if record.counters.prompts_screened > 0 {
+        println!(
+            "screened {}  accepted {} ({:.0}%)",
+            record.counters.prompts_screened,
+            record.counters.prompts_accepted,
+            100.0 * record.counters.acceptance_rate()
+        );
+    }
+    for (bench, target) in driver::paper_targets(model) {
+        let acc = record.final_accuracy(bench).unwrap_or(0.0);
+        match record.time_to_target(bench, target) {
+            Some(t) => println!("  {bench:<8} final {acc:.3}  target {target} reached at {t:.0}s"),
+            None => println!("  {bench:<8} final {acc:.3}  target {target} not reached"),
+        }
+    }
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let cli = common_cli("speed-rl simulate", "paper-scale simulated training run")
+        .opt("preset", None, "paper setup, e.g. 7b-deepscale-speed-rloo")
+        .opt("config", None, "JSON RunConfig file (overrides preset)")
+        .opt("model", Some("sim-7b"), "sim-1.5b | sim-7b")
+        .opt("dataset", Some("dapo17k"), "numina | dapo17k | deepscale")
+        .opt("curriculum", Some("speed"), "uniform | dapo | speed | variance-max")
+        .opt("algo", Some("rloo"), "rloo | dapo | grpo | reinforce | reinforce++")
+        .opt("n-init", Some("8"), "screening rollouts per prompt")
+        .opt("n-cont", Some("16"), "continuation rollouts per prompt")
+        .opt("batch-size", Some("16"), "training batch size B")
+        .opt("steps", Some("400"), "max training steps")
+        .opt("max-hours", None, "stop after this much simulated time")
+        .opt("eval-every", Some("10"), "evaluation cadence (steps)");
+    let args = cli.parse(argv)?;
+    logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
+
+    let mut cfg = if let Some(path) = args.get("config") {
+        RunConfig::load(Path::new(path))?
+    } else if let Some(preset) = args.get("preset") {
+        RunConfig::paper_preset(preset)?
+    } else {
+        let mut c = RunConfig::default();
+        c.model = args.string("model")?;
+        c.dataset = DatasetKind::parse(args.get("dataset").unwrap()).context("dataset")?;
+        c.dataset_size = c.dataset.default_size().min(40_000);
+        c.curriculum =
+            CurriculumKind::parse(args.get("curriculum").unwrap()).context("curriculum")?;
+        c.algo = BaseAlgo::parse(args.get("algo").unwrap()).context("algo")?;
+        c.label = format!(
+            "{}-{}-{}-{}",
+            c.model,
+            c.dataset.name(),
+            c.curriculum.name(),
+            c.algo.name()
+        );
+        c
+    };
+    cfg.substrate = Substrate::Sim;
+    cfg.n_init = args.usize("n-init")?;
+    cfg.n_cont = args.usize("n-cont")?;
+    cfg.batch_size = args.usize("batch-size")?;
+    cfg.max_steps = args.usize("steps")?;
+    cfg.eval_every = args.usize("eval-every")?;
+    cfg.seed = args.u64("seed")?;
+    if let Some(h) = args.get("max-hours") {
+        cfg.max_seconds = h.parse::<f64>().context("--max-hours")? * 3600.0;
+    }
+
+    let record = driver::run_sim(&cfg)?;
+    print_summary(&record, &cfg.model);
+    write_record(args.get("out"), &record)
+}
+
+fn artifacts_arg(args: &speed_rl::util::cli::Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cli = common_cli("speed-rl train", "RL-train the real AOT transformer")
+        .opt("artifacts", Some("artifacts"), "artifact directory (make artifacts)")
+        .opt("checkpoint", None, "start from checkpoint dir:tag (e.g. ckpts:warm)")
+        .opt("dataset", Some("dapo17k"), "numina | dapo17k | deepscale")
+        .opt("dataset-size", Some("4000"), "training prompts to generate")
+        .opt("curriculum", Some("speed"), "uniform | dapo | speed | variance-max")
+        .opt("algo", Some("rloo"), "rloo | dapo | grpo | reinforce | reinforce++")
+        .opt("n-init", Some("4"), "screening rollouts")
+        .opt("n-cont", Some("12"), "continuation rollouts")
+        .opt("batch-size", Some("4"), "training batch size B (prompts)")
+        .opt("lr", Some("3e-4"), "learning rate")
+        .opt("steps", Some("50"), "max training steps")
+        .opt("eval-every", Some("10"), "evaluation cadence")
+        .opt("save", None, "save checkpoint to dir:tag after training");
+    let args = cli.parse(argv)?;
+    logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
+
+    let mut cfg = RunConfig::default();
+    cfg.substrate = Substrate::Real;
+    cfg.dataset = DatasetKind::parse(args.get("dataset").unwrap()).context("dataset")?;
+    cfg.dataset_size = args.usize("dataset-size")?;
+    cfg.curriculum =
+        CurriculumKind::parse(args.get("curriculum").unwrap()).context("curriculum")?;
+    cfg.algo = BaseAlgo::parse(args.get("algo").unwrap()).context("algo")?;
+    cfg.n_init = args.usize("n-init")?;
+    cfg.n_cont = args.usize("n-cont")?;
+    cfg.batch_size = args.usize("batch-size")?;
+    cfg.lr = args.f64("lr")?;
+    cfg.max_steps = args.usize("steps")?;
+    cfg.eval_every = args.usize("eval-every")?;
+    cfg.seed = args.u64("seed")?;
+    cfg.label = format!("real-{}-{}", cfg.curriculum.name(), cfg.algo.name());
+
+    let dir = artifacts_arg(&args);
+    let mut policy = RealPolicy::load(&dir, cfg.seed)?;
+    if let Some(spec) = args.get("checkpoint") {
+        let (d, tag) = spec.split_once(':').context("--checkpoint wants dir:tag")?;
+        policy.store.load(Path::new(d), tag)?;
+        info!("main", "loaded checkpoint {spec}");
+    }
+    let max_chars = policy.runtime.manifest.plan.prompt_len.min(20);
+    let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, max_chars);
+    let evals = benchmark_suite(driver::BENCH_SEED, max_chars);
+    let record = driver::run_with_policy(&cfg, &mut policy, &dataset, &evals)?;
+    print_summary(&record, "real");
+    if let Some(spec) = args.get("save") {
+        let (d, tag) = spec.split_once(':').context("--save wants dir:tag")?;
+        policy.store.save(Path::new(d), tag)?;
+        info!("main", "checkpoint saved to {spec}");
+    }
+    write_record(args.get("out"), &record)
+}
+
+fn cmd_sft(argv: &[String]) -> Result<()> {
+    let cli = common_cli("speed-rl sft", "supervised warmup (the 'base model' phase)")
+        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt("steps", Some("300"), "SFT steps")
+        .opt("lr", Some("3e-3"), "learning rate")
+        .opt("max-level", Some("4"), "only train on tasks up to this difficulty")
+        .opt("save", Some("ckpts:warm"), "checkpoint dir:tag to write");
+    let args = cli.parse(argv)?;
+    logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
+
+    let dir = artifacts_arg(&args);
+    let mut policy = RealPolicy::load(&dir, args.u64("seed")?)?;
+    let steps = args.usize("steps")?;
+    let lr = args.f64("lr")?;
+    let max_level = args.usize("max-level")? as u8;
+    let max_chars = policy.runtime.manifest.plan.prompt_len.min(20);
+    let rows = policy.runtime.manifest.plan.sft_rows;
+    let corpus = Dataset::training(DatasetKind::SynthNumina, 20_000, args.u64("seed")?, max_chars);
+    let easy: Vec<_> = corpus.instances.iter().filter(|t| t.level <= max_level).cloned().collect();
+    anyhow::ensure!(easy.len() >= rows, "not enough easy instances");
+    let mut rng = speed_rl::util::rng::Rng::new(args.u64("seed")? ^ 0x5f7);
+    for step in 0..steps {
+        let idx = rng.sample_indices(easy.len(), rows);
+        let batch: Vec<_> = idx.into_iter().map(|i| easy[i].clone()).collect();
+        let loss = policy.sft_step(&batch, lr)?;
+        if step % 20 == 0 || step + 1 == steps {
+            info!("sft", "step {step}: loss {loss:.4}");
+        }
+    }
+    let spec = args.get("save").unwrap();
+    let (d, tag) = spec.split_once(':').context("--save wants dir:tag")?;
+    policy.store.save(Path::new(d), tag)?;
+    info!("main", "warm checkpoint saved to {spec}");
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let cli = common_cli("speed-rl eval", "score a real model on the benchmark suite")
+        .opt("artifacts", Some("artifacts"), "artifact directory")
+        .opt("checkpoint", None, "checkpoint dir:tag (defaults to init params)");
+    let args = cli.parse(argv)?;
+    logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
+
+    let dir = artifacts_arg(&args);
+    let mut policy = RealPolicy::load(&dir, args.u64("seed")?)?;
+    if let Some(spec) = args.get("checkpoint") {
+        let (d, tag) = spec.split_once(':').context("--checkpoint wants dir:tag")?;
+        policy.store.load(Path::new(d), tag)?;
+    }
+    let max_chars = policy.runtime.manifest.plan.prompt_len.min(20);
+    for set in benchmark_suite(driver::BENCH_SEED, max_chars) {
+        let res = policy.evaluate(&set.tasks)?;
+        println!(
+            "{:<10} {:.3}  ({} tasks, {:.1}s)",
+            set.name,
+            res.accuracy,
+            set.tasks.len(),
+            res.cost_s
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let cli = common_cli("speed-rl info", "artifact manifest summary")
+        .opt("artifacts", Some("artifacts"), "artifact directory");
+    let args = cli.parse(argv)?;
+    let dir = artifacts_arg(&args);
+    let manifest = speed_rl::runtime::Manifest::load(&dir)?;
+    println!("preset      {}", manifest.preset);
+    println!(
+        "model       d={} L={} H={} ff={} maxseq={} vocab={} ({} params)",
+        manifest.model.d_model,
+        manifest.model.n_layers,
+        manifest.model.n_heads,
+        manifest.model.d_ff,
+        manifest.model.max_seq,
+        manifest.model.vocab_size,
+        manifest.model.num_params
+    );
+    println!(
+        "plan        rollout {}x{} (+{} gen), train {} rows, sft {} rows",
+        manifest.plan.rollout_rows,
+        manifest.plan.prompt_len,
+        manifest.plan.gen_len,
+        manifest.plan.train_rows,
+        manifest.plan.sft_rows
+    );
+    for (name, art) in &manifest.artifacts {
+        println!(
+            "artifact    {:<14} {} args, {} outputs ({})",
+            name,
+            art.args.len(),
+            art.outputs.len(),
+            art.file
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("speed-rl report", "render run-record JSONs as ASCII charts")
+        .opt("bench", Some("dapo1k"), "benchmark to chart (or 'all')")
+        .opt("width", Some("72"), "chart width")
+        .opt("height", Some("16"), "chart height");
+    let args = cli.parse(argv)?;
+    anyhow::ensure!(!args.positional.is_empty(), "usage: speed-rl report <run1.json> [run2.json ...]");
+    let records: Vec<RunRecord> = args
+        .positional
+        .iter()
+        .map(|p| -> Result<RunRecord> {
+            let j = speed_rl::util::json::Json::parse_file(Path::new(p))?;
+            speed_rl::metrics::report::record_from_json(&j)
+        })
+        .collect::<Result<_>>()?;
+    let refs: Vec<&RunRecord> = records.iter().collect();
+    let width = args.usize("width")?;
+    let height = args.usize("height")?;
+    let benches: Vec<String> = if args.get("bench") == Some("all") {
+        let mut b: Vec<String> = records
+            .iter()
+            .flat_map(|r| r.evals.iter().map(|e| e.benchmark.clone()))
+            .collect();
+        b.sort();
+        b.dedup();
+        b
+    } else {
+        vec![args.string("bench")?]
+    };
+    for b in benches {
+        println!("{}", speed_rl::metrics::report::ascii_chart(&refs, &b, width, height));
+    }
+    Ok(())
+}

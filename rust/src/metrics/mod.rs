@@ -1,0 +1,203 @@
+//! Run metrics: per-phase time accounting (paper Fig. 2-right), training
+//! curves (Fig. 4), evaluation curves (Fig. 3/6), and the run record that
+//! benches serialize for EXPERIMENTS.md.
+
+pub mod report;
+
+use crate::util::json::Json;
+
+/// Cumulative inference-side counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferenceCounters {
+    pub calls: u64,
+    pub rows_used: u64,
+    pub rows_capacity: u64,
+    pub cost_s: f64,
+    pub prompts_screened: u64,
+    pub prompts_accepted: u64,
+    pub rollouts: u64,
+}
+
+impl InferenceCounters {
+    pub fn utilization(&self) -> f64 {
+        if self.rows_capacity == 0 {
+            0.0
+        } else {
+            self.rows_used as f64 / self.rows_capacity as f64
+        }
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.prompts_screened == 0 {
+            0.0
+        } else {
+            self.prompts_accepted as f64 / self.prompts_screened as f64
+        }
+    }
+}
+
+/// One training step's record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    /// Cumulative training time (inference + update, excl. eval), seconds.
+    pub time_s: f64,
+    /// Cumulative inference-only seconds (Fig. 2-right split).
+    pub inference_s: f64,
+    /// Cumulative update-only seconds.
+    pub update_s: f64,
+    /// Mean pass rate over the prompts actually trained on (Fig. 4-left).
+    pub train_pass_rate: f64,
+    pub grad_norm: f64,
+    pub loss: f64,
+    pub clip_frac: f64,
+    /// Prompts consumed from the loader so far.
+    pub prompts_consumed: usize,
+    /// Buffer size after the step (SPEED only; 0 otherwise).
+    pub buffer_len: usize,
+}
+
+impl StepRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("time_s", Json::num(self.time_s)),
+            ("inference_s", Json::num(self.inference_s)),
+            ("update_s", Json::num(self.update_s)),
+            ("train_pass_rate", Json::num(self.train_pass_rate)),
+            ("grad_norm", Json::num(self.grad_norm)),
+            ("loss", Json::num(self.loss)),
+            ("clip_frac", Json::num(self.clip_frac)),
+            ("prompts_consumed", Json::num(self.prompts_consumed as f64)),
+            ("buffer_len", Json::num(self.buffer_len as f64)),
+        ])
+    }
+}
+
+/// One evaluation point on one benchmark.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub time_s: f64,
+    pub benchmark: String,
+    pub accuracy: f64,
+}
+
+impl EvalRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("time_s", Json::num(self.time_s)),
+            ("benchmark", Json::str(self.benchmark.clone())),
+            ("accuracy", Json::num(self.accuracy)),
+        ])
+    }
+}
+
+/// Full record of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub label: String,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub counters: InferenceCounters,
+}
+
+impl RunRecord {
+    /// Training time (seconds) at which `benchmark`'s accuracy first reaches
+    /// `target` — the Table 1 metric. Eval time is already excluded because
+    /// `time_s` only accumulates inference + update.
+    pub fn time_to_target(&self, benchmark: &str, target: f64) -> Option<f64> {
+        self.evals
+            .iter()
+            .filter(|e| e.benchmark == benchmark)
+            .find(|e| e.accuracy >= target)
+            .map(|e| e.time_s)
+    }
+
+    /// Final accuracy on a benchmark.
+    pub fn final_accuracy(&self, benchmark: &str) -> Option<f64> {
+        self.evals.iter().rev().find(|e| e.benchmark == benchmark).map(|e| e.accuracy)
+    }
+
+    /// Accuracy curve (time, accuracy) for one benchmark.
+    pub fn curve(&self, benchmark: &str) -> Vec<(f64, f64)> {
+        self.evals
+            .iter()
+            .filter(|e| e.benchmark == benchmark)
+            .map(|e| (e.time_s, e.accuracy))
+            .collect()
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.steps.last().map(|s| s.time_s).unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("steps", Json::arr(self.steps.iter().map(|s| s.to_json()))),
+            ("evals", Json::arr(self.evals.iter().map(|e| e.to_json()))),
+            (
+                "counters",
+                Json::obj(vec![
+                    ("calls", Json::num(self.counters.calls as f64)),
+                    ("rows_used", Json::num(self.counters.rows_used as f64)),
+                    ("rows_capacity", Json::num(self.counters.rows_capacity as f64)),
+                    ("inference_cost_s", Json::num(self.counters.cost_s)),
+                    ("prompts_screened", Json::num(self.counters.prompts_screened as f64)),
+                    ("prompts_accepted", Json::num(self.counters.prompts_accepted as f64)),
+                    ("rollouts", Json::num(self.counters.rollouts as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(step: usize, t: f64, b: &str, acc: f64) -> EvalRecord {
+        EvalRecord { step, time_s: t, benchmark: b.to_string(), accuracy: acc }
+    }
+
+    #[test]
+    fn time_to_target() {
+        let rec = RunRecord {
+            label: "x".into(),
+            evals: vec![
+                eval(1, 10.0, "math500", 0.2),
+                eval(2, 20.0, "math500", 0.45),
+                eval(3, 30.0, "math500", 0.6),
+                eval(1, 10.0, "aime", 0.0),
+            ],
+            ..Default::default()
+        };
+        assert_eq!(rec.time_to_target("math500", 0.4), Some(20.0));
+        assert_eq!(rec.time_to_target("math500", 0.9), None);
+        assert_eq!(rec.time_to_target("aime", 0.1), None);
+        assert_eq!(rec.final_accuracy("math500"), Some(0.6));
+        assert_eq!(rec.curve("math500").len(), 3);
+    }
+
+    #[test]
+    fn counters_ratios() {
+        let c = InferenceCounters {
+            rows_used: 50,
+            rows_capacity: 100,
+            prompts_screened: 10,
+            prompts_accepted: 4,
+            ..Default::default()
+        };
+        assert_eq!(c.utilization(), 0.5);
+        assert_eq!(c.acceptance_rate(), 0.4);
+    }
+
+    #[test]
+    fn json_serializes() {
+        let rec = RunRecord { label: "t".into(), ..Default::default() };
+        let j = rec.to_json();
+        assert!(j.get("steps").is_some());
+    }
+}

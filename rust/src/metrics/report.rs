@@ -1,0 +1,172 @@
+//! ASCII report rendering for run records: accuracy-vs-time curves and
+//! side-by-side run comparison (the terminal stand-in for the paper's
+//! matplotlib figures). Used by `speed-rl report` and the benches.
+
+use crate::metrics::RunRecord;
+use crate::util::json::Json;
+
+/// Render one benchmark's curves for several runs as an ASCII chart.
+pub fn ascii_chart(
+    records: &[&RunRecord],
+    benchmark: &str,
+    width: usize,
+    height: usize,
+) -> String {
+    let curves: Vec<(&str, Vec<(f64, f64)>)> = records
+        .iter()
+        .map(|r| (r.label.as_str(), r.curve(benchmark)))
+        .filter(|(_, c)| !c.is_empty())
+        .collect();
+    if curves.is_empty() {
+        return format!("(no data for {benchmark})\n");
+    }
+    let t_max = curves
+        .iter()
+        .flat_map(|(_, c)| c.iter().map(|(t, _)| *t))
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let a_min = 0.0f64;
+    let a_max = curves
+        .iter()
+        .flat_map(|(_, c)| c.iter().map(|(_, a)| *a))
+        .fold(0.0f64, f64::max)
+        .max(1e-9)
+        * 1.05;
+
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    for (ci, (_, curve)) in curves.iter().enumerate() {
+        let mark = marks[ci % marks.len()];
+        // linear interpolation across columns for continuous lines
+        for col in 0..width {
+            let t = t_max * col as f64 / (width - 1) as f64;
+            let a = interp(curve, t);
+            let row = ((a - a_min) / (a_max - a_min) * (height - 1) as f64).round() as usize;
+            let row = (height - 1).saturating_sub(row.min(height - 1));
+            if grid[row][col] == ' ' || ci > 0 {
+                grid[row][col] = mark;
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{benchmark} (accuracy vs time; max t = {:.2} h)\n", t_max / 3600.0));
+    for (i, row) in grid.iter().enumerate() {
+        let yval = a_max * (height - 1 - i) as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:5.2} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("      +{}+\n", "-".repeat(width)));
+    for (ci, (label, _)) in curves.iter().enumerate() {
+        out.push_str(&format!("        {} {label}\n", marks[ci % marks.len()]));
+    }
+    out
+}
+
+fn interp(curve: &[(f64, f64)], t: f64) -> f64 {
+    if curve.is_empty() {
+        return 0.0;
+    }
+    if t <= curve[0].0 {
+        return curve[0].1;
+    }
+    for w in curve.windows(2) {
+        let (t0, a0) = w[0];
+        let (t1, a1) = w[1];
+        if t <= t1 {
+            if t1 - t0 < 1e-12 {
+                return a1;
+            }
+            return a0 + (a1 - a0) * (t - t0) / (t1 - t0);
+        }
+    }
+    curve.last().unwrap().1
+}
+
+/// Parse a run record back from the JSON written by `RunRecord::to_json`.
+pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
+    use crate::metrics::{EvalRecord, StepRecord};
+    let mut rec = RunRecord {
+        label: j.get("label").and_then(|x| x.as_str()).unwrap_or("run").to_string(),
+        ..Default::default()
+    };
+    if let Some(steps) = j.get("steps").and_then(|x| x.as_arr()) {
+        for s in steps {
+            let f = |k: &str| s.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+            rec.steps.push(StepRecord {
+                step: f("step") as usize,
+                time_s: f("time_s"),
+                inference_s: f("inference_s"),
+                update_s: f("update_s"),
+                train_pass_rate: f("train_pass_rate"),
+                grad_norm: f("grad_norm"),
+                loss: f("loss"),
+                clip_frac: f("clip_frac"),
+                prompts_consumed: f("prompts_consumed") as usize,
+                buffer_len: f("buffer_len") as usize,
+            });
+        }
+    }
+    if let Some(evals) = j.get("evals").and_then(|x| x.as_arr()) {
+        for e in evals {
+            let f = |k: &str| e.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+            rec.evals.push(EvalRecord {
+                step: f("step") as usize,
+                time_s: f("time_s"),
+                benchmark: e
+                    .get("benchmark")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                accuracy: f("accuracy"),
+            });
+        }
+    }
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EvalRecord;
+
+    fn rec(label: &str, pts: &[(f64, f64)]) -> RunRecord {
+        RunRecord {
+            label: label.to_string(),
+            evals: pts
+                .iter()
+                .enumerate()
+                .map(|(i, (t, a))| EvalRecord {
+                    step: i,
+                    time_s: *t,
+                    benchmark: "b".into(),
+                    accuracy: *a,
+                })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn chart_renders_marks_and_legend() {
+        let a = rec("fast", &[(0.0, 0.1), (100.0, 0.8)]);
+        let b = rec("slow", &[(0.0, 0.1), (100.0, 0.4)]);
+        let chart = ascii_chart(&[&a, &b], "b", 40, 10);
+        assert!(chart.contains('*') && chart.contains('+'));
+        assert!(chart.contains("fast") && chart.contains("slow"));
+    }
+
+    #[test]
+    fn interp_endpoints_and_midpoint() {
+        let c = [(0.0, 0.0), (10.0, 1.0)];
+        assert_eq!(interp(&c, -5.0), 0.0);
+        assert_eq!(interp(&c, 20.0), 1.0);
+        assert!((interp(&c, 5.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_record() {
+        let a = rec("x", &[(0.0, 0.2), (50.0, 0.6)]);
+        let back = record_from_json(&a.to_json()).unwrap();
+        assert_eq!(back.label, "x");
+        assert_eq!(back.curve("b"), a.curve("b"));
+    }
+}

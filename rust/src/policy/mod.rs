@@ -1,0 +1,89 @@
+//! Policy abstraction: the coordinator talks to a model through these
+//! traits, so the *same* SPEED scheduler drives both the real PJRT
+//! transformer ([`real::RealPolicy`]) and the IRT simulator
+//! ([`sim::SimPolicy`]) used for paper-scale benchmark regeneration.
+
+pub mod real;
+pub mod sampler;
+pub mod sim;
+
+use anyhow::Result;
+
+use crate::data::tasks::TaskInstance;
+use crate::rl::algo::AlgoConfig;
+use crate::rl::update::{PromptGroup, Rollout};
+
+/// One generation request: `n_samples` rollouts for one prompt.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    /// Index into the active training dataset (carried through for
+    /// bookkeeping; the policy does not interpret it).
+    pub prompt_idx: usize,
+    pub task: TaskInstance,
+    pub n_samples: usize,
+}
+
+/// Result of one batched inference call.
+#[derive(Debug)]
+pub struct GenResult {
+    /// Per-request rollouts, same order as the request slice. Rewards are
+    /// already verified (binary, eq. 2).
+    pub groups: Vec<Vec<Rollout>>,
+    /// Inference cost in seconds — wall-clock for the real policy, the cost
+    /// model's virtual time for the simulator.
+    pub cost_s: f64,
+    /// Rows of the fixed-shape call actually carrying data.
+    pub rows_used: usize,
+}
+
+/// Result of one RL update step.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainResult {
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub clip_frac: f64,
+    pub cost_s: f64,
+}
+
+/// Result of an evaluation pass.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub cost_s: f64,
+}
+
+/// The coordinator-facing model interface.
+pub trait Policy {
+    /// Batched generation: all requests are packed into ONE fixed-shape
+    /// inference call (the pre-fetch batcher guarantees they fit). Total
+    /// `sum(n_samples)` must be <= [`Policy::rollout_capacity`].
+    fn generate(&mut self, requests: &[GenRequest], temperature: f32) -> Result<GenResult>;
+
+    /// One RL update on completed prompt groups.
+    fn train(&mut self, groups: &[PromptGroup], algo: &AlgoConfig) -> Result<TrainResult>;
+
+    /// Greedy-decode accuracy on a held-out set. `cost_s` is excluded from
+    /// training-time accounting (the paper excludes validation time).
+    fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult>;
+
+    /// Rows per inference call (the compiled artifact's row count).
+    fn rollout_capacity(&self) -> usize;
+
+    /// Maximum rollouts the train step can consume at once.
+    fn train_capacity(&self) -> usize;
+
+    /// Generation length (tokens) per rollout.
+    fn gen_len(&self) -> usize;
+
+    fn name(&self) -> &str;
+}
+
+/// Split a flat row vector of rollouts back into per-request groups.
+pub fn split_rows(requests: &[GenRequest], mut rows: Vec<Rollout>) -> Vec<Vec<Rollout>> {
+    let mut out = Vec::with_capacity(requests.len());
+    for req in requests {
+        let rest = rows.split_off(req.n_samples.min(rows.len()));
+        out.push(std::mem::replace(&mut rows, rest));
+    }
+    out
+}

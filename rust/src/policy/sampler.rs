@@ -1,0 +1,84 @@
+//! Host-side helpers for packing prompts into fixed-shape rollout calls.
+
+use anyhow::Result;
+
+use crate::data::tokenizer::{Tokenizer, BOS, PAD};
+use crate::policy::GenRequest;
+
+/// Packed prompt rows for one inference call.
+pub struct PackedRows {
+    pub tokens: Vec<i32>,  // [rows * width]
+    pub lens: Vec<i32>,    // [rows]
+    pub rows_used: usize,
+    pub rows: usize,
+    pub width: usize,
+}
+
+/// Expand requests into per-sample rows (prompt duplicated `n_samples`
+/// times), left-aligned and PAD-tailed; unused rows hold a lone BOS so the
+/// compiled graph has valid lengths everywhere.
+pub fn pack_requests(
+    tok: &Tokenizer,
+    requests: &[GenRequest],
+    rows: usize,
+    width: usize,
+) -> Result<PackedRows> {
+    let rows_used: usize = requests.iter().map(|r| r.n_samples).sum();
+    anyhow::ensure!(rows_used <= rows, "requests need {rows_used} rows, capacity {rows}");
+    let mut tokens = vec![PAD; rows * width];
+    let mut lens = vec![1i32; rows];
+    // Padding rows: a lone BOS (length 1) — harmless, masked by length.
+    for r in 0..rows {
+        tokens[r * width] = BOS;
+    }
+    let mut row = 0usize;
+    for req in requests {
+        let (encoded, len) = tok.encode_padded(&req.task.prompt, width)?;
+        for _ in 0..req.n_samples {
+            tokens[row * width..(row + 1) * width].copy_from_slice(&encoded);
+            lens[row] = len as i32;
+            row += 1;
+        }
+    }
+    Ok(PackedRows { tokens, lens, rows_used, rows, width })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{TaskFamily, TaskInstance};
+
+    fn req(prompt: &str, n: usize) -> GenRequest {
+        GenRequest {
+            prompt_idx: 0,
+            task: TaskInstance {
+                family: TaskFamily::Add,
+                level: 1,
+                prompt: prompt.to_string(),
+                answer: 0,
+            },
+            n_samples: n,
+        }
+    }
+
+    #[test]
+    fn duplicates_prompt_per_sample() {
+        let tok = Tokenizer::new();
+        let packed = pack_requests(&tok, &[req("1+2=", 3), req("9-4=", 2)], 8, 10).unwrap();
+        assert_eq!(packed.rows_used, 5);
+        // rows 0..3 share the first prompt
+        assert_eq!(packed.tokens[0..4], packed.tokens[10..14]);
+        assert_eq!(packed.lens[0], 4);
+        // row 3 is the second prompt
+        assert_ne!(packed.tokens[0..4], packed.tokens[30..34]);
+        // padding rows: lone BOS, len 1
+        assert_eq!(packed.tokens[5 * 10], BOS);
+        assert_eq!(packed.lens[5], 1);
+    }
+
+    #[test]
+    fn rejects_overflow() {
+        let tok = Tokenizer::new();
+        assert!(pack_requests(&tok, &[req("1+2=", 9)], 8, 10).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Advantage estimators over a *group* of N rollouts for one prompt.
+//!
+//! The compiled `train_step` consumes per-rollout scalar advantages; which
+//! estimator produces them is an L3 decision, so all the paper's baselines
+//! (RLOO eq. 8, GRPO, REINFORCE w/ batch baseline, REINFORCE++) live here.
+
+/// Which estimator converts group rewards into advantages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdvantageEstimator {
+    /// Leave-one-out baseline (paper eq. 8): `A_i = r_i - mean_{j!=i} r_j`.
+    Rloo,
+    /// Group-normalized: `A_i = (r_i - mean) / (std + eps)` (GRPO).
+    Grpo,
+    /// Plain REINFORCE with a moving global baseline supplied by the caller.
+    Reinforce,
+    /// REINFORCE++-style: group mean baseline then *batch-level* whitening
+    /// (the whitening pass is applied by [`whiten`] over the whole batch).
+    ReinforcePlusPlus,
+}
+
+impl AdvantageEstimator {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdvantageEstimator::Rloo => "rloo",
+            AdvantageEstimator::Grpo => "grpo",
+            AdvantageEstimator::Reinforce => "reinforce",
+            AdvantageEstimator::ReinforcePlusPlus => "reinforce++",
+        }
+    }
+
+    /// Per-group advantages. `global_baseline` is only used by `Reinforce`.
+    pub fn advantages(&self, rewards: &[f32], global_baseline: f32) -> Vec<f32> {
+        match self {
+            AdvantageEstimator::Rloo => rloo(rewards),
+            AdvantageEstimator::Grpo => grpo(rewards),
+            AdvantageEstimator::Reinforce => {
+                rewards.iter().map(|r| r - global_baseline).collect()
+            }
+            AdvantageEstimator::ReinforcePlusPlus => {
+                let mean = mean(rewards);
+                rewards.iter().map(|r| r - mean).collect()
+            }
+        }
+    }
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// RLOO (eq. 8): `A_i = r_i - (sum - r_i) / (N - 1)`.
+pub fn rloo(rewards: &[f32]) -> Vec<f32> {
+    let n = rewards.len();
+    if n <= 1 {
+        return vec![0.0; n];
+    }
+    let sum: f32 = rewards.iter().sum();
+    rewards
+        .iter()
+        .map(|&r| r - (sum - r) / (n as f32 - 1.0))
+        .collect()
+}
+
+/// GRPO group normalization.
+pub fn grpo(rewards: &[f32]) -> Vec<f32> {
+    let n = rewards.len();
+    if n <= 1 {
+        return vec![0.0; n];
+    }
+    let m = mean(rewards);
+    let var = rewards.iter().map(|r| (r - m) * (r - m)).sum::<f32>() / n as f32;
+    let std = var.sqrt();
+    if std < 1e-8 {
+        return vec![0.0; n]; // uniform rewards carry no signal (paper eq. 6)
+    }
+    rewards.iter().map(|r| (r - m) / (std + 1e-6)).collect()
+}
+
+/// Batch-level whitening (REINFORCE++ second stage): zero-mean, unit-var.
+pub fn whiten(advs: &mut [f32]) {
+    let n = advs.len();
+    if n <= 1 {
+        return;
+    }
+    let m = advs.iter().sum::<f32>() / n as f32;
+    let var = advs.iter().map(|a| (a - m) * (a - m)).sum::<f32>() / n as f32;
+    let std = var.sqrt().max(1e-8);
+    for a in advs.iter_mut() {
+        *a = (*a - m) / std;
+    }
+}
+
+/// Empirical pass rate of a reward group.
+pub fn pass_rate(rewards: &[f32]) -> f64 {
+    if rewards.is_empty() {
+        return 0.0;
+    }
+    rewards.iter().filter(|&&r| r > 0.5).count() as f64 / rewards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::prop_assert;
+
+    fn rand_rewards(rng: &mut crate::util::rng::Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| if rng.bool(0.4) { 1.0 } else { 0.0 }).collect()
+    }
+
+    #[test]
+    fn rloo_matches_direct_formula() {
+        let r = [1.0, 0.0, 0.0, 1.0];
+        let a = rloo(&r);
+        // A_0 = 1 - (0+0+1)/3 = 2/3
+        assert!((a[0] - 2.0 / 3.0).abs() < 1e-6);
+        assert!((a[1] + 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rloo_zero_for_uniform_groups() {
+        check("rloo-uniform-zero", 50, |rng| {
+            let n = rng.range_usize(2, 32);
+            let val = if rng.bool(0.5) { 1.0 } else { 0.0 };
+            let a = rloo(&vec![val; n]);
+            prop_assert!(a.iter().all(|&x| x.abs() < 1e-6), "nonzero adv for uniform rewards");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rloo_unbiased_mean_zero() {
+        // sum of RLOO advantages is N/(N-1) * sum(r - mean) = 0
+        check("rloo-sums-zero", 100, |rng| {
+            let n = rng.range_usize(2, 24);
+            let r = rand_rewards(rng, n);
+            let a = rloo(&r);
+            let s: f32 = a.iter().sum();
+            prop_assert!(s.abs() < 1e-4, "sum {s}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rloo_scale_is_n_over_n_minus_1_of_centered() {
+        check("rloo-scale", 100, |rng| {
+            let n = rng.range_usize(2, 24);
+            let r = rand_rewards(rng, n);
+            let m: f32 = r.iter().sum::<f32>() / n as f32;
+            let a = rloo(&r);
+            let k = n as f32 / (n as f32 - 1.0);
+            for (ai, ri) in a.iter().zip(&r) {
+                prop_assert!((ai - k * (ri - m)).abs() < 1e-5, "mismatch");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grpo_unit_variance() {
+        check("grpo-unit-var", 60, |rng| {
+            let n = rng.range_usize(4, 32);
+            let r = rand_rewards(rng, n);
+            let a = grpo(&r);
+            let m: f32 = a.iter().sum::<f32>() / n as f32;
+            if a.iter().any(|&x| x != 0.0) {
+                let var: f32 = a.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / n as f32;
+                prop_assert!((var - 1.0).abs() < 0.02, "var {var}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn whiten_normalizes() {
+        let mut a = vec![3.0, 5.0, 1.0, 7.0, -2.0];
+        whiten(&mut a);
+        let m: f32 = a.iter().sum::<f32>() / 5.0;
+        let var: f32 = a.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / 5.0;
+        assert!(m.abs() < 1e-6 && (var - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn pass_rate_counts() {
+        assert_eq!(pass_rate(&[1.0, 0.0, 1.0, 0.0]), 0.5);
+        assert_eq!(pass_rate(&[]), 0.0);
+    }
+
+    #[test]
+    fn estimator_dispatch() {
+        let r = [1.0, 0.0];
+        prop_check_dispatch(&r);
+    }
+
+    fn prop_check_dispatch(r: &[f32]) {
+        assert_eq!(AdvantageEstimator::Rloo.advantages(r, 0.0), rloo(r));
+        assert_eq!(AdvantageEstimator::Grpo.advantages(r, 0.0), grpo(r));
+        let re = AdvantageEstimator::Reinforce.advantages(r, 0.25);
+        assert_eq!(re, vec![0.75, -0.25]);
+    }
+}

@@ -1,0 +1,160 @@
+//! RL algorithm configurations (paper §5.1 baselines).
+//!
+//! `BaseAlgo` fixes the advantage estimator, the PPO-style clip thresholds
+//! the compiled `train_step` receives, and whether DAPO's *dynamic sampling*
+//! group filter applies (discard groups with uniform rewards after full
+//! inference — the post-hoc cousin of SPEED's pre-hoc screening).
+
+use crate::rl::advantage::{pass_rate, AdvantageEstimator};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaseAlgo {
+    Rloo,
+    Dapo,
+    Grpo,
+    Reinforce,
+    ReinforcePlusPlus,
+}
+
+impl BaseAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaseAlgo::Rloo => "rloo",
+            BaseAlgo::Dapo => "dapo",
+            BaseAlgo::Grpo => "grpo",
+            BaseAlgo::Reinforce => "reinforce",
+            BaseAlgo::ReinforcePlusPlus => "reinforce++",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BaseAlgo> {
+        match s.to_ascii_lowercase().as_str() {
+            "rloo" => Some(BaseAlgo::Rloo),
+            "dapo" => Some(BaseAlgo::Dapo),
+            "grpo" => Some(BaseAlgo::Grpo),
+            "reinforce" => Some(BaseAlgo::Reinforce),
+            "reinforce++" | "reinforcepp" => Some(BaseAlgo::ReinforcePlusPlus),
+            _ => None,
+        }
+    }
+}
+
+/// Full algorithm configuration passed to the trainer.
+#[derive(Clone, Copy, Debug)]
+pub struct AlgoConfig {
+    pub base: BaseAlgo,
+    /// PPO clip range; paper's DAPO setting: eps_low=0.2, eps_high=0.28
+    /// ("clip-higher"). Non-clipping algorithms use a huge range so the
+    /// compiled min(ratio*A, clip(ratio)*A) reduces to REINFORCE.
+    pub clip_low: f32,
+    pub clip_high: f32,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub max_grad_norm: f64,
+    /// Linear warmup steps for the lr schedule (paper: 10).
+    pub warmup_steps: usize,
+}
+
+impl AlgoConfig {
+    pub fn new(base: BaseAlgo) -> AlgoConfig {
+        let (clip_low, clip_high) = match base {
+            // Paper §5.1: eps_low = 0.2, eps_high = 0.28 for DAPO variants.
+            BaseAlgo::Dapo | BaseAlgo::Grpo => (0.2, 0.28),
+            // Effectively unclipped (single update per batch => ratio ~= 1).
+            _ => (1e6, 1e6),
+        };
+        AlgoConfig {
+            base,
+            clip_low,
+            clip_high,
+            lr: 1e-6, // paper default; real-policy runs override via config
+            weight_decay: 0.1,
+            max_grad_norm: 1.0,
+            warmup_steps: 10,
+        }
+    }
+
+    pub fn estimator(&self) -> AdvantageEstimator {
+        match self.base {
+            BaseAlgo::Rloo => AdvantageEstimator::Rloo,
+            // DAPO is built on GRPO-style group normalization.
+            BaseAlgo::Dapo | BaseAlgo::Grpo => AdvantageEstimator::Grpo,
+            BaseAlgo::Reinforce => AdvantageEstimator::Reinforce,
+            BaseAlgo::ReinforcePlusPlus => AdvantageEstimator::ReinforcePlusPlus,
+        }
+    }
+
+    /// DAPO dynamic sampling: after generating all N responses, drop groups
+    /// whose rewards are uniform (pass rate 0 or 1) and resample. Vanilla
+    /// RLOO/GRPO/REINFORCE train on everything.
+    pub fn filters_uniform_groups(&self) -> bool {
+        matches!(self.base, BaseAlgo::Dapo)
+    }
+
+    /// Keep this reward group for training?
+    pub fn keep_group(&self, rewards: &[f32]) -> bool {
+        if !self.filters_uniform_groups() {
+            return true;
+        }
+        let p = pass_rate(rewards);
+        p > 0.0 && p < 1.0
+    }
+
+    /// Learning rate at optimizer step `t` (linear warmup then constant —
+    /// the paper's schedule).
+    pub fn lr_at(&self, t: usize) -> f64 {
+        if self.warmup_steps == 0 || t >= self.warmup_steps {
+            self.lr
+        } else {
+            self.lr * (t + 1) as f64 / self.warmup_steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for b in [
+            BaseAlgo::Rloo,
+            BaseAlgo::Dapo,
+            BaseAlgo::Grpo,
+            BaseAlgo::Reinforce,
+            BaseAlgo::ReinforcePlusPlus,
+        ] {
+            assert_eq!(BaseAlgo::parse(b.name()), Some(b));
+        }
+        assert_eq!(BaseAlgo::parse("bogus"), None);
+    }
+
+    #[test]
+    fn dapo_filters_uniform_groups() {
+        let dapo = AlgoConfig::new(BaseAlgo::Dapo);
+        assert!(!dapo.keep_group(&[0.0, 0.0, 0.0]));
+        assert!(!dapo.keep_group(&[1.0, 1.0]));
+        assert!(dapo.keep_group(&[1.0, 0.0]));
+        let rloo = AlgoConfig::new(BaseAlgo::Rloo);
+        assert!(rloo.keep_group(&[0.0, 0.0, 0.0]));
+    }
+
+    #[test]
+    fn paper_clip_settings() {
+        let dapo = AlgoConfig::new(BaseAlgo::Dapo);
+        assert_eq!((dapo.clip_low, dapo.clip_high), (0.2, 0.28));
+        let rloo = AlgoConfig::new(BaseAlgo::Rloo);
+        assert!(rloo.clip_low > 1e3); // unclipped
+    }
+
+    #[test]
+    fn warmup_schedule() {
+        let mut cfg = AlgoConfig::new(BaseAlgo::Rloo);
+        cfg.lr = 1.0;
+        cfg.warmup_steps = 10;
+        assert!((cfg.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!((cfg.lr_at(4) - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.lr_at(10), 1.0);
+        assert_eq!(cfg.lr_at(500), 1.0);
+    }
+}

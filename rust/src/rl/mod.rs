@@ -1,0 +1,10 @@
+//! RL core: advantage estimators, algorithm configurations, and the SNR/Φ
+//! theory of paper §3 and Appendices A/B.
+
+pub mod advantage;
+pub mod algo;
+pub mod theory;
+pub mod update;
+
+pub use advantage::AdvantageEstimator;
+pub use algo::{AlgoConfig, BaseAlgo};

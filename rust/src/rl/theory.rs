@@ -1,0 +1,236 @@
+//! The paper's theory, executable: SNR bounds (Theorem 3.1), the implicit
+//! objective Φ (Theorem 4.1), Fact 1's improvement bound, and screening
+//! acceptance probabilities. `examples/theory_check.rs` validates the
+//! bounds against Monte-Carlo estimates on a tractable policy.
+
+/// Exact Theorem 3.1 upper bound (from the proof's final display):
+/// `SNR <= [ 1/(N p (1-p)) + (N-2)(N-3)/(N(N-1)) - 1 ]^{-1}`.
+///
+/// Returns 0 at p in {0, 1} (the gradient itself vanishes, eq. 6).
+pub fn snr_bound_exact(n: usize, p: f64) -> f64 {
+    if !(0.0..=1.0).contains(&p) || p == 0.0 || p == 1.0 || n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let denom = 1.0 / (nf * p * (1.0 - p)) + (nf - 2.0) * (nf - 3.0) / (nf * (nf - 1.0)) - 1.0;
+    if denom <= 0.0 {
+        f64::INFINITY
+    } else {
+        1.0 / denom
+    }
+}
+
+/// The simplified headline bound of eq. (11): `SNR <= 4 N p (1-p)`.
+pub fn snr_bound_simple(n: usize, p: f64) -> f64 {
+    4.0 * n as f64 * p * (1.0 - p)
+}
+
+/// Fact 1: expected one-step improvement lower bound
+/// `E[J(θ+)] - J(θ) >= 0.5 ||∇J||² (1 - 1/SNR)`.
+pub fn fact1_improvement(grad_norm_sq: f64, snr: f64) -> f64 {
+    if snr <= 0.0 {
+        // SNR -> 0: the bound degenerates to -inf; callers treat this as
+        // "no guaranteed progress".
+        return f64::NEG_INFINITY;
+    }
+    0.5 * grad_norm_sq * (1.0 - 1.0 / snr)
+}
+
+/// Binomial pmf P(X = k), X ~ Bin(n, p). Direct product; n <= a few hundred.
+pub fn binom_pmf(n: usize, k: usize, p: f64) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    if p <= 0.0 {
+        return if k == 0 { 1.0 } else { 0.0 };
+    }
+    if p >= 1.0 {
+        return if k == n { 1.0 } else { 0.0 };
+    }
+    // log-space for stability
+    let mut log = 0.0f64;
+    for i in 0..k {
+        log += ((n - i) as f64).ln() - ((i + 1) as f64).ln();
+    }
+    log += k as f64 * p.ln() + (n - k) as f64 * (1.0 - p).ln();
+    log.exp()
+}
+
+/// Probability that SPEED's screening test accepts a prompt with true pass
+/// rate `p`: `P( p_low < X/N_init < p_high )`, X ~ Bin(N_init, p).
+/// With the paper's default thresholds (0, 1) this is
+/// `1 - p^N_init - (1-p)^N_init`.
+pub fn acceptance_probability(n_init: usize, p: f64, p_low: f64, p_high: f64) -> f64 {
+    let mut acc = 0.0;
+    for k in 0..=n_init {
+        let rate = k as f64 / n_init as f64;
+        if rate > p_low && rate < p_high {
+            acc += binom_pmf(n_init, k, p);
+        }
+    }
+    acc.clamp(0.0, 1.0)
+}
+
+/// Theorem 4.1's reweighting map Φ (Appendix B closed form, up to the
+/// additive constant):
+///
+/// Φ(p) = p − N_cont/(N (N_init+1)) (p^{N_init+1} − (1−p)^{N_init+1})
+///        + N_cont/(N (N−1)(N_init+1)) ((1+N_init p)(1−p)^{N_init}
+///                                      − p^{N_init}(N_init(1−p)+1))
+pub fn phi(p: f64, n_init: usize, n_cont: usize) -> f64 {
+    let p = p.clamp(0.0, 1.0);
+    let ni = n_init as f64;
+    let nc = n_cont as f64;
+    let n = ni + nc;
+    let q = 1.0 - p;
+    let term1 = nc / (n * (ni + 1.0)) * (p.powi(n_init as i32 + 1) - q.powi(n_init as i32 + 1));
+    let term2 = nc / (n * (n - 1.0) * (ni + 1.0))
+        * ((1.0 + ni * p) * q.powi(n_init as i32) - p.powi(n_init as i32) * (ni * q + 1.0));
+    p - term1 + term2
+}
+
+/// dΦ/dp (Appendix B): the weight SPEED-RLOO implicitly puts on a prompt's
+/// gradient as a function of its pass rate.
+pub fn phi_derivative(p: f64, n_init: usize, n_cont: usize) -> f64 {
+    let p = p.clamp(0.0, 1.0);
+    let ni = n_init as f64;
+    let nc = n_cont as f64;
+    let n = ni + nc;
+    let q = 1.0 - p;
+    let pow = |x: f64, e: i32| x.powi(e);
+    1.0 - nc / n * (pow(p, n_init as i32) + pow(q, n_init as i32))
+        - ni * nc / (n * (n - 1.0))
+            * (p * pow(q, n_init as i32 - 1) + q * pow(p, n_init as i32 - 1))
+}
+
+/// Numerically integrate phi_derivative to cross-check the closed form.
+#[cfg(test)]
+fn phi_numeric(p: f64, n_init: usize, n_cont: usize, steps: usize) -> f64 {
+    let mut acc = phi(0.0, n_init, n_cont);
+    let h = p / steps as f64;
+    for i in 0..steps {
+        let x0 = i as f64 * h;
+        let x1 = x0 + h;
+        acc += 0.5 * h * (phi_derivative(x0, n_init, n_cont) + phi_derivative(x1, n_init, n_cont));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::prop_assert;
+
+    #[test]
+    fn snr_bounds_vanish_at_extremes() {
+        for n in [4, 8, 24, 64] {
+            assert_eq!(snr_bound_exact(n, 0.0), 0.0);
+            assert_eq!(snr_bound_exact(n, 1.0), 0.0);
+            assert!(snr_bound_exact(n, 1e-6) < 1e-3);
+            assert!(snr_bound_exact(n, 1.0 - 1e-6) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn snr_bound_peaks_at_half() {
+        let n = 24;
+        let mid = snr_bound_exact(n, 0.5);
+        for p in [0.05, 0.1, 0.2, 0.35, 0.65, 0.9] {
+            assert!(snr_bound_exact(n, p) <= mid + 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn exact_bound_tighter_than_simple_in_tails() {
+        // Theorem 3.1 states the 4Np(1-p) form for p < 1/4 or p > 3/4.
+        for n in [8, 24, 64] {
+            for p in [0.01, 0.05, 0.1, 0.2, 0.8, 0.9, 0.99] {
+                let exact = snr_bound_exact(n, p);
+                let simple = snr_bound_simple(n, p);
+                assert!(exact <= simple + 1e-9, "n={n} p={p}: {exact} > {simple}");
+            }
+        }
+    }
+
+    #[test]
+    fn binom_pmf_sums_to_one() {
+        check("binom-normalized", 40, |rng| {
+            let n = rng.range_usize(1, 64);
+            let p = rng.f64();
+            let total: f64 = (0..=n).map(|k| binom_pmf(n, k, p)).sum();
+            prop_assert!((total - 1.0).abs() < 1e-9, "sum {total}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn acceptance_matches_closed_form_for_default_thresholds() {
+        check("acceptance-closed-form", 60, |rng| {
+            let n_init = rng.range_usize(2, 16);
+            let p = rng.f64();
+            let got = acceptance_probability(n_init, p, 0.0, 1.0);
+            let expect = 1.0 - p.powi(n_init as i32) - (1.0 - p).powi(n_init as i32);
+            prop_assert!((got - expect).abs() < 1e-9, "got {got}, closed {expect}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn acceptance_low_at_extremes_high_at_half() {
+        let a0 = acceptance_probability(8, 0.01, 0.0, 1.0);
+        let ah = acceptance_probability(8, 0.5, 0.0, 1.0);
+        let a1 = acceptance_probability(8, 0.99, 0.0, 1.0);
+        assert!(a0 < 0.1 && a1 < 0.1 && ah > 0.99, "{a0} {ah} {a1}");
+    }
+
+    #[test]
+    fn phi_is_monotone_increasing() {
+        // Theorem 4.1: Φ' >= 0 for all valid (N_init, N_cont).
+        for (ni, nc) in [(1, 1), (4, 20), (6, 18), (8, 16), (2, 62)] {
+            let mut prev = phi(0.0, ni, nc);
+            for i in 1..=200 {
+                let p = i as f64 / 200.0;
+                let cur = phi(p, ni, nc);
+                assert!(cur >= prev - 1e-12, "ni={ni} nc={nc} p={p}: {cur} < {prev}");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn phi_derivative_nonnegative_and_matches_integral() {
+        check("phi-deriv", 40, |rng| {
+            let ni = rng.range_usize(1, 10);
+            let nc = rng.range_usize(1, 30);
+            let p = rng.f64();
+            let d = phi_derivative(p, ni, nc);
+            prop_assert!(d >= -1e-9, "phi' = {d} < 0 at p={p}, ni={ni}, nc={nc}");
+            let numeric = phi_numeric(p, ni, nc, 400);
+            let closed = phi(p, ni, nc);
+            prop_assert!(
+                (numeric - closed).abs() < 1e-4,
+                "phi mismatch at p={p}: closed {closed}, integral {numeric}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn phi_maximized_at_one() {
+        for (ni, nc) in [(4, 20), (8, 16)] {
+            let at_one = phi(1.0, ni, nc);
+            for i in 0..100 {
+                let p = i as f64 / 100.0;
+                assert!(phi(p, ni, nc) <= at_one + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fact1_signs() {
+        assert!(fact1_improvement(1.0, 2.0) > 0.0); // SNR > 1 -> progress
+        assert!(fact1_improvement(1.0, 0.5) < 0.0); // SNR < 1 -> no guarantee
+        assert_eq!(fact1_improvement(1.0, 0.0), f64::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,255 @@
+//! Train-batch assembly: rollout groups -> the fixed-shape tensors the
+//! compiled `train_step` artifact consumes.
+//!
+//! Row layout contract (must mirror `model.rollout` positions exactly so
+//! recomputed logprobs align with behavior logprobs): prompt tokens at
+//! `[0, len)`, generated tokens at `[len, len+G)`, PAD tail. The loss mask
+//! covers generated tokens up to and including the first EOS.
+
+use anyhow::Result;
+
+use crate::data::verifier::loss_token_count;
+use crate::rl::advantage::AdvantageEstimator;
+use crate::runtime::Tensor;
+
+/// One sampled response for a prompt.
+#[derive(Clone, Debug)]
+pub struct Rollout {
+    pub gen_tokens: Vec<i32>,
+    pub gen_logprobs: Vec<f32>,
+    pub reward: f32,
+}
+
+/// A prompt together with its group of N rollouts (screening + continuation).
+#[derive(Clone, Debug)]
+pub struct PromptGroup {
+    /// Index into the training dataset.
+    pub prompt_idx: usize,
+    /// The task (the policy tokenizes `task.prompt` when assembling rows).
+    pub task: crate::data::tasks::TaskInstance,
+    pub rollouts: Vec<Rollout>,
+}
+
+impl PromptGroup {
+    pub fn rewards(&self) -> Vec<f32> {
+        self.rollouts.iter().map(|r| r.reward).collect()
+    }
+
+    pub fn pass_rate(&self) -> f64 {
+        crate::rl::advantage::pass_rate(&self.rewards())
+    }
+}
+
+/// Host-side train batch, ready to convert into artifact inputs.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub rows: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub old_logprobs: Vec<f32>,
+    pub advantages: Vec<f32>,
+    /// Rows actually carrying data (the rest are zero padding).
+    pub rows_used: usize,
+    /// Mean |advantage| over used rows (diagnostic).
+    pub mean_abs_adv: f64,
+}
+
+impl TrainBatch {
+    /// Assemble a fixed-shape batch from prompt groups.
+    ///
+    /// * `tok` — tokenizer for the prompts.
+    /// * `rows`/`seq_len` — the compiled train artifact's shape.
+    /// * `estimator` — converts group rewards to advantages.
+    /// * `global_baseline` — only used by plain REINFORCE.
+    ///
+    /// Unused trailing rows are zero-padded (mask 0 ⇒ no gradient).
+    pub fn assemble(
+        groups: &[PromptGroup],
+        tok: &crate::data::tokenizer::Tokenizer,
+        estimator: AdvantageEstimator,
+        global_baseline: f32,
+        rows: usize,
+        seq_len: usize,
+    ) -> Result<TrainBatch> {
+        let total_rollouts: usize = groups.iter().map(|g| g.rollouts.len()).sum();
+        anyhow::ensure!(
+            total_rollouts <= rows,
+            "batch of {total_rollouts} rollouts exceeds compiled rows {rows}"
+        );
+        let mut tokens = vec![0i32; rows * seq_len];
+        let mut loss_mask = vec![0f32; rows * seq_len];
+        let mut old_logprobs = vec![0f32; rows * seq_len];
+        let mut advantages = vec![0f32; rows];
+        let mut row = 0usize;
+        let mut adv_sum = 0f64;
+        for g in groups {
+            let advs = estimator.advantages(&g.rewards(), global_baseline);
+            let prompt_tokens = tok.encode(&g.task.prompt)?;
+            let plen = prompt_tokens.len();
+            for (r, adv) in g.rollouts.iter().zip(advs) {
+                anyhow::ensure!(
+                    plen + r.gen_tokens.len() <= seq_len,
+                    "row overflow: prompt {plen} + gen {} > seq {seq_len}",
+                    r.gen_tokens.len()
+                );
+                let base = row * seq_len;
+                tokens[base..base + plen].copy_from_slice(&prompt_tokens);
+                let gbase = base + plen;
+                tokens[gbase..gbase + r.gen_tokens.len()].copy_from_slice(&r.gen_tokens);
+                let k = loss_token_count(&r.gen_tokens);
+                for j in 0..k {
+                    loss_mask[gbase + j] = 1.0;
+                    old_logprobs[gbase + j] = r.gen_logprobs[j];
+                }
+                advantages[row] = adv;
+                adv_sum += adv.abs() as f64;
+                row += 1;
+            }
+        }
+        Ok(TrainBatch {
+            rows,
+            seq_len,
+            tokens,
+            loss_mask,
+            old_logprobs,
+            advantages,
+            rows_used: row,
+            mean_abs_adv: if row > 0 { adv_sum / row as f64 } else { 0.0 },
+        })
+    }
+
+    /// Convert to the artifact's data-argument tensors
+    /// `(tokens, loss_mask, old_logprobs, advantages)`.
+    pub fn tensors(&self) -> (Tensor, Tensor, Tensor, Tensor) {
+        (
+            Tensor::i32(vec![self.rows, self.seq_len], self.tokens.clone()),
+            Tensor::f32(vec![self.rows, self.seq_len], self.loss_mask.clone()),
+            Tensor::f32(vec![self.rows, self.seq_len], self.old_logprobs.clone()),
+            Tensor::f32(vec![self.rows], self.advantages.clone()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::EOS;
+    use crate::util::proptest::check;
+    use crate::prop_assert;
+
+    use crate::data::tasks::{TaskFamily, TaskInstance};
+    use crate::data::tokenizer::Tokenizer;
+
+    /// `prompt` is a string; "234" encodes to token ids [5, 6, 7].
+    fn group(prompt: &str, gens: Vec<(Vec<i32>, f32)>) -> PromptGroup {
+        PromptGroup {
+            prompt_idx: 0,
+            task: TaskInstance {
+                family: TaskFamily::Add,
+                level: 1,
+                prompt: prompt.to_string(),
+                answer: 0,
+            },
+            rollouts: gens
+                .into_iter()
+                .map(|(g, reward)| Rollout {
+                    gen_logprobs: vec![-0.5; g.len()],
+                    gen_tokens: g,
+                    reward,
+                })
+                .collect(),
+        }
+    }
+
+    fn tok() -> Tokenizer {
+        Tokenizer::new()
+    }
+
+    #[test]
+    fn layout_places_gen_after_prompt() {
+        let g = group("234", vec![(vec![8, EOS, 9, 9], 1.0), (vec![8, 8, 8, EOS], 0.0)]);
+        let b = TrainBatch::assemble(&[g], &tok(), AdvantageEstimator::Rloo, 0.0, 4, 10).unwrap();
+        assert_eq!(b.rows_used, 2);
+        // row 0: prompt at 0..3, gen at 3..7
+        assert_eq!(&b.tokens[0..7], &[5, 6, 7, 8, EOS, 9, 9]);
+        // mask covers gen tokens up to + incl EOS only
+        assert_eq!(&b.loss_mask[0..10], &[0., 0., 0., 1., 1., 0., 0., 0., 0., 0.]);
+        // row 1: no EOS until last -> all 4 gen positions masked
+        assert_eq!(&b.loss_mask[10..20], &[0., 0., 0., 1., 1., 1., 1., 0., 0., 0.]);
+        // padding rows zeroed
+        assert!(b.tokens[20..].iter().all(|&t| t == 0));
+        assert_eq!(b.advantages[2], 0.0);
+    }
+
+    #[test]
+    fn rloo_advantages_in_batch() {
+        let g = group("1", vec![(vec![EOS], 1.0), (vec![EOS], 0.0)]);
+        let b = TrainBatch::assemble(&[g], &tok(), AdvantageEstimator::Rloo, 0.0, 2, 4).unwrap();
+        assert_eq!(b.advantages, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let g = group("11111111", vec![(vec![2; 8], 1.0)]);
+        assert!(
+            TrainBatch::assemble(&[g.clone()], &tok(), AdvantageEstimator::Rloo, 0.0, 1, 10)
+                .is_err()
+        );
+        assert!(
+            TrainBatch::assemble(&[g.clone(), g], &tok(), AdvantageEstimator::Rloo, 0.0, 1, 16)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn mask_only_on_generated_positions() {
+        check("trainbatch-mask", 60, |rng| {
+            let plen = rng.range_usize(1, 6);
+            let glen = rng.range_usize(1, 6);
+            let n = rng.range_usize(1, 4);
+            let gens: Vec<(Vec<i32>, f32)> = (0..n)
+                .map(|_| {
+                    let mut g: Vec<i32> = (0..glen).map(|_| rng.range_i64(3, 26) as i32).collect();
+                    if rng.bool(0.7) {
+                        let pos = rng.range_usize(0, glen - 1);
+                        g[pos] = EOS;
+                    }
+                    (g, if rng.bool(0.5) { 1.0 } else { 0.0 })
+                })
+                .collect();
+            let prompt: String = (0..plen).map(|i| char::from(b'0' + (i % 10) as u8)).collect();
+            let g = group(&prompt, gens);
+            let rows = n + rng.range_usize(0, 3);
+            let seq = plen + glen + rng.range_usize(0, 4);
+            let b =
+                TrainBatch::assemble(&[g], &tok(), AdvantageEstimator::Grpo, 0.0, rows, seq)
+                    .unwrap();
+            for r in 0..rows {
+                for t in 0..seq {
+                    let m = b.loss_mask[r * seq + t];
+                    if r >= n || t < plen || t >= plen + glen {
+                        prop_assert!(m == 0.0, "mask leaked at ({r},{t})");
+                    }
+                }
+            }
+            // every used row has at least one masked token
+            for r in 0..n {
+                let s: f32 = b.loss_mask[r * seq..(r + 1) * seq].iter().sum();
+                prop_assert!(s >= 1.0, "row {r} has empty mask");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tensor_shapes() {
+        let g = group("1", vec![(vec![EOS], 1.0)]);
+        let b = TrainBatch::assemble(&[g], &tok(), AdvantageEstimator::Rloo, 0.0, 3, 5).unwrap();
+        let (t, m, o, a) = b.tensors();
+        assert_eq!(t.shape(), &[3, 5]);
+        assert_eq!(m.shape(), &[3, 5]);
+        assert_eq!(o.shape(), &[3, 5]);
+        assert_eq!(a.shape(), &[3]);
+    }
+}

@@ -1,0 +1,294 @@
+//! Artifact manifest: the typed contract between `python/compile/aot.py`
+//! and the Rust runtime (argument order, shapes, dtypes, param layout).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype in the manifest ("f32" / "i32" / "u32").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unknown dtype '{other}' in manifest"),
+        })
+    }
+}
+
+/// One argument or output of an artifact.
+#[derive(Clone, Debug)]
+pub struct ArgSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<ArgSig> {
+        Ok(ArgSig {
+            name: j.get("name").and_then(|x| x.as_str()).context("arg name")?.to_string(),
+            shape: j.get("shape").and_then(|x| x.as_usize_vec()).context("arg shape")?,
+            dtype: DType::parse(j.get("dtype").and_then(|x| x.as_str()).context("arg dtype")?)?,
+        })
+    }
+}
+
+/// One compiled entrypoint (a `.hlo.txt` file plus its signature).
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSig>,
+    pub outputs: Vec<ArgSig>,
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// Model hyper-parameters recorded by the compile path.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub vocab_size: usize,
+    pub num_params: usize,
+}
+
+/// Shape plan the artifacts were compiled for.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub rollout_rows: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub train_rows: usize,
+    pub sft_rows: usize,
+    /// Additional smaller rollout row-counts compiled alongside the
+    /// primary one (perf: lightly-filled calls pick the smallest fit).
+    pub rollout_variants: Vec<usize>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub model: ModelMeta,
+    pub vocab: Vec<String>,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    pub init_params_file: String,
+    pub plan: Plan,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn req_usize(j: &Json, path: &str) -> Result<usize> {
+    j.path(path).and_then(|x| x.as_usize()).with_context(|| format!("manifest field {path}"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let model = ModelMeta {
+            d_model: req_usize(j, "model.d_model")?,
+            n_layers: req_usize(j, "model.n_layers")?,
+            n_heads: req_usize(j, "model.n_heads")?,
+            d_ff: req_usize(j, "model.d_ff")?,
+            max_seq: req_usize(j, "model.max_seq")?,
+            vocab_size: req_usize(j, "model.vocab_size")?,
+            num_params: req_usize(j, "model.num_params")?,
+        };
+        let plan = Plan {
+            rollout_rows: req_usize(j, "plan.rollout_rows")?,
+            prompt_len: req_usize(j, "plan.prompt_len")?,
+            gen_len: req_usize(j, "plan.gen_len")?,
+            train_rows: req_usize(j, "plan.train_rows")?,
+            sft_rows: req_usize(j, "plan.sft_rows")?,
+            rollout_variants: j
+                .path("plan.rollout_variants")
+                .and_then(|x| x.as_usize_vec())
+                .unwrap_or_default(),
+        };
+        let vocab: Vec<String> = j
+            .path("vocab")
+            .and_then(|x| x.as_arr())
+            .context("manifest vocab")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        let param_specs = j
+            .path("param_specs")
+            .and_then(|x| x.as_arr())
+            .context("manifest param_specs")?
+            .iter()
+            .map(|p| -> Result<(String, Vec<usize>)> {
+                Ok((
+                    p.get("name").and_then(|x| x.as_str()).context("param name")?.to_string(),
+                    p.get("shape").and_then(|x| x.as_usize_vec()).context("param shape")?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j.path("artifacts").and_then(|x| x.as_obj()).context("artifacts")? {
+            let args = art
+                .get("args")
+                .and_then(|x| x.as_arr())
+                .context("artifact args")?
+                .iter()
+                .map(ArgSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = art
+                .get("outputs")
+                .and_then(|x| x.as_arr())
+                .context("artifact outputs")?
+                .iter()
+                .map(ArgSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let mut meta = BTreeMap::new();
+            if let Some(m) = art.get("meta").and_then(|x| x.as_obj()) {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    name: name.clone(),
+                    file: art.get("file").and_then(|x| x.as_str()).context("artifact file")?.to_string(),
+                    args,
+                    outputs,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            preset: j.path("preset").and_then(|x| x.as_str()).context("preset")?.to_string(),
+            model,
+            vocab,
+            pad: j.path("special.pad").and_then(|x| x.as_i64()).context("pad")? as i32,
+            bos: j.path("special.bos").and_then(|x| x.as_i64()).context("bos")? as i32,
+            eos: j.path("special.eos").and_then(|x| x.as_i64()).context("eos")? as i32,
+            param_specs,
+            init_params_file: j
+                .path("init_params_file")
+                .and_then(|x| x.as_str())
+                .context("init_params_file")?
+                .to_string(),
+            plan,
+            artifacts,
+        })
+    }
+
+    /// Find the unique artifact whose name starts with `prefix`.
+    pub fn artifact_by_prefix(&self, prefix: &str) -> Result<&ArtifactSig> {
+        let mut matches = self.artifacts.values().filter(|a| a.name.starts_with(prefix));
+        let first = matches.next().with_context(|| format!("no artifact named {prefix}*"))?;
+        if matches.next().is_some() {
+            bail!("ambiguous artifact prefix {prefix}");
+        }
+        Ok(first)
+    }
+
+    /// All rollout artifact row-counts, ascending (variants + primary).
+    pub fn rollout_row_options(&self) -> Vec<usize> {
+        let mut rows: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.name.starts_with("rollout"))
+            .filter_map(|a| a.meta.get("rows").map(|&r| r as usize))
+            .collect();
+        rows.sort_unstable();
+        rows.dedup();
+        rows
+    }
+
+    /// The rollout artifact compiled for exactly `rows` rows.
+    pub fn rollout_artifact_for(&self, rows: usize) -> Result<&ArtifactSig> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.name.starts_with("rollout")
+                    && a.meta.get("rows").map(|&r| r as usize) == Some(rows)
+            })
+            .with_context(|| format!("no rollout artifact with {rows} rows"))
+    }
+
+    /// Total number of parameter scalars (must match init file size / 4).
+    pub fn param_numel(&self) -> usize {
+        self.param_specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> Json {
+        Json::parse(
+            r#"{
+            "preset": "nano",
+            "model": {"d_model": 64, "n_layers": 2, "n_heads": 2, "d_ff": 256,
+                      "max_seq": 96, "vocab_size": 32, "num_params": 10},
+            "vocab": ["<pad>", "<bos>", "<eos>", "0"],
+            "special": {"pad": 0, "bos": 1, "eos": 2},
+            "param_specs": [{"name": "embed", "shape": [32, 64]},
+                            {"name": "pos", "shape": [96, 64]}],
+            "init_params_file": "init_params_nano.bin",
+            "plan": {"rollout_rows": 64, "prompt_len": 24, "gen_len": 24,
+                     "train_rows": 64, "sft_rows": 64},
+            "artifacts": {
+                "rollout_r64": {
+                    "file": "rollout_r64.hlo.txt",
+                    "args": [{"name": "x", "shape": [64, 24], "dtype": "i32"}],
+                    "outputs": [{"name": "y", "shape": [64, 24], "dtype": "i32"}],
+                    "meta": {"rows": 64}
+                }
+            }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(Path::new("/tmp"), &mini_manifest_json()).unwrap();
+        assert_eq!(m.preset, "nano");
+        assert_eq!(m.model.d_model, 64);
+        assert_eq!(m.param_specs.len(), 2);
+        assert_eq!(m.param_numel(), 32 * 64 + 96 * 64);
+        let art = m.artifact_by_prefix("rollout").unwrap();
+        assert_eq!(art.args[0].dtype, DType::I32);
+        assert_eq!(art.meta["rows"], 64.0);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let j = Json::parse(r#"{"preset": "x"}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Executable cache + typed execution over the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{ArtifactSig, DType, Manifest};
+use super::tensor::{DTypeKind, Tensor};
+
+/// A compiled artifact with its signature; validates inputs before execute.
+pub struct Executable {
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution stats (for the §Perf accounting).
+    pub calls: Mutex<(u64, f64)>, // (count, total seconds)
+}
+
+impl Executable {
+    /// Execute with host tensors; returns decomposed output tensors in the
+    /// signature's order. The compiled module returns a single tuple
+    /// (`return_tuple=True` at lowering), decomposed here.
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.validate(args)?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (the parameter store keeps literals
+    /// around between steps to skip re-marshalling).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("execute {}", self.sig.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.sig.name))?;
+        let parts = tuple.to_tuple().context("decompose output tuple")?;
+        anyhow::ensure!(
+            parts.len() == self.sig.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.sig.name,
+            self.sig.outputs.len(),
+            parts.len()
+        );
+        let out: Vec<Tensor> = parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("read outputs of {}", self.sig.name))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.calls.lock().unwrap();
+        stats.0 += 1;
+        stats.1 += dt;
+        Ok(out)
+    }
+
+    /// Mixed-mode execute: literals for the leading stateful args (params /
+    /// optimizer), host tensors for the per-step data args.
+    pub fn run_state_and_data(
+        &self,
+        state: &[xla::Literal],
+        data: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            state.len() + data.len() == self.sig.args.len(),
+            "{}: expected {} args, got {}+{}",
+            self.sig.name,
+            self.sig.args.len(),
+            state.len(),
+            data.len()
+        );
+        for (i, t) in data.iter().enumerate() {
+            let sig = &self.sig.args[state.len() + i];
+            anyhow::ensure!(
+                t.shape() == sig.shape.as_slice() && kind_matches(t.kind(), sig.dtype),
+                "{}: data arg {} ('{}') expects {:?} {:?}, got {:?} {:?}",
+                self.sig.name,
+                i,
+                sig.name,
+                sig.dtype,
+                sig.shape,
+                t.kind(),
+                t.shape()
+            );
+        }
+        let mut literals: Vec<xla::Literal> = Vec::with_capacity(self.sig.args.len());
+        for lit in state {
+            literals.push(lit.clone());
+        }
+        for t in data {
+            literals.push(t.to_literal()?);
+        }
+        self.run_literals(&literals)
+    }
+
+    fn validate(&self, args: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            args.len() == self.sig.args.len(),
+            "{}: expected {} args, got {}",
+            self.sig.name,
+            self.sig.args.len(),
+            args.len()
+        );
+        for (t, sig) in args.iter().zip(&self.sig.args) {
+            anyhow::ensure!(
+                t.shape() == sig.shape.as_slice(),
+                "{}: arg '{}' expects shape {:?}, got {:?}",
+                self.sig.name,
+                sig.name,
+                sig.shape,
+                t.shape()
+            );
+            anyhow::ensure!(
+                kind_matches(t.kind(), sig.dtype),
+                "{}: arg '{}' expects dtype {:?}, got {:?}",
+                self.sig.name,
+                sig.name,
+                sig.dtype,
+                t.kind()
+            );
+        }
+        Ok(())
+    }
+
+    /// (call count, total seconds) since creation.
+    pub fn stats(&self) -> (u64, f64) {
+        *self.calls.lock().unwrap()
+    }
+}
+
+fn kind_matches(kind: DTypeKind, dtype: DType) -> bool {
+    matches!(
+        (kind, dtype),
+        (DTypeKind::F32, DType::F32) | (DTypeKind::I32, DType::I32) | (DTypeKind::U32, DType::U32)
+    )
+}
+
+/// The PJRT runtime: client + manifest + compiled-executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: &std::path::Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        crate::info!(
+            "runtime",
+            "PJRT client up: platform={} devices={} preset={} ({} params)",
+            client.platform_name(),
+            client.device_count(),
+            manifest.preset,
+            manifest.model.num_params
+        );
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Fetch (compiling + caching on first use) the artifact named `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let sig = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.manifest.dir.join(&sig.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        crate::info!("runtime", "compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let executable =
+            Arc::new(Executable { sig, exe, calls: Mutex::new((0, 0.0)) });
+        self.cache.lock().unwrap().insert(name.to_string(), Arc::clone(&executable));
+        Ok(executable)
+    }
+
+    /// Fetch by unique prefix (e.g. "rollout", "train", "sft").
+    pub fn executable_by_prefix(&self, prefix: &str) -> Result<Arc<Executable>> {
+        let name = self.manifest.artifact_by_prefix(prefix)?.name.clone();
+        self.executable(&name)
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts `python/compile/aot.py` produced
+//! and executes them from the L3 hot path.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled once and
+//! cached; the parameter store keeps model + Adam state as literals that
+//! flow straight back in on the next step.
+
+pub mod artifacts;
+pub mod exec;
+pub mod params;
+pub mod tensor;
+
+pub use artifacts::{ArgSig, ArtifactSig, DType, Manifest};
+pub use exec::{Executable, Runtime};
+pub use params::ParamStore;
+pub use tensor::Tensor;

@@ -1,0 +1,169 @@
+//! Parameter store: model weights + AdamW state, kept as XLA literals so
+//! they feed straight into `train_step` / `sft_step` / `rollout` calls.
+//!
+//! Layout contract: `manifest.param_specs` order, f32 little-endian raw
+//! concatenation — the same format `aot.py` uses for `init_params_*.bin`
+//! and the checkpoint format used by `save`/`load`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::Manifest;
+use super::tensor::Tensor;
+use crate::util::json::Json;
+
+pub struct ParamStore {
+    /// (name, shape) in manifest order.
+    pub specs: Vec<(String, Vec<usize>)>,
+    /// Current model parameters, one literal per spec.
+    pub params: Vec<xla::Literal>,
+    /// AdamW first/second moments.
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    /// Optimizer step counter (bias correction), mirrors the i32 the graphs
+    /// take/return.
+    pub step: i32,
+}
+
+fn zeros_like(specs: &[(String, Vec<usize>)]) -> Result<Vec<xla::Literal>> {
+    specs
+        .iter()
+        .map(|(_, shape)| Tensor::zeros_f32(shape.clone()).to_literal())
+        .collect()
+}
+
+impl ParamStore {
+    /// Load initial parameters from the raw f32 file `aot.py` exported.
+    pub fn from_init_file(manifest: &Manifest) -> Result<ParamStore> {
+        let path = manifest.dir.join(&manifest.init_params_file);
+        Self::from_raw_file(manifest, &path)
+    }
+
+    pub fn from_raw_file(manifest: &Manifest, path: &Path) -> Result<ParamStore> {
+        let bytes = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        let expect = manifest.param_numel() * 4;
+        anyhow::ensure!(
+            bytes.len() == expect,
+            "param file {} is {} bytes, expected {}",
+            path.display(),
+            bytes.len(),
+            expect
+        );
+        let mut params = Vec::with_capacity(manifest.param_specs.len());
+        let mut offset = 0usize;
+        for (_, shape) in &manifest.param_specs {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = bytes[offset..offset + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            offset += n * 4;
+            params.push(Tensor::f32(shape.clone(), data).to_literal()?);
+        }
+        Ok(ParamStore {
+            specs: manifest.param_specs.clone(),
+            m: zeros_like(&manifest.param_specs)?,
+            v: zeros_like(&manifest.param_specs)?,
+            params,
+            step: 0,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Literals for a rollout/forward call: params only.
+    pub fn param_literals(&self) -> Vec<xla::Literal> {
+        self.params.clone()
+    }
+
+    /// Literals for a train/sft call: params ++ m ++ v (step appended by the
+    /// caller as a data arg).
+    pub fn opt_literals(&self) -> Vec<xla::Literal> {
+        let mut out = Vec::with_capacity(3 * self.n());
+        out.extend(self.params.iter().cloned());
+        out.extend(self.m.iter().cloned());
+        out.extend(self.v.iter().cloned());
+        out
+    }
+
+    /// Absorb the leading `3n+1` outputs of a train/sft step (new params, m,
+    /// v, step); returns the remaining stat tensors.
+    pub fn absorb_update(&mut self, outputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let n = self.n();
+        anyhow::ensure!(outputs.len() > 3 * n, "train outputs too short: {}", outputs.len());
+        let mut it = outputs.into_iter();
+        let mut new_params = Vec::with_capacity(n);
+        for _ in 0..n {
+            new_params.push(it.next().unwrap().to_literal()?);
+        }
+        let mut new_m = Vec::with_capacity(n);
+        for _ in 0..n {
+            new_m.push(it.next().unwrap().to_literal()?);
+        }
+        let mut new_v = Vec::with_capacity(n);
+        for _ in 0..n {
+            new_v.push(it.next().unwrap().to_literal()?);
+        }
+        let step_t = it.next().unwrap();
+        self.step = step_t.as_i32()?[0];
+        self.params = new_params;
+        self.m = new_m;
+        self.v = new_v;
+        Ok(it.collect())
+    }
+
+    /// Save a checkpoint: raw f32 params (+ optimizer state) and JSON meta.
+    pub fn save(&self, dir: &Path, tag: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let write_group = |name: &str, lits: &[xla::Literal]| -> Result<()> {
+            let mut bytes = Vec::new();
+            for lit in lits {
+                let t = Tensor::from_literal(lit)?;
+                for x in t.as_f32()? {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            std::fs::write(dir.join(format!("{tag}.{name}.bin")), bytes)?;
+            Ok(())
+        };
+        write_group("params", &self.params)?;
+        write_group("adam_m", &self.m)?;
+        write_group("adam_v", &self.v)?;
+        let meta = Json::obj(vec![
+            ("tag", Json::str(tag)),
+            ("step", Json::num(self.step as f64)),
+            ("num_tensors", Json::num(self.n() as f64)),
+        ]);
+        std::fs::write(dir.join(format!("{tag}.meta.json")), meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load a checkpoint previously written by [`ParamStore::save`].
+    pub fn load(&mut self, dir: &Path, tag: &str) -> Result<()> {
+        let read_group = |name: &str| -> Result<Vec<xla::Literal>> {
+            let bytes = std::fs::read(dir.join(format!("{tag}.{name}.bin")))?;
+            let mut lits = Vec::with_capacity(self.specs.len());
+            let mut offset = 0usize;
+            for (_, shape) in &self.specs {
+                let n: usize = shape.iter().product();
+                let data: Vec<f32> = bytes[offset..offset + n * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                offset += n * 4;
+                lits.push(Tensor::f32(shape.clone(), data).to_literal()?);
+            }
+            anyhow::ensure!(offset == bytes.len(), "checkpoint group {name} size mismatch");
+            Ok(lits)
+        };
+        self.params = read_group("params")?;
+        self.m = read_group("adam_m")?;
+        self.v = read_group("adam_v")?;
+        let meta = Json::parse_file(&dir.join(format!("{tag}.meta.json")))?;
+        self.step = meta.get("step").and_then(|x| x.as_i64()).unwrap_or(0) as i32;
+        Ok(())
+    }
+}

@@ -1,0 +1,154 @@
+//! Host-side tensors: the boundary type between L3 data structures and XLA
+//! literals. Only the three dtypes the artifact interface uses.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact argument/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DTypeKind {
+    F32,
+    I32,
+    U32,
+}
+
+/// A dense host tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Tensor {
+        assert_eq!(numel(&shape), data.len(), "shape/data mismatch");
+        Tensor::U32 { shape, data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = numel(&shape);
+        Tensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        numel(self.shape())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn kind(&self) -> DTypeKind {
+        match self {
+            Tensor::F32 { .. } => DTypeKind::F32,
+            Tensor::I32 { .. } => DTypeKind::I32,
+            Tensor::U32 { .. } => DTypeKind::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match self {
+            Tensor::U32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not u32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f64> {
+        anyhow::ensure!(self.len() == 1, "not a scalar: shape {:?}", self.shape());
+        Ok(match self {
+            Tensor::F32 { data, .. } => data[0] as f64,
+            Tensor::I32 { data, .. } => data[0] as f64,
+            Tensor::U32 { data, .. } => data[0] as f64,
+        })
+    }
+
+    /// Convert to an XLA literal (host copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims).context("reshape literal")?)
+    }
+
+    /// Read an XLA literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let t = match shape.ty() {
+            xla::ElementType::F32 => Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? },
+            xla::ElementType::S32 => Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? },
+            xla::ElementType::U32 => Tensor::U32 { shape: dims, data: lit.to_vec::<u32>()? },
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_consistency() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.kind(), DTypeKind::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn mismatched_lengths_panic() {
+        Tensor::i32(vec![2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn scalar_accessor() {
+        assert_eq!(Tensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert!(Tensor::zeros_f32(vec![2]).scalar().is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each binary declares its options up front so `--help` is generated.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for help text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0} (see --help)")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+}
+
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Cli {
+        Cli { program, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Cli {
+        self.specs.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Cli {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <value>", spec.name)
+            };
+            let default = spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("{head:<28} {}{default}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse; on `--help` prints help and exits.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let known = |name: &str| self.specs.iter().find(|s| s.name == name);
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                print!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = known(&name).ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.is_flag {
+                    args.flags.push(name);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    args.values.insert(name, value);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        raw.parse::<T>()
+            .map_err(|_| CliError::Invalid(name.to_string(), raw.to_string()))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get_parsed(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get_parsed(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get_parsed(name)
+    }
+
+    pub fn string(&self, name: &str) -> Result<String, CliError> {
+        self.get_parsed(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", Some("100"), "number of steps")
+            .opt("name", None, "run name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&["--name", "x"])).unwrap();
+        assert_eq!(a.usize("steps").unwrap(), 100);
+        assert_eq!(a.string("name").unwrap(), "x");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cli().parse(&argv(&["--steps=7", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.usize("steps").unwrap(), 7);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse(&argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&argv(&["--name"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_rejected() {
+        let a = cli().parse(&argv(&["--steps", "abc"])).unwrap();
+        assert!(a.usize("steps").is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Leveled stderr logger + CSV/JSONL file sinks (tracing is unavailable).
+//!
+//! The trainer writes one JSONL record per training step and per evaluation;
+//! benches write CSV curves that EXPERIMENTS.md references.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: Mutex<Option<Instant>> = Mutex::new(None);
+
+/// Set the global log level (from `--log-level` or `SPEED_RL_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_str(s: &str) -> Level {
+    match s.to_ascii_lowercase().as_str() {
+        "debug" => Level::Debug,
+        "warn" => Level::Warn,
+        "error" => Level::Error,
+        _ => Level::Info,
+    }
+}
+
+fn elapsed() -> f64 {
+    let mut start = START.lock().unwrap();
+    let t0 = start.get_or_insert_with(Instant::now);
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn log(level: Level, target: &str, msg: &str) {
+    if (level as u8) < LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{:9.3}s {tag} {target}] {msg}", elapsed());
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug_log {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target, &format!($($arg)*))
+    };
+}
+
+/// Append-only JSONL sink (one `Json` record per line).
+pub struct JsonlSink {
+    w: BufWriter<File>,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> anyhow::Result<JsonlSink> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(JsonlSink { w: BufWriter::new(File::create(path)?) })
+    }
+
+    pub fn write(&mut self, record: &Json) -> anyhow::Result<()> {
+        writeln!(self.w, "{record}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// CSV sink with a fixed header.
+pub struct CsvSink {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvSink {
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<CsvSink> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvSink { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.len() == self.cols, "csv row width mismatch");
+        let cells: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("speedrl_log_test_{}", std::process::id()));
+        let path = dir.join("x.jsonl");
+        let mut sink = JsonlSink::create(&path).unwrap();
+        sink.write(&Json::obj(vec![("step", Json::num(1)), ("acc", Json::num(0.5))])).unwrap();
+        sink.write(&Json::obj(vec![("step", Json::num(2)), ("acc", Json::num(0.6))])).unwrap();
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(Json::parse(lines[1]).unwrap().get("step").unwrap().as_i64(), Some(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_enforces_width() {
+        let dir = std::env::temp_dir().join(format!("speedrl_csv_test_{}", std::process::id()));
+        let path = dir.join("x.csv");
+        let mut sink = CsvSink::create(&path, &["a", "b"]).unwrap();
+        sink.row(&[1.0, 2.0]).unwrap();
+        assert!(sink.row(&[1.0]).is_err());
+        sink.flush().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained substrates (no tokio/serde/clap/criterion offline).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

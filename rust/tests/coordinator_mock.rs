@@ -1,0 +1,400 @@
+//! Coordinator invariants against a *scripted* policy: every curriculum is
+//! driven with a deterministic pass-rate oracle so routing, batching,
+//! accounting, and trainer behavior can be asserted exactly.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use speed_rl::coordinator::curriculum::{self, CurriculumKind};
+use speed_rl::coordinator::screening::ScreeningRule;
+use speed_rl::coordinator::trainer::{EvalSet, Trainer, TrainerConfig};
+use speed_rl::data::dataset::{Dataset, DatasetKind};
+use speed_rl::data::tasks::TaskInstance;
+use speed_rl::policy::{EvalResult, GenRequest, GenResult, Policy, TrainResult};
+use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
+use speed_rl::rl::update::{PromptGroup, Rollout};
+use speed_rl::util::proptest::check;
+use speed_rl::util::rng::Rng;
+
+/// A policy whose pass rates are a pure function of the task level, with a
+/// fully recorded call log.
+struct MockPolicy {
+    capacity: usize,
+    rng: Rng,
+    /// pass rate per difficulty level (index 1..=10)
+    level_p: [f64; 11],
+    /// log of (rows_used, n_requests) per call
+    call_log: Rc<RefCell<Vec<(usize, usize)>>>,
+    trained_groups: Rc<RefCell<Vec<Vec<(usize, usize)>>>>, // per step: (prompt_idx, n_rollouts)
+}
+
+impl MockPolicy {
+    fn new(seed: u64, level_p: [f64; 11]) -> MockPolicy {
+        MockPolicy {
+            capacity: 96,
+            rng: Rng::new(seed),
+            level_p,
+            call_log: Rc::new(RefCell::new(Vec::new())),
+            trained_groups: Rc::new(RefCell::new(Vec::new())),
+        }
+    }
+
+    fn p(&self, task: &TaskInstance) -> f64 {
+        self.level_p[task.level as usize]
+    }
+}
+
+impl Policy for MockPolicy {
+    fn generate(&mut self, requests: &[GenRequest], _temperature: f32) -> anyhow::Result<GenResult> {
+        let rows_used: usize = requests.iter().map(|r| r.n_samples).sum();
+        assert!(rows_used <= self.capacity, "capacity violated by coordinator");
+        self.call_log.borrow_mut().push((rows_used, requests.len()));
+        let groups = requests
+            .iter()
+            .map(|req| {
+                let p = self.p(&req.task);
+                (0..req.n_samples)
+                    .map(|_| Rollout {
+                        gen_tokens: vec![2],
+                        gen_logprobs: vec![-0.3],
+                        reward: if self.rng.bool(p) { 1.0 } else { 0.0 },
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(GenResult { groups, cost_s: 1.0, rows_used })
+    }
+
+    fn train(&mut self, groups: &[PromptGroup], _algo: &AlgoConfig) -> anyhow::Result<TrainResult> {
+        self.trained_groups
+            .borrow_mut()
+            .push(groups.iter().map(|g| (g.prompt_idx, g.rollouts.len())).collect());
+        Ok(TrainResult { loss: 0.0, grad_norm: 1.0, clip_frac: 0.0, cost_s: 0.5 })
+    }
+
+    fn evaluate(&mut self, _tasks: &[TaskInstance]) -> anyhow::Result<EvalResult> {
+        Ok(EvalResult { accuracy: 0.5, cost_s: 0.1 })
+    }
+
+    fn rollout_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn train_capacity(&self) -> usize {
+        self.capacity * 4
+    }
+
+    fn gen_len(&self) -> usize {
+        8
+    }
+
+    fn name(&self) -> &str {
+        "mock"
+    }
+}
+
+fn dataset() -> Dataset {
+    Dataset::training(DatasetKind::SynthDapo17k, 600, 5, 20)
+}
+
+/// level_p where levels 1-3 are trivial (p=1), 4-6 moderate, 7-10 hopeless.
+fn trimodal() -> [f64; 11] {
+    [0.0, 1.0, 1.0, 1.0, 0.5, 0.5, 0.5, 0.0, 0.0, 0.0, 0.0]
+}
+
+fn run_kind(kind: CurriculumKind, steps: usize, seed: u64) -> (MockPolicy, speed_rl::metrics::RunRecord) {
+    let mut policy = MockPolicy::new(seed, trimodal());
+    let rule = ScreeningRule::new(4, 8);
+    let mut cur = curriculum::make(kind, rule, 2);
+    let trainer = Trainer::new(
+        TrainerConfig {
+            batch_size: 4,
+            eval_every: 0,
+            max_steps: steps,
+            label: kind.name().to_string(),
+            seed,
+            ..Default::default()
+        },
+        AlgoConfig::new(BaseAlgo::Rloo),
+    );
+    let data = dataset();
+    let evals: Vec<EvalSet> = vec![];
+    let record = trainer.run(&mut policy, cur.as_mut(), &data, &evals).expect("run");
+    (policy, record)
+}
+
+#[test]
+fn speed_trains_only_on_moderate_prompts_with_full_n() {
+    let (policy, _) = run_kind(CurriculumKind::Speed, 8, 1);
+    let data = dataset();
+    let trained = policy.trained_groups.borrow();
+    assert_eq!(trained.len(), 8);
+    for step_groups in trained.iter() {
+        assert_eq!(step_groups.len(), 4, "batch size must be exact");
+        for (idx, n) in step_groups {
+            assert_eq!(*n, 12, "qualified prompts must carry N_init+N_cont rollouts");
+            let level = data.instances[*idx].level;
+            // With p=1.0 prompts all screening rollouts pass (rejected) and
+            // p=0 prompts all fail (rejected) => only moderate survive.
+            assert!((4..=6).contains(&level), "trained on level {level}");
+        }
+    }
+}
+
+#[test]
+fn uniform_trains_on_everything_sampled() {
+    let (policy, _) = run_kind(CurriculumKind::Uniform, 6, 2);
+    let trained = policy.trained_groups.borrow();
+    for step_groups in trained.iter() {
+        // DAPO-off baseline keeps uniform-reward groups too, minus the
+        // algo-level filter (Rloo keeps everything).
+        assert_eq!(step_groups.len(), 4);
+        for (_, n) in step_groups {
+            assert_eq!(*n, 12);
+        }
+    }
+    // exactly one inference call per step: 4 prompts x 12 rollouts = 48 rows
+    let calls = policy.call_log.borrow();
+    assert_eq!(calls.len(), 6);
+    assert!(calls.iter().all(|(rows, reqs)| *rows == 48 && *reqs == 4));
+}
+
+#[test]
+fn dapo_filter_rejects_uniform_groups_and_resamples() {
+    let (policy, rec) = run_kind(CurriculumKind::DapoFilter, 6, 3);
+    let data = dataset();
+    let trained = policy.trained_groups.borrow();
+    for step_groups in trained.iter() {
+        for (idx, _) in step_groups {
+            let level = data.instances[*idx].level;
+            assert!((4..=6).contains(&level), "DAPO trained on uniform group (level {level})");
+        }
+    }
+    // it must have screened more prompts than it kept
+    assert!(rec.counters.prompts_screened > rec.counters.prompts_accepted);
+    assert!(rec.counters.prompts_accepted >= 6 * 4 - 4); // close to B per step
+}
+
+#[test]
+fn naive_two_call_issues_more_calls_than_prefetched_speed() {
+    let (naive_policy, _) = run_kind(CurriculumKind::SpeedNaive, 8, 4);
+    let (speed_policy, _) = run_kind(CurriculumKind::Speed, 8, 4);
+    let naive_calls = naive_policy.call_log.borrow().len();
+    let speed_calls = speed_policy.call_log.borrow().len();
+    assert!(
+        naive_calls > speed_calls,
+        "pre-fetch batching must reduce engine invocations: naive {naive_calls} vs speed {speed_calls}"
+    );
+}
+
+#[test]
+fn speed_calls_stay_within_capacity_and_high_utilization() {
+    let (policy, _) = run_kind(CurriculumKind::Speed, 10, 5);
+    let calls = policy.call_log.borrow();
+    let total_rows: usize = calls.iter().map(|(r, _)| *r).sum();
+    let util = total_rows as f64 / (calls.len() * 96) as f64;
+    assert!(util > 0.85, "prefetch batcher utilization {util:.2} too low");
+}
+
+#[test]
+fn variance_max_trains_on_highest_variance_pool_members() {
+    let (policy, _) = run_kind(CurriculumKind::VarianceMax, 4, 6);
+    let data = dataset();
+    let trained = policy.trained_groups.borrow();
+    for step_groups in trained.iter() {
+        for (idx, _) in step_groups {
+            let level = data.instances[*idx].level;
+            assert!((4..=6).contains(&level), "variance-max picked level {level}");
+        }
+    }
+}
+
+#[test]
+fn trainer_time_accounting_sums_phases() {
+    let (_, rec) = run_kind(CurriculumKind::Speed, 5, 7);
+    let last = rec.steps.last().unwrap();
+    assert!((last.time_s - (last.inference_s + last.update_s)).abs() < 1e-9);
+    // mock costs: train contributes 0.5 per step
+    assert!((last.update_s - 0.5 * 5.0).abs() < 1e-9);
+    assert!(last.inference_s > 0.0);
+}
+
+#[test]
+fn trainer_is_deterministic_given_seed() {
+    let (_, a) = run_kind(CurriculumKind::Speed, 6, 9);
+    let (_, b) = run_kind(CurriculumKind::Speed, 6, 9);
+    let pa: Vec<usize> = a.steps.iter().map(|s| s.prompts_consumed).collect();
+    let pb: Vec<usize> = b.steps.iter().map(|s| s.prompts_consumed).collect();
+    assert_eq!(pa, pb);
+    assert_eq!(a.counters.rollouts, b.counters.rollouts);
+}
+
+#[test]
+fn property_speed_batches_exact_and_qualified() {
+    // Across random pass-rate landscapes, SPEED's trained batches are
+    // always exactly B groups of N rollouts whose screening slice was
+    // non-uniform.
+    check("speed-batch-property", 10, |rng| {
+        let mut level_p = [0.0f64; 11];
+        for l in 1..=10 {
+            level_p[l] = match rng.range_usize(0, 2) {
+                0 => 0.0,
+                1 => 1.0,
+                _ => 0.2 + 0.6 * rng.f64(),
+            };
+        }
+        // ensure at least one moderate level exists
+        level_p[5] = 0.5;
+        let mut policy = MockPolicy::new(rng.next_u64(), level_p);
+        let rule = ScreeningRule::new(4, 8);
+        let mut cur = curriculum::make(CurriculumKind::Speed, rule, 2);
+        let trainer = Trainer::new(
+            TrainerConfig {
+                batch_size: 3,
+                eval_every: 0,
+                max_steps: 4,
+                label: "prop".into(),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+            AlgoConfig::new(BaseAlgo::Rloo),
+        );
+        let data = dataset();
+        trainer.run(&mut policy, cur.as_mut(), &data, &[]).map_err(|e| e.to_string())?;
+        let trained = policy.trained_groups.borrow();
+        for step_groups in trained.iter() {
+            if step_groups.len() != 3 {
+                return Err(format!("batch size {}", step_groups.len()));
+            }
+            for (_, n) in step_groups {
+                if *n != 12 {
+                    return Err(format!("rollouts {n}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prompts_consumed_monotone_and_counted() {
+    let (_, rec) = run_kind(CurriculumKind::Speed, 6, 11);
+    let mut prev = 0;
+    for s in &rec.steps {
+        assert!(s.prompts_consumed >= prev);
+        prev = s.prompts_consumed;
+    }
+    assert!(prev > 0);
+}
+
+#[test]
+fn mock_policy_histogram_sanity() {
+    // The mock's trimodal landscape yields the expected screening split.
+    let mut hist: HashMap<&'static str, usize> = HashMap::new();
+    let data = dataset();
+    for t in &data.instances {
+        let bucket = match t.level {
+            1..=3 => "easy",
+            4..=6 => "mid",
+            _ => "hard",
+        };
+        *hist.entry(bucket).or_default() += 1;
+    }
+    assert!(hist["mid"] > 50);
+    assert!(hist["easy"] > 20);
+    assert!(hist["hard"] > 50);
+}
+
+#[test]
+fn trainer_stops_at_target() {
+    // A policy that always evaluates at 0.9 must trip a 0.8 target at the
+    // first evaluation after a step.
+    struct Always09(MockPolicy);
+    impl Policy for Always09 {
+        fn generate(&mut self, r: &[GenRequest], t: f32) -> anyhow::Result<GenResult> {
+            self.0.generate(r, t)
+        }
+        fn train(&mut self, g: &[PromptGroup], a: &AlgoConfig) -> anyhow::Result<TrainResult> {
+            self.0.train(g, a)
+        }
+        fn evaluate(&mut self, _t: &[TaskInstance]) -> anyhow::Result<EvalResult> {
+            Ok(EvalResult { accuracy: 0.9, cost_s: 0.0 })
+        }
+        fn rollout_capacity(&self) -> usize {
+            self.0.rollout_capacity()
+        }
+        fn train_capacity(&self) -> usize {
+            self.0.train_capacity()
+        }
+        fn gen_len(&self) -> usize {
+            self.0.gen_len()
+        }
+        fn name(&self) -> &str {
+            "always09"
+        }
+    }
+    let mut policy = Always09(MockPolicy::new(1, trimodal()));
+    let rule = ScreeningRule::new(4, 8);
+    let mut cur = curriculum::make(CurriculumKind::Speed, rule, 2);
+    let trainer = Trainer::new(
+        TrainerConfig {
+            batch_size: 2,
+            eval_every: 1,
+            max_steps: 50,
+            stop_at_target: Some(("bench".to_string(), 0.8)),
+            label: "stop".into(),
+            ..Default::default()
+        },
+        AlgoConfig::new(BaseAlgo::Rloo),
+    );
+    let data = dataset();
+    let evals = vec![EvalSet { name: "bench".into(), tasks: data.instances[..4].to_vec() }];
+    let rec = trainer.run(&mut policy, cur.as_mut(), &data, &evals).unwrap();
+    assert_eq!(rec.steps.len(), 1, "must stop after the first evaluated step");
+}
+
+#[test]
+fn trainer_respects_time_budget() {
+    let mut policy = MockPolicy::new(2, trimodal());
+    let rule = ScreeningRule::new(4, 8);
+    let mut cur = curriculum::make(CurriculumKind::Uniform, rule, 2);
+    let trainer = Trainer::new(
+        TrainerConfig {
+            batch_size: 2,
+            eval_every: 0,
+            max_steps: 1000,
+            max_seconds: 5.0, // each mock step costs 1.0 (gen) + 0.5 (train)
+            label: "budget".into(),
+            ..Default::default()
+        },
+        AlgoConfig::new(BaseAlgo::Rloo),
+    );
+    let data = dataset();
+    let rec = trainer.run(&mut policy, cur.as_mut(), &data, &[]).unwrap();
+    assert!(rec.steps.len() < 1000);
+    let last = rec.steps.last().unwrap();
+    assert!(last.time_s >= 5.0 && last.time_s < 8.0, "time {}", last.time_s);
+}
+
+#[test]
+fn reinforce_baseline_algorithms_run_through_trainer() {
+    for algo in [BaseAlgo::Grpo, BaseAlgo::Reinforce, BaseAlgo::ReinforcePlusPlus] {
+        let mut policy = MockPolicy::new(3, trimodal());
+        let rule = ScreeningRule::new(4, 8);
+        let mut cur = curriculum::make(CurriculumKind::Uniform, rule, 2);
+        let trainer = Trainer::new(
+            TrainerConfig {
+                batch_size: 2,
+                eval_every: 0,
+                max_steps: 3,
+                label: algo.name().into(),
+                ..Default::default()
+            },
+            AlgoConfig::new(algo),
+        );
+        let data = dataset();
+        let rec = trainer.run(&mut policy, cur.as_mut(), &data, &[]).unwrap();
+        assert_eq!(rec.steps.len(), 3, "{} failed", algo.name());
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration test: the Rust runtime must reproduce the Python-side golden
+//! fixtures bit-for-bit (tokens) / within fp tolerance (logits) when
+//! executing the AOT artifacts through PJRT.
+//!
+//! Requires `make artifacts` (skipped with a notice when absent, so `cargo
+//! test` works on a fresh checkout).
+
+use std::path::PathBuf;
+
+use speed_rl::runtime::{ParamStore, Runtime, Tensor};
+use speed_rl::util::json::Json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+struct Golden {
+    runtime: Runtime,
+    store: ParamStore,
+    golden: Json,
+}
+
+fn setup() -> Option<Golden> {
+    let dir = artifacts_dir()?;
+    let runtime = Runtime::load(&dir).expect("load runtime");
+    let store = ParamStore::from_init_file(&runtime.manifest).expect("init params");
+    let golden = Json::parse_file(&dir.join("golden.json")).expect("golden.json");
+    Some(Golden { runtime, store, golden })
+}
+
+#[test]
+fn forward_logits_match_python() {
+    let Some(g) = setup() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let exe = g.runtime.executable_by_prefix("forward").expect("forward artifact");
+    let fwd = g.golden.get("forward").unwrap();
+    let tok_shape = fwd.get("tokens_shape").unwrap().as_usize_vec().unwrap();
+    let tokens = Tensor::i32(tok_shape, fwd.get("tokens").unwrap().as_i32_vec().unwrap());
+    let out = exe
+        .run_state_and_data(&g.store.param_literals(), &[tokens])
+        .expect("execute forward");
+    let logits = out[0].as_f32().unwrap();
+
+    // row 0 exact-ish comparison
+    let expect_row0 = fwd.get("logits_row0").unwrap().as_f64_vec().unwrap();
+    let vocab = expect_row0.len();
+    for (i, &e) in expect_row0.iter().enumerate() {
+        let got = logits[i] as f64;
+        assert!(
+            (got - e).abs() < 1e-4 * e.abs().max(1.0),
+            "logits[0,0,{i}]: got {got}, python {e}"
+        );
+    }
+    // aggregate check over the whole tensor
+    let expect_sum = fwd.get("logits_sum_abs").unwrap().as_f64().unwrap();
+    let got_sum: f64 = logits.iter().map(|x| x.abs() as f64).sum();
+    let rel = (got_sum - expect_sum).abs() / expect_sum;
+    assert!(rel < 1e-4, "sum|logits| rel err {rel}: got {got_sum}, python {expect_sum}");
+    let _ = vocab;
+}
+
+#[test]
+fn rollout_tokens_match_python_greedy_and_sampled() {
+    let Some(g) = setup() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let name = g
+        .runtime
+        .manifest
+        .rollout_artifact_for(g.runtime.manifest.plan.rollout_rows)
+        .expect("rollout artifact")
+        .name
+        .clone();
+    let exe = g.runtime.executable(&name).expect("compile rollout");
+    let plan = &g.runtime.manifest.plan;
+    let ro = g.golden.get("rollout").unwrap();
+    let prompts = Tensor::i32(
+        vec![plan.rollout_rows, plan.prompt_len],
+        ro.get("prompt_tokens").unwrap().as_i32_vec().unwrap(),
+    );
+    let lens = Tensor::i32(
+        vec![plan.rollout_rows],
+        ro.get("prompt_lens").unwrap().as_i32_vec().unwrap(),
+    );
+    let rng_vals: Vec<u32> = ro
+        .get("rng")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as u32)
+        .collect();
+    let rng = Tensor::u32(vec![2], rng_vals);
+
+    // greedy (temperature 0): bitwise-equal tokens
+    let out = exe
+        .run_state_and_data(
+            &g.store.param_literals(),
+            &[prompts.clone(), lens.clone(), rng.clone(), Tensor::scalar_f32(0.0)],
+        )
+        .expect("execute rollout greedy");
+    let got = out[0].as_i32().unwrap();
+    let expect = ro.get("greedy_tokens").unwrap().as_i32_vec().unwrap();
+    assert_eq!(got, expect.as_slice(), "greedy tokens diverge from python");
+
+    // temperature 1 with the same threefry key: bitwise-equal sampled tokens
+    let out = exe
+        .run_state_and_data(
+            &g.store.param_literals(),
+            &[prompts, lens, rng, Tensor::scalar_f32(1.0)],
+        )
+        .expect("execute rollout t=1");
+    let got = out[0].as_i32().unwrap();
+    let expect = ro.get("temp1_tokens").unwrap().as_i32_vec().unwrap();
+    assert_eq!(got, expect.as_slice(), "sampled tokens diverge from python");
+    let lp_sum: f64 = out[1].as_f32().unwrap().iter().map(|&x| x as f64).sum();
+    let expect_lp = ro.get("temp1_logprob_sum").unwrap().as_f64().unwrap();
+    assert!(
+        (lp_sum - expect_lp).abs() < 1e-2 * expect_lp.abs().max(1.0),
+        "logprob sum: got {lp_sum}, python {expect_lp}"
+    );
+}
+
+#[test]
+fn sft_step_roundtrip_updates_state() {
+    let Some(mut g) = setup() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let exe = g.runtime.executable_by_prefix("sft").expect("sft artifact");
+    let rows = g.runtime.manifest.plan.sft_rows;
+    let t = g.runtime.manifest.plan.prompt_len + g.runtime.manifest.plan.gen_len;
+
+    // Trivial batch: predict EOS after BOS everywhere.
+    let mut toks = vec![0i32; rows * t];
+    let mut mask = vec![0f32; rows * t];
+    for r in 0..rows {
+        toks[r * t] = 1; // BOS
+        toks[r * t + 1] = 2; // EOS
+        mask[r * t + 1] = 1.0;
+    }
+    let data = [
+        Tensor::scalar_i32(g.store.step),
+        Tensor::i32(vec![rows, t], toks),
+        Tensor::f32(vec![rows, t], mask),
+        Tensor::scalar_f32(1e-3),
+        Tensor::scalar_f32(0.0),
+        Tensor::scalar_f32(1.0),
+    ];
+    let out = exe
+        .run_state_and_data(&g.store.opt_literals(), &data)
+        .expect("execute sft");
+    let stats = g.store.absorb_update(out).expect("absorb");
+    let loss0 = stats[0].scalar().unwrap();
+    assert!(loss0 > 0.0 && loss0.is_finite());
+    assert_eq!(g.store.step, 1);
+
+    // A second identical step must reduce the loss.
+    let data = [
+        Tensor::scalar_i32(g.store.step),
+        data[1].clone(),
+        data[2].clone(),
+        Tensor::scalar_f32(1e-3),
+        Tensor::scalar_f32(0.0),
+        Tensor::scalar_f32(1.0),
+    ];
+    let out = exe.run_state_and_data(&g.store.opt_literals(), &data).expect("sft 2");
+    let stats = g.store.absorb_update(out).expect("absorb 2");
+    let loss1 = stats[0].scalar().unwrap();
+    assert!(loss1 < loss0, "loss did not decrease: {loss0} -> {loss1}");
+}
+
+#[test]
+fn checkpoint_save_load_roundtrip() {
+    let Some(g) = setup() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let dir = std::env::temp_dir().join(format!("speedrl_ckpt_{}", std::process::id()));
+    g.store.save(&dir, "t0").expect("save");
+    let mut store2 = ParamStore::from_init_file(&g.runtime.manifest).expect("params");
+    store2.load(&dir, "t0").expect("load");
+    assert_eq!(store2.step, g.store.step);
+    for (a, b) in g.store.params.iter().zip(&store2.params) {
+        let ta = Tensor::from_literal(a).unwrap();
+        let tb = Tensor::from_literal(b).unwrap();
+        assert_eq!(ta, tb);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
