@@ -163,4 +163,93 @@ fn main() {
             std::hint::black_box(speed_rl::driver::run_sim(&cfg).unwrap());
         });
     }
+
+    // --- serial vs pipelined coordinator (real wall-clock, SimPolicy) ---
+    //
+    // The pipelined trainer overlaps rollout collection (K workers) with
+    // the learner's updates; on the simulator the collection CPU work
+    // dominates, so steps/sec should scale with workers until the learner
+    // or the shared loader becomes the bottleneck. Reported per worker
+    // count: steps/sec, speedup over serial, and rollout-engine utilization
+    // (engine-busy seconds / (wall seconds * workers)).
+    {
+        use speed_rl::coordinator::curriculum::{self, CurriculumKind, CurriculumSpec};
+        use speed_rl::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
+        use speed_rl::coordinator::trainer::{Trainer, TrainerConfig};
+        use speed_rl::metrics::RunRecord;
+        use speed_rl::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
+        use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
+
+        let steps = 60usize;
+        let batch = 32usize;
+        let rule = ScreeningRule::new(8, 16);
+        let dataset = Dataset::training(DatasetKind::SynthDapo17k, 16_000, 1, 20);
+        let mk_policy = || {
+            SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 7).with_shapes(
+                batch * rule.n_total(),
+                batch * rule.n_total(),
+                512,
+            )
+        };
+        let tcfg = |label: &str| TrainerConfig {
+            batch_size: batch,
+            eval_every: 0,
+            max_steps: steps,
+            label: label.to_string(),
+            seed: 7,
+            ..Default::default()
+        };
+        let spec = CurriculumSpec {
+            kind: CurriculumKind::Speed,
+            rule,
+            pool_factor: 4,
+            buffer_cap: usize::MAX,
+        };
+
+        let run_serial = || -> (f64, RunRecord) {
+            let mut policy = mk_policy();
+            let mut cur = curriculum::make(CurriculumKind::Speed, rule, 4);
+            let trainer = Trainer::new(tcfg("serial"), AlgoConfig::new(BaseAlgo::Rloo));
+            let t0 = std::time::Instant::now();
+            let rec = trainer.run(&mut policy, cur.as_mut(), &dataset, &[]).unwrap();
+            (t0.elapsed().as_secs_f64(), rec)
+        };
+        let run_pipelined = |workers: usize| -> (f64, RunRecord) {
+            let mut policy = mk_policy();
+            let trainer = PipelinedTrainer::new(
+                tcfg("pipelined"),
+                AlgoConfig::new(BaseAlgo::Rloo),
+                PipelineConfig { workers, enabled: true, buffer_cap: 4 * batch },
+            );
+            let t0 = std::time::Instant::now();
+            let rec = trainer.run(&mut policy, spec, &dataset, &[]).unwrap();
+            (t0.elapsed().as_secs_f64(), rec)
+        };
+
+        let _ = run_serial(); // warmup
+        let serial_best = (0..3).map(|_| run_serial().0).fold(f64::INFINITY, f64::min);
+        println!(
+            "coordinator serial        : {:7.1} steps/s",
+            steps as f64 / serial_best
+        );
+        for workers in [1usize, 2, 4, 8] {
+            let _ = run_pipelined(workers); // warmup
+            let mut best = f64::INFINITY;
+            let mut util_of_best = 0.0;
+            for _ in 0..3 {
+                let (secs, rec) = run_pipelined(workers);
+                std::hint::black_box(&rec);
+                if secs < best {
+                    best = secs;
+                    util_of_best = rec.counters.busy_s / (secs * workers as f64);
+                }
+            }
+            println!(
+                "coordinator pipelined K={workers}: {:7.1} steps/s ({:.2}x serial, engine util {:.0}%)",
+                steps as f64 / best,
+                serial_best / best,
+                100.0 * util_of_best
+            );
+        }
+    }
 }

@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use speed_rl::bench::BenchRunner;
 use speed_rl::data::dataset::{Dataset, DatasetKind};
 use speed_rl::policy::real::RealPolicy;
-use speed_rl::policy::{GenRequest, Policy};
+use speed_rl::policy::{GenRequest, RolloutEngine, Trainable};
 use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
 use speed_rl::rl::update::PromptGroup;
 use speed_rl::runtime::Tensor;

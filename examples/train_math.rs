@@ -22,7 +22,7 @@ use speed_rl::coordinator::trainer::EvalSet;
 use speed_rl::data::dataset::{Dataset, DatasetKind, EvalBenchmark};
 use speed_rl::driver;
 use speed_rl::policy::real::RealPolicy;
-use speed_rl::policy::Policy;
+use speed_rl::policy::RolloutEngine;
 use speed_rl::rl::algo::BaseAlgo;
 use speed_rl::util::rng::Rng;
 
@@ -126,6 +126,11 @@ fn main() -> anyhow::Result<()> {
         cfg.eval_every = 5;
         cfg.label = label.to_string();
         cfg.seed = 2;
+        // The real substrate has a single compiled PJRT engine, so the
+        // producer/consumer pipeline stays off here; `speed-rl simulate
+        // --pipeline --workers K` exercises it on the simulator.
+        cfg.workers = 1;
+        cfg.pipeline = false;
 
         let mut policy = RealPolicy::load(&artifacts, cfg.seed)?;
         policy.store.load(Path::new("runs/ckpt"), "warm")?;

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification (referenced from ROADMAP.md): build, tests, format,
+# lints. Run from anywhere; operates on the repository root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy -- -D warnings
+
+echo "ci: all green"

@@ -46,6 +46,15 @@ pub struct RunConfig {
     pub seed: u64,
     /// VarianceMax pool factor.
     pub pool_factor: usize,
+    /// Rollout workers K for the pipelined coordinator.
+    pub workers: usize,
+    /// Overlap inference with updates (sim substrate only; off = the
+    /// serial reference trainer).
+    pub pipeline: bool,
+    /// Sampling-buffer capacity in groups. 0 = auto: unbounded for the
+    /// serial SPEED buffer (the reference semantics), `4 * batch_size` for
+    /// the pipelined shared buffer (backpressure bounds staleness).
+    pub buffer_cap: usize,
 }
 
 impl Default for RunConfig {
@@ -70,6 +79,9 @@ impl Default for RunConfig {
             max_seconds: f64::INFINITY,
             seed: 0,
             pool_factor: 4,
+            workers: 1,
+            pipeline: false,
+            buffer_cap: 0,
         }
     }
 }
@@ -128,6 +140,9 @@ impl RunConfig {
             ("max_seconds", Json::num(self.max_seconds)),
             ("seed", Json::num(self.seed as f64)),
             ("pool_factor", Json::num(self.pool_factor as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("pipeline", Json::Bool(self.pipeline)),
+            ("buffer_cap", Json::num(self.buffer_cap as f64)),
         ])
     }
 
@@ -178,6 +193,11 @@ impl RunConfig {
         num_field!("max_seconds", max_seconds, f64);
         num_field!("seed", seed, u64);
         num_field!("pool_factor", pool_factor, usize);
+        num_field!("workers", workers, usize);
+        num_field!("buffer_cap", buffer_cap, usize);
+        if let Some(v) = j.get("pipeline").and_then(|x| x.as_bool()) {
+            cfg.pipeline = v;
+        }
         Ok(cfg)
     }
 
@@ -204,12 +224,18 @@ mod tests {
         cfg.label = "x".into();
         cfg.n_init = 4;
         cfg.max_seconds = 100.0;
+        cfg.workers = 4;
+        cfg.pipeline = true;
+        cfg.buffer_cap = 48;
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.label, "x");
         assert_eq!(back.n_init, 4);
         assert_eq!(back.n_total(), 4 + cfg.n_cont);
         assert_eq!(back.max_seconds, 100.0);
         assert_eq!(back.curriculum, cfg.curriculum);
+        assert_eq!(back.workers, 4);
+        assert!(back.pipeline);
+        assert_eq!(back.buffer_cap, 48);
     }
 
     #[test]

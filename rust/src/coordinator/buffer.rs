@@ -4,10 +4,21 @@
 //! live pass-rate distribution; the buffer absorbs the surplus so every
 //! training step sees exactly `B` groups, at the price of a bounded amount
 //! of off-policy staleness (tracked per group for diagnostics).
+//!
+//! Two flavors live here:
+//!
+//! * [`SamplingBuffer`] — the single-owner deque used by the serial SPEED
+//!   curriculum, bounded by `max_len` with oldest-first eviction.
+//! * [`SharedBuffer`]   — the `Mutex` + `Condvar` bounded queue between the
+//!   pipelined coordinator's K rollout workers (producers) and the learner
+//!   (consumer). Backpressure, not eviction: a full buffer blocks workers,
+//!   which is what bounds staleness when inference outruns updates.
 
 use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
 
 use crate::rl::update::PromptGroup;
+use crate::warn_log;
 
 /// A completed group waiting for a training slot.
 #[derive(Clone, Debug)]
@@ -17,13 +28,28 @@ struct Buffered {
     born_step: usize,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct SamplingBuffer {
     q: VecDeque<Buffered>,
+    /// Capacity in groups; pushing past it evicts the oldest entry.
+    max_len: usize,
     /// Sum over consumed groups of (train_step - born_step); staleness
     /// diagnostic for the off-policy trade-off discussed in §4.3.
     staleness_sum: u64,
     consumed: u64,
+    evicted: u64,
+}
+
+impl Default for SamplingBuffer {
+    fn default() -> Self {
+        SamplingBuffer {
+            q: VecDeque::new(),
+            max_len: usize::MAX,
+            staleness_sum: 0,
+            consumed: 0,
+            evicted: 0,
+        }
+    }
 }
 
 impl SamplingBuffer {
@@ -31,7 +57,27 @@ impl SamplingBuffer {
         SamplingBuffer::default()
     }
 
+    /// Bound the buffer to `max_len` groups (oldest-first eviction).
+    pub fn with_max_len(mut self, max_len: usize) -> SamplingBuffer {
+        self.max_len = max_len.max(1);
+        self
+    }
+
     pub fn push(&mut self, group: PromptGroup, born_step: usize) {
+        if self.q.len() >= self.max_len {
+            // Oldest-first eviction: the stalest group is the least
+            // on-policy, so it is the right one to drop.
+            let dropped = self.q.pop_front().expect("max_len >= 1");
+            self.evicted += 1;
+            warn_log!(
+                "buffer",
+                "evicted prompt {} born at step {} (cap {} reached; {} evictions total)",
+                dropped.group.prompt_idx,
+                dropped.born_step,
+                self.max_len,
+                self.evicted
+            );
+        }
         self.q.push_back(Buffered { group, born_step });
     }
 
@@ -41,6 +87,11 @@ impl SamplingBuffer {
 
     pub fn is_empty(&self) -> bool {
         self.q.is_empty()
+    }
+
+    /// Groups dropped by the eviction policy so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
     }
 
     /// Pop exactly `b` groups (FIFO: oldest first, bounding staleness).
@@ -66,6 +117,168 @@ impl SamplingBuffer {
             0.0
         } else {
             self.staleness_sum as f64 / self.consumed as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SharedBuffer: the producer/consumer queue of the pipelined coordinator
+// ---------------------------------------------------------------------------
+
+/// A group in flight between rollout workers and the learner.
+#[derive(Clone, Debug)]
+struct SharedEntry {
+    group: PromptGroup,
+    /// Learner step at which the producing worker started collecting.
+    born_step: usize,
+    /// Parameter version the producing engine served.
+    born_version: u64,
+}
+
+#[derive(Debug, Default)]
+struct SharedState {
+    q: VecDeque<SharedEntry>,
+    closed: bool,
+    pushed: u64,
+    popped: u64,
+    staleness_sum: u64,
+    version_lag_sum: u64,
+    /// Optional production cap: once `pushed` reaches it, further pushes
+    /// are refused so workers wind down instead of over-producing.
+    demand: u64,
+}
+
+/// Cumulative [`SharedBuffer`] accounting (conservation + staleness).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SharedBufferStats {
+    pub pushed: u64,
+    pub popped: u64,
+    pub len: usize,
+    pub mean_staleness: f64,
+    pub mean_version_lag: f64,
+}
+
+/// Bounded `Mutex`+`Condvar` queue of completed prompt groups: K rollout
+/// workers push, the learner pops exactly-`B` batches. A full buffer blocks
+/// producers (backpressure bounds off-policy staleness); `close` wakes
+/// everyone for shutdown.
+#[derive(Debug)]
+pub struct SharedBuffer {
+    state: Mutex<SharedState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl SharedBuffer {
+    /// `cap` is the capacity in groups (clamped to >= 1).
+    pub fn new(cap: usize) -> SharedBuffer {
+        SharedBuffer {
+            state: Mutex::new(SharedState { demand: u64::MAX, ..Default::default() }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Cap total production at `total` groups (e.g. `max_steps * B` when no
+    /// early-stop conditions are active) so workers don't run inference the
+    /// learner will never consume.
+    pub fn set_demand(&self, total: u64) {
+        self.state.lock().unwrap().demand = total;
+    }
+
+    /// Groups still wanted by the learner (`u64::MAX` when uncapped).
+    pub fn remaining_demand(&self) -> u64 {
+        let g = self.state.lock().unwrap();
+        g.demand.saturating_sub(g.pushed)
+    }
+
+    /// Blocking push; returns false when the buffer is closed or demand is
+    /// exhausted (the producer should wind down).
+    pub fn push(&self, group: PromptGroup, born_step: usize, born_version: u64) -> bool {
+        let mut g = self.state.lock().unwrap();
+        while g.q.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed || g.pushed >= g.demand {
+            return false;
+        }
+        g.q.push_back(SharedEntry { group, born_step, born_version });
+        g.pushed += 1;
+        self.not_empty.notify_all();
+        true
+    }
+
+    /// Blocking pop of exactly `b` groups; `train_step`/`version` are the
+    /// learner's current step and weight version (for staleness stats).
+    /// Returns None when the buffer is closed with fewer than `b` left.
+    pub fn pop_batch(
+        &self,
+        b: usize,
+        train_step: usize,
+        version: u64,
+    ) -> Option<Vec<PromptGroup>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.q.len() >= b {
+                let mut out = Vec::with_capacity(b);
+                for _ in 0..b {
+                    let item = g.q.pop_front().unwrap();
+                    g.staleness_sum += train_step.saturating_sub(item.born_step) as u64;
+                    g.version_lag_sum += version.saturating_sub(item.born_version);
+                    g.popped += 1;
+                    out.push(item.group);
+                }
+                self.not_full.notify_all();
+                return Some(out);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Wake all producers and consumers; pending pushes fail, pending pops
+    /// drain what fits and then return None.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mean steps-in-buffer over all popped groups.
+    pub fn mean_staleness(&self) -> f64 {
+        let g = self.state.lock().unwrap();
+        if g.popped == 0 {
+            0.0
+        } else {
+            g.staleness_sum as f64 / g.popped as f64
+        }
+    }
+
+    pub fn stats(&self) -> SharedBufferStats {
+        let g = self.state.lock().unwrap();
+        let denom = g.popped.max(1) as f64;
+        SharedBufferStats {
+            pushed: g.pushed,
+            popped: g.popped,
+            len: g.q.len(),
+            mean_staleness: if g.popped == 0 { 0.0 } else { g.staleness_sum as f64 / denom },
+            mean_version_lag: if g.popped == 0 { 0.0 } else { g.version_lag_sum as f64 / denom },
         }
     }
 }
@@ -115,10 +328,29 @@ mod tests {
     }
 
     #[test]
+    fn bounded_buffer_evicts_oldest_first() {
+        let mut buf = SamplingBuffer::new().with_max_len(3);
+        for i in 0..5 {
+            buf.push(group(i), i);
+        }
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf.evicted(), 2);
+        let batch = buf.take_batch(3, 5).unwrap();
+        let idxs: Vec<usize> = batch.iter().map(|g| g.prompt_idx).collect();
+        assert_eq!(idxs, vec![2, 3, 4]); // 0 and 1 were evicted
+    }
+
+    #[test]
     fn conservation_property() {
-        // pushes == pops + remaining, across random interleavings
+        // pushes == pops + remaining + evicted, across random interleavings
+        // and random capacity bounds
         check("buffer-conservation", 50, |rng| {
-            let mut buf = SamplingBuffer::new();
+            let bounded = rng.bool(0.5);
+            let mut buf = if bounded {
+                SamplingBuffer::new().with_max_len(rng.range_usize(1, 8))
+            } else {
+                SamplingBuffer::new()
+            };
             let mut pushed = 0usize;
             let mut popped = 0usize;
             for step in 0..rng.range_usize(5, 40) {
@@ -134,8 +366,57 @@ mod tests {
                     }
                 }
             }
-            prop_assert!(pushed == popped + buf.len(), "conservation violated");
+            prop_assert!(
+                pushed == popped + buf.len() + buf.evicted() as usize,
+                "conservation violated"
+            );
             Ok(())
         });
+    }
+
+    #[test]
+    fn shared_buffer_push_pop_and_close() {
+        let buf = SharedBuffer::new(8);
+        assert!(buf.push(group(0), 0, 0));
+        assert!(buf.push(group(1), 1, 1));
+        let batch = buf.pop_batch(2, 3, 2).unwrap();
+        assert_eq!(batch.len(), 2);
+        let stats = buf.stats();
+        assert_eq!(stats.pushed, 2);
+        assert_eq!(stats.popped, 2);
+        // staleness (3-0) + (3-1) = 5 over 2 pops; version lag (2-0)+(2-1)
+        assert!((stats.mean_staleness - 2.5).abs() < 1e-12);
+        assert!((stats.mean_version_lag - 1.5).abs() < 1e-12);
+        buf.close();
+        assert!(!buf.push(group(2), 0, 0));
+        assert!(buf.pop_batch(1, 0, 0).is_none());
+    }
+
+    #[test]
+    fn shared_buffer_demand_cap_stops_producers() {
+        let buf = SharedBuffer::new(8);
+        buf.set_demand(2);
+        assert!(buf.push(group(0), 0, 0));
+        assert!(buf.push(group(1), 0, 0));
+        assert_eq!(buf.remaining_demand(), 0);
+        assert!(!buf.push(group(2), 0, 0));
+        assert_eq!(buf.stats().pushed, 2);
+    }
+
+    #[test]
+    fn shared_buffer_backpressure_blocks_until_pop() {
+        use std::sync::Arc;
+        let buf = Arc::new(SharedBuffer::new(1));
+        assert!(buf.push(group(0), 0, 0));
+        let producer = {
+            let buf = Arc::clone(&buf);
+            std::thread::spawn(move || buf.push(group(1), 0, 0))
+        };
+        // The producer must be blocked on the full buffer; free one slot.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let batch = buf.pop_batch(1, 0, 0).unwrap();
+        assert_eq!(batch[0].prompt_idx, 0);
+        assert!(producer.join().unwrap());
+        assert_eq!(buf.len(), 1);
     }
 }

@@ -18,11 +18,10 @@ use anyhow::Result;
 use crate::coordinator::batcher::{plan_call, Purpose};
 use crate::coordinator::buffer::SamplingBuffer;
 use crate::coordinator::screening::ScreeningRule;
-use crate::data::dataset::Dataset;
-use crate::data::loader::Loader;
+use crate::data::loader::PromptSource;
 use crate::data::tasks::TaskInstance;
 use crate::metrics::InferenceCounters;
-use crate::policy::{GenRequest, Policy};
+use crate::policy::{GenRequest, RolloutEngine};
 use crate::rl::update::PromptGroup;
 
 /// Strategy selector (CLI / config name).
@@ -59,11 +58,12 @@ impl CurriculumKind {
     }
 }
 
-/// Everything a curriculum needs to drive one batch collection.
+/// Everything a curriculum needs to drive one batch collection. Holds only
+/// the *inference* half of the policy, so the same curricula run unchanged
+/// inside the serial trainer and inside pipelined rollout workers.
 pub struct StepContext<'a> {
-    pub policy: &'a mut dyn Policy,
-    pub dataset: &'a Dataset,
-    pub loader: &'a mut Loader,
+    pub engine: &'a mut dyn RolloutEngine,
+    pub prompts: &'a mut dyn PromptSource,
     pub train_step: usize,
     pub temperature: f32,
     pub counters: &'a mut InferenceCounters,
@@ -71,16 +71,15 @@ pub struct StepContext<'a> {
 
 impl<'a> StepContext<'a> {
     pub(crate) fn next_prompt(&mut self) -> (usize, TaskInstance) {
-        let idx = self.loader.next_index();
-        (idx, self.dataset.instances[idx].clone())
+        self.prompts.next_prompt()
     }
 
     /// Execute one batched generation call and account for it.
     pub(crate) fn run_call(&mut self, requests: &[GenRequest]) -> Result<crate::policy::GenResult> {
-        let res = self.policy.generate(requests, self.temperature)?;
+        let res = self.engine.generate(requests, self.temperature)?;
         self.counters.calls += 1;
         self.counters.rows_used += res.rows_used as u64;
-        self.counters.rows_capacity += self.policy.rollout_capacity() as u64;
+        self.counters.rows_capacity += self.engine.rollout_capacity() as u64;
         self.counters.cost_s += res.cost_s;
         self.counters.rollouts += res.groups.iter().map(|g| g.len() as u64).sum::<u64>();
         Ok(res)
@@ -101,15 +100,49 @@ pub trait Curriculum {
     fn buffered(&self) -> usize {
         0
     }
+
+    /// Mean steps-in-buffer over groups consumed so far (SPEED only).
+    fn mean_staleness(&self) -> f64 {
+        0.0
+    }
 }
 
-/// Construct a strategy. `rule` supplies (N_init, N_cont) — non-SPEED
-/// strategies use `rule.n_total()` rollouts per prompt.
+/// Everything needed to build a curriculum instance — `Copy`, so pipelined
+/// rollout workers can each construct their own inside the worker thread.
+#[derive(Clone, Copy, Debug)]
+pub struct CurriculumSpec {
+    pub kind: CurriculumKind,
+    pub rule: ScreeningRule,
+    /// VarianceMax pool factor.
+    pub pool_factor: usize,
+    /// SPEED sampling-buffer capacity (groups; `usize::MAX` = unbounded).
+    pub buffer_cap: usize,
+}
+
+impl CurriculumSpec {
+    pub fn build(&self) -> Box<dyn Curriculum> {
+        make_configured(self.kind, self.rule, self.pool_factor, self.buffer_cap)
+    }
+}
+
+/// Construct a strategy with an unbounded SPEED buffer. `rule` supplies
+/// (N_init, N_cont) — non-SPEED strategies use `rule.n_total()` rollouts
+/// per prompt.
 pub fn make(kind: CurriculumKind, rule: ScreeningRule, pool_factor: usize) -> Box<dyn Curriculum> {
+    make_configured(kind, rule, pool_factor, usize::MAX)
+}
+
+/// [`make`] with an explicit SPEED sampling-buffer capacity.
+pub fn make_configured(
+    kind: CurriculumKind,
+    rule: ScreeningRule,
+    pool_factor: usize,
+    buffer_cap: usize,
+) -> Box<dyn Curriculum> {
     match kind {
         CurriculumKind::Uniform => Box::new(Uniform { n_total: rule.n_total() }),
         CurriculumKind::DapoFilter => Box::new(DapoFilter { n_total: rule.n_total() }),
-        CurriculumKind::Speed => Box::new(Speed::new(rule)),
+        CurriculumKind::Speed => Box::new(Speed::new(rule).with_buffer_cap(buffer_cap)),
         CurriculumKind::SpeedNaive => {
             Box::new(crate::coordinator::naive::SpeedNaive::new(rule))
         }
@@ -135,7 +168,7 @@ fn full_inference(
     prompts: Vec<(usize, TaskInstance)>,
     n_total: usize,
 ) -> Result<Vec<PromptGroup>> {
-    let capacity = ctx.policy.rollout_capacity();
+    let capacity = ctx.engine.rollout_capacity();
     assert!(n_total <= capacity, "N={n_total} exceeds inference call capacity {capacity}");
     let per_call = capacity / n_total;
     let mut groups = Vec::with_capacity(prompts.len());
@@ -240,6 +273,12 @@ impl Speed {
         }
     }
 
+    /// Bound the sampling buffer (oldest-first eviction past `cap` groups).
+    pub fn with_buffer_cap(mut self, cap: usize) -> Speed {
+        self.buffer = SamplingBuffer::new().with_max_len(cap);
+        self
+    }
+
     pub fn mean_staleness(&self) -> f64 {
         self.buffer.mean_staleness()
     }
@@ -260,18 +299,14 @@ impl Curriculum for Speed {
             // phase of the next prompt wave.
             let backlog = self.buffer.len() + self.pending.len();
             let screening_on = backlog < self.backlog_batches * batch_size;
-            let capacity = ctx.policy.rollout_capacity();
+            let capacity = ctx.engine.rollout_capacity();
             let pending = &mut self.pending;
             let rule = self.rule;
-            // The supply closure pulls straight from the loader.
-            let loader = &mut *ctx.loader;
-            let dataset = ctx.dataset;
+            // The supply closure pulls straight from the prompt source.
+            let prompts = &mut *ctx.prompts;
             let plan = plan_call(
                 pending,
-                || {
-                    let idx = loader.next_index();
-                    (idx, dataset.instances[idx].clone())
-                },
+                || prompts.next_prompt(),
                 &rule,
                 capacity,
                 if screening_on { usize::MAX } else { 0 },
@@ -328,6 +363,10 @@ impl Curriculum for Speed {
 
     fn buffered(&self) -> usize {
         self.buffer.len()
+    }
+
+    fn mean_staleness(&self) -> f64 {
+        self.buffer.mean_staleness()
     }
 }
 

@@ -2,23 +2,30 @@
 //! scheduling of inference and training.
 //!
 //! * [`screening`]  — the lightweight pass-rate test over `N_init` rollouts
-//! * [`buffer`]     — the sampling buffer decoupling qualified-prompt supply
-//!                    from the fixed training batch size (Alg. 2)
+//! * [`buffer`]     — the sampling buffers decoupling qualified-prompt
+//!                    supply from the fixed training batch size (Alg. 2):
+//!                    the serial bounded deque and the `Mutex`+`Condvar`
+//!                    producer/consumer queue
 //! * [`batcher`]    — the pre-fetch batcher packing continuation rows of
 //!                    batch *t* with screening rows of batch *t+1* into one
 //!                    fixed-shape inference call (§4.3)
 //! * [`curriculum`] — strategy trait: `Uniform` (vanilla), `DapoFilter`,
 //!                    `Speed` (Alg. 2), `VarianceMax` (Foster–Foerster)
-//! * [`trainer`]    — the outer loop: inference → verify → select → update,
-//!                    with per-phase wall-clock accounting
+//! * [`trainer`]    — the serial reference loop: inference → verify →
+//!                    select → update, with per-phase wall-clock accounting
+//! * [`pipeline`]   — the pipelined loop: K rollout workers overlap
+//!                    inference with the learner's updates via a bounded
+//!                    shared buffer and versioned weight handoff
 
 pub mod batcher;
 pub mod naive;
 pub mod buffer;
 pub mod curriculum;
+pub mod pipeline;
 pub mod screening;
 pub mod trainer;
 
-pub use curriculum::{Curriculum, CurriculumKind};
+pub use curriculum::{Curriculum, CurriculumKind, CurriculumSpec};
+pub use pipeline::{PipelineConfig, PipelinedTrainer};
 pub use screening::ScreeningRule;
 pub use trainer::{Trainer, TrainerConfig};

@@ -28,7 +28,7 @@ impl Curriculum for SpeedNaive {
         ctx: &mut StepContext<'_>,
         batch_size: usize,
     ) -> Result<Vec<PromptGroup>> {
-        let capacity = ctx.policy.rollout_capacity();
+        let capacity = ctx.engine.rollout_capacity();
         let mut qualified: Vec<(GenRequest, Vec<crate::rl::update::Rollout>)> = Vec::new();
 
         // Phase 1: screening calls until enough prompts qualify.
@@ -36,12 +36,8 @@ impl Curriculum for SpeedNaive {
             let per_call = capacity / self.rule.n_init;
             let requests: Vec<GenRequest> = (0..per_call)
                 .map(|_| {
-                    let idx = ctx.loader.next_index();
-                    GenRequest {
-                        prompt_idx: idx,
-                        task: ctx.dataset.instances[idx].clone(),
-                        n_samples: self.rule.n_init,
-                    }
+                    let (idx, task) = ctx.next_prompt();
+                    GenRequest { prompt_idx: idx, task, n_samples: self.rule.n_init }
                 })
                 .collect();
             let res = ctx.run_call(&requests)?;

@@ -1,0 +1,339 @@
+//! The pipelined coordinator: K rollout workers keep the inference engine
+//! saturated while the learner consumes exactly-`B` batches from a bounded
+//! [`SharedBuffer`] and runs updates concurrently.
+//!
+//! The serial trainer realizes the paper's premise that training time =
+//! inference + update (§5.1) *literally*: the rollout engine idles during
+//! every optimizer step. This module overlaps the two phases — the
+//! remaining wall-clock cost of an update is only what the buffer cannot
+//! hide. Dataflow (DESIGN.md §5):
+//!
+//! ```text
+//!   shared Loader ──> worker 0 ┐  screening + continuation
+//!   (Mutex, one    ──> worker 1 ├──────> SharedBuffer ───> learner
+//!    prompt stream) ──> worker K ┘   (bounded, Condvar)    (train + eval)
+//!            ^                                                 │
+//!            └──────── WeightStore (versioned snapshots) <─────┘
+//! ```
+//!
+//! Determinism rail: with `enabled = false` (or `workers = 0`) the run is
+//! delegated verbatim to the serial [`Trainer`], so `workers = 1, pipeline
+//! = off` reproduces the serial `RunRecord` bit-for-bit. With the pipeline
+//! on, rollouts may be produced under a stale parameter version; each
+//! buffered group records the version that produced it and the buffer's
+//! backpressure (capacity `buffer_cap`) bounds that staleness.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::buffer::SharedBuffer;
+use crate::coordinator::curriculum::{CurriculumSpec, StepContext};
+use crate::coordinator::trainer::{evaluate_all, target_reached, EvalSet, Trainer, TrainerConfig};
+use crate::data::dataset::Dataset;
+use crate::data::loader::{Loader, SharedSource};
+use crate::metrics::{AtomicCounters, InferenceCounters, RunRecord, StepRecord};
+use crate::policy::{ForkEngine, Policy, WeightSnapshot};
+use crate::rl::algo::AlgoConfig;
+use crate::util::threadpool::ThreadPool;
+
+/// Producer/consumer knobs (the `workers` / `pipeline` / `buffer_cap`
+/// fields of [`crate::config::RunConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Rollout workers K (each owns a forked engine).
+    pub workers: usize,
+    /// Off = delegate to the serial [`Trainer`] (the reference semantics).
+    pub enabled: bool,
+    /// [`SharedBuffer`] capacity in groups (clamped to >= batch size).
+    pub buffer_cap: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { workers: 1, enabled: false, buffer_cap: 64 }
+    }
+}
+
+/// Versioned parameter handoff from the learner to rollout workers: the
+/// learner publishes a snapshot after every update, workers poll the
+/// version (one atomic load) and install only when behind.
+#[derive(Debug)]
+pub struct WeightStore {
+    snap: Mutex<WeightSnapshot>,
+    version: std::sync::atomic::AtomicU64,
+}
+
+impl WeightStore {
+    pub fn new(snap: WeightSnapshot) -> WeightStore {
+        WeightStore {
+            version: std::sync::atomic::AtomicU64::new(snap.version),
+            snap: Mutex::new(snap),
+        }
+    }
+
+    pub fn publish(&self, snap: WeightSnapshot) {
+        let version = snap.version;
+        *self.snap.lock().unwrap() = snap;
+        self.version.store(version, Ordering::Release);
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    pub fn get(&self) -> WeightSnapshot {
+        self.snap.lock().unwrap().clone()
+    }
+}
+
+/// The producer/consumer training loop. Stop conditions mirror
+/// [`Trainer`], with one accounting caveat: `time_s` counts all inference
+/// *issued* so far — including up to `buffer_cap` prefetched groups the
+/// learner has not consumed yet — so `max_seconds` stops are conservative
+/// for K > 1 (compute actually spent, the honest cost axis).
+pub struct PipelinedTrainer {
+    pub config: TrainerConfig,
+    pub algo: AlgoConfig,
+    pub pipeline: PipelineConfig,
+}
+
+impl PipelinedTrainer {
+    pub fn new(config: TrainerConfig, algo: AlgoConfig, pipeline: PipelineConfig) -> Self {
+        PipelinedTrainer { config, algo, pipeline }
+    }
+
+    /// Run the full loop; returns the complete run record.
+    pub fn run<P: Policy + ForkEngine>(
+        &self,
+        policy: &mut P,
+        spec: CurriculumSpec,
+        dataset: &Dataset,
+        evals: &[EvalSet],
+    ) -> Result<RunRecord> {
+        if !self.pipeline.enabled || self.pipeline.workers == 0 {
+            // The safety rail: the serial trainer IS the reference path.
+            let mut curriculum = spec.build();
+            let trainer = Trainer::new(self.config.clone(), self.algo);
+            return trainer.run(policy, curriculum.as_mut(), dataset, evals);
+        }
+
+        let b = self.config.batch_size;
+        let shared = Arc::new(SharedBuffer::new(self.pipeline.buffer_cap.max(b)));
+        // Production is capped at what the learner can ever consume, so
+        // workers wind down instead of burning inference at run end.
+        shared.set_demand((self.config.max_steps as u64).saturating_mul(b as u64));
+        let loader = Arc::new(Mutex::new(Loader::new(dataset.len(), self.config.seed)));
+        let dataset = Arc::new(dataset.clone());
+        let counters = Arc::new(AtomicCounters::default());
+        let weights = Arc::new(WeightStore::new(policy.snapshot()));
+        let stop = Arc::new(AtomicBool::new(false));
+        // The learner's step clock; workers stamp groups with it (born_step).
+        let clock = Arc::new(AtomicUsize::new(0));
+        let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let pool = ThreadPool::new(self.pipeline.workers);
+        for w in 0..self.pipeline.workers {
+            let engine = policy.fork_engine(w as u64);
+            let shared = Arc::clone(&shared);
+            let counters = Arc::clone(&counters);
+            let weights = Arc::clone(&weights);
+            let stop = Arc::clone(&stop);
+            let clock = Arc::clone(&clock);
+            let errors = Arc::clone(&errors);
+            let source =
+                SharedSource { loader: Arc::clone(&loader), dataset: Arc::clone(&dataset) };
+            let temperature = self.config.temperature;
+            pool.execute(move || {
+                rollout_worker(
+                    engine, spec, source, shared, counters, weights, stop, clock, errors,
+                    temperature, b,
+                )
+            });
+        }
+
+        let mut record = RunRecord { label: self.config.label.clone(), ..Default::default() };
+        let result = self.consume(policy, &shared, &loader, &counters, &weights, &clock, evals, &mut record);
+
+        // Shutdown: wake every blocked worker, then join (ThreadPool drop).
+        stop.store(true, Ordering::Relaxed);
+        shared.close();
+        drop(pool);
+        record.counters = counters.snapshot();
+        result?;
+        let errs = errors.lock().unwrap();
+        if !errs.is_empty() {
+            bail!("rollout worker failed: {}", errs.join("; "));
+        }
+        Ok(record)
+    }
+
+    /// The learner side: pop exactly-`B` batches, update, publish weights.
+    #[allow(clippy::too_many_arguments)]
+    fn consume<P: Policy + ForkEngine>(
+        &self,
+        policy: &mut P,
+        shared: &SharedBuffer,
+        loader: &Mutex<Loader>,
+        counters: &AtomicCounters,
+        weights: &WeightStore,
+        clock: &AtomicUsize,
+        evals: &[EvalSet],
+        record: &mut RunRecord,
+    ) -> Result<()> {
+        let b = self.config.batch_size;
+        // Step-0 evaluation so every curve starts at the base model.
+        evaluate_all(policy, evals, 0, 0.0, record)?;
+        let mut update_s = 0.0f64;
+
+        for step in 0..self.config.max_steps {
+            let Some(batch) = shared.pop_batch(b, step, policy.weight_version()) else {
+                break; // closed early: a worker failed (caller reports it)
+            };
+            let groups: Vec<_> =
+                batch.into_iter().filter(|g| self.algo.keep_group(&g.rewards())).collect();
+
+            let train_pass_rate = if groups.is_empty() {
+                0.0
+            } else {
+                groups.iter().map(|g| g.pass_rate()).sum::<f64>() / groups.len() as f64
+            };
+
+            let mut algo = self.algo;
+            algo.lr = self.algo.lr_at(step);
+            let tr = policy.train(&groups, &algo)?;
+            update_s += tr.cost_s;
+            weights.publish(policy.snapshot());
+            clock.store(step + 1, Ordering::Relaxed);
+
+            // The record keeps the paper's time = inference + update
+            // convention over all inference ISSUED so far (prefetch
+            // included — compute spent, not compute consumed); the
+            // wall-clock win of overlapping shows up in real steps/sec
+            // (bench_micro), not in this virtual total.
+            let inference_s = counters.snapshot().cost_s;
+            let time_s = inference_s + update_s;
+            let stats = shared.stats();
+            record.steps.push(StepRecord {
+                step,
+                time_s,
+                inference_s,
+                update_s,
+                train_pass_rate,
+                grad_norm: tr.grad_norm,
+                loss: tr.loss,
+                clip_frac: tr.clip_frac,
+                prompts_consumed: loader.lock().unwrap().consumed(),
+                buffer_len: stats.len,
+                mean_staleness: stats.mean_staleness,
+            });
+
+            if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
+                evaluate_all(policy, evals, step + 1, time_s, record)?;
+                if let Some((bench, target)) = &self.config.stop_at_target {
+                    if target_reached(record, bench, *target) {
+                        crate::info!(
+                            "pipeline",
+                            "{}: target {target} on {bench} reached at step {} ({:.1}s)",
+                            self.config.label,
+                            step + 1,
+                            time_s
+                        );
+                        break;
+                    }
+                }
+            }
+            if time_s >= self.config.max_seconds {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Converts a worker panic into the regular failure path: without this a
+/// panicking worker would die silently and the learner would block in
+/// `pop_batch` forever.
+struct PanicGuard {
+    shared: Arc<SharedBuffer>,
+    errors: Arc<Mutex<Vec<String>>>,
+}
+
+impl Drop for PanicGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            if let Ok(mut errs) = self.errors.lock() {
+                errs.push("rollout worker panicked".to_string());
+            }
+            self.shared.close();
+        }
+    }
+}
+
+/// One rollout worker: pull prompts from the shared loader, run the
+/// curriculum's screening/continuation against a private engine, push
+/// qualified groups into the shared buffer. Runs until stopped, closed,
+/// demand-exhausted, or errored.
+#[allow(clippy::too_many_arguments)]
+fn rollout_worker(
+    mut engine: Box<dyn crate::policy::RolloutEngine + Send>,
+    spec: CurriculumSpec,
+    mut source: SharedSource,
+    shared: Arc<SharedBuffer>,
+    counters: Arc<AtomicCounters>,
+    weights: Arc<WeightStore>,
+    stop: Arc<AtomicBool>,
+    clock: Arc<AtomicUsize>,
+    errors: Arc<Mutex<Vec<String>>>,
+    temperature: f32,
+    chunk: usize,
+) {
+    let _guard =
+        PanicGuard { shared: Arc::clone(&shared), errors: Arc::clone(&errors) };
+    let mut curriculum = spec.build();
+    loop {
+        if stop.load(Ordering::Relaxed) || shared.is_closed() || shared.remaining_demand() == 0 {
+            return;
+        }
+        // Weight-version handoff: install the latest snapshot before
+        // collecting. Groups are stamped with the clock at the collect that
+        // *returns* them, so `mean_staleness` measures shared-buffer
+        // residency; residency inside the worker's own SPEED buffer is
+        // tracked by that curriculum itself, exactly as in the serial
+        // trainer.
+        if engine.serving_version() != weights.version() {
+            engine.install(&weights.get());
+        }
+        let born_step = clock.load(Ordering::Relaxed);
+        let mut local = InferenceCounters::default();
+        let t0 = std::time::Instant::now();
+        let collected = {
+            let mut ctx = StepContext {
+                engine: &mut *engine,
+                prompts: &mut source,
+                train_step: born_step,
+                temperature,
+                counters: &mut local,
+            };
+            curriculum.collect_batch(&mut ctx, chunk)
+        };
+        local.busy_s = t0.elapsed().as_secs_f64();
+        counters.add(&local);
+        match collected {
+            Ok(groups) => {
+                let version = engine.serving_version();
+                for group in groups {
+                    if !shared.push(group, born_step, version) {
+                        return; // closed or demand satisfied
+                    }
+                }
+            }
+            Err(e) => {
+                errors.lock().unwrap().push(format!("{e:#}"));
+                shared.close();
+                return;
+            }
+        }
+    }
+}

@@ -1,16 +1,19 @@
-//! The training loop: curriculum → inference → RL update → periodic eval,
-//! with the paper's wall-clock accounting (training time = inference +
+//! The serial training loop: curriculum → inference → RL update → periodic
+//! eval, with the paper's wall-clock accounting (training time = inference +
 //! update; validation and checkpointing excluded, §5.1).
+//!
+//! The pipelined variant that overlaps inference with updates lives in
+//! [`crate::coordinator::pipeline`]; this serial loop remains the reference
+//! semantics (`workers = 1, pipeline = off` reproduces it bit-for-bit).
 
 use anyhow::Result;
 
 use crate::coordinator::curriculum::{Curriculum, StepContext};
 use crate::data::dataset::Dataset;
-use crate::data::loader::Loader;
+use crate::data::loader::{DatasetSource, Loader};
 use crate::metrics::{EvalRecord, InferenceCounters, RunRecord, StepRecord};
 use crate::policy::Policy;
 use crate::rl::algo::AlgoConfig;
-use crate::util::stats::Ema;
 
 /// Stop conditions + cadence for one run.
 #[derive(Clone, Debug)]
@@ -53,6 +56,39 @@ pub struct EvalSet {
     pub tasks: Vec<crate::data::tasks::TaskInstance>,
 }
 
+/// Evaluate every benchmark and append the records (shared by the serial
+/// and pipelined trainers; eval time is excluded from training time).
+pub(crate) fn evaluate_all(
+    policy: &mut dyn Policy,
+    evals: &[EvalSet],
+    step: usize,
+    time_s: f64,
+    record: &mut RunRecord,
+) -> Result<()> {
+    for set in evals {
+        let res = policy.evaluate(&set.tasks)?;
+        record.evals.push(EvalRecord {
+            step,
+            time_s,
+            benchmark: set.name.clone(),
+            accuracy: res.accuracy,
+        });
+    }
+    Ok(())
+}
+
+/// True when the most recent eval of `bench` has reached `target` (the
+/// early-stop condition of Table 1 runs).
+pub(crate) fn target_reached(record: &RunRecord, bench: &str, target: f64) -> bool {
+    record
+        .evals
+        .iter()
+        .rev()
+        .find(|e| e.benchmark == bench)
+        .map(|e| e.accuracy >= target)
+        .unwrap_or(false)
+}
+
 pub struct Trainer {
     pub config: TrainerConfig,
     pub algo: AlgoConfig,
@@ -76,19 +112,18 @@ impl Trainer {
         let mut record = RunRecord { label: self.config.label.clone(), ..Default::default() };
         let mut inference_s = 0.0f64;
         let mut update_s = 0.0f64;
-        let mut baseline_ema = Ema::new(0.1); // REINFORCE global baseline
 
         // Step-0 evaluation so every curve starts at the base model.
-        self.evaluate_all(policy, evals, 0, 0.0, &mut record)?;
+        evaluate_all(policy, evals, 0, 0.0, &mut record)?;
 
         for step in 0..self.config.max_steps {
             // ---- collect one batch via the curriculum (inference phase) ----
             let inf_before = counters.cost_s;
             let groups = {
+                let mut source = DatasetSource { loader: &mut loader, dataset };
                 let mut ctx = StepContext {
-                    policy,
-                    dataset,
-                    loader: &mut loader,
+                    engine: policy.as_engine(),
+                    prompts: &mut source,
                     train_step: step,
                     temperature: self.config.temperature,
                     counters: &mut counters,
@@ -108,17 +143,10 @@ impl Trainer {
             } else {
                 groups.iter().map(|g| g.pass_rate()).sum::<f64>() / groups.len() as f64
             };
-            let mean_reward = {
-                let all: Vec<f32> = groups.iter().flat_map(|g| g.rewards()).collect();
-                if all.is_empty() {
-                    0.0
-                } else {
-                    all.iter().sum::<f32>() / all.len() as f32
-                }
-            };
-            baseline_ema.update(mean_reward as f64);
-
             // ---- RL update ----
+            // (The global REINFORCE baseline is estimator-internal: RLOO /
+            // GRPO compute theirs per group, and TrainBatch::assemble takes
+            // an explicit one for plain REINFORCE.)
             let mut algo = self.algo;
             algo.lr = self.algo.lr_at(step);
             let tr = policy.train(&groups, &algo)?;
@@ -136,20 +164,14 @@ impl Trainer {
                 clip_frac: tr.clip_frac,
                 prompts_consumed: loader.consumed(),
                 buffer_len: curriculum.buffered(),
+                mean_staleness: curriculum.mean_staleness(),
             });
 
             // ---- periodic evaluation (excluded from training time) ----
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
-                self.evaluate_all(policy, evals, step + 1, time_s, &mut record)?;
+                evaluate_all(policy, evals, step + 1, time_s, &mut record)?;
                 if let Some((bench, target)) = &self.config.stop_at_target {
-                    if record
-                        .evals
-                        .iter()
-                        .rev()
-                        .find(|e| &e.benchmark == bench)
-                        .map(|e| e.accuracy >= *target)
-                        .unwrap_or(false)
-                    {
+                    if target_reached(&record, bench, *target) {
                         crate::info!(
                             "trainer",
                             "{}: target {target} on {bench} reached at step {} ({:.1}s)",
@@ -167,25 +189,5 @@ impl Trainer {
         }
         record.counters = counters;
         Ok(record)
-    }
-
-    fn evaluate_all(
-        &self,
-        policy: &mut dyn Policy,
-        evals: &[EvalSet],
-        step: usize,
-        time_s: f64,
-        record: &mut RunRecord,
-    ) -> Result<()> {
-        for set in evals {
-            let res = policy.evaluate(&set.tasks)?;
-            record.evals.push(EvalRecord {
-                step,
-                time_s,
-                benchmark: set.name.clone(),
-                accuracy: res.accuracy,
-            });
-        }
-        Ok(())
     }
 }

@@ -5,7 +5,59 @@
 //! so the loader transparently reshuffles and starts a new epoch when
 //! exhausted.
 
+use std::sync::{Arc, Mutex};
+
+use crate::data::dataset::Dataset;
+use crate::data::tasks::TaskInstance;
 use crate::util::rng::Rng;
+
+/// Where a curriculum pulls prompts from. Abstracts over the serial case
+/// (exclusive loader borrow) and the pipelined case (loader behind a mutex,
+/// shared by K rollout workers).
+pub trait PromptSource: Send {
+    /// Next (dataset index, task) pair.
+    fn next_prompt(&mut self) -> (usize, TaskInstance);
+
+    /// Prompts consumed so far (the paper's data-efficiency axis).
+    fn consumed(&self) -> usize;
+}
+
+/// Serial prompt source: exclusive access to the loader and dataset.
+pub struct DatasetSource<'a> {
+    pub loader: &'a mut Loader,
+    pub dataset: &'a Dataset,
+}
+
+impl PromptSource for DatasetSource<'_> {
+    fn next_prompt(&mut self) -> (usize, TaskInstance) {
+        let idx = self.loader.next_index();
+        (idx, self.dataset.instances[idx].clone())
+    }
+
+    fn consumed(&self) -> usize {
+        self.loader.consumed()
+    }
+}
+
+/// Shared prompt source for the pipelined coordinator: K workers draw from
+/// one loader, so the global prompt order is a single stream (each prompt
+/// is handed out exactly once per epoch, never duplicated across workers).
+#[derive(Clone)]
+pub struct SharedSource {
+    pub loader: Arc<Mutex<Loader>>,
+    pub dataset: Arc<Dataset>,
+}
+
+impl PromptSource for SharedSource {
+    fn next_prompt(&mut self) -> (usize, TaskInstance) {
+        let idx = self.loader.lock().unwrap().next_index();
+        (idx, self.dataset.instances[idx].clone())
+    }
+
+    fn consumed(&self) -> usize {
+        self.loader.lock().unwrap().consumed()
+    }
+}
 
 pub struct Loader {
     order: Vec<usize>,

@@ -9,7 +9,7 @@ pub mod tokenizer;
 pub mod verifier;
 
 pub use dataset::{Dataset, DatasetKind, EvalBenchmark};
-pub use loader::Loader;
+pub use loader::{DatasetSource, Loader, PromptSource, SharedSource};
 pub use tasks::{Difficulty, TaskFamily, TaskInstance};
 pub use tokenizer::Tokenizer;
 pub use verifier::{verify, VerifyOutcome};

@@ -7,7 +7,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{RunConfig, Substrate};
-use crate::coordinator::curriculum::{self, Curriculum};
+use crate::coordinator::curriculum::{Curriculum, CurriculumSpec};
+use crate::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
 use crate::coordinator::screening::ScreeningRule;
 use crate::coordinator::trainer::{EvalSet, Trainer, TrainerConfig};
 use crate::data::dataset::Dataset;
@@ -15,7 +16,7 @@ use crate::eval::benchmark_suite;
 use crate::metrics::RunRecord;
 use crate::policy::real::RealPolicy;
 use crate::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
-use crate::policy::Policy;
+use crate::policy::{Policy, RolloutEngine};
 use crate::rl::algo::AlgoConfig;
 
 /// Benchmark-seed shared by all runs so curves are comparable.
@@ -29,8 +30,40 @@ pub fn screening_rule(cfg: &RunConfig) -> ScreeningRule {
     ScreeningRule::new(cfg.n_init, cfg.n_cont).with_thresholds(cfg.p_low, cfg.p_high)
 }
 
+pub fn curriculum_spec(cfg: &RunConfig) -> CurriculumSpec {
+    CurriculumSpec {
+        kind: cfg.curriculum,
+        rule: screening_rule(cfg),
+        pool_factor: cfg.pool_factor,
+        // In pipelined runs `buffer_cap` bounds the SHARED buffer (see
+        // `pipeline_config`), so worker-internal SPEED buffers keep the
+        // reference semantics — bounding both would silently evict
+        // qualified groups inside workers. 0 = auto: the serial SPEED
+        // buffer also stays unbounded (its backlog throttle limits growth).
+        buffer_cap: if cfg.buffer_cap == 0 || cfg.pipeline {
+            usize::MAX
+        } else {
+            cfg.buffer_cap.max(cfg.batch_size)
+        },
+    }
+}
+
 pub fn build_curriculum(cfg: &RunConfig) -> Box<dyn Curriculum> {
-    curriculum::make(cfg.curriculum, screening_rule(cfg), cfg.pool_factor)
+    curriculum_spec(cfg).build()
+}
+
+pub fn pipeline_config(cfg: &RunConfig) -> PipelineConfig {
+    PipelineConfig {
+        workers: cfg.workers.max(1),
+        enabled: cfg.pipeline,
+        // 0 = auto: four batches of headroom between producers and the
+        // learner (the same backlog target the serial curriculum uses).
+        buffer_cap: if cfg.buffer_cap == 0 {
+            4 * cfg.batch_size
+        } else {
+            cfg.buffer_cap.max(cfg.batch_size)
+        },
+    }
 }
 
 pub fn build_algo(cfg: &RunConfig) -> AlgoConfig {
@@ -62,12 +95,33 @@ pub fn trainer_config(cfg: &RunConfig) -> TrainerConfig {
     }
 }
 
-/// Run a config on the simulator substrate.
+/// Run a config on the simulator substrate. With `cfg.pipeline` on, the
+/// run goes through the [`PipelinedTrainer`] (K forked rollout engines
+/// overlapping inference with updates); otherwise the serial reference
+/// trainer.
 pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
     anyhow::ensure!(cfg.substrate == Substrate::Sim, "config is not a sim run");
     let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, MAX_PROMPT_CHARS);
     let mut policy = build_sim_policy(cfg)?;
-    run_with_policy(cfg, &mut policy, &dataset, &benchmark_suite(BENCH_SEED, MAX_PROMPT_CHARS))
+    let evals = benchmark_suite(BENCH_SEED, MAX_PROMPT_CHARS);
+    if cfg.pipeline {
+        check_capacity(cfg, policy.rollout_capacity())?;
+        let trainer =
+            PipelinedTrainer::new(trainer_config(cfg), build_algo(cfg), pipeline_config(cfg));
+        return trainer.run(&mut policy, curriculum_spec(cfg), &dataset, &evals);
+    }
+    run_with_policy(cfg, &mut policy, &dataset, &evals)
+}
+
+/// The compiled (or simulated) inference call must fit a full group.
+fn check_capacity(cfg: &RunConfig, rollout_capacity: usize) -> Result<()> {
+    let n_total = cfg.n_total();
+    if n_total > rollout_capacity {
+        bail!(
+            "N={n_total} exceeds rollout capacity {rollout_capacity} — recompile artifacts or lower n_init/n_cont"
+        );
+    }
+    Ok(())
 }
 
 /// Run a config on the real PJRT substrate (artifacts required).
@@ -88,12 +142,15 @@ pub fn run_with_policy(
     dataset: &Dataset,
     evals: &[EvalSet],
 ) -> Result<RunRecord> {
-    let n_total = cfg.n_total();
-    if n_total > policy.rollout_capacity() {
-        bail!(
-            "N={} exceeds rollout capacity {} — recompile artifacts or lower n_init/n_cont",
-            n_total,
-            policy.rollout_capacity()
+    check_capacity(cfg, policy.rollout_capacity())?;
+    if cfg.pipeline {
+        // Only `run_sim` has a forkable engine; everything else (the real
+        // substrate in particular, with its single PJRT engine) runs the
+        // serial reference loop.
+        crate::warn_log!(
+            "driver",
+            "pipeline=true with workers={} requested, but this substrate runs serially",
+            cfg.workers
         );
     }
     let mut curriculum = build_curriculum(cfg);
@@ -145,6 +202,22 @@ mod tests {
         .with_shapes(64, 64, 512);
         let evals = benchmark_suite(BENCH_SEED, MAX_PROMPT_CHARS);
         assert!(run_with_policy(&cfg, &mut policy, &dataset, &evals).is_err());
+    }
+
+    #[test]
+    fn pipelined_sim_run_completes() {
+        let mut cfg = RunConfig::default();
+        cfg.max_steps = 4;
+        cfg.eval_every = 2;
+        cfg.dataset_size = 2000;
+        cfg.pipeline = true;
+        cfg.workers = 2;
+        let rec = run_sim(&cfg).unwrap();
+        assert_eq!(rec.steps.len(), 4);
+        assert!(rec.counters.rollouts > 0);
+        assert!(rec.total_time() > 0.0);
+        // engine-busy accounting only exists on the pipelined path
+        assert!(rec.counters.busy_s > 0.0);
     }
 
     #[test]

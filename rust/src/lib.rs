@@ -12,18 +12,27 @@
 //!
 //! * [`util`]        — substrates the offline environment lacks: PRNG, JSON,
 //!                     stats, CLI parsing, thread pool, logging, mini
-//!                     property-testing harness.
-//! * [`config`]      — typed run/model/algo configuration + JSON presets.
-//! * [`data`]        — tokenizer, synthetic task families, datasets, verifier.
+//!                     property-testing harness. The thread pool carries the
+//!                     pipelined coordinator's rollout workers.
+//! * [`config`]      — typed run/model/algo configuration + JSON presets,
+//!                     including the `workers`/`pipeline`/`buffer_cap` knobs.
+//! * [`data`]        — tokenizer, synthetic task families, datasets,
+//!                     verifier, and the `PromptSource` loader abstraction
+//!                     (exclusive or mutex-shared prompt streams).
 //! * [`rl`]          — advantage estimators, algorithm definitions, the
 //!                     SNR/Φ theory of §3 and Appendix A/B.
 //! * [`coordinator`] — the paper's contribution: SPEED scheduler (Alg. 2),
-//!                     curricula, sampling buffer, pre-fetch batcher, trainer.
-//! * [`policy`]      — `RolloutEngine`/`Trainable` traits with the PJRT
+//!                     curricula, sampling buffers, pre-fetch batcher, the
+//!                     serial trainer, and the pipelined trainer that
+//!                     overlaps inference with updates (DESIGN.md §5).
+//! * [`policy`]      — the two-trait policy layer: `RolloutEngine`
+//!                     (generate + evaluate) and `Trainable` (update +
+//!                     weight versioning), implemented by the PJRT
 //!                     transformer (`real`) and the IRT simulator (`sim`).
 //! * [`runtime`]     — PJRT client, artifact manifest, device-resident
 //!                     parameter store.
-//! * [`metrics`]     — phase timers, run records, curve logging.
+//! * [`metrics`]     — phase timers, run records, curve logging, and the
+//!                     atomic per-worker inference counters.
 //! * [`eval`]        — held-out benchmark evaluation.
 //! * [`bench`]       — in-tree benchmark harness (no criterion offline).
 

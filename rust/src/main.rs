@@ -21,7 +21,7 @@ use speed_rl::eval::benchmark_suite;
 use speed_rl::info;
 use speed_rl::metrics::RunRecord;
 use speed_rl::policy::real::RealPolicy;
-use speed_rl::policy::Policy;
+use speed_rl::policy::RolloutEngine;
 use speed_rl::rl::algo::BaseAlgo;
 use speed_rl::util::cli::Cli;
 use speed_rl::util::logging::{self, level_from_str};
@@ -102,6 +102,9 @@ fn print_summary(record: &RunRecord, model: &str) {
             100.0 * record.counters.acceptance_rate()
         );
     }
+    if record.mean_staleness() > 0.0 {
+        println!("mean buffer staleness {:.2} steps", record.mean_staleness());
+    }
     for (bench, target) in driver::paper_targets(model) {
         let acc = record.final_accuracy(bench).unwrap_or(0.0);
         match record.time_to_target(bench, target) {
@@ -124,7 +127,10 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("batch-size", Some("16"), "training batch size B")
         .opt("steps", Some("400"), "max training steps")
         .opt("max-hours", None, "stop after this much simulated time")
-        .opt("eval-every", Some("10"), "evaluation cadence (steps)");
+        .opt("eval-every", Some("10"), "evaluation cadence (steps)")
+        .opt("workers", None, "rollout workers for the pipelined coordinator")
+        .opt("buffer-cap", None, "shared buffer capacity in groups (0 = auto)")
+        .flag("pipeline", "overlap inference with updates (producer/consumer)");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
 
@@ -156,6 +162,16 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     cfg.max_steps = args.usize("steps")?;
     cfg.eval_every = args.usize("eval-every")?;
     cfg.seed = args.u64("seed")?;
+    // No defaults here: absent flags leave config-file values intact.
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse::<usize>().context("--workers")?;
+    }
+    if let Some(c) = args.get("buffer-cap") {
+        cfg.buffer_cap = c.parse::<usize>().context("--buffer-cap")?;
+    }
+    if args.has_flag("pipeline") || cfg.workers > 1 {
+        cfg.pipeline = true;
+    }
     if let Some(h) = args.get("max-hours") {
         cfg.max_seconds = h.parse::<f64>().context("--max-hours")? * 3600.0;
     }

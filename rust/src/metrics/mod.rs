@@ -4,9 +4,13 @@
 
 pub mod report;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::json::Json;
 
-/// Cumulative inference-side counters.
+/// Cumulative inference-side counters. Plain and `Copy`: each rollout
+/// worker owns one and periodically merges it into the run-wide
+/// [`AtomicCounters`], so per-worker accounting sums correctly.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct InferenceCounters {
     pub calls: u64,
@@ -16,6 +20,9 @@ pub struct InferenceCounters {
     pub prompts_screened: u64,
     pub prompts_accepted: u64,
     pub rollouts: u64,
+    /// Real seconds the rollout engine spent inside collection calls
+    /// (pipelined runs only; the engine-utilization numerator).
+    pub busy_s: f64,
 }
 
 impl InferenceCounters {
@@ -32,6 +39,70 @@ impl InferenceCounters {
             0.0
         } else {
             self.prompts_accepted as f64 / self.prompts_screened as f64
+        }
+    }
+
+    /// Accumulate another counter set (per-worker totals -> run totals).
+    pub fn merge(&mut self, o: &InferenceCounters) {
+        self.calls += o.calls;
+        self.rows_used += o.rows_used;
+        self.rows_capacity += o.rows_capacity;
+        self.cost_s += o.cost_s;
+        self.prompts_screened += o.prompts_screened;
+        self.prompts_accepted += o.prompts_accepted;
+        self.rollouts += o.rollouts;
+        self.busy_s += o.busy_s;
+    }
+}
+
+/// Thread-safe accumulator for [`InferenceCounters`]: K rollout workers
+/// `add` their local deltas, the learner `snapshot`s live totals. f64
+/// fields are stored as bit-cast `AtomicU64`s updated via CAS.
+#[derive(Debug, Default)]
+pub struct AtomicCounters {
+    calls: AtomicU64,
+    rows_used: AtomicU64,
+    rows_capacity: AtomicU64,
+    cost_s_bits: AtomicU64,
+    prompts_screened: AtomicU64,
+    prompts_accepted: AtomicU64,
+    rollouts: AtomicU64,
+    busy_s_bits: AtomicU64,
+}
+
+fn atomic_f64_add(cell: &AtomicU64, delta: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+impl AtomicCounters {
+    pub fn add(&self, c: &InferenceCounters) {
+        self.calls.fetch_add(c.calls, Ordering::Relaxed);
+        self.rows_used.fetch_add(c.rows_used, Ordering::Relaxed);
+        self.rows_capacity.fetch_add(c.rows_capacity, Ordering::Relaxed);
+        self.prompts_screened.fetch_add(c.prompts_screened, Ordering::Relaxed);
+        self.prompts_accepted.fetch_add(c.prompts_accepted, Ordering::Relaxed);
+        self.rollouts.fetch_add(c.rollouts, Ordering::Relaxed);
+        atomic_f64_add(&self.cost_s_bits, c.cost_s);
+        atomic_f64_add(&self.busy_s_bits, c.busy_s);
+    }
+
+    pub fn snapshot(&self) -> InferenceCounters {
+        InferenceCounters {
+            calls: self.calls.load(Ordering::Relaxed),
+            rows_used: self.rows_used.load(Ordering::Relaxed),
+            rows_capacity: self.rows_capacity.load(Ordering::Relaxed),
+            cost_s: f64::from_bits(self.cost_s_bits.load(Ordering::Relaxed)),
+            prompts_screened: self.prompts_screened.load(Ordering::Relaxed),
+            prompts_accepted: self.prompts_accepted.load(Ordering::Relaxed),
+            rollouts: self.rollouts.load(Ordering::Relaxed),
+            busy_s: f64::from_bits(self.busy_s_bits.load(Ordering::Relaxed)),
         }
     }
 }
@@ -55,6 +126,9 @@ pub struct StepRecord {
     pub prompts_consumed: usize,
     /// Buffer size after the step (SPEED only; 0 otherwise).
     pub buffer_len: usize,
+    /// Mean steps-in-buffer over groups consumed so far (off-policy
+    /// staleness diagnostic, §4.3; 0 for unbuffered curricula).
+    pub mean_staleness: f64,
 }
 
 impl StepRecord {
@@ -70,6 +144,7 @@ impl StepRecord {
             ("clip_frac", Json::num(self.clip_frac)),
             ("prompts_consumed", Json::num(self.prompts_consumed as f64)),
             ("buffer_len", Json::num(self.buffer_len as f64)),
+            ("mean_staleness", Json::num(self.mean_staleness)),
         ])
     }
 }
@@ -133,6 +208,12 @@ impl RunRecord {
         self.steps.last().map(|s| s.time_s).unwrap_or(0.0)
     }
 
+    /// Mean steps-in-buffer over all consumed groups (the cumulative
+    /// staleness diagnostic as of the last step).
+    pub fn mean_staleness(&self) -> f64 {
+        self.steps.last().map(|s| s.mean_staleness).unwrap_or(0.0)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("label", Json::str(self.label.clone())),
@@ -148,6 +229,7 @@ impl RunRecord {
                     ("prompts_screened", Json::num(self.counters.prompts_screened as f64)),
                     ("prompts_accepted", Json::num(self.counters.prompts_accepted as f64)),
                     ("rollouts", Json::num(self.counters.rollouts as f64)),
+                    ("busy_s", Json::num(self.counters.busy_s)),
                 ]),
             ),
         ])
@@ -199,5 +281,38 @@ mod tests {
         let rec = RunRecord { label: "t".into(), ..Default::default() };
         let j = rec.to_json();
         assert!(j.get("steps").is_some());
+    }
+
+    #[test]
+    fn merge_and_atomic_add_stay_in_sync() {
+        // Guard: a field added to InferenceCounters must be carried by both
+        // accumulation paths (plain merge and the atomic worker path).
+        let a = InferenceCounters {
+            calls: 1,
+            rows_used: 2,
+            rows_capacity: 3,
+            cost_s: 0.5,
+            prompts_screened: 4,
+            prompts_accepted: 2,
+            rollouts: 7,
+            busy_s: 0.25,
+        };
+        let b = InferenceCounters { calls: 10, cost_s: 1.5, busy_s: 0.75, ..Default::default() };
+        let mut merged = a;
+        merged.merge(&b);
+
+        let atomic = AtomicCounters::default();
+        atomic.add(&a);
+        atomic.add(&b);
+        let snap = atomic.snapshot();
+
+        assert_eq!(merged.calls, snap.calls);
+        assert_eq!(merged.rows_used, snap.rows_used);
+        assert_eq!(merged.rows_capacity, snap.rows_capacity);
+        assert_eq!(merged.prompts_screened, snap.prompts_screened);
+        assert_eq!(merged.prompts_accepted, snap.prompts_accepted);
+        assert_eq!(merged.rollouts, snap.rollouts);
+        assert!((merged.cost_s - snap.cost_s).abs() < 1e-12);
+        assert!((merged.busy_s - snap.busy_s).abs() < 1e-12);
     }
 }

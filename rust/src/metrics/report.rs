@@ -102,6 +102,7 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 clip_frac: f("clip_frac"),
                 prompts_consumed: f("prompts_consumed") as usize,
                 buffer_len: f("buffer_len") as usize,
+                mean_staleness: f("mean_staleness"),
             });
         }
     }

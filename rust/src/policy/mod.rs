@@ -1,7 +1,19 @@
-//! Policy abstraction: the coordinator talks to a model through these
-//! traits, so the *same* SPEED scheduler drives both the real PJRT
+//! Policy abstraction: the coordinator talks to a model through two traits
+//! (DESIGN.md §4) so the *same* SPEED scheduler drives both the real PJRT
 //! transformer ([`real::RealPolicy`]) and the IRT simulator
 //! ([`sim::SimPolicy`]) used for paper-scale benchmark regeneration.
+//!
+//! * [`RolloutEngine`] — the inference side: batched generation and greedy
+//!   evaluation. Rollout workers in the pipelined coordinator own one
+//!   engine each and serve a (possibly stale) parameter snapshot.
+//! * [`Trainable`]     — the learner side: RL updates plus weight
+//!   versioning. Every `train` call bumps the version; engines record the
+//!   version they serve so the buffer can account for off-policy staleness.
+//! * [`Policy`]        — the combination, implemented automatically for any
+//!   type providing both halves (the serial trainer's interface).
+//! * [`ForkEngine`]    — replication of the inference side into independent
+//!   engines, one per rollout worker (simulator substrate only; the real
+//!   substrate has a single compiled engine).
 
 pub mod real;
 pub mod sampler;
@@ -34,6 +46,9 @@ pub struct GenResult {
     pub cost_s: f64,
     /// Rows of the fixed-shape call actually carrying data.
     pub rows_used: usize,
+    /// Parameter version that produced these rollouts (the engine's
+    /// serving version at call time).
+    pub weight_version: u64,
 }
 
 /// Result of one RL update step.
@@ -52,15 +67,26 @@ pub struct EvalResult {
     pub cost_s: f64,
 }
 
-/// The coordinator-facing model interface.
-pub trait Policy {
+/// Opaque parameter snapshot handed from the learner to rollout engines.
+///
+/// The payload is substrate-defined: [`sim::SimPolicy`] ships its scalar
+/// skill, [`real::RealPolicy`] ships nothing (its single engine shares the
+/// device-resident [`crate::runtime::ParamStore`] with the learner) — the
+/// version alone lets engines and buffers track staleness.
+#[derive(Clone, Debug, Default)]
+pub struct WeightSnapshot {
+    /// Monotone counter: number of `train` calls applied to these weights.
+    pub version: u64,
+    /// Flat substrate payload (see above).
+    pub values: Vec<f64>,
+}
+
+/// The inference side of a policy: generation + evaluation.
+pub trait RolloutEngine {
     /// Batched generation: all requests are packed into ONE fixed-shape
     /// inference call (the pre-fetch batcher guarantees they fit). Total
-    /// `sum(n_samples)` must be <= [`Policy::rollout_capacity`].
+    /// `sum(n_samples)` must be <= [`RolloutEngine::rollout_capacity`].
     fn generate(&mut self, requests: &[GenRequest], temperature: f32) -> Result<GenResult>;
-
-    /// One RL update on completed prompt groups.
-    fn train(&mut self, groups: &[PromptGroup], algo: &AlgoConfig) -> Result<TrainResult>;
 
     /// Greedy-decode accuracy on a held-out set. `cost_s` is excluded from
     /// training-time accounting (the paper excludes validation time).
@@ -69,13 +95,54 @@ pub trait Policy {
     /// Rows per inference call (the compiled artifact's row count).
     fn rollout_capacity(&self) -> usize;
 
-    /// Maximum rollouts the train step can consume at once.
-    fn train_capacity(&self) -> usize;
-
     /// Generation length (tokens) per rollout.
     fn gen_len(&self) -> usize;
 
+    /// Install a learner snapshot; subsequent rollouts are produced under
+    /// `snap.version`.
+    fn install(&mut self, snap: &WeightSnapshot);
+
+    /// Version of the parameters the engine currently serves.
+    fn serving_version(&self) -> u64;
+
     fn name(&self) -> &str;
+}
+
+/// The learner side of a policy: RL updates + weight versioning.
+pub trait Trainable {
+    /// One RL update on completed prompt groups. Bumps the weight version.
+    fn train(&mut self, groups: &[PromptGroup], algo: &AlgoConfig) -> Result<TrainResult>;
+
+    /// Maximum rollouts the train step can consume at once.
+    fn train_capacity(&self) -> usize;
+
+    /// Number of `train` calls applied so far.
+    fn weight_version(&self) -> u64;
+
+    /// Export the current weights for handoff to rollout engines.
+    fn snapshot(&self) -> WeightSnapshot;
+}
+
+/// The combined coordinator-facing interface, implemented automatically
+/// for any type providing both halves.
+pub trait Policy: RolloutEngine + Trainable {
+    /// View the policy as its inference half (what [`crate::coordinator`]'s
+    /// `StepContext` drives).
+    fn as_engine(&mut self) -> &mut dyn RolloutEngine;
+}
+
+impl<T: RolloutEngine + Trainable> Policy for T {
+    fn as_engine(&mut self) -> &mut dyn RolloutEngine {
+        self
+    }
+}
+
+/// Replication of the inference side into independent engines, one per
+/// rollout worker. Stream 0 must reproduce the RNG stream the type's own
+/// engine would use, so a 1-worker pipeline matches a serial run on a
+/// stationary (scripted) policy.
+pub trait ForkEngine {
+    fn fork_engine(&self, stream: u64) -> Box<dyn RolloutEngine + Send>;
 }
 
 /// Split a flat row vector of rollouts back into per-request groups.

@@ -1,4 +1,5 @@
-//! RealPolicy: the AOT-compiled transformer behind the `Policy` trait.
+//! RealPolicy: the AOT-compiled transformer behind the
+//! `RolloutEngine`/`Trainable` traits.
 //!
 //! Everything on the request path is Rust + PJRT: generation runs the
 //! `rollout_*` artifact (prefill + Pallas-decode scan compiled from L2),
@@ -14,7 +15,9 @@ use crate::data::tasks::TaskInstance;
 use crate::data::tokenizer::Tokenizer;
 use crate::data::verifier::{verify, VerifyOutcome};
 use crate::policy::sampler::pack_requests;
-use crate::policy::{EvalResult, GenRequest, GenResult, Policy, TrainResult};
+use crate::policy::{
+    EvalResult, GenRequest, GenResult, RolloutEngine, TrainResult, Trainable, WeightSnapshot,
+};
 use crate::rl::algo::AlgoConfig;
 use crate::rl::update::{PromptGroup, Rollout, TrainBatch};
 use crate::runtime::{ParamStore, Runtime, Tensor};
@@ -28,6 +31,8 @@ pub struct RealPolicy {
     label: String,
     /// Cumulative SFT steps (warmup phase).
     pub sft_steps: usize,
+    /// Weight version: bumped by every RL update.
+    version: u64,
 }
 
 impl RealPolicy {
@@ -39,7 +44,15 @@ impl RealPolicy {
             .context("tokenizer/manifest vocab mismatch — rebuild artifacts")?;
         let store = ParamStore::from_init_file(&runtime.manifest)?;
         let label = format!("real-{}", runtime.manifest.preset);
-        Ok(RealPolicy { runtime, store, tok, rng: Rng::new(seed ^ 0x6ea1), label, sft_steps: 0 })
+        Ok(RealPolicy {
+            runtime,
+            store,
+            tok,
+            rng: Rng::new(seed ^ 0x6ea1),
+            label,
+            sft_steps: 0,
+            version: 0,
+        })
     }
 
     /// Load from a saved checkpoint instead of init params.
@@ -150,12 +163,58 @@ impl RealPolicy {
     }
 }
 
-impl Policy for RealPolicy {
+impl RolloutEngine for RealPolicy {
     fn generate(&mut self, requests: &[GenRequest], temperature: f32) -> Result<GenResult> {
         let (groups, cost_s, rows_used) = self.rollout_call(requests, temperature)?;
-        Ok(GenResult { groups, cost_s, rows_used })
+        Ok(GenResult { groups, cost_s, rows_used, weight_version: self.version })
     }
 
+    fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
+        let plan = self.plan().clone();
+        let rows = plan.rollout_rows;
+        let mut correct = 0usize;
+        let mut cost_s = 0.0;
+        for chunk in tasks.chunks(rows) {
+            let requests: Vec<GenRequest> = chunk
+                .iter()
+                .enumerate()
+                .map(|(i, task)| GenRequest { prompt_idx: i, task: task.clone(), n_samples: 1 })
+                .collect();
+            let (groups, c, _) = self.rollout_call(&requests, 0.0)?; // greedy
+            cost_s += c;
+            for (task, rollouts) in chunk.iter().zip(&groups) {
+                if verify(&self.tok, task, &rollouts[0].gen_tokens) == VerifyOutcome::Correct {
+                    correct += 1;
+                }
+            }
+        }
+        Ok(EvalResult { accuracy: correct as f64 / tasks.len().max(1) as f64, cost_s })
+    }
+
+    fn rollout_capacity(&self) -> usize {
+        self.plan().rollout_rows
+    }
+
+    fn gen_len(&self) -> usize {
+        self.plan().gen_len
+    }
+
+    fn install(&mut self, snap: &WeightSnapshot) {
+        // The single PJRT engine shares the device-resident ParamStore with
+        // the learner — only the version needs recording.
+        self.version = snap.version;
+    }
+
+    fn serving_version(&self) -> u64 {
+        self.version
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+impl Trainable for RealPolicy {
     fn train(&mut self, groups: &[PromptGroup], algo: &AlgoConfig) -> Result<TrainResult> {
         let plan = self.plan().clone();
         let rows = plan.train_rows;
@@ -188,6 +247,7 @@ impl Policy for RealPolicy {
         )?;
         let cost_s = t0.elapsed().as_secs_f64();
         let stats = self.store.absorb_update(out)?;
+        self.version += 1;
         Ok(TrainResult {
             loss: stats[0].scalar()?,
             grad_norm: stats[1].scalar()?,
@@ -196,41 +256,15 @@ impl Policy for RealPolicy {
         })
     }
 
-    fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
-        let plan = self.plan().clone();
-        let rows = plan.rollout_rows;
-        let mut correct = 0usize;
-        let mut cost_s = 0.0;
-        for chunk in tasks.chunks(rows) {
-            let requests: Vec<GenRequest> = chunk
-                .iter()
-                .enumerate()
-                .map(|(i, task)| GenRequest { prompt_idx: i, task: task.clone(), n_samples: 1 })
-                .collect();
-            let (groups, c, _) = self.rollout_call(&requests, 0.0)?; // greedy
-            cost_s += c;
-            for (task, rollouts) in chunk.iter().zip(&groups) {
-                if verify(&self.tok, task, &rollouts[0].gen_tokens) == VerifyOutcome::Correct {
-                    correct += 1;
-                }
-            }
-        }
-        Ok(EvalResult { accuracy: correct as f64 / tasks.len().max(1) as f64, cost_s })
-    }
-
-    fn rollout_capacity(&self) -> usize {
-        self.plan().rollout_rows
-    }
-
     fn train_capacity(&self) -> usize {
         self.plan().train_rows
     }
 
-    fn gen_len(&self) -> usize {
-        self.plan().gen_len
+    fn weight_version(&self) -> u64 {
+        self.version
     }
 
-    fn name(&self) -> &str {
-        &self.label
+    fn snapshot(&self) -> WeightSnapshot {
+        WeightSnapshot { version: self.version, values: Vec::new() }
     }
 }

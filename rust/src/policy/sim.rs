@@ -29,7 +29,10 @@ use anyhow::Result;
 
 use crate::data::tasks::{TaskFamily, TaskInstance};
 use crate::data::tokenizer::EOS;
-use crate::policy::{EvalResult, GenRequest, GenResult, Policy, TrainResult};
+use crate::policy::{
+    EvalResult, ForkEngine, GenRequest, GenResult, RolloutEngine, TrainResult, Trainable,
+    WeightSnapshot,
+};
 use crate::rl::algo::AlgoConfig;
 use crate::rl::theory::snr_bound_exact;
 use crate::rl::update::{PromptGroup, Rollout};
@@ -142,10 +145,13 @@ pub struct SimPolicy {
     pub cost: SimCostModel,
     pub skill: f64,
     rng: Rng,
+    seed: u64,
     capacity: usize,
     train_rows: usize,
     gen_len: usize,
     train_steps: usize,
+    /// Weight version: bumped by `train`, copied by `install`.
+    version: u64,
 }
 
 impl SimPolicy {
@@ -155,10 +161,12 @@ impl SimPolicy {
             cost,
             skill: spec.skill0,
             rng: Rng::new(seed ^ 0x51b0_11c0),
+            seed,
             capacity: 384,
             train_rows: 384,
             gen_len: 512, // paper-scale generation cap
             train_steps: 0,
+            version: 0,
         }
     }
 
@@ -204,7 +212,7 @@ impl SimPolicy {
     }
 }
 
-impl Policy for SimPolicy {
+impl RolloutEngine for SimPolicy {
     fn generate(&mut self, requests: &[GenRequest], temperature: f32) -> Result<GenResult> {
         let rows_used: usize = requests.iter().map(|r| r.n_samples).sum();
         anyhow::ensure!(rows_used <= self.capacity, "call exceeds capacity");
@@ -226,9 +234,48 @@ impl Policy for SimPolicy {
                     .collect()
             })
             .collect();
-        Ok(GenResult { groups, cost_s: self.call_cost(requests), rows_used })
+        Ok(GenResult {
+            groups,
+            cost_s: self.call_cost(requests),
+            rows_used,
+            weight_version: self.version,
+        })
     }
 
+    fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
+        // Expected accuracy (smooth, deterministic — the EMA'd curves of
+        // Fig. 6 without sampling noise).
+        let acc = tasks.iter().map(|t| self.pass_prob(t)).sum::<f64>() / tasks.len().max(1) as f64;
+        let cost = tasks.len() as f64
+            * (self.cost.prefill_row_s + self.cost.decode_row_token_s * 8.0);
+        Ok(EvalResult { accuracy: acc, cost_s: cost })
+    }
+
+    fn rollout_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn gen_len(&self) -> usize {
+        self.gen_len
+    }
+
+    fn install(&mut self, snap: &WeightSnapshot) {
+        if let Some(&skill) = snap.values.first() {
+            self.skill = skill;
+        }
+        self.version = snap.version;
+    }
+
+    fn serving_version(&self) -> u64 {
+        self.version
+    }
+
+    fn name(&self) -> &str {
+        self.spec.name
+    }
+}
+
+impl Trainable for SimPolicy {
     fn train(&mut self, groups: &[PromptGroup], _algo: &AlgoConfig) -> Result<TrainResult> {
         let rows: usize = groups.iter().map(|g| g.rollouts.len()).sum();
         anyhow::ensure!(rows <= self.train_rows, "train batch exceeds capacity");
@@ -250,6 +297,7 @@ impl Policy for SimPolicy {
         let b = groups.len().max(1) as f64;
         self.skill += self.spec.eta * signal / b;
         self.train_steps += 1;
+        self.version += 1;
         let cost = self.cost.train_overhead_s + self.cost.train_row_s * rows as f64;
         Ok(TrainResult {
             loss: -(reward_sum / b),
@@ -259,29 +307,32 @@ impl Policy for SimPolicy {
         })
     }
 
-    fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
-        // Expected accuracy (smooth, deterministic — the EMA'd curves of
-        // Fig. 6 without sampling noise).
-        let acc = tasks.iter().map(|t| self.pass_prob(t)).sum::<f64>() / tasks.len().max(1) as f64;
-        let cost = tasks.len() as f64
-            * (self.cost.prefill_row_s + self.cost.decode_row_token_s * 8.0);
-        Ok(EvalResult { accuracy: acc, cost_s: cost })
-    }
-
-    fn rollout_capacity(&self) -> usize {
-        self.capacity
-    }
-
     fn train_capacity(&self) -> usize {
         self.train_rows
     }
 
-    fn gen_len(&self) -> usize {
-        self.gen_len
+    fn weight_version(&self) -> u64 {
+        self.version
     }
 
-    fn name(&self) -> &str {
-        self.spec.name
+    fn snapshot(&self) -> WeightSnapshot {
+        WeightSnapshot { version: self.version, values: vec![self.skill] }
+    }
+}
+
+impl ForkEngine for SimPolicy {
+    fn fork_engine(&self, stream: u64) -> Box<dyn RolloutEngine + Send> {
+        // Stream 0 reproduces this policy's own RNG stream; higher streams
+        // derive independent ones (splitmix-style increment).
+        let seed = self.seed.wrapping_add(stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut engine = SimPolicy::new(self.spec, self.cost, seed).with_shapes(
+            self.capacity,
+            self.train_rows,
+            self.gen_len,
+        );
+        engine.skill = self.skill;
+        engine.version = self.version;
+        Box::new(engine)
     }
 }
 
@@ -398,6 +449,37 @@ mod tests {
         let tr = s.train(&groups, &AlgoConfig::new(crate::rl::algo::BaseAlgo::Rloo)).unwrap();
         let ratio = gen.cost_s / tr.cost_s;
         assert!((1.2..4.0).contains(&ratio), "inference/train ratio {ratio}");
+    }
+
+    #[test]
+    fn rollouts_record_producing_weight_version() {
+        let mut s = sim(SimModelSpec::qwen_15b());
+        let mut rng = Rng::new(9);
+        let task = crate::data::tasks::generate(&mut rng, TaskFamily::Add, 2, 24);
+        let reqs = vec![GenRequest { prompt_idx: 0, task, n_samples: 4 }];
+        assert_eq!(s.generate(&reqs, 1.0).unwrap().weight_version, 0);
+        // installing a learner snapshot advances the served version, and
+        // subsequent rollouts are stamped with it
+        let snap = WeightSnapshot { version: 5, values: vec![s.skill + 0.25] };
+        s.install(&snap);
+        assert_eq!(s.serving_version(), 5);
+        assert_eq!(s.generate(&reqs, 1.0).unwrap().weight_version, 5);
+    }
+
+    #[test]
+    fn fork_engine_stream_zero_reproduces_serial_rollouts() {
+        let serial = sim(SimModelSpec::qwen_7b());
+        let mut fork = serial.fork_engine(0);
+        let mut serial = sim(SimModelSpec::qwen_7b());
+        let mut rng = Rng::new(4);
+        let task = crate::data::tasks::generate(&mut rng, TaskFamily::Add, 4, 24);
+        let reqs = vec![GenRequest { prompt_idx: 0, task, n_samples: 16 }];
+        let a = serial.generate(&reqs, 1.0).unwrap();
+        let b = fork.generate(&reqs, 1.0).unwrap();
+        let rewards = |r: &GenResult| -> Vec<f32> {
+            r.groups[0].iter().map(|x| x.reward).collect()
+        };
+        assert_eq!(rewards(&a), rewards(&b), "stream 0 must match the serial RNG stream");
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! a target accuracy in less (virtual) wall-clock time than vanilla RLOO,
 //! keep its training pass rates nearer 0.5, and show larger gradient norms.
 
-use speed_rl::coordinator::curriculum::{self, CurriculumKind};
+use speed_rl::coordinator::curriculum::{self, CurriculumKind, CurriculumSpec};
+use speed_rl::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
 use speed_rl::coordinator::screening::ScreeningRule;
 use speed_rl::coordinator::trainer::{Trainer, TrainerConfig};
 use speed_rl::data::dataset::{Dataset, DatasetKind, EvalBenchmark};
@@ -12,25 +13,50 @@ use speed_rl::metrics::RunRecord;
 use speed_rl::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
 use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
 
+fn scenario_policy(seed: u64) -> SimPolicy {
+    SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), seed)
+        .with_shapes(384, 384, 24)
+}
+
+fn scenario_trainer_config(kind: CurriculumKind, max_steps: usize, seed: u64) -> TrainerConfig {
+    TrainerConfig {
+        batch_size: 16,
+        eval_every: 5,
+        max_steps,
+        label: kind.name().to_string(),
+        seed,
+        ..Default::default()
+    }
+}
+
 fn run(kind: CurriculumKind, max_steps: usize, seed: u64) -> RunRecord {
     let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
-    let mut policy = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), seed)
-        .with_shapes(384, 384, 24);
+    let mut policy = scenario_policy(seed);
     let rule = ScreeningRule::new(8, 16);
     let mut curriculum = curriculum::make(kind, rule, 4);
-    let trainer = Trainer::new(
-        TrainerConfig {
-            batch_size: 16,
-            eval_every: 5,
-            max_steps,
-            label: kind.name().to_string(),
-            seed,
-            ..Default::default()
-        },
-        AlgoConfig::new(BaseAlgo::Rloo),
-    );
+    let trainer =
+        Trainer::new(scenario_trainer_config(kind, max_steps, seed), AlgoConfig::new(BaseAlgo::Rloo));
     let evals = benchmark_suite(123, 24);
     trainer.run(&mut policy, curriculum.as_mut(), &dataset, &evals).expect("run")
+}
+
+/// The same scenario through the [`PipelinedTrainer`].
+fn run_pipelined(max_steps: usize, seed: u64, workers: usize, enabled: bool) -> RunRecord {
+    let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
+    let mut policy = scenario_policy(seed);
+    let spec = CurriculumSpec {
+        kind: CurriculumKind::Speed,
+        rule: ScreeningRule::new(8, 16),
+        pool_factor: 4,
+        buffer_cap: usize::MAX,
+    };
+    let trainer = PipelinedTrainer::new(
+        scenario_trainer_config(CurriculumKind::Speed, max_steps, seed),
+        AlgoConfig::new(BaseAlgo::Rloo),
+        PipelineConfig { workers, enabled, buffer_cap: 64 },
+    );
+    let evals = benchmark_suite(123, 24);
+    trainer.run(&mut policy, spec, &dataset, &evals).expect("pipelined run")
 }
 
 #[test]
@@ -116,6 +142,58 @@ fn eval_curves_are_monotone_enough() {
     let aime = rec.final_accuracy("aime").unwrap();
     let math = rec.final_accuracy("math500").unwrap();
     assert!(aime <= math + 0.02, "aime {aime:.3} > math500 {math:.3}");
+}
+
+#[test]
+fn pipelined_off_reproduces_serial_runrecord_exactly() {
+    // The refactor's safety rail: workers = 1, pipeline = off must be the
+    // serial trainer, bit for bit, on the full sim scenario.
+    let serial = run(CurriculumKind::Speed, 20, 9);
+    let piped = run_pipelined(20, 9, 1, false);
+    assert_eq!(serial.steps.len(), piped.steps.len());
+    for (a, b) in serial.steps.iter().zip(piped.steps.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.inference_s, b.inference_s);
+        assert_eq!(a.update_s, b.update_s);
+        assert_eq!(a.train_pass_rate, b.train_pass_rate);
+        assert_eq!(a.grad_norm, b.grad_norm);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.clip_frac, b.clip_frac);
+        assert_eq!(a.prompts_consumed, b.prompts_consumed);
+        assert_eq!(a.buffer_len, b.buffer_len);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+    }
+    assert_eq!(serial.evals.len(), piped.evals.len());
+    for (a, b) in serial.evals.iter().zip(piped.evals.iter()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+    assert_eq!(serial.counters.calls, piped.counters.calls);
+    assert_eq!(serial.counters.rollouts, piped.counters.rollouts);
+    assert_eq!(serial.counters.cost_s, piped.counters.cost_s);
+}
+
+#[test]
+fn pipelined_four_workers_learns_like_serial() {
+    // Overlapping inference with updates changes *when* rollouts are
+    // produced (bounded staleness), not *what* is learned: final eval
+    // accuracy must match the serial run up to sampling noise.
+    let serial = run(CurriculumKind::Speed, 30, 13);
+    let piped = run_pipelined(30, 13, 4, true);
+    assert_eq!(piped.steps.len(), 30);
+    for bench in ["math500", "dapo1k"] {
+        let a = serial.final_accuracy(bench).unwrap();
+        let b = piped.final_accuracy(bench).unwrap();
+        assert!(
+            (a - b).abs() < 0.05,
+            "{bench}: serial {a:.3} vs pipelined {b:.3} diverged"
+        );
+    }
+    // staleness is real but bounded by the buffer backpressure
+    assert!(piped.mean_staleness() < 8.0, "staleness {}", piped.mean_staleness());
 }
 
 #[test]
