@@ -204,6 +204,7 @@ fn main() {
             rule,
             pool_factor: 4,
             buffer_cap: usize::MAX,
+            predictor: None,
         };
 
         let run_serial = || -> (f64, RunRecord) {
@@ -222,7 +223,7 @@ fn main() {
                 PipelineConfig { workers, enabled: true, buffer_cap: 4 * batch },
             );
             let t0 = std::time::Instant::now();
-            let rec = trainer.run(&mut policy, spec, &dataset, &[]).unwrap();
+            let rec = trainer.run(&mut policy, spec.clone(), &dataset, &[]).unwrap();
             (t0.elapsed().as_secs_f64(), rec)
         };
 

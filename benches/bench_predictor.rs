@@ -1,0 +1,113 @@
+//! Rollouts-to-target-accuracy: `speed` vs `predictive-speed` on the sim
+//! substrate — the headline number for the difficulty-predictor subsystem.
+//!
+//! Each run early-stops at the Table-1-style dapo1k bar; the honest cost
+//! axis is total rollouts spent to get there (screening + continuation).
+//! `predictive-speed` should arrive with measurably fewer because the
+//! predictor refuses to spend `N_init` screening rollouts on prompts whose
+//! rejection is forecast with >= `skip_confidence` probability. The
+//! `never-skip` row is the sanity rail: `--skip-confidence 1.0` must
+//! reproduce the plain speed numbers exactly.
+//!
+//!     cargo bench --bench bench_predictor
+
+use speed_rl::bench::Table;
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::coordinator::trainer::Trainer;
+use speed_rl::data::dataset::Dataset;
+use speed_rl::driver;
+use speed_rl::eval::benchmark_suite;
+use speed_rl::metrics::RunRecord;
+
+const TARGET_BENCH: &str = "dapo1k";
+const TARGET_ACC: f64 = 0.5;
+
+fn scenario(kind: CurriculumKind, skip_confidence: f64, seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.curriculum = kind;
+    cfg.label = format!("{}-s{}", kind.name(), seed);
+    cfg.model = "sim-7b".into();
+    cfg.dataset_size = 800; // several epochs inside the budget: the
+                            // predictor sees identities again
+    cfg.n_init = 8;
+    cfg.n_cont = 16;
+    cfg.batch_size = 16;
+    cfg.eval_every = 5;
+    cfg.max_steps = 150;
+    cfg.seed = seed;
+    cfg.skip_confidence = skip_confidence;
+    cfg
+}
+
+fn run_to_target(cfg: &RunConfig) -> RunRecord {
+    let dataset =
+        Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, driver::MAX_PROMPT_CHARS);
+    let mut policy = driver::build_sim_policy(cfg).expect("sim policy");
+    let evals = benchmark_suite(driver::BENCH_SEED, driver::MAX_PROMPT_CHARS);
+    let mut tcfg = driver::trainer_config(cfg);
+    tcfg.stop_at_target = Some((TARGET_BENCH.to_string(), TARGET_ACC));
+    let mut curriculum = driver::build_curriculum(cfg);
+    let trainer = Trainer::new(tcfg, driver::build_algo(cfg));
+    trainer.run(&mut policy, curriculum.as_mut(), &dataset, &evals).expect("run")
+}
+
+fn main() {
+    println!(
+        "rollouts to {TARGET_ACC} on {TARGET_BENCH} (sim-7b, dapo17k-synth, N_init 8 / N_cont 16)\n"
+    );
+    let mut table = Table::new(&[
+        "curriculum",
+        "seed",
+        "steps",
+        "time-to-target (s)",
+        "rollouts",
+        "skipped",
+        "saved rollouts",
+        "brier",
+        "precision",
+        "recall",
+    ]);
+
+    let mut speed_rollouts = Vec::new();
+    let mut pred_rollouts = Vec::new();
+    for seed in [7u64, 19] {
+        let variants = [
+            ("speed", scenario(CurriculumKind::Speed, 0.9, seed)),
+            ("predictive-speed", scenario(CurriculumKind::PredictiveSpeed, 0.9, seed)),
+            ("  (never-skip)", scenario(CurriculumKind::PredictiveSpeed, 1.0, seed)),
+        ];
+        for (name, cfg) in variants {
+            let rec = run_to_target(&cfg);
+            let reached = rec.time_to_target(TARGET_BENCH, TARGET_ACC);
+            match name {
+                "speed" => speed_rollouts.push(rec.counters.rollouts),
+                "predictive-speed" => pred_rollouts.push(rec.counters.rollouts),
+                _ => {}
+            }
+            table.row(vec![
+                name.to_string(),
+                seed.to_string(),
+                rec.steps.len().to_string(),
+                reached.map(|t| format!("{t:.0}")).unwrap_or_else(|| "not reached".into()),
+                rec.counters.rollouts.to_string(),
+                rec.counters.prompts_skipped.to_string(),
+                rec.counters.rollouts_saved.to_string(),
+                format!("{:.3}", rec.counters.predictor_brier()),
+                format!("{:.2}", rec.counters.predictor_precision()),
+                format!("{:.2}", rec.counters.predictor_recall()),
+            ]);
+        }
+    }
+    table.print();
+
+    let mean = |xs: &[u64]| xs.iter().sum::<u64>() as f64 / xs.len().max(1) as f64;
+    let s = mean(&speed_rollouts);
+    let p = mean(&pred_rollouts);
+    if s > 0.0 {
+        println!(
+            "\nmean rollouts to target: speed {s:.0}  predictive-speed {p:.0}  ({:+.1}% vs speed)",
+            100.0 * (p - s) / s
+        );
+    }
+}

@@ -4,8 +4,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== cargo build --release =="
-cargo build --release
+echo "== cargo build --release --all-targets =="
+# Lib, bins, tests, benches and examples all compile-gated in one step
+# (benches/examples would otherwise rot — tests alone don't build them).
+cargo build --release --all-targets
 
 echo "== cargo test -q =="
 cargo test -q

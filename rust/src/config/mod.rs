@@ -55,6 +55,16 @@ pub struct RunConfig {
     /// serial SPEED buffer (the reference semantics), `4 * batch_size` for
     /// the pipelined shared buffer (backpressure bounds staleness).
     pub buffer_cap: usize,
+    /// predictive-speed: skip screening when the predicted rejection
+    /// probability reaches this threshold (1.0 = never skip, reproducing
+    /// the plain `speed` batch stream exactly).
+    pub skip_confidence: f64,
+    /// predictive-speed: per-rollout discount of the difficulty posterior
+    /// (effective sample size `1/(1-discount)`).
+    pub predictor_discount: f64,
+    /// predictive-speed: probability of screening a confidently-skipped
+    /// prompt anyway (keeps skip decisions falsifiable).
+    pub explore_rate: f64,
 }
 
 impl Default for RunConfig {
@@ -82,6 +92,9 @@ impl Default for RunConfig {
             workers: 1,
             pipeline: false,
             buffer_cap: 0,
+            skip_confidence: 0.9,
+            predictor_discount: 0.97,
+            explore_rate: 0.05,
         }
     }
 }
@@ -90,6 +103,69 @@ impl RunConfig {
     /// Total rollouts per trained prompt (paper: 24).
     pub fn n_total(&self) -> usize {
         self.n_init + self.n_cont
+    }
+
+    /// Screening/predictor invariants, checked at load time and by the run
+    /// drivers — a degenerate band or a zero rollout split would otherwise
+    /// silently reject (or accept) every prompt.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_init < 1 {
+            bail!("n_init must be >= 1 (got {})", self.n_init);
+        }
+        if self.n_cont < 1 {
+            bail!("n_cont must be >= 1 (got {})", self.n_cont);
+        }
+        if !(self.p_low >= 0.0 && self.p_low < self.p_high && self.p_high <= 1.0) {
+            bail!(
+                "screening band must satisfy 0.0 <= p_low < p_high <= 1.0 (got p_low {}, p_high {})",
+                self.p_low,
+                self.p_high
+            );
+        }
+        // For curricula that actually screen with the rule, the band must
+        // contain at least one achievable realized rate k/n_init, or every
+        // prompt is rejected and batch collection spins forever (e.g.
+        // n_init = 1 under the strict default band: rates {0, 1} are both
+        // outside (0, 1)).
+        let screens = matches!(
+            self.curriculum,
+            CurriculumKind::Speed | CurriculumKind::SpeedNaive | CurriculumKind::PredictiveSpeed
+        );
+        if screens {
+            let achievable = (0..=self.n_init).any(|k| {
+                let rate = k as f64 / self.n_init as f64;
+                rate > self.p_low && rate < self.p_high
+            });
+            if !achievable {
+                bail!(
+                    "screening band ({}, {}) contains no achievable pass rate at n_init {} — \
+                     every prompt would be rejected and no batch could ever fill (raise n_init \
+                     or widen the band)",
+                    self.p_low,
+                    self.p_high,
+                    self.n_init
+                );
+            }
+        }
+        if self.batch_size < 1 {
+            bail!("batch_size must be >= 1 (got {})", self.batch_size);
+        }
+        if !(self.skip_confidence > 0.0 && self.skip_confidence <= 1.0) {
+            bail!(
+                "skip_confidence must be in (0.0, 1.0] (got {}); 1.0 disables skipping",
+                self.skip_confidence
+            );
+        }
+        if !(self.predictor_discount > 0.0 && self.predictor_discount <= 1.0) {
+            bail!(
+                "predictor_discount must be in (0.0, 1.0] (got {})",
+                self.predictor_discount
+            );
+        }
+        if !(0.0..=1.0).contains(&self.explore_rate) {
+            bail!("explore_rate must be in [0.0, 1.0] (got {})", self.explore_rate);
+        }
+        Ok(())
     }
 
     /// A paper experimental setup by name, e.g. "7b-deepscale-speed-rloo".
@@ -108,7 +184,7 @@ impl RunConfig {
         };
         cfg.dataset = DatasetKind::parse(parts[1]).context("dataset")?;
         cfg.dataset_size = cfg.dataset.default_size().min(40_000);
-        cfg.curriculum = CurriculumKind::parse(parts[2]).context("curriculum")?;
+        cfg.curriculum = CurriculumKind::parse_or_err(parts[2])?;
         cfg.algo = BaseAlgo::parse(parts[3]).context("algo")?;
         Ok(cfg)
     }
@@ -143,6 +219,9 @@ impl RunConfig {
             ("workers", Json::num(self.workers as f64)),
             ("pipeline", Json::Bool(self.pipeline)),
             ("buffer_cap", Json::num(self.buffer_cap as f64)),
+            ("skip_confidence", Json::num(self.skip_confidence)),
+            ("predictor_discount", Json::num(self.predictor_discount)),
+            ("explore_rate", Json::num(self.explore_rate)),
         ])
     }
 
@@ -167,8 +246,7 @@ impl RunConfig {
             cfg.dataset = DatasetKind::parse(v).with_context(|| format!("dataset '{v}'"))?;
         }
         if let Some(v) = get_str("curriculum") {
-            cfg.curriculum =
-                CurriculumKind::parse(v).with_context(|| format!("curriculum '{v}'"))?;
+            cfg.curriculum = CurriculumKind::parse_or_err(v)?;
         }
         if let Some(v) = get_str("algo") {
             cfg.algo = BaseAlgo::parse(v).with_context(|| format!("algo '{v}'"))?;
@@ -195,9 +273,13 @@ impl RunConfig {
         num_field!("pool_factor", pool_factor, usize);
         num_field!("workers", workers, usize);
         num_field!("buffer_cap", buffer_cap, usize);
+        num_field!("skip_confidence", skip_confidence, f64);
+        num_field!("predictor_discount", predictor_discount, f64);
+        num_field!("explore_rate", explore_rate, f64);
         if let Some(v) = j.get("pipeline").and_then(|x| x.as_bool()) {
             cfg.pipeline = v;
         }
+        cfg.validate()?;
         Ok(cfg)
     }
 
@@ -236,6 +318,99 @@ mod tests {
         assert_eq!(back.workers, 4);
         assert!(back.pipeline);
         assert_eq!(back.buffer_cap, 48);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_configs() {
+        let ok = RunConfig::default();
+        assert!(ok.validate().is_ok());
+        let mut bad = RunConfig::default();
+        bad.n_init = 0;
+        assert!(bad.validate().unwrap_err().to_string().contains("n_init"));
+        let mut bad = RunConfig::default();
+        bad.n_cont = 0;
+        assert!(bad.validate().unwrap_err().to_string().contains("n_cont"));
+        // Inverted and out-of-range bands carry the full invariant in the
+        // error text.
+        let mut bad = RunConfig::default();
+        bad.p_low = 0.8;
+        bad.p_high = 0.2;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("p_low < p_high"), "unhelpful error: {msg}");
+        let mut bad = RunConfig::default();
+        bad.p_high = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.p_low = -0.1;
+        assert!(bad.validate().is_err());
+        // Equal thresholds are degenerate too (nothing can qualify).
+        let mut bad = RunConfig::default();
+        bad.p_low = 0.5;
+        bad.p_high = 0.5;
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.skip_confidence = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.predictor_discount = 1.2;
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.explore_rate = -0.5;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_unachievable_screening_bands() {
+        // n_init = 1 under the strict default band: realized rates are 0 or
+        // 1, both rejected — screening curricula could never fill a batch.
+        let mut bad = RunConfig::default();
+        bad.curriculum = CurriculumKind::Speed;
+        bad.n_init = 1;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("no achievable pass rate"), "unhelpful error: {msg}");
+        // One more screening rollout makes the band achievable again.
+        let mut ok = RunConfig::default();
+        ok.curriculum = CurriculumKind::Speed;
+        ok.n_init = 2; // k = 1 -> rate 0.5 sits inside (0, 1)
+        assert!(ok.validate().is_ok());
+        // Non-screening curricula ignore the band: n_init = 1 stays valid.
+        let mut uniform = RunConfig::default();
+        uniform.curriculum = CurriculumKind::Uniform;
+        uniform.n_init = 1;
+        assert!(uniform.validate().is_ok());
+    }
+
+    #[test]
+    fn from_json_validates_at_load_time() {
+        let mut cfg = RunConfig::default();
+        cfg.p_low = 0.9;
+        cfg.p_high = 0.1;
+        let err = RunConfig::from_json(&cfg.to_json()).unwrap_err().to_string();
+        assert!(err.contains("p_low"), "load must surface the invariant: {err}");
+    }
+
+    #[test]
+    fn predictor_knobs_roundtrip() {
+        let mut cfg = RunConfig::default();
+        cfg.skip_confidence = 0.75;
+        cfg.predictor_discount = 0.99;
+        cfg.explore_rate = 0.1;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.skip_confidence, 0.75);
+        assert_eq!(back.predictor_discount, 0.99);
+        assert_eq!(back.explore_rate, 0.1);
+    }
+
+    #[test]
+    fn unknown_curriculum_error_lists_valid_names() {
+        let mut j = RunConfig::default().to_json();
+        // Overwrite via parse of a patched string (Json is append-only
+        // here, so round-trip through text).
+        let text = j.to_string_pretty().replace("\"speed\"", "\"bogus-curriculum\"");
+        j = Json::parse(&text).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("bogus-curriculum"), "{err}");
+        assert!(err.contains("predictive-speed") && err.contains("uniform"), "{err}");
     }
 
     #[test]

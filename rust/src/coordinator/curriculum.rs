@@ -10,18 +10,26 @@
 //! * [`Speed`]       — the paper's Algorithm 2: screening with `N_init`
 //!                     rollouts, continuation only for qualified prompts,
 //!                     sampling buffer + pre-fetch batcher.
+//! * [`PredictiveSpeed`] — SPEED with a learned pre-screen: the difficulty
+//!                     predictor skips confidently-uninformative prompts
+//!                     before any rollout is spent
+//!                     ([`crate::coordinator::predictive`]).
 //! * [`VarianceMax`] — Foster & Foerster (2025): full inference on a pool,
 //!                     train on the top-B by reward variance.
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::{plan_call, Purpose};
 use crate::coordinator::buffer::SamplingBuffer;
+use crate::coordinator::predictive::PredictiveSpeed;
 use crate::coordinator::screening::ScreeningRule;
 use crate::data::loader::PromptSource;
 use crate::data::tasks::TaskInstance;
 use crate::metrics::InferenceCounters;
 use crate::policy::{GenRequest, RolloutEngine};
+use crate::predictor::{Predictor, PredictorConfig};
 use crate::rl::update::PromptGroup;
 
 /// Strategy selector (CLI / config name).
@@ -32,16 +40,29 @@ pub enum CurriculumKind {
     Speed,
     /// Algorithm 1 without §4.3's pre-fetching/buffering (ablation).
     SpeedNaive,
+    /// SPEED behind the learned difficulty pre-screen.
+    PredictiveSpeed,
     VarianceMax,
 }
 
 impl CurriculumKind {
+    /// Every valid kind, in CLI-listing order.
+    pub const ALL: [CurriculumKind; 6] = [
+        CurriculumKind::Uniform,
+        CurriculumKind::DapoFilter,
+        CurriculumKind::Speed,
+        CurriculumKind::SpeedNaive,
+        CurriculumKind::PredictiveSpeed,
+        CurriculumKind::VarianceMax,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             CurriculumKind::Uniform => "uniform",
             CurriculumKind::DapoFilter => "dapo-filter",
             CurriculumKind::Speed => "speed",
             CurriculumKind::SpeedNaive => "speed-naive",
+            CurriculumKind::PredictiveSpeed => "predictive-speed",
             CurriculumKind::VarianceMax => "variance-max",
         }
     }
@@ -52,9 +73,19 @@ impl CurriculumKind {
             "dapo-filter" | "dapo" => Some(CurriculumKind::DapoFilter),
             "speed" => Some(CurriculumKind::Speed),
             "speed-naive" | "naive" => Some(CurriculumKind::SpeedNaive),
+            "predictive-speed" | "predictive" => Some(CurriculumKind::PredictiveSpeed),
             "variance-max" | "varmax" => Some(CurriculumKind::VarianceMax),
             _ => None,
         }
+    }
+
+    /// [`parse`](Self::parse) with an error that lists every valid name —
+    /// what the CLI and config loader surface for a typo'd `--curriculum`.
+    pub fn parse_or_err(s: &str) -> Result<CurriculumKind> {
+        CurriculumKind::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = CurriculumKind::ALL.iter().map(|k| k.name()).collect();
+            anyhow!("unknown curriculum '{s}' (valid: {})", names.join(", "))
+        })
     }
 }
 
@@ -107,9 +138,11 @@ pub trait Curriculum {
     }
 }
 
-/// Everything needed to build a curriculum instance — `Copy`, so pipelined
-/// rollout workers can each construct their own inside the worker thread.
-#[derive(Clone, Copy, Debug)]
+/// Everything needed to build a curriculum instance — cheap to `Clone`, so
+/// pipelined rollout workers can each construct their own inside the worker
+/// thread (the `predictor` handle is an `Arc`: all instances built from one
+/// spec share a single difficulty store).
+#[derive(Clone, Debug)]
 pub struct CurriculumSpec {
     pub kind: CurriculumKind,
     pub rule: ScreeningRule,
@@ -117,10 +150,21 @@ pub struct CurriculumSpec {
     pub pool_factor: usize,
     /// SPEED sampling-buffer capacity (groups; `usize::MAX` = unbounded).
     pub buffer_cap: usize,
+    /// Shared difficulty predictor; required by `PredictiveSpeed` (a fresh
+    /// private one is created if absent), ignored by every other kind.
+    pub predictor: Option<Arc<Predictor>>,
 }
 
 impl CurriculumSpec {
     pub fn build(&self) -> Box<dyn Curriculum> {
+        if self.kind == CurriculumKind::PredictiveSpeed {
+            let predictor = self.predictor.clone().unwrap_or_else(|| {
+                Arc::new(Predictor::new(self.rule, PredictorConfig::default()))
+            });
+            return Box::new(
+                PredictiveSpeed::new(self.rule, predictor).with_buffer_cap(self.buffer_cap),
+            );
+        }
         make_configured(self.kind, self.rule, self.pool_factor, self.buffer_cap)
     }
 }
@@ -132,7 +176,9 @@ pub fn make(kind: CurriculumKind, rule: ScreeningRule, pool_factor: usize) -> Bo
     make_configured(kind, rule, pool_factor, usize::MAX)
 }
 
-/// [`make`] with an explicit SPEED sampling-buffer capacity.
+/// [`make`] with an explicit SPEED sampling-buffer capacity. A
+/// `PredictiveSpeed` built this way owns a private default predictor; runs
+/// that share the store across workers go through [`CurriculumSpec`].
 pub fn make_configured(
     kind: CurriculumKind,
     rule: ScreeningRule,
@@ -146,6 +192,10 @@ pub fn make_configured(
         CurriculumKind::SpeedNaive => {
             Box::new(crate::coordinator::naive::SpeedNaive::new(rule))
         }
+        CurriculumKind::PredictiveSpeed => Box::new(
+            PredictiveSpeed::new(rule, Arc::new(Predictor::new(rule, PredictorConfig::default())))
+                .with_buffer_cap(buffer_cap),
+        ),
         CurriculumKind::VarianceMax => {
             Box::new(VarianceMax { n_total: rule.n_total(), pool_factor })
         }
@@ -254,6 +304,10 @@ impl Curriculum for DapoFilter {
 
 /// The paper's method: two-phase inference with pre-fetching and a sampling
 /// buffer.
+///
+/// KEEP IN SYNC with [`crate::coordinator::predictive::PredictiveSpeed`],
+/// which mirrors this loop (plus a pre-screen gate); changes here must be
+/// mirrored there or the `skip_confidence = 1.0` equivalence rail breaks.
 pub struct Speed {
     pub rule: ScreeningRule,
     pending: std::collections::VecDeque<crate::coordinator::batcher::PendingContinuation>,
@@ -403,5 +457,41 @@ impl Curriculum for VarianceMax {
 
     fn kind(&self) -> CurriculumKind {
         CurriculumKind::VarianceMax
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_all_kinds() {
+        for kind in CurriculumKind::ALL {
+            assert_eq!(CurriculumKind::parse(kind.name()), Some(kind));
+            assert_eq!(CurriculumKind::parse_or_err(kind.name()).unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn parse_error_lists_every_valid_name() {
+        let err = CurriculumKind::parse_or_err("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"));
+        for kind in CurriculumKind::ALL {
+            assert!(err.contains(kind.name()), "error must list '{}': {err}", kind.name());
+        }
+    }
+
+    #[test]
+    fn spec_builds_every_kind() {
+        for kind in CurriculumKind::ALL {
+            let spec = CurriculumSpec {
+                kind,
+                rule: ScreeningRule::new(4, 8),
+                pool_factor: 2,
+                buffer_cap: usize::MAX,
+                predictor: None,
+            };
+            assert_eq!(spec.build().kind(), kind);
+        }
     }
 }

@@ -11,6 +11,10 @@
 //!                    fixed-shape inference call (§4.3)
 //! * [`curriculum`] — strategy trait: `Uniform` (vanilla), `DapoFilter`,
 //!                    `Speed` (Alg. 2), `VarianceMax` (Foster–Foerster)
+//! * [`predictive`] — `PredictiveSpeed`: SPEED behind the learned
+//!                    difficulty pre-screen ([`crate::predictor`]) that
+//!                    skips confidently-uninformative prompts before any
+//!                    rollout is spent
 //! * [`trainer`]    — the serial reference loop: inference → verify →
 //!                    select → update, with per-phase wall-clock accounting
 //! * [`pipeline`]   — the pipelined loop: K rollout workers overlap
@@ -22,6 +26,7 @@ pub mod naive;
 pub mod buffer;
 pub mod curriculum;
 pub mod pipeline;
+pub mod predictive;
 pub mod screening;
 pub mod trainer;
 

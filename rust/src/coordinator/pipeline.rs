@@ -136,6 +136,10 @@ impl PipelinedTrainer {
         let pool = ThreadPool::new(self.pipeline.workers);
         for w in 0..self.pipeline.workers {
             let engine = policy.fork_engine(w as u64);
+            // Each worker builds its own curriculum from a spec clone; the
+            // clones share `Arc` state (e.g. the difficulty predictor's
+            // store), so observations merge run-wide.
+            let spec = spec.clone();
             let shared = Arc::clone(&shared);
             let counters = Arc::clone(&counters);
             let weights = Arc::clone(&weights);
@@ -212,7 +216,8 @@ impl PipelinedTrainer {
             // included — compute spent, not compute consumed); the
             // wall-clock win of overlapping shows up in real steps/sec
             // (bench_micro), not in this virtual total.
-            let inference_s = counters.snapshot().cost_s;
+            let counter_snap = counters.snapshot();
+            let inference_s = counter_snap.cost_s;
             let time_s = inference_s + update_s;
             let stats = shared.stats();
             record.steps.push(StepRecord {
@@ -227,6 +232,9 @@ impl PipelinedTrainer {
                 prompts_consumed: loader.lock().unwrap().consumed(),
                 buffer_len: stats.len,
                 mean_staleness: stats.mean_staleness,
+                prompts_skipped: counter_snap.prompts_skipped,
+                rollouts_saved: counter_snap.rollouts_saved,
+                predictor_brier: counter_snap.predictor_brier(),
             });
 
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {

@@ -1,0 +1,229 @@
+//! The `predictive-speed` curriculum: SPEED's Algorithm 2 with a learned
+//! pre-screen in front of the screening phase.
+//!
+//! Identical to [`crate::coordinator::curriculum::Speed`] — unified
+//! continuation + screening calls through the pre-fetch batcher, sampling
+//! buffer, backlog throttle — except that every candidate prompt is first
+//! priced by the shared [`Predictor`]. When the posterior predictive puts
+//! `skip_confidence` mass on screening *rejecting* the prompt, the
+//! `N_init` screening rollouts are not spent at all: the prompt is dropped
+//! before inference, the saved rows are counted, and the loop pulls the
+//! next candidate. Confident skips are re-measured with probability
+//! `explore_rate` (plus an unconditional safety valve after a long skip
+//! run), and every realized screening outcome is scored against the
+//! forecast that gated it (Brier + skip-decision confusion counts in
+//! [`crate::metrics::InferenceCounters`]).
+//!
+//! With `skip_confidence = 1.0` the predictor never fires and this
+//! curriculum reproduces `Speed`'s batch stream exactly (the equivalence
+//! rail asserted in `rust/tests/predictor_sim.rs`).
+//!
+//! KEEP IN SYNC with [`Speed::collect_batch`]: the loop below deliberately
+//! mirrors the reference implementation line for line (backlog throttle,
+//! plan/route structure, continuation merge) rather than threading predictor
+//! hooks through `Speed` — the reference path stays hook-free, at the price
+//! that a change to either loop must be mirrored in the other or the
+//! `skip_confidence = 1.0` equivalence rail breaks (the test above catches
+//! divergence).
+//!
+//! [`Speed::collect_batch`]: crate::coordinator::curriculum::Speed
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{plan_call, PendingContinuation, Purpose};
+use crate::coordinator::buffer::SamplingBuffer;
+use crate::coordinator::curriculum::{Curriculum, CurriculumKind, StepContext};
+use crate::coordinator::screening::ScreeningRule;
+use crate::predictor::{Decision, Prediction, Predictor};
+use crate::rl::update::PromptGroup;
+use crate::util::rng::Rng;
+
+/// Safety valve: after this many *consecutive* skips within one prompt
+/// request, the next candidate is screened unconditionally, so a
+/// miscalibrated predictor (or a dataset the model has fully saturated)
+/// cannot stall the supply loop.
+const MAX_CONSECUTIVE_SKIPS: usize = 512;
+
+/// A forecast issued when a screening request entered the call plan; popped
+/// in request order when the rollouts come back and scored against the
+/// realized accept/reject decision.
+struct Ticket {
+    prediction: Prediction,
+}
+
+pub struct PredictiveSpeed {
+    pub rule: ScreeningRule,
+    predictor: Arc<Predictor>,
+    pending: VecDeque<PendingContinuation>,
+    buffer: SamplingBuffer,
+    /// Cap on (buffer + pending) in units of training batches before
+    /// screening pauses; bounds off-policy staleness (as in `Speed`).
+    pub backlog_batches: usize,
+    /// Exploration stream; consumed only when the skip rule fires, so with
+    /// skipping disabled the curriculum is RNG-silent.
+    rng: Rng,
+}
+
+impl PredictiveSpeed {
+    pub fn new(rule: ScreeningRule, predictor: Arc<Predictor>) -> PredictiveSpeed {
+        let rng = Rng::new(predictor.instance_seed() ^ 0x9d1c_7a5e_55ed_5e1f);
+        PredictiveSpeed {
+            rule,
+            predictor,
+            pending: VecDeque::new(),
+            buffer: SamplingBuffer::new(),
+            backlog_batches: 4,
+            rng,
+        }
+    }
+
+    /// Bound the sampling buffer (oldest-first eviction past `cap` groups).
+    pub fn with_buffer_cap(mut self, cap: usize) -> PredictiveSpeed {
+        self.buffer = SamplingBuffer::new().with_max_len(cap);
+        self
+    }
+
+    /// The shared difficulty predictor (one per run; all workers' instances
+    /// observe into it).
+    pub fn predictor(&self) -> &Arc<Predictor> {
+        &self.predictor
+    }
+}
+
+impl Curriculum for PredictiveSpeed {
+    fn collect_batch(
+        &mut self,
+        ctx: &mut StepContext<'_>,
+        batch_size: usize,
+    ) -> Result<Vec<PromptGroup>> {
+        loop {
+            if let Some(batch) = self.buffer.take_batch(batch_size, ctx.train_step) {
+                return Ok(batch);
+            }
+            let backlog = self.buffer.len() + self.pending.len();
+            let screening_on = backlog < self.backlog_batches * batch_size;
+            let capacity = ctx.engine.rollout_capacity();
+            let rule = self.rule;
+            let n_init = rule.n_init as u64;
+            let mut tickets: VecDeque<Ticket> = VecDeque::new();
+            let plan = {
+                let pending = &mut self.pending;
+                let predictor = &self.predictor;
+                let rng = &mut self.rng;
+                let prompts = &mut *ctx.prompts;
+                let counters = &mut *ctx.counters;
+                let tickets = &mut tickets;
+                plan_call(
+                    pending,
+                    // The pre-screen: pull candidates until one is worth
+                    // spending N_init rollouts on.
+                    || {
+                        let mut skip_run = 0usize;
+                        loop {
+                            let (idx, task) = prompts.next_prompt();
+                            let decision = predictor.decide(&task, rng);
+                            let prediction = match decision {
+                                Decision::Skip(_) if skip_run < MAX_CONSECUTIVE_SKIPS => {
+                                    skip_run += 1;
+                                    counters.prompts_skipped += 1;
+                                    counters.rollouts_saved += n_init;
+                                    continue;
+                                }
+                                // Safety valve: forced re-measure.
+                                Decision::Skip(p) | Decision::Explore(p) => {
+                                    counters.prompts_explored += 1;
+                                    p
+                                }
+                                Decision::Screen(p) => p,
+                            };
+                            tickets.push_back(Ticket { prediction });
+                            return (idx, task);
+                        }
+                    },
+                    &rule,
+                    capacity,
+                    if screening_on { usize::MAX } else { 0 },
+                )
+            };
+            anyhow::ensure!(
+                !plan.requests.is_empty(),
+                "predictive-speed planned an empty call (capacity {capacity}, N_init {}, N_cont {})",
+                self.rule.n_init,
+                self.rule.n_cont
+            );
+            let res = ctx.run_call(&plan.requests)?;
+
+            let mut cont_iter = plan.continuations.into_iter();
+            for ((req, purpose), rollouts) in
+                plan.requests.into_iter().zip(plan.purposes).zip(res.groups)
+            {
+                match purpose {
+                    Purpose::Screen => {
+                        ctx.counters.prompts_screened += 1;
+                        let rewards: Vec<f32> = rollouts.iter().map(|r| r.reward).collect();
+                        let accepted = self.rule.qualified(&rewards);
+                        // Score the forecast that let this prompt through:
+                        // Brier on the acceptance probability, and the
+                        // skip-decision confusion counts (positive class =
+                        // "the skip rule would have fired").
+                        let ticket = tickets.pop_front().expect("one ticket per screening row");
+                        let err =
+                            ticket.prediction.accept_prob - if accepted { 1.0 } else { 0.0 };
+                        ctx.counters.brier_sum += err * err;
+                        ctx.counters.brier_n += 1;
+                        match (ticket.prediction.would_skip, !accepted) {
+                            (true, true) => ctx.counters.pred_tp += 1,
+                            (true, false) => ctx.counters.pred_fp += 1,
+                            (false, true) => ctx.counters.pred_fn += 1,
+                            (false, false) => ctx.counters.pred_tn += 1,
+                        }
+                        self.predictor.observe_screening(&req.task, &rewards);
+                        if accepted {
+                            ctx.counters.prompts_accepted += 1;
+                            self.pending.push_back(PendingContinuation {
+                                prompt_idx: req.prompt_idx,
+                                task: req.task,
+                                screening: rollouts,
+                                born_step: ctx.train_step,
+                            });
+                        }
+                    }
+                    Purpose::Continue => {
+                        let pend = cont_iter.next().expect("continuation bookkeeping");
+                        let cont_rewards: Vec<f32> =
+                            rollouts.iter().map(|r| r.reward).collect();
+                        // Continuation rows (and with them the whole
+                        // training group) feed the posterior too.
+                        self.predictor.observe_rollouts(&req.task, &cont_rewards);
+                        let mut all = pend.screening;
+                        all.extend(rollouts);
+                        debug_assert_eq!(all.len(), self.rule.n_total());
+                        self.buffer.push(
+                            PromptGroup {
+                                prompt_idx: req.prompt_idx,
+                                task: req.task,
+                                rollouts: all,
+                            },
+                            pend.born_step,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn kind(&self) -> CurriculumKind {
+        CurriculumKind::PredictiveSpeed
+    }
+
+    fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    fn mean_staleness(&self) -> f64 {
+        self.buffer.mean_staleness()
+    }
+}

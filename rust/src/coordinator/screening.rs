@@ -71,6 +71,36 @@ mod tests {
     }
 
     #[test]
+    fn acceptance_probability_boundaries_under_strict_band() {
+        // p = 0 and p = 1 are exactly the uninformative extremes: every
+        // realized screening slice is uniform, so the default strict band
+        // must reject with certainty — for any split.
+        for n_init in [1usize, 2, 4, 8, 50] {
+            let rule = ScreeningRule::new(n_init, 16);
+            assert_eq!(rule.acceptance_probability(0.0), 0.0, "p=0, n_init={n_init}");
+            assert_eq!(rule.acceptance_probability(1.0), 0.0, "p=1, n_init={n_init}");
+        }
+    }
+
+    #[test]
+    fn n_init_one_never_qualifies_under_strict_band() {
+        // With a single screening rollout the realized pass rate is 0 or 1,
+        // both outside the strict (0, 1) band: acceptance is identically 0.
+        let rule = ScreeningRule::new(1, 16);
+        assert!(!rule.qualified(&[0.0]));
+        assert!(!rule.qualified(&[1.0]));
+        for p in [0.0, 0.1, 0.5, 0.9, 1.0] {
+            assert_eq!(rule.acceptance_probability(p), 0.0, "p={p}");
+        }
+        // A non-strict band makes n_init = 1 usable again: rates {0, 1}
+        // fall inside (-eps, 1+eps)-style wide bands.
+        let wide = ScreeningRule::new(1, 16).with_thresholds(-0.5, 1.5);
+        assert!(wide.qualified(&[0.0]));
+        assert!(wide.qualified(&[1.0]));
+        assert!((wide.acceptance_probability(0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn acceptance_probability_consistent_with_qualified() {
         // Monte-Carlo frequency of `qualified` must match the closed form.
         check("screening-acceptance-mc", 10, |rng| {

@@ -165,6 +165,9 @@ impl Trainer {
                 prompts_consumed: loader.consumed(),
                 buffer_len: curriculum.buffered(),
                 mean_staleness: curriculum.mean_staleness(),
+                prompts_skipped: counters.prompts_skipped,
+                rollouts_saved: counters.rollouts_saved,
+                predictor_brier: counters.predictor_brier(),
             });
 
             // ---- periodic evaluation (excluded from training time) ----

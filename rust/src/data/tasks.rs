@@ -52,7 +52,24 @@ impl TaskFamily {
             TaskFamily::Compare => "compare",
         }
     }
+
+    /// Stable position in [`ALL_FAMILIES`] (the one-hot feature index).
+    pub fn index(&self) -> usize {
+        match self {
+            TaskFamily::Add => 0,
+            TaskFamily::Sub => 1,
+            TaskFamily::Mul => 2,
+            TaskFamily::Mod => 3,
+            TaskFamily::Chain => 4,
+            TaskFamily::Count => 5,
+            TaskFamily::Compare => 6,
+        }
+    }
 }
+
+/// Length of [`TaskInstance::features`]: bias + family one-hot + level +
+/// level² + prompt length.
+pub const N_TASK_FEATURES: usize = 1 + ALL_FAMILIES.len() + 2 + 1;
 
 /// One training/eval prompt with its verified ground truth.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -66,6 +83,38 @@ pub struct TaskInstance {
 impl TaskInstance {
     pub fn answer_text(&self) -> String {
         self.answer.to_string()
+    }
+
+    /// Stable prompt identity: an FNV-1a hash of family, level, and prompt
+    /// text. The same instance re-drawn in a later epoch (or by another
+    /// rollout worker) maps to the same key, which is what lets the
+    /// difficulty predictor accumulate evidence per prompt across a run.
+    pub fn identity(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        };
+        eat(self.family.index() as u8);
+        eat(self.level);
+        for b in self.prompt.bytes() {
+            eat(b);
+        }
+        h
+    }
+
+    /// Feature vector for the difficulty predictor's generalizing model:
+    /// bias, family one-hot, normalized level, level², prompt length. All
+    /// components are in `[0, 1]` so online logistic updates stay tame.
+    pub fn features(&self) -> [f64; N_TASK_FEATURES] {
+        let mut x = [0.0f64; N_TASK_FEATURES];
+        x[0] = 1.0;
+        x[1 + self.family.index()] = 1.0;
+        let level = self.level as f64 / MAX_LEVEL as f64;
+        x[1 + ALL_FAMILIES.len()] = level;
+        x[1 + ALL_FAMILIES.len() + 1] = level * level;
+        x[1 + ALL_FAMILIES.len() + 2] = (self.prompt.len() as f64 / 24.0).min(1.0);
+        x
     }
 }
 
@@ -276,5 +325,36 @@ mod tests {
         let a = generate(&mut Rng::new(7), TaskFamily::Chain, 5, 24);
         let b = generate(&mut Rng::new(7), TaskFamily::Chain, 5, 24);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn identity_stable_and_collision_free_in_practice() {
+        // Equal instances hash equal; distinct prompts hash distinct over a
+        // realistic sample.
+        let a = generate(&mut Rng::new(7), TaskFamily::Chain, 5, 24);
+        let b = generate(&mut Rng::new(7), TaskFamily::Chain, 5, 24);
+        assert_eq!(a.identity(), b.identity());
+        let mut seen = std::collections::HashSet::new();
+        let mut rng = Rng::new(8);
+        for i in 0..2000 {
+            let t = generate(&mut rng, ALL_FAMILIES[i % 7], (i % 10 + 1) as u8, 24);
+            seen.insert(t.identity());
+        }
+        assert!(seen.len() > 1900, "identity collisions: {} unique of 2000", seen.len());
+    }
+
+    #[test]
+    fn features_are_bounded_and_family_one_hot() {
+        check("task-features", 100, |rng| {
+            let fam = ALL_FAMILIES[rng.range_usize(0, 6)];
+            let level = rng.range_i64(1, 10) as u8;
+            let t = generate(rng, fam, level, 24);
+            let x = t.features();
+            prop_assert!(x.iter().all(|v| (0.0..=1.0).contains(v)), "feature out of range");
+            prop_assert!(x[0] == 1.0, "bias");
+            let hot: f64 = x[1..8].iter().sum();
+            prop_assert!(hot == 1.0 && x[1 + t.family.index()] == 1.0, "one-hot");
+            Ok(())
+        });
     }
 }

@@ -3,11 +3,12 @@
 //! every entrypoint exercises the same code path.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{RunConfig, Substrate};
-use crate::coordinator::curriculum::{Curriculum, CurriculumSpec};
+use crate::coordinator::curriculum::{Curriculum, CurriculumKind, CurriculumSpec};
 use crate::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
 use crate::coordinator::screening::ScreeningRule;
 use crate::coordinator::trainer::{EvalSet, Trainer, TrainerConfig};
@@ -17,6 +18,7 @@ use crate::metrics::RunRecord;
 use crate::policy::real::RealPolicy;
 use crate::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
 use crate::policy::{Policy, RolloutEngine};
+use crate::predictor::{Predictor, PredictorConfig};
 use crate::rl::algo::AlgoConfig;
 
 /// Benchmark-seed shared by all runs so curves are comparable.
@@ -30,10 +32,26 @@ pub fn screening_rule(cfg: &RunConfig) -> ScreeningRule {
     ScreeningRule::new(cfg.n_init, cfg.n_cont).with_thresholds(cfg.p_low, cfg.p_high)
 }
 
+pub fn predictor_config(cfg: &RunConfig) -> PredictorConfig {
+    PredictorConfig {
+        discount: cfg.predictor_discount,
+        skip_confidence: cfg.skip_confidence,
+        explore_rate: cfg.explore_rate,
+        seed: cfg.seed,
+        ..PredictorConfig::default()
+    }
+}
+
 pub fn curriculum_spec(cfg: &RunConfig) -> CurriculumSpec {
+    let rule = screening_rule(cfg);
+    // One shared difficulty predictor per run: every rollout worker's
+    // predictive-speed instance observes into (and prices from) the same
+    // store.
+    let predictor = (cfg.curriculum == CurriculumKind::PredictiveSpeed)
+        .then(|| Arc::new(Predictor::new(rule, predictor_config(cfg))));
     CurriculumSpec {
         kind: cfg.curriculum,
-        rule: screening_rule(cfg),
+        rule,
         pool_factor: cfg.pool_factor,
         // In pipelined runs `buffer_cap` bounds the SHARED buffer (see
         // `pipeline_config`), so worker-internal SPEED buffers keep the
@@ -45,6 +63,7 @@ pub fn curriculum_spec(cfg: &RunConfig) -> CurriculumSpec {
         } else {
             cfg.buffer_cap.max(cfg.batch_size)
         },
+        predictor,
     }
 }
 
@@ -101,6 +120,7 @@ pub fn trainer_config(cfg: &RunConfig) -> TrainerConfig {
 /// trainer.
 pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
     anyhow::ensure!(cfg.substrate == Substrate::Sim, "config is not a sim run");
+    cfg.validate()?;
     let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, MAX_PROMPT_CHARS);
     let mut policy = build_sim_policy(cfg)?;
     let evals = benchmark_suite(BENCH_SEED, MAX_PROMPT_CHARS);
@@ -127,6 +147,7 @@ fn check_capacity(cfg: &RunConfig, rollout_capacity: usize) -> Result<()> {
 /// Run a config on the real PJRT substrate (artifacts required).
 pub fn run_real(cfg: &RunConfig, artifacts_dir: &Path) -> Result<(RunRecord, RealPolicy)> {
     anyhow::ensure!(cfg.substrate == Substrate::Real, "config is not a real run");
+    cfg.validate()?;
     let mut policy = RealPolicy::load(artifacts_dir, cfg.seed)?;
     let max_chars = policy.runtime.manifest.plan.prompt_len.min(MAX_PROMPT_CHARS + 4);
     let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, max_chars);
@@ -142,6 +163,7 @@ pub fn run_with_policy(
     dataset: &Dataset,
     evals: &[EvalSet],
 ) -> Result<RunRecord> {
+    cfg.validate()?;
     check_capacity(cfg, policy.rollout_capacity())?;
     if cfg.pipeline {
         // Only `run_sim` has a forkable engine; everything else (the real
@@ -226,11 +248,37 @@ mod tests {
             CurriculumKind::Uniform,
             CurriculumKind::DapoFilter,
             CurriculumKind::Speed,
+            CurriculumKind::PredictiveSpeed,
             CurriculumKind::VarianceMax,
         ] {
             let mut cfg = RunConfig::default();
             cfg.curriculum = kind;
             assert_eq!(build_curriculum(&cfg).kind(), kind);
         }
+    }
+
+    #[test]
+    fn predictive_spec_carries_a_shared_predictor() {
+        let mut cfg = RunConfig::default();
+        cfg.curriculum = CurriculumKind::PredictiveSpeed;
+        let spec = curriculum_spec(&cfg);
+        assert!(spec.predictor.is_some());
+        // Clones (one per rollout worker) share the same store.
+        let clone = spec.clone();
+        assert!(Arc::ptr_eq(
+            spec.predictor.as_ref().unwrap(),
+            clone.predictor.as_ref().unwrap()
+        ));
+        // Non-predictive kinds carry none.
+        let plain = curriculum_spec(&RunConfig::default());
+        assert!(plain.predictor.is_none());
+    }
+
+    #[test]
+    fn run_sim_rejects_invalid_config() {
+        let mut cfg = RunConfig::default();
+        cfg.max_steps = 1;
+        cfg.n_init = 0;
+        assert!(run_sim(&cfg).is_err());
     }
 }

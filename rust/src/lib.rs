@@ -25,6 +25,11 @@
 //!                     curricula, sampling buffers, pre-fetch batcher, the
 //!                     serial trainer, and the pipelined trainer that
 //!                     overlaps inference with updates (DESIGN.md §5).
+//! * [`predictor`]   — online difficulty prediction: discounted Beta
+//!                     posteriors per prompt identity + a generalizing
+//!                     feature model, consulted by the `predictive-speed`
+//!                     curriculum to skip screening before any rollout is
+//!                     spent.
 //! * [`policy`]      — the two-trait policy layer: `RolloutEngine`
 //!                     (generate + evaluate) and `Trainable` (update +
 //!                     weight versioning), implemented by the PJRT
@@ -44,6 +49,7 @@ pub mod data;
 pub mod eval;
 pub mod metrics;
 pub mod policy;
+pub mod predictor;
 pub mod rl;
 pub mod runtime;
 pub mod util;

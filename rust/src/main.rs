@@ -105,6 +105,17 @@ fn print_summary(record: &RunRecord, model: &str) {
     if record.mean_staleness() > 0.0 {
         println!("mean buffer staleness {:.2} steps", record.mean_staleness());
     }
+    if record.counters.prompts_skipped > 0 || record.counters.brier_n > 0 {
+        println!(
+            "predictor: skipped {} prompts ({} rollouts saved, {} explored)  brier {:.3}  precision {:.2}  recall {:.2}",
+            record.counters.prompts_skipped,
+            record.counters.rollouts_saved,
+            record.counters.prompts_explored,
+            record.counters.predictor_brier(),
+            record.counters.predictor_precision(),
+            record.counters.predictor_recall(),
+        );
+    }
     for (bench, target) in driver::paper_targets(model) {
         let acc = record.final_accuracy(bench).unwrap_or(0.0);
         match record.time_to_target(bench, target) {
@@ -120,7 +131,11 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("config", None, "JSON RunConfig file (overrides preset)")
         .opt("model", Some("sim-7b"), "sim-1.5b | sim-7b")
         .opt("dataset", Some("dapo17k"), "numina | dapo17k | deepscale")
-        .opt("curriculum", Some("speed"), "uniform | dapo | speed | variance-max")
+        .opt(
+            "curriculum",
+            Some("speed"),
+            "uniform | dapo | speed | speed-naive | predictive-speed | variance-max",
+        )
         .opt("algo", Some("rloo"), "rloo | dapo | grpo | reinforce | reinforce++")
         .opt("n-init", Some("8"), "screening rollouts per prompt")
         .opt("n-cont", Some("16"), "continuation rollouts per prompt")
@@ -130,6 +145,21 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("eval-every", Some("10"), "evaluation cadence (steps)")
         .opt("workers", None, "rollout workers for the pipelined coordinator")
         .opt("buffer-cap", None, "shared buffer capacity in groups (0 = auto)")
+        .opt(
+            "skip-confidence",
+            None,
+            "predictive-speed: skip screening at this predicted-reject confidence (1.0 = never)",
+        )
+        .opt(
+            "predictor-discount",
+            None,
+            "predictive-speed: per-rollout discount of the difficulty posterior",
+        )
+        .opt(
+            "explore-rate",
+            None,
+            "predictive-speed: probability of screening a confidently-skipped prompt anyway",
+        )
         .flag("pipeline", "overlap inference with updates (producer/consumer)");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
@@ -143,8 +173,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         c.model = args.string("model")?;
         c.dataset = DatasetKind::parse(args.get("dataset").unwrap()).context("dataset")?;
         c.dataset_size = c.dataset.default_size().min(40_000);
-        c.curriculum =
-            CurriculumKind::parse(args.get("curriculum").unwrap()).context("curriculum")?;
+        c.curriculum = CurriculumKind::parse_or_err(args.get("curriculum").unwrap())?;
         c.algo = BaseAlgo::parse(args.get("algo").unwrap()).context("algo")?;
         c.label = format!(
             "{}-{}-{}-{}",
@@ -169,6 +198,15 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     if let Some(c) = args.get("buffer-cap") {
         cfg.buffer_cap = c.parse::<usize>().context("--buffer-cap")?;
     }
+    if let Some(v) = args.get("skip-confidence") {
+        cfg.skip_confidence = v.parse::<f64>().context("--skip-confidence")?;
+    }
+    if let Some(v) = args.get("predictor-discount") {
+        cfg.predictor_discount = v.parse::<f64>().context("--predictor-discount")?;
+    }
+    if let Some(v) = args.get("explore-rate") {
+        cfg.explore_rate = v.parse::<f64>().context("--explore-rate")?;
+    }
     if args.has_flag("pipeline") || cfg.workers > 1 {
         cfg.pipeline = true;
     }
@@ -191,10 +229,29 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("checkpoint", None, "start from checkpoint dir:tag (e.g. ckpts:warm)")
         .opt("dataset", Some("dapo17k"), "numina | dapo17k | deepscale")
         .opt("dataset-size", Some("4000"), "training prompts to generate")
-        .opt("curriculum", Some("speed"), "uniform | dapo | speed | variance-max")
+        .opt(
+            "curriculum",
+            Some("speed"),
+            "uniform | dapo | speed | speed-naive | predictive-speed | variance-max",
+        )
         .opt("algo", Some("rloo"), "rloo | dapo | grpo | reinforce | reinforce++")
         .opt("n-init", Some("4"), "screening rollouts")
         .opt("n-cont", Some("12"), "continuation rollouts")
+        .opt(
+            "skip-confidence",
+            None,
+            "predictive-speed: skip screening at this predicted-reject confidence (1.0 = never)",
+        )
+        .opt(
+            "predictor-discount",
+            None,
+            "predictive-speed: per-rollout discount of the difficulty posterior",
+        )
+        .opt(
+            "explore-rate",
+            None,
+            "predictive-speed: probability of screening a confidently-skipped prompt anyway",
+        )
         .opt("batch-size", Some("4"), "training batch size B (prompts)")
         .opt("lr", Some("3e-4"), "learning rate")
         .opt("steps", Some("50"), "max training steps")
@@ -207,8 +264,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     cfg.substrate = Substrate::Real;
     cfg.dataset = DatasetKind::parse(args.get("dataset").unwrap()).context("dataset")?;
     cfg.dataset_size = args.usize("dataset-size")?;
-    cfg.curriculum =
-        CurriculumKind::parse(args.get("curriculum").unwrap()).context("curriculum")?;
+    cfg.curriculum = CurriculumKind::parse_or_err(args.get("curriculum").unwrap())?;
     cfg.algo = BaseAlgo::parse(args.get("algo").unwrap()).context("algo")?;
     cfg.n_init = args.usize("n-init")?;
     cfg.n_cont = args.usize("n-cont")?;
@@ -217,6 +273,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     cfg.max_steps = args.usize("steps")?;
     cfg.eval_every = args.usize("eval-every")?;
     cfg.seed = args.u64("seed")?;
+    if let Some(v) = args.get("skip-confidence") {
+        cfg.skip_confidence = v.parse::<f64>().context("--skip-confidence")?;
+    }
+    if let Some(v) = args.get("predictor-discount") {
+        cfg.predictor_discount = v.parse::<f64>().context("--predictor-discount")?;
+    }
+    if let Some(v) = args.get("explore-rate") {
+        cfg.explore_rate = v.parse::<f64>().context("--explore-rate")?;
+    }
     cfg.label = format!("real-{}-{}", cfg.curriculum.name(), cfg.algo.name());
 
     let dir = artifacts_arg(&args);

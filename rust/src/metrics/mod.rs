@@ -23,6 +23,25 @@ pub struct InferenceCounters {
     /// Real seconds the rollout engine spent inside collection calls
     /// (pipelined runs only; the engine-utilization numerator).
     pub busy_s: f64,
+    /// Prompts the difficulty predictor dropped before screening
+    /// (predictive-speed only).
+    pub prompts_skipped: u64,
+    /// Confident skips that were screened anyway (exploration + the
+    /// forced-screen safety valve) — the predictor's ground-truth feed.
+    pub prompts_explored: u64,
+    /// Screening rollouts *not* spent thanks to skips (`N_init` per skip).
+    pub rollouts_saved: u64,
+    /// Skip-decision confusion counts over prompts actually screened
+    /// (positive class = "the skip rule would have fired"; realized
+    /// positive = screening rejected the prompt).
+    pub pred_tp: u64,
+    pub pred_fp: u64,
+    pub pred_tn: u64,
+    pub pred_fn: u64,
+    /// Sum of squared forecast errors (predicted acceptance probability vs
+    /// realized accept/reject) over `brier_n` screened prompts.
+    pub brier_sum: f64,
+    pub brier_n: u64,
 }
 
 impl InferenceCounters {
@@ -42,6 +61,38 @@ impl InferenceCounters {
         }
     }
 
+    /// Mean Brier score of the predictor's acceptance forecasts (0 =
+    /// perfect; 0.25 = always saying 0.5; 0 when nothing was scored).
+    pub fn predictor_brier(&self) -> f64 {
+        if self.brier_n == 0 {
+            0.0
+        } else {
+            self.brier_sum / self.brier_n as f64
+        }
+    }
+
+    /// Of the screened prompts the skip rule *would* have dropped, the
+    /// fraction screening really rejected (0 when none were measured).
+    pub fn predictor_precision(&self) -> f64 {
+        let denom = self.pred_tp + self.pred_fp;
+        if denom == 0 {
+            0.0
+        } else {
+            self.pred_tp as f64 / denom as f64
+        }
+    }
+
+    /// Of the screened prompts screening rejected, the fraction the skip
+    /// rule would have dropped (0 when none were measured).
+    pub fn predictor_recall(&self) -> f64 {
+        let denom = self.pred_tp + self.pred_fn;
+        if denom == 0 {
+            0.0
+        } else {
+            self.pred_tp as f64 / denom as f64
+        }
+    }
+
     /// Accumulate another counter set (per-worker totals -> run totals).
     pub fn merge(&mut self, o: &InferenceCounters) {
         self.calls += o.calls;
@@ -52,6 +103,15 @@ impl InferenceCounters {
         self.prompts_accepted += o.prompts_accepted;
         self.rollouts += o.rollouts;
         self.busy_s += o.busy_s;
+        self.prompts_skipped += o.prompts_skipped;
+        self.prompts_explored += o.prompts_explored;
+        self.rollouts_saved += o.rollouts_saved;
+        self.pred_tp += o.pred_tp;
+        self.pred_fp += o.pred_fp;
+        self.pred_tn += o.pred_tn;
+        self.pred_fn += o.pred_fn;
+        self.brier_sum += o.brier_sum;
+        self.brier_n += o.brier_n;
     }
 }
 
@@ -68,6 +128,15 @@ pub struct AtomicCounters {
     prompts_accepted: AtomicU64,
     rollouts: AtomicU64,
     busy_s_bits: AtomicU64,
+    prompts_skipped: AtomicU64,
+    prompts_explored: AtomicU64,
+    rollouts_saved: AtomicU64,
+    pred_tp: AtomicU64,
+    pred_fp: AtomicU64,
+    pred_tn: AtomicU64,
+    pred_fn: AtomicU64,
+    brier_sum_bits: AtomicU64,
+    brier_n: AtomicU64,
 }
 
 fn atomic_f64_add(cell: &AtomicU64, delta: f64) {
@@ -91,6 +160,15 @@ impl AtomicCounters {
         self.rollouts.fetch_add(c.rollouts, Ordering::Relaxed);
         atomic_f64_add(&self.cost_s_bits, c.cost_s);
         atomic_f64_add(&self.busy_s_bits, c.busy_s);
+        self.prompts_skipped.fetch_add(c.prompts_skipped, Ordering::Relaxed);
+        self.prompts_explored.fetch_add(c.prompts_explored, Ordering::Relaxed);
+        self.rollouts_saved.fetch_add(c.rollouts_saved, Ordering::Relaxed);
+        self.pred_tp.fetch_add(c.pred_tp, Ordering::Relaxed);
+        self.pred_fp.fetch_add(c.pred_fp, Ordering::Relaxed);
+        self.pred_tn.fetch_add(c.pred_tn, Ordering::Relaxed);
+        self.pred_fn.fetch_add(c.pred_fn, Ordering::Relaxed);
+        atomic_f64_add(&self.brier_sum_bits, c.brier_sum);
+        self.brier_n.fetch_add(c.brier_n, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> InferenceCounters {
@@ -103,6 +181,15 @@ impl AtomicCounters {
             prompts_accepted: self.prompts_accepted.load(Ordering::Relaxed),
             rollouts: self.rollouts.load(Ordering::Relaxed),
             busy_s: f64::from_bits(self.busy_s_bits.load(Ordering::Relaxed)),
+            prompts_skipped: self.prompts_skipped.load(Ordering::Relaxed),
+            prompts_explored: self.prompts_explored.load(Ordering::Relaxed),
+            rollouts_saved: self.rollouts_saved.load(Ordering::Relaxed),
+            pred_tp: self.pred_tp.load(Ordering::Relaxed),
+            pred_fp: self.pred_fp.load(Ordering::Relaxed),
+            pred_tn: self.pred_tn.load(Ordering::Relaxed),
+            pred_fn: self.pred_fn.load(Ordering::Relaxed),
+            brier_sum: f64::from_bits(self.brier_sum_bits.load(Ordering::Relaxed)),
+            brier_n: self.brier_n.load(Ordering::Relaxed),
         }
     }
 }
@@ -129,6 +216,14 @@ pub struct StepRecord {
     /// Mean steps-in-buffer over groups consumed so far (off-policy
     /// staleness diagnostic, §4.3; 0 for unbuffered curricula).
     pub mean_staleness: f64,
+    /// Prompts the difficulty predictor has skipped so far (cumulative;
+    /// predictive-speed only, 0 otherwise).
+    pub prompts_skipped: u64,
+    /// Screening rollouts saved by those skips so far (cumulative).
+    pub rollouts_saved: u64,
+    /// Mean Brier score of the predictor's acceptance forecasts so far (0
+    /// when nothing has been scored).
+    pub predictor_brier: f64,
 }
 
 impl StepRecord {
@@ -145,6 +240,9 @@ impl StepRecord {
             ("prompts_consumed", Json::num(self.prompts_consumed as f64)),
             ("buffer_len", Json::num(self.buffer_len as f64)),
             ("mean_staleness", Json::num(self.mean_staleness)),
+            ("prompts_skipped", Json::num(self.prompts_skipped as f64)),
+            ("rollouts_saved", Json::num(self.rollouts_saved as f64)),
+            ("predictor_brier", Json::num(self.predictor_brier)),
         ])
     }
 }
@@ -230,6 +328,12 @@ impl RunRecord {
                     ("prompts_accepted", Json::num(self.counters.prompts_accepted as f64)),
                     ("rollouts", Json::num(self.counters.rollouts as f64)),
                     ("busy_s", Json::num(self.counters.busy_s)),
+                    ("prompts_skipped", Json::num(self.counters.prompts_skipped as f64)),
+                    ("prompts_explored", Json::num(self.counters.prompts_explored as f64)),
+                    ("rollouts_saved", Json::num(self.counters.rollouts_saved as f64)),
+                    ("predictor_brier", Json::num(self.counters.predictor_brier())),
+                    ("predictor_precision", Json::num(self.counters.predictor_precision())),
+                    ("predictor_recall", Json::num(self.counters.predictor_recall())),
                 ]),
             ),
         ])
@@ -296,8 +400,26 @@ mod tests {
             prompts_accepted: 2,
             rollouts: 7,
             busy_s: 0.25,
+            prompts_skipped: 5,
+            prompts_explored: 1,
+            rollouts_saved: 40,
+            pred_tp: 3,
+            pred_fp: 1,
+            pred_tn: 2,
+            pred_fn: 1,
+            brier_sum: 0.375,
+            brier_n: 7,
         };
-        let b = InferenceCounters { calls: 10, cost_s: 1.5, busy_s: 0.75, ..Default::default() };
+        let b = InferenceCounters {
+            calls: 10,
+            cost_s: 1.5,
+            busy_s: 0.75,
+            prompts_skipped: 2,
+            rollouts_saved: 16,
+            brier_sum: 0.125,
+            brier_n: 3,
+            ..Default::default()
+        };
         let mut merged = a;
         merged.merge(&b);
 
@@ -314,5 +436,34 @@ mod tests {
         assert_eq!(merged.rollouts, snap.rollouts);
         assert!((merged.cost_s - snap.cost_s).abs() < 1e-12);
         assert!((merged.busy_s - snap.busy_s).abs() < 1e-12);
+        assert_eq!(merged.prompts_skipped, snap.prompts_skipped);
+        assert_eq!(merged.prompts_explored, snap.prompts_explored);
+        assert_eq!(merged.rollouts_saved, snap.rollouts_saved);
+        assert_eq!(merged.pred_tp, snap.pred_tp);
+        assert_eq!(merged.pred_fp, snap.pred_fp);
+        assert_eq!(merged.pred_tn, snap.pred_tn);
+        assert_eq!(merged.pred_fn, snap.pred_fn);
+        assert!((merged.brier_sum - snap.brier_sum).abs() < 1e-12);
+        assert_eq!(merged.brier_n, snap.brier_n);
+    }
+
+    #[test]
+    fn predictor_quality_ratios() {
+        let c = InferenceCounters {
+            pred_tp: 6,
+            pred_fp: 2,
+            pred_tn: 5,
+            pred_fn: 3,
+            brier_sum: 1.6,
+            brier_n: 16,
+            ..Default::default()
+        };
+        assert!((c.predictor_precision() - 0.75).abs() < 1e-12);
+        assert!((c.predictor_recall() - 6.0 / 9.0).abs() < 1e-12);
+        assert!((c.predictor_brier() - 0.1).abs() < 1e-12);
+        let empty = InferenceCounters::default();
+        assert_eq!(empty.predictor_precision(), 0.0);
+        assert_eq!(empty.predictor_recall(), 0.0);
+        assert_eq!(empty.predictor_brier(), 0.0);
     }
 }

@@ -103,6 +103,9 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 prompts_consumed: f("prompts_consumed") as usize,
                 buffer_len: f("buffer_len") as usize,
                 mean_staleness: f("mean_staleness"),
+                prompts_skipped: f("prompts_skipped") as u64,
+                rollouts_saved: f("rollouts_saved") as u64,
+                predictor_brier: f("predictor_brier"),
             });
         }
     }

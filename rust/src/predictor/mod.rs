@@ -1,0 +1,337 @@
+//! Online difficulty prediction: learned pass-rate estimation that
+//! pre-screens prompts *before any rollout is spent*.
+//!
+//! SPEED's screening pass (paper §4.1) is cheap relative to continuation,
+//! but it still burns `N_init` rollouts on every sampled prompt — including
+//! the large mass whose pass rate is predictably 0 or 1 (Fig. 2's zero-pass
+//! tail). Following the online difficulty-prediction line (arXiv
+//! 2507.04632, 2602.01970), this subsystem routes that compute away before
+//! inference happens:
+//!
+//! * [`store`]     — [`DifficultyStore`]: a discounted Beta posterior over
+//!                   pass rate per prompt identity, updated from every
+//!                   rollout observation and shared across pipelined
+//!                   rollout workers (`Arc` + sharded locks).
+//! * [`model`]     — [`FeatureModel`]: an online logistic model over task
+//!                   features, trained from realized screening outcomes, so
+//!                   *unseen* prompts are priced too (no cold-start
+//!                   blindness).
+//! * [`posterior`] — the discounted Beta algebra and the Beta-Binomial
+//!                   posterior-predictive acceptance probability the skip
+//!                   rule evaluates.
+//! * [`Predictor`] — the facade the `predictive-speed` curriculum consults:
+//!                   `decide` (skip / screen / explore), `observe_*`
+//!                   (posterior + feature-model updates), `predict`.
+//!
+//! Skip rule: a prompt is skipped when the predicted probability that
+//! screening would *reject* it reaches `skip_confidence` — i.e. the
+//! posterior predictive puts at least that much mass on realized pass
+//! rates outside the informative band `(p_low, p_high)`. Confidently
+//! skipped prompts are still re-measured with probability `explore_rate`
+//! so a wrong belief cannot lock a prompt out forever. `skip_confidence =
+//! 1.0` disables skipping entirely, reproducing the plain `speed`
+//! curriculum's batch stream exactly (asserted in
+//! `rust/tests/predictor_sim.rs`).
+
+pub mod model;
+pub mod posterior;
+pub mod store;
+
+pub use model::FeatureModel;
+pub use posterior::{beta_binomial_pmf, predicted_acceptance, BetaPosterior};
+pub use store::DifficultyStore;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::screening::ScreeningRule;
+use crate::data::tasks::TaskInstance;
+use crate::rl::advantage::pass_rate;
+use crate::util::rng::Rng;
+
+/// Knobs of the difficulty predictor (the `--skip-confidence`,
+/// `--predictor-discount`, `--explore-rate` CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct PredictorConfig {
+    /// Per-rollout exponential discount of the Beta pseudo-counts; bounds
+    /// the effective sample size at `1/(1-discount)` so estimates track the
+    /// policy's moving pass rate.
+    pub discount: f64,
+    /// Skip screening when the predicted rejection probability reaches this
+    /// threshold. `1.0` = never skip (the plain SPEED semantics).
+    pub skip_confidence: f64,
+    /// Probability of screening a confidently-skipped prompt anyway.
+    pub explore_rate: f64,
+    /// Pseudo-observations the feature model's prediction contributes to an
+    /// identity's pseudo-posterior (small: a few real observations dominate
+    /// it).
+    pub prior_strength: f64,
+    /// Seed for the exploration streams handed to curriculum instances.
+    pub seed: u64,
+}
+
+impl Default for PredictorConfig {
+    fn default() -> Self {
+        PredictorConfig {
+            discount: 0.97,
+            skip_confidence: 0.9,
+            explore_rate: 0.05,
+            prior_strength: 2.0,
+            seed: 0,
+        }
+    }
+}
+
+/// One pass-rate forecast for a task.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    /// Blended posterior mean pass rate (feature-model prior + identity
+    /// observations).
+    pub mean: f64,
+    /// Discounted per-identity evidence behind the forecast (0 = unseen,
+    /// priced by the feature model alone).
+    pub weight: f64,
+    /// Posterior-predictive probability that screening would accept.
+    pub accept_prob: f64,
+    /// Whether the skip rule fires for this forecast.
+    pub would_skip: bool,
+}
+
+/// What the curriculum should do with the next candidate prompt.
+#[derive(Clone, Copy, Debug)]
+pub enum Decision {
+    /// Confidently uninformative: spend zero rollouts, move on.
+    Skip(Prediction),
+    /// Screen normally (the skip rule did not fire).
+    Screen(Prediction),
+    /// The skip rule fired but the exploration coin chose to re-measure.
+    Explore(Prediction),
+}
+
+/// The shared difficulty predictor: one instance per run, `Arc`-shared by
+/// every rollout worker's `predictive-speed` curriculum.
+#[derive(Debug)]
+pub struct Predictor {
+    cfg: PredictorConfig,
+    rule: ScreeningRule,
+    store: DifficultyStore,
+    model: Mutex<FeatureModel>,
+    /// Counter handing each curriculum instance an exploration RNG stream.
+    instances: AtomicU64,
+}
+
+impl Predictor {
+    pub fn new(rule: ScreeningRule, cfg: PredictorConfig) -> Predictor {
+        Predictor {
+            cfg,
+            rule,
+            store: DifficultyStore::new(),
+            model: Mutex::new(FeatureModel::default()),
+            instances: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &PredictorConfig {
+        &self.cfg
+    }
+
+    /// A fresh deterministic exploration-stream seed (stream 0 for the
+    /// first — serial — curriculum instance).
+    pub fn instance_seed(&self) -> u64 {
+        let stream = self.instances.fetch_add(1, Ordering::Relaxed);
+        self.cfg.seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+
+    /// Forecast a task's screening outcome: per-identity discounted
+    /// observations, with the feature model contributing `prior_strength`
+    /// pseudo-observations (all an unseen prompt has).
+    pub fn predict(&self, task: &TaskInstance) -> Prediction {
+        let obs = self.store.counts(task.identity()).unwrap_or_default();
+        let m = self.model.lock().unwrap().predict(task).clamp(1e-3, 1.0 - 1e-3);
+        let a = self.cfg.prior_strength * m + obs.alpha;
+        let b = self.cfg.prior_strength * (1.0 - m) + obs.beta;
+        let accept_prob =
+            predicted_acceptance(self.rule.n_init, a, b, self.rule.p_low, self.rule.p_high);
+        // `skip_confidence = 1.0` disables skipping outright (even when the
+        // predicted rejection probability is exactly 1, as with a band no
+        // realized rate can satisfy).
+        let would_skip =
+            self.cfg.skip_confidence < 1.0 && 1.0 - accept_prob >= self.cfg.skip_confidence;
+        Prediction { mean: a / (a + b), weight: obs.weight(), accept_prob, would_skip }
+    }
+
+    /// The routing decision for one candidate prompt. Draws from `rng` only
+    /// when the skip rule fires (so with skipping disabled the caller's RNG
+    /// stream is untouched — the exact-equivalence rail).
+    pub fn decide(&self, task: &TaskInstance, rng: &mut Rng) -> Decision {
+        let pred = self.predict(task);
+        if pred.would_skip {
+            if rng.f64() < self.cfg.explore_rate {
+                Decision::Explore(pred)
+            } else {
+                Decision::Skip(pred)
+            }
+        } else {
+            Decision::Screen(pred)
+        }
+    }
+
+    /// Fold a realized screening outcome in: updates the identity's
+    /// posterior *and* the generalizing feature model.
+    pub fn observe_screening(&self, task: &TaskInstance, rewards: &[f32]) {
+        self.store.observe(task.identity(), rewards, self.cfg.discount);
+        self.model.lock().unwrap().update(task, pass_rate(rewards));
+    }
+
+    /// Fold non-screening rollouts in (continuation rows; any training
+    /// group's rollouts): posterior only — the feature model trains on
+    /// screening outcomes, whose distribution matches what it forecasts.
+    pub fn observe_rollouts(&self, task: &TaskInstance, rewards: &[f32]) {
+        self.store.observe(task.identity(), rewards, self.cfg.discount);
+    }
+
+    /// Prompt identities tracked so far.
+    pub fn tracked(&self) -> usize {
+        self.store.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{Dataset, DatasetKind};
+    use crate::data::tasks::{generate, TaskFamily};
+    use crate::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
+
+    fn rule() -> ScreeningRule {
+        ScreeningRule::new(8, 16)
+    }
+
+    #[test]
+    fn posterior_calibrates_to_sim_ground_truth() {
+        // Observe rollouts drawn from SimPolicy's true pass rates; the
+        // per-identity posterior mean must land near the ground truth.
+        let sim = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 1);
+        let data = Dataset::training(DatasetKind::SynthDapo17k, 200, 3, 20);
+        let predictor = Predictor::new(rule(), PredictorConfig::default());
+        let mut rng = Rng::new(2);
+        for _ in 0..3 {
+            for t in &data.instances {
+                let p = sim.pass_prob(t);
+                let rewards: Vec<f32> =
+                    (0..8).map(|_| if rng.bool(p) { 1.0 } else { 0.0 }).collect();
+                predictor.observe_screening(t, &rewards);
+            }
+        }
+        let mae: f64 = data
+            .instances
+            .iter()
+            .map(|t| (predictor.predict(t).mean - sim.pass_prob(t)).abs())
+            .sum::<f64>()
+            / data.len() as f64;
+        assert!(mae < 0.15, "posterior MAE vs sim ground truth: {mae:.3}");
+        assert_eq!(predictor.tracked(), data.len());
+    }
+
+    #[test]
+    fn feature_model_prices_unseen_prompts() {
+        // Train only on observed screening outcomes, then predict *fresh*
+        // instances (empty posteriors): the generalizing model must rank
+        // trivial far above hopeless.
+        let sim = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 4);
+        let data = Dataset::training(DatasetKind::SynthDapo17k, 600, 5, 20);
+        let predictor = Predictor::new(rule(), PredictorConfig::default());
+        let mut rng = Rng::new(6);
+        for t in &data.instances {
+            let p = sim.pass_prob(t);
+            let rewards: Vec<f32> =
+                (0..8).map(|_| if rng.bool(p) { 1.0 } else { 0.0 }).collect();
+            predictor.observe_screening(t, &rewards);
+        }
+        let mut fresh = Rng::new(77);
+        let mean_pred = |fam: TaskFamily, level: u8, rng: &mut Rng| -> f64 {
+            (0..40).map(|_| predictor.predict(&generate(rng, fam, level, 20)).mean).sum::<f64>()
+                / 40.0
+        };
+        let easy = mean_pred(TaskFamily::Add, 1, &mut fresh);
+        let hard = mean_pred(TaskFamily::Mul, 10, &mut fresh);
+        assert!(
+            easy > hard + 0.15,
+            "unseen-prompt pricing failed to separate: easy {easy:.3} vs hard {hard:.3}"
+        );
+    }
+
+    #[test]
+    fn skip_rule_fires_on_confident_extremes_only() {
+        let predictor = Predictor::new(rule(), PredictorConfig::default());
+        let mut rng = Rng::new(9);
+        let t = generate(&mut rng, TaskFamily::Add, 3, 20);
+        // Cold start (no observations, neutral model): must screen — the
+        // prior alone can never reach skip confidence.
+        assert!(!predictor.predict(&t).would_skip);
+        // Teach the predictor what screening would: level-10 Mul never
+        // passes. Both the feature model and the visited identities learn.
+        for _ in 0..400 {
+            let hard = generate(&mut rng, TaskFamily::Mul, 10, 20);
+            predictor.observe_screening(&hard, &[0.0; 8]);
+        }
+        // A *fresh* hopeless-looking prompt now skips before any rollout.
+        let fresh = generate(&mut rng, TaskFamily::Mul, 10, 20);
+        let pred = predictor.predict(&fresh);
+        assert!(pred.weight == 0.0, "fresh instance must be unseen");
+        assert!(
+            pred.would_skip,
+            "model-priced hopeless prompt should skip (accept_prob {:.3})",
+            pred.accept_prob
+        );
+        // A mixed observation history keeps a prompt informative: screen.
+        let t2 = generate(&mut rng, TaskFamily::Add, 3, 20);
+        predictor.observe_rollouts(&t2, &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+        assert!(!predictor.predict(&t2).would_skip);
+    }
+
+    #[test]
+    fn skip_confidence_one_never_skips() {
+        let mut cfg = PredictorConfig::default();
+        cfg.skip_confidence = 1.0;
+        // Even with a degenerate rule that rejects every realized rate
+        // (n_init = 1 under the strict default band), 1.0 must not skip.
+        let predictor = Predictor::new(ScreeningRule::new(1, 8), cfg);
+        let mut rng = Rng::new(11);
+        let t = generate(&mut rng, TaskFamily::Mul, 10, 20);
+        for _ in 0..8 {
+            predictor.observe_rollouts(&t, &[0.0; 8]);
+        }
+        let pred = predictor.predict(&t);
+        assert!(pred.accept_prob == 0.0, "n_init=1 strict band accepts nothing");
+        assert!(!pred.would_skip);
+        match predictor.decide(&t, &mut rng) {
+            Decision::Screen(_) => {}
+            other => panic!("expected Screen, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decide_consumes_rng_only_when_skipping() {
+        let predictor = Predictor::new(rule(), PredictorConfig::default());
+        let mut rng = Rng::new(13);
+        let mut rng_clone = rng.clone();
+        let mut t_rng = Rng::new(14);
+        let t = generate(&mut t_rng, TaskFamily::Add, 3, 20);
+        match predictor.decide(&t, &mut rng) {
+            Decision::Screen(_) => {}
+            other => panic!("neutral predictor must screen, got {other:?}"),
+        }
+        // The RNG stream must be untouched by a Screen decision.
+        assert_eq!(rng.next_u64(), rng_clone.next_u64());
+    }
+
+    #[test]
+    fn instance_seeds_are_distinct_streams() {
+        let predictor = Predictor::new(rule(), PredictorConfig::default());
+        let s0 = predictor.instance_seed();
+        let s1 = predictor.instance_seed();
+        assert_ne!(s0, s1);
+        assert_eq!(s0, predictor.config().seed); // stream 0 = the base seed
+    }
+}

@@ -1,0 +1,107 @@
+//! Generalizing difficulty model: online logistic regression from task
+//! features (family one-hot, difficulty level, prompt length) to pass rate.
+//!
+//! The per-identity Beta posteriors in [`super::store`] are exact but
+//! cold-start blind: a prompt seen for the first time has no counts. This
+//! model prices *unseen* prompts by what screening revealed about prompts
+//! with similar features — the role of the small predictive models in
+//! arXiv 2507.04632 / 2602.01970 — and its prediction seeds the pseudo-
+//! posterior the skip rule evaluates.
+//!
+//! Training signal: every realized screening outcome `(features, k/N_init)`.
+//! Fractional targets are fine for the logistic cross-entropy gradient.
+
+use crate::data::tasks::{TaskInstance, N_TASK_FEATURES};
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Online logistic regression over [`TaskInstance::features`].
+#[derive(Clone, Debug)]
+pub struct FeatureModel {
+    w: [f64; N_TASK_FEATURES],
+    lr: f64,
+    updates: u64,
+}
+
+impl Default for FeatureModel {
+    fn default() -> Self {
+        FeatureModel::new(0.1)
+    }
+}
+
+impl FeatureModel {
+    pub fn new(lr: f64) -> FeatureModel {
+        FeatureModel { w: [0.0; N_TASK_FEATURES], lr, updates: 0 }
+    }
+
+    /// Predicted pass rate for a task (0.5 before any update: the zero
+    /// weight vector is the neutral prior).
+    pub fn predict(&self, task: &TaskInstance) -> f64 {
+        let x = task.features();
+        let z: f64 = self.w.iter().zip(x.iter()).map(|(w, x)| w * x).sum();
+        sigmoid(z)
+    }
+
+    /// One SGD step on the cross-entropy loss toward `target` (a realized
+    /// pass rate in `[0, 1]`).
+    pub fn update(&mut self, task: &TaskInstance, target: f64) {
+        let target = target.clamp(0.0, 1.0);
+        let x = task.features();
+        let p = self.predict(task);
+        let g = p - target;
+        for (w, xi) in self.w.iter_mut().zip(x.iter()) {
+            *w -= self.lr * g * xi;
+        }
+        self.updates += 1;
+    }
+
+    /// Screening outcomes consumed so far.
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{generate, TaskFamily};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn neutral_before_training() {
+        let m = FeatureModel::default();
+        let mut rng = Rng::new(0);
+        let t = generate(&mut rng, TaskFamily::Add, 5, 20);
+        assert!((m.predict(&t) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn learns_level_monotone_pass_rates() {
+        // Ground truth: easy levels pass, hard levels fail. After online
+        // training the model must rank fresh unseen instances correctly.
+        let mut m = FeatureModel::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..4000 {
+            let level = rng.range_i64(1, 10) as u8;
+            let fam = crate::data::tasks::ALL_FAMILIES[rng.range_usize(0, 6)];
+            let t = generate(&mut rng, fam, level, 20);
+            let target = if level <= 3 { 0.95 } else if level >= 8 { 0.05 } else { 0.5 };
+            m.update(&t, target);
+        }
+        let mut fresh = Rng::new(99);
+        let easy: f64 = (0..50)
+            .map(|_| m.predict(&generate(&mut fresh, TaskFamily::Add, 1, 20)))
+            .sum::<f64>()
+            / 50.0;
+        let hard: f64 = (0..50)
+            .map(|_| m.predict(&generate(&mut fresh, TaskFamily::Mul, 10, 20)))
+            .sum::<f64>()
+            / 50.0;
+        assert!(easy > 0.7, "easy prediction {easy:.3}");
+        assert!(hard < 0.3, "hard prediction {hard:.3}");
+        assert!(m.updates() == 4000);
+    }
+}

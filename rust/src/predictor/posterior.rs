@@ -1,0 +1,163 @@
+//! Discounted Beta posterior over a prompt's pass rate.
+//!
+//! Each tracked prompt identity carries pseudo-counts `(alpha, beta)` of
+//! observed passes/fails. Before every new observation the counts are
+//! multiplied by a discount `gamma < 1`, so the effective sample size is
+//! bounded by `1 / (1 - gamma)` and the estimate tracks the *current*
+//! policy's pass rate as training moves it (the non-stationarity that makes
+//! a plain running average go stale).
+//!
+//! The quantity the skip rule needs is not the posterior mean but the
+//! predictive probability that SPEED's screening test would accept the
+//! prompt: `P(p_low < K/N_init < p_high)` with `K ~ BetaBinomial(N_init,
+//! alpha, beta)` — the exact posterior-predictive analogue of
+//! [`crate::rl::theory::acceptance_probability`], which it converges to as
+//! the posterior concentrates.
+
+/// Observed (discounted) pass/fail pseudo-counts for one prompt identity.
+/// Prior mass is *not* stored here; [`super::Predictor`] blends the feature
+/// model's prior in at prediction time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BetaPosterior {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl BetaPosterior {
+    /// Fold one batch of binary rewards in, discounting once per rollout so
+    /// a batch update equals the same rollouts observed one at a time.
+    pub fn observe(&mut self, rewards: &[f32], discount: f64) {
+        for r in rewards {
+            self.alpha *= discount;
+            self.beta *= discount;
+            if *r > 0.5 {
+                self.alpha += 1.0;
+            } else {
+                self.beta += 1.0;
+            }
+        }
+    }
+
+    /// Discounted observation count (the posterior's evidence weight).
+    pub fn weight(&self) -> f64 {
+        self.alpha + self.beta
+    }
+}
+
+/// Beta-Binomial pmf vector `P(K = k)` for `k = 0..=n`, `K` the number of
+/// successes in `n` draws with success probability `p ~ Beta(a, b)`.
+/// Computed by the stable pmf ratio recurrence (no gamma functions needed):
+/// `P(0) = prod_i (b+i)/(a+b+i)`, then
+/// `P(k+1) = P(k) * (n-k)/(k+1) * (a+k)/(b+n-k-1)`.
+pub fn beta_binomial_pmf(n: usize, a: f64, b: f64) -> Vec<f64> {
+    debug_assert!(a > 0.0 && b > 0.0, "Beta parameters must be positive");
+    let nf = n as f64;
+    let mut pmf = Vec::with_capacity(n + 1);
+    let mut p0 = 1.0f64;
+    for i in 0..n {
+        p0 *= (b + i as f64) / (a + b + i as f64);
+    }
+    pmf.push(p0);
+    let mut pk = p0;
+    for k in 0..n {
+        let kf = k as f64;
+        pk *= (nf - kf) / (kf + 1.0) * (a + kf) / (b + nf - kf - 1.0);
+        pmf.push(pk);
+    }
+    pmf
+}
+
+/// Posterior-predictive probability that the screening test accepts: the
+/// Beta-Binomial mass on realized pass rates strictly inside `(p_low,
+/// p_high)` — the same accepted-`k` set as
+/// [`crate::rl::theory::acceptance_probability`], with the point pass rate
+/// replaced by a `Beta(a, b)` belief.
+pub fn predicted_acceptance(n_init: usize, a: f64, b: f64, p_low: f64, p_high: f64) -> f64 {
+    let pmf = beta_binomial_pmf(n_init, a, b);
+    let mut acc = 0.0;
+    for (k, mass) in pmf.iter().enumerate() {
+        let rate = k as f64 / n_init as f64;
+        if rate > p_low && rate < p_high {
+            acc += mass;
+        }
+    }
+    acc.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::theory::acceptance_probability;
+    use crate::util::proptest::check;
+    use crate::prop_assert;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        check("beta-binomial-normalized", 40, |rng| {
+            let n = rng.range_usize(1, 32);
+            let a = 0.05 + 20.0 * rng.f64();
+            let b = 0.05 + 20.0 * rng.f64();
+            let pmf = beta_binomial_pmf(n, a, b);
+            let sum: f64 = pmf.iter().sum();
+            prop_assert!((sum - 1.0).abs() < 1e-9, "pmf sum {sum} (n={n}, a={a}, b={b})");
+            prop_assert!(pmf.iter().all(|p| *p >= 0.0), "negative mass");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concentrated_posterior_recovers_point_acceptance() {
+        // As alpha+beta -> inf at fixed mean p, the posterior predictive
+        // must converge to the closed-form binomial acceptance probability.
+        for &(n_init, p) in &[(8usize, 0.5f64), (8, 0.1), (4, 0.9), (6, 0.02)] {
+            let scale = 5e6;
+            let got = predicted_acceptance(n_init, scale * p, scale * (1.0 - p), 0.0, 1.0);
+            let want = acceptance_probability(n_init, p, 0.0, 1.0);
+            assert!(
+                (got - want).abs() < 5e-3,
+                "n={n_init} p={p}: predictive {got} vs point {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn discounting_bounds_evidence_and_tracks_shifts() {
+        let mut post = BetaPosterior::default();
+        let discount = 0.9;
+        // Long run of passes: weight saturates at 1/(1-gamma) = 10.
+        let passes = vec![1.0f32; 200];
+        post.observe(&passes, discount);
+        assert!(post.weight() <= 1.0 / (1.0 - discount) + 1e-9, "weight {}", post.weight());
+        let mean_before = post.alpha / post.weight();
+        assert!(mean_before > 0.95, "mean {mean_before}");
+        // The pass rate collapses (policy drifted): 20 fails must drag the
+        // mean most of the way down despite the long pass history.
+        let fails = vec![0.0f32; 20];
+        post.observe(&fails, discount);
+        let mean_after = post.alpha / post.weight();
+        assert!(mean_after < 0.15, "discounted posterior too sticky: {mean_after}");
+    }
+
+    #[test]
+    fn batch_observe_matches_sequential() {
+        let mut a = BetaPosterior::default();
+        let mut b = BetaPosterior::default();
+        let rewards = [1.0f32, 0.0, 1.0, 1.0, 0.0];
+        a.observe(&rewards, 0.95);
+        for r in rewards {
+            b.observe(&[r], 0.95);
+        }
+        assert!((a.alpha - b.alpha).abs() < 1e-12);
+        assert!((a.beta - b.beta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strict_band_rejects_only_the_extremes() {
+        // Default band (0,1): rejection mass = P(K=0) + P(K=n).
+        let (a, b) = (2.0, 3.0);
+        let n = 8;
+        let pmf = beta_binomial_pmf(n, a, b);
+        let accept = predicted_acceptance(n, a, b, 0.0, 1.0);
+        assert!((accept - (1.0 - pmf[0] - pmf[n])).abs() < 1e-12);
+    }
+}

@@ -192,6 +192,7 @@ fn speed_spec() -> CurriculumSpec {
         rule: ScreeningRule::new(4, 8),
         pool_factor: 2,
         buffer_cap: usize::MAX, // worker-internal SPEED buffer: reference semantics
+        predictor: None,
     }
 }
 

@@ -49,6 +49,7 @@ fn run_pipelined(max_steps: usize, seed: u64, workers: usize, enabled: bool) -> 
         rule: ScreeningRule::new(8, 16),
         pool_factor: 4,
         buffer_cap: usize::MAX,
+        predictor: None,
     };
     let trainer = PipelinedTrainer::new(
         scenario_trainer_config(CurriculumKind::Speed, max_steps, seed),
