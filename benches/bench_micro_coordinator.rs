@@ -215,12 +215,20 @@ fn main() {
             let rec = trainer.run(&mut policy, cur.as_mut(), &dataset, &[]).unwrap();
             (t0.elapsed().as_secs_f64(), rec)
         };
-        let run_pipelined = |workers: usize| -> (f64, RunRecord) {
+        // One closure for both pipelined modes so the serial-vs-pipelined-
+        // vs-service comparison can never drift onto different configs.
+        let run_pipelined = |workers: usize, service: bool| -> (f64, RunRecord) {
             let mut policy = mk_policy();
             let trainer = PipelinedTrainer::new(
-                tcfg("pipelined"),
+                tcfg(if service { "pipelined+service" } else { "pipelined" }),
                 AlgoConfig::new(BaseAlgo::Rloo),
-                PipelineConfig { workers, enabled: true, buffer_cap: 4 * batch },
+                PipelineConfig {
+                    workers,
+                    enabled: true,
+                    buffer_cap: 4 * batch,
+                    service,
+                    ..Default::default()
+                },
             );
             let t0 = std::time::Instant::now();
             let rec = trainer.run(&mut policy, spec.clone(), &dataset, &[]).unwrap();
@@ -234,11 +242,11 @@ fn main() {
             steps as f64 / serial_best
         );
         for workers in [1usize, 2, 4, 8] {
-            let _ = run_pipelined(workers); // warmup
+            let _ = run_pipelined(workers, false); // warmup
             let mut best = f64::INFINITY;
             let mut util_of_best = 0.0;
             for _ in 0..3 {
-                let (secs, rec) = run_pipelined(workers);
+                let (secs, rec) = run_pipelined(workers, false);
                 std::hint::black_box(&rec);
                 if secs < best {
                     best = secs;
@@ -250,6 +258,20 @@ fn main() {
                 steps as f64 / best,
                 serial_best / best,
                 100.0 * util_of_best
+            );
+        }
+        // The coalescing service: one engine, K request producers.
+        for workers in [2usize, 4, 8] {
+            let (secs, rec) = run_pipelined(workers, true);
+            let svc = rec.service.expect("service counters on the serviced path");
+            println!(
+                "coordinator service   K={workers}: {:7.1} steps/s ({} calls from {} submissions, \
+                 fill {:.0}%, {:.1} coalesced/call)",
+                steps as f64 / secs,
+                svc.calls,
+                svc.submissions,
+                100.0 * svc.mean_fill(),
+                svc.mean_coalesced()
             );
         }
     }

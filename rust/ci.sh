@@ -12,6 +12,12 @@ cargo build --release --all-targets
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== speed-rl bench (coalescing smoke -> BENCH_coalesce.json) =="
+# Machine-readable perf trajectory: serial vs pipelined vs
+# pipelined+service on the sim scenario (mean fill %, engine calls,
+# steps/sec). Reuses the release build from the first step.
+cargo run --release --bin speed-rl -- bench --steps 6 --workers 4 --out BENCH_coalesce.json
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

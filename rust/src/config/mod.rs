@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::curriculum::CurriculumKind;
 use crate::data::dataset::DatasetKind;
+use crate::policy::service::ServiceConfig;
 use crate::rl::algo::BaseAlgo;
 use crate::util::json::Json;
 
@@ -65,10 +66,25 @@ pub struct RunConfig {
     /// predictive-speed: probability of screening a confidently-skipped
     /// prompt anyway (keeps skip decisions falsifiable).
     pub explore_rate: f64,
+    /// Route inference through the shared coalescing service (one engine
+    /// behind a submission queue; DESIGN.md §8). With `pipeline` on, all K
+    /// workers submit to it; with `pipeline` off, the serial loop delegates
+    /// through it with one producer (the bit-for-bit equivalence rail).
+    pub service: bool,
+    /// Service micro-batch deadline: wait at most this long (real ms) for
+    /// more submissions before executing a call.
+    pub coalesce_wait_ms: u64,
+    /// Service fill waterline: dispatch immediately once queued rows reach
+    /// this fraction of engine capacity.
+    pub fill_waterline: f64,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
+        // One source of truth for the scheduler knobs: the service's own
+        // defaults (tests/benches building PipelineConfig directly use
+        // those too, so CLI- and literal-built runs cannot silently drift).
+        let service_cfg = ServiceConfig::default();
         RunConfig {
             label: "run".into(),
             substrate: Substrate::Sim,
@@ -95,6 +111,9 @@ impl Default for RunConfig {
             skip_confidence: 0.9,
             predictor_discount: 0.97,
             explore_rate: 0.05,
+            service: false,
+            coalesce_wait_ms: service_cfg.coalesce_wait_ms,
+            fill_waterline: service_cfg.fill_waterline,
         }
     }
 }
@@ -165,6 +184,13 @@ impl RunConfig {
         if !(0.0..=1.0).contains(&self.explore_rate) {
             bail!("explore_rate must be in [0.0, 1.0] (got {})", self.explore_rate);
         }
+        if !(self.fill_waterline > 0.0 && self.fill_waterline <= 1.0) {
+            bail!(
+                "fill_waterline must be in (0.0, 1.0] (got {}); 1.0 dispatches only full calls \
+                 (the coalesce_wait_ms deadline still bounds waiting)",
+                self.fill_waterline
+            );
+        }
         Ok(())
     }
 
@@ -222,6 +248,9 @@ impl RunConfig {
             ("skip_confidence", Json::num(self.skip_confidence)),
             ("predictor_discount", Json::num(self.predictor_discount)),
             ("explore_rate", Json::num(self.explore_rate)),
+            ("service", Json::Bool(self.service)),
+            ("coalesce_wait_ms", Json::num(self.coalesce_wait_ms as f64)),
+            ("fill_waterline", Json::num(self.fill_waterline)),
         ])
     }
 
@@ -276,8 +305,13 @@ impl RunConfig {
         num_field!("skip_confidence", skip_confidence, f64);
         num_field!("predictor_discount", predictor_discount, f64);
         num_field!("explore_rate", explore_rate, f64);
+        num_field!("coalesce_wait_ms", coalesce_wait_ms, u64);
+        num_field!("fill_waterline", fill_waterline, f64);
         if let Some(v) = j.get("pipeline").and_then(|x| x.as_bool()) {
             cfg.pipeline = v;
+        }
+        if let Some(v) = j.get("service").and_then(|x| x.as_bool()) {
+            cfg.service = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -399,6 +433,26 @@ mod tests {
         assert_eq!(back.skip_confidence, 0.75);
         assert_eq!(back.predictor_discount, 0.99);
         assert_eq!(back.explore_rate, 0.1);
+    }
+
+    #[test]
+    fn service_knobs_roundtrip_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.service = true;
+        cfg.coalesce_wait_ms = 7;
+        cfg.fill_waterline = 0.5;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.service);
+        assert_eq!(back.coalesce_wait_ms, 7);
+        assert_eq!(back.fill_waterline, 0.5);
+        // default stays off
+        assert!(!RunConfig::default().service);
+        let mut bad = RunConfig::default();
+        bad.fill_waterline = 0.0;
+        assert!(bad.validate().unwrap_err().to_string().contains("fill_waterline"));
+        let mut bad = RunConfig::default();
+        bad.fill_waterline = 1.5;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -4,6 +4,15 @@
 //! two-phase scheme into a single engine invocation per cycle instead of
 //! two (and is where SPEED's wall-clock win over naive screening comes
 //! from).
+//!
+//! `capacity` is whatever the engine handle advertises: the full compiled
+//! row count when a worker owns a private engine, or the *submit quantum*
+//! (engine capacity / K) when workers produce requests for the shared
+//! coalescing [`InferenceService`] — the service then merges K such plans
+//! into one maximally-packed engine call, applying this same
+//! continuations-then-screening packing idea across workers.
+//!
+//! [`InferenceService`]: crate::policy::service::InferenceService
 
 use std::collections::VecDeque;
 
@@ -166,6 +175,27 @@ mod tests {
         assert_eq!(plan.n_continue(), 2);
         assert_eq!(plan.n_screen(), 2);
         assert_eq!(pending.len(), 3); // spilled
+    }
+
+    #[test]
+    fn quantum_sized_plans_tile_the_engine_capacity() {
+        // Workers submitting to the coalescing service plan against the
+        // quantum (engine capacity / K): K such plans must always fit one
+        // engine call, whatever mix of continuations/screenings each holds.
+        let mut rng = Rng::new(7);
+        let rule = ScreeningRule::new(8, 16);
+        let (engine_capacity, k) = (384usize, 4usize);
+        let quantum = engine_capacity / k;
+        let mut total = 0usize;
+        for w in 0..k {
+            let mut pending: VecDeque<_> =
+                (0..w).map(|i| pend(&mut rng, i, rule.n_init)).collect();
+            let mut rng2 = Rng::new(w as u64);
+            let plan = plan_call(&mut pending, || (0, task(&mut rng2)), &rule, quantum, usize::MAX);
+            assert!(plan.rows_used <= quantum);
+            total += plan.rows_used;
+        }
+        assert!(total <= engine_capacity, "{k} quantum plans overflow the engine call");
     }
 
     #[test]

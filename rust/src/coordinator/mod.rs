@@ -19,7 +19,10 @@
 //!                    select → update, with per-phase wall-clock accounting
 //! * [`pipeline`]   — the pipelined loop: K rollout workers overlap
 //!                    inference with the learner's updates via a bounded
-//!                    shared buffer and versioned weight handoff
+//!                    shared buffer and versioned weight handoff; with the
+//!                    `service` knob on, all workers submit through the
+//!                    shared coalescing [`crate::policy::service`] instead
+//!                    of owning private engines (DESIGN.md §8)
 
 pub mod batcher;
 pub mod naive;

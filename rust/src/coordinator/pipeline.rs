@@ -30,29 +30,43 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::buffer::SharedBuffer;
 use crate::coordinator::curriculum::{CurriculumSpec, StepContext};
-use crate::coordinator::trainer::{evaluate_all, target_reached, EvalSet, Trainer, TrainerConfig};
+use crate::coordinator::trainer::{
+    evaluate_all, step_rates, target_reached, EvalSet, Trainer, TrainerConfig,
+};
 use crate::data::dataset::Dataset;
 use crate::data::loader::{Loader, SharedSource};
-use crate::metrics::{AtomicCounters, InferenceCounters, RunRecord, StepRecord};
-use crate::policy::{ForkEngine, Policy, WeightSnapshot};
+use crate::metrics::{AtomicCounters, InferenceCounters, RunRecord, ServiceCounters, StepRecord};
+use crate::policy::service::{InferenceService, ServiceConfig};
+use crate::policy::{ForkEngine, Policy, RolloutEngine, WeightSnapshot};
 use crate::rl::algo::AlgoConfig;
 use crate::util::threadpool::ThreadPool;
 
-/// Producer/consumer knobs (the `workers` / `pipeline` / `buffer_cap`
-/// fields of [`crate::config::RunConfig`]).
+/// Producer/consumer knobs (the `workers` / `pipeline` / `buffer_cap` /
+/// `service` fields of [`crate::config::RunConfig`]).
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineConfig {
-    /// Rollout workers K (each owns a forked engine).
+    /// Rollout workers K (each owns a forked engine, or a service handle).
     pub workers: usize,
     /// Off = delegate to the serial [`Trainer`] (the reference semantics).
     pub enabled: bool,
     /// [`SharedBuffer`] capacity in groups (clamped to >= batch size).
     pub buffer_cap: usize,
+    /// Route all workers through ONE coalescing [`InferenceService`]
+    /// instead of K private forked engines (DESIGN.md §8).
+    pub service: bool,
+    /// Scheduler knobs for the service (ignored when `service` is off).
+    pub service_cfg: ServiceConfig,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { workers: 1, enabled: false, buffer_cap: 64 }
+        PipelineConfig {
+            workers: 1,
+            enabled: false,
+            buffer_cap: 64,
+            service: false,
+            service_cfg: ServiceConfig::default(),
+        }
     }
 }
 
@@ -133,9 +147,25 @@ impl PipelinedTrainer {
         let clock = Arc::new(AtomicUsize::new(0));
         let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
 
+        // With the service on, the ONE real engine (fork stream 0) sits
+        // behind the coalescing scheduler and every worker gets a cheap
+        // submit handle advertising capacity / K rows; weights install once
+        // per version at the service instead of K times.
+        let service = self.pipeline.service.then(|| {
+            InferenceService::spawn(
+                policy.fork_engine(0),
+                self.pipeline.service_cfg,
+                self.pipeline.workers,
+                spec.rule.n_total(),
+            )
+        });
+
         let pool = ThreadPool::new(self.pipeline.workers);
         for w in 0..self.pipeline.workers {
-            let engine = policy.fork_engine(w as u64);
+            let engine: Box<dyn RolloutEngine + Send> = match &service {
+                Some(svc) => Box::new(svc.handle()),
+                None => policy.fork_engine(w as u64),
+            };
             // Each worker builds its own curriculum from a spec clone; the
             // clones share `Arc` state (e.g. the difficulty predictor's
             // store), so observations merge run-wide.
@@ -158,13 +188,30 @@ impl PipelinedTrainer {
         }
 
         let mut record = RunRecord { label: self.config.label.clone(), ..Default::default() };
-        let result = self.consume(policy, &shared, &loader, &counters, &weights, &clock, evals, &mut record);
+        let result = self.consume(
+            policy,
+            &shared,
+            &loader,
+            &counters,
+            &weights,
+            &clock,
+            evals,
+            service.as_ref(),
+            &mut record,
+        );
 
         // Shutdown: wake every blocked worker, then join (ThreadPool drop).
+        // The service outlives the pool so workers blocked on tickets are
+        // served (deadline-dispatched) before they observe the closed
+        // buffer and exit; only then is the scheduler closed and joined.
         stop.store(true, Ordering::Relaxed);
         shared.close();
         drop(pool);
         record.counters = counters.snapshot();
+        if let Some(svc) = &service {
+            record.service = Some(svc.stats());
+        }
+        drop(service);
         result?;
         let errs = errors.lock().unwrap();
         if !errs.is_empty() {
@@ -184,12 +231,15 @@ impl PipelinedTrainer {
         weights: &WeightStore,
         clock: &AtomicUsize,
         evals: &[EvalSet],
+        service: Option<&InferenceService>,
         record: &mut RunRecord,
     ) -> Result<()> {
         let b = self.config.batch_size;
         // Step-0 evaluation so every curve starts at the base model.
         evaluate_all(policy, evals, 0, 0.0, record)?;
         let mut update_s = 0.0f64;
+        let mut prev_snap = InferenceCounters::default();
+        let mut prev_svc = ServiceCounters::default();
 
         for step in 0..self.config.max_steps {
             let Some(batch) = shared.pop_batch(b, step, policy.weight_version()) else {
@@ -220,6 +270,27 @@ impl PipelinedTrainer {
             let inference_s = counter_snap.cost_s;
             let time_s = inference_s + update_s;
             let stats = shared.stats();
+            let (step_skip_rate, step_explore_rate) = step_rates(&prev_snap, &counter_snap);
+            prev_snap = counter_snap;
+            // Per-step service deltas (same convention as the skip rates):
+            // cumulative means would blur the warm-up the charts exist for.
+            let (service_calls, service_fill, service_queue_wait_s) =
+                match service.map(|s| s.stats()) {
+                    Some(cur) => {
+                        let d_calls = cur.calls.saturating_sub(prev_svc.calls);
+                        let d_rows = cur.rows_used.saturating_sub(prev_svc.rows_used);
+                        let d_cap = cur.rows_capacity.saturating_sub(prev_svc.rows_capacity);
+                        let d_subs = cur.submissions.saturating_sub(prev_svc.submissions);
+                        let d_wait = cur.queue_wait_s - prev_svc.queue_wait_s;
+                        prev_svc = cur;
+                        (
+                            d_calls,
+                            if d_cap == 0 { 0.0 } else { d_rows as f64 / d_cap as f64 },
+                            if d_subs == 0 { 0.0 } else { d_wait / d_subs as f64 },
+                        )
+                    }
+                    None => (0, 0.0, 0.0),
+                };
             record.steps.push(StepRecord {
                 step,
                 time_s,
@@ -235,6 +306,11 @@ impl PipelinedTrainer {
                 prompts_skipped: counter_snap.prompts_skipped,
                 rollouts_saved: counter_snap.rollouts_saved,
                 predictor_brier: counter_snap.predictor_brier(),
+                step_skip_rate,
+                step_explore_rate,
+                service_calls,
+                service_fill,
+                service_queue_wait_s,
             });
 
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
@@ -313,6 +389,12 @@ fn rollout_worker(
         if engine.serving_version() != weights.version() {
             engine.install(&weights.get());
         }
+        // Stamp groups with the version serving when this collect BEGAN: a
+        // private engine cannot change mid-collect, but behind the shared
+        // service another worker's install advances the advertised version
+        // at any time — reading it after the collect would under-report
+        // the buffer's version-lag staleness.
+        let version = engine.serving_version();
         let born_step = clock.load(Ordering::Relaxed);
         let mut local = InferenceCounters::default();
         let t0 = std::time::Instant::now();
@@ -330,7 +412,6 @@ fn rollout_worker(
         counters.add(&local);
         match collected {
             Ok(groups) => {
-                let version = engine.serving_version();
                 for group in groups {
                     if !shared.push(group, born_step, version) {
                         return; // closed or demand satisfied

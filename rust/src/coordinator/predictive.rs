@@ -37,7 +37,7 @@ use crate::coordinator::batcher::{plan_call, PendingContinuation, Purpose};
 use crate::coordinator::buffer::SamplingBuffer;
 use crate::coordinator::curriculum::{Curriculum, CurriculumKind, StepContext};
 use crate::coordinator::screening::ScreeningRule;
-use crate::predictor::{Decision, Prediction, Predictor};
+use crate::predictor::{Decision, ObservationDelta, Prediction, Predictor};
 use crate::rl::update::PromptGroup;
 use crate::util::rng::Rng;
 
@@ -65,6 +65,11 @@ pub struct PredictiveSpeed {
     /// Exploration stream; consumed only when the skip rule fires, so with
     /// skipping disabled the curriculum is RNG-silent.
     rng: Rng,
+    /// Worker-local pending posterior observations, merged into the shared
+    /// store once per inference call instead of per observed group (the
+    /// sharded lock is taken at most once per shard per flush — mirrors the
+    /// `AtomicCounters` merge; ROADMAP item).
+    delta: ObservationDelta,
 }
 
 impl PredictiveSpeed {
@@ -77,6 +82,7 @@ impl PredictiveSpeed {
             buffer: SamplingBuffer::new(),
             backlog_batches: 4,
             rng,
+            delta: ObservationDelta::default(),
         }
     }
 
@@ -180,7 +186,11 @@ impl Curriculum for PredictiveSpeed {
                             (false, true) => ctx.counters.pred_fn += 1,
                             (false, false) => ctx.counters.pred_tn += 1,
                         }
-                        self.predictor.observe_screening(&req.task, &rewards);
+                        self.predictor.observe_screening_deferred(
+                            &req.task,
+                            &rewards,
+                            &mut self.delta,
+                        );
                         if accepted {
                             ctx.counters.prompts_accepted += 1;
                             self.pending.push_back(PendingContinuation {
@@ -197,7 +207,11 @@ impl Curriculum for PredictiveSpeed {
                             rollouts.iter().map(|r| r.reward).collect();
                         // Continuation rows (and with them the whole
                         // training group) feed the posterior too.
-                        self.predictor.observe_rollouts(&req.task, &cont_rewards);
+                        self.predictor.observe_rollouts_deferred(
+                            &req.task,
+                            &cont_rewards,
+                            &mut self.delta,
+                        );
                         let mut all = pend.screening;
                         all.extend(rollouts);
                         debug_assert_eq!(all.len(), self.rule.n_total());
@@ -212,6 +226,13 @@ impl Curriculum for PredictiveSpeed {
                     }
                 }
             }
+            // One sharded-store merge per call, before the next plan, so
+            // the decisions pricing the next wave see this call's
+            // observations — exactly when the immediate path made them
+            // visible (observations always landed between result
+            // processing and the next plan; predictions never happen
+            // mid-processing).
+            self.predictor.flush(&mut self.delta);
         }
     }
 

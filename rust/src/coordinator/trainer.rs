@@ -77,6 +77,23 @@ pub(crate) fn evaluate_all(
     Ok(())
 }
 
+/// Per-step skip/exploration rates from two cumulative counter snapshots
+/// (ROADMAP item: `StepRecord` carried only cumulative skip counts, so the
+/// report could not show the predictor warming up or drifting). Returns
+/// `(skip_rate, explore_rate)` over the step's deltas: skipped / candidate
+/// prompts drawn, and explored / skip-rule firings; 0 when the
+/// denominator is empty.
+pub(crate) fn step_rates(prev: &InferenceCounters, cur: &InferenceCounters) -> (f64, f64) {
+    let d_skip = cur.prompts_skipped.saturating_sub(prev.prompts_skipped);
+    let d_screen = cur.prompts_screened.saturating_sub(prev.prompts_screened);
+    let d_explore = cur.prompts_explored.saturating_sub(prev.prompts_explored);
+    let candidates = d_skip + d_screen;
+    let skip_rate = if candidates == 0 { 0.0 } else { d_skip as f64 / candidates as f64 };
+    let fired = d_skip + d_explore;
+    let explore_rate = if fired == 0 { 0.0 } else { d_explore as f64 / fired as f64 };
+    (skip_rate, explore_rate)
+}
+
 /// True when the most recent eval of `bench` has reached `target` (the
 /// early-stop condition of Table 1 runs).
 pub(crate) fn target_reached(record: &RunRecord, bench: &str, target: f64) -> bool {
@@ -118,6 +135,7 @@ impl Trainer {
 
         for step in 0..self.config.max_steps {
             // ---- collect one batch via the curriculum (inference phase) ----
+            let counters_before = counters;
             let inf_before = counters.cost_s;
             let groups = {
                 let mut source = DatasetSource { loader: &mut loader, dataset };
@@ -153,6 +171,7 @@ impl Trainer {
             update_s += tr.cost_s;
 
             let time_s = inference_s + update_s;
+            let (step_skip_rate, step_explore_rate) = step_rates(&counters_before, &counters);
             record.steps.push(StepRecord {
                 step,
                 time_s,
@@ -168,6 +187,13 @@ impl Trainer {
                 prompts_skipped: counters.prompts_skipped,
                 rollouts_saved: counters.rollouts_saved,
                 predictor_brier: counters.predictor_brier(),
+                step_skip_rate,
+                step_explore_rate,
+                // The serial loop has no service in scope; a serviced
+                // serial run attaches run-level counters in the driver.
+                service_calls: 0,
+                service_fill: 0.0,
+                service_queue_wait_s: 0.0,
             });
 
             // ---- periodic evaluation (excluded from training time) ----
@@ -192,5 +218,33 @@ impl Trainer {
         }
         record.counters = counters;
         Ok(record)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_rates_use_deltas_not_cumulative_counts() {
+        let prev = InferenceCounters {
+            prompts_skipped: 100,
+            prompts_screened: 100,
+            prompts_explored: 10,
+            ..Default::default()
+        };
+        let cur = InferenceCounters {
+            prompts_skipped: 103, // +3 skips
+            prompts_screened: 106, // +6 screens
+            prompts_explored: 11, // +1 explore
+            ..Default::default()
+        };
+        let (skip, explore) = step_rates(&prev, &cur);
+        assert!((skip - 3.0 / 9.0).abs() < 1e-12, "skip rate {skip}");
+        assert!((explore - 1.0 / 4.0).abs() < 1e-12, "explore rate {explore}");
+        // empty step: both denominators zero
+        let (skip, explore) = step_rates(&cur, &cur);
+        assert_eq!(skip, 0.0);
+        assert_eq!(explore, 0.0);
     }
 }

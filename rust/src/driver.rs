@@ -16,8 +16,9 @@ use crate::data::dataset::Dataset;
 use crate::eval::benchmark_suite;
 use crate::metrics::RunRecord;
 use crate::policy::real::RealPolicy;
+use crate::policy::service::{InferenceService, ServiceConfig, ServicedPolicy};
 use crate::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
-use crate::policy::{Policy, RolloutEngine};
+use crate::policy::{ForkEngine, Policy, RolloutEngine};
 use crate::predictor::{Predictor, PredictorConfig};
 use crate::rl::algo::AlgoConfig;
 
@@ -71,6 +72,10 @@ pub fn build_curriculum(cfg: &RunConfig) -> Box<dyn Curriculum> {
     curriculum_spec(cfg).build()
 }
 
+pub fn service_config(cfg: &RunConfig) -> ServiceConfig {
+    ServiceConfig { coalesce_wait_ms: cfg.coalesce_wait_ms, fill_waterline: cfg.fill_waterline }
+}
+
 pub fn pipeline_config(cfg: &RunConfig) -> PipelineConfig {
     PipelineConfig {
         workers: cfg.workers.max(1),
@@ -82,6 +87,8 @@ pub fn pipeline_config(cfg: &RunConfig) -> PipelineConfig {
         } else {
             cfg.buffer_cap.max(cfg.batch_size)
         },
+        service: cfg.service,
+        service_cfg: service_config(cfg),
     }
 }
 
@@ -130,6 +137,24 @@ pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
             PipelinedTrainer::new(trainer_config(cfg), build_algo(cfg), pipeline_config(cfg));
         return trainer.run(&mut policy, curriculum_spec(cfg), &dataset, &evals);
     }
+    if cfg.service {
+        // Serial loop delegated through the coalescing service with one
+        // producer — DESIGN.md §8's equivalence rail: this must reproduce
+        // the plain serial RunRecord bit for bit (rust/tests/service_sim.rs).
+        check_capacity(cfg, policy.rollout_capacity())?;
+        let service =
+            InferenceService::spawn(policy.fork_engine(0), service_config(cfg), 1, cfg.n_total());
+        let handle = service.handle();
+        let record = {
+            let mut serviced = ServicedPolicy::new(handle, &mut policy);
+            let mut curriculum = build_curriculum(cfg);
+            let trainer = Trainer::new(trainer_config(cfg), build_algo(cfg));
+            trainer.run(&mut serviced, curriculum.as_mut(), &dataset, &evals)
+        };
+        let mut record = record?;
+        record.service = Some(service.stats());
+        return Ok(record);
+    }
     run_with_policy(cfg, &mut policy, &dataset, &evals)
 }
 
@@ -165,13 +190,15 @@ pub fn run_with_policy(
 ) -> Result<RunRecord> {
     cfg.validate()?;
     check_capacity(cfg, policy.rollout_capacity())?;
-    if cfg.pipeline {
+    if cfg.pipeline || cfg.service {
         // Only `run_sim` has a forkable engine; everything else (the real
         // substrate in particular, with its single PJRT engine) runs the
         // serial reference loop.
         crate::warn_log!(
             "driver",
-            "pipeline=true with workers={} requested, but this substrate runs serially",
+            "pipeline={}/service={} with workers={} requested, but this substrate runs serially",
+            cfg.pipeline,
+            cfg.service,
             cfg.workers
         );
     }
@@ -240,6 +267,45 @@ mod tests {
         assert!(rec.total_time() > 0.0);
         // engine-busy accounting only exists on the pipelined path
         assert!(rec.counters.busy_s > 0.0);
+        // no service was requested, so no service counters are attached
+        assert!(rec.service.is_none());
+    }
+
+    #[test]
+    fn serviced_serial_sim_run_completes_with_service_counters() {
+        let mut cfg = RunConfig::default();
+        cfg.max_steps = 3;
+        cfg.eval_every = 3;
+        cfg.dataset_size = 2000;
+        cfg.service = true;
+        let rec = run_sim(&cfg).unwrap();
+        assert_eq!(rec.steps.len(), 3);
+        let svc = rec.service.expect("service counters attached");
+        assert!(svc.calls > 0);
+        // one producer: every call carries exactly one submission
+        assert_eq!(svc.submissions, svc.calls);
+        assert_eq!(svc.coalesced_hist[0], svc.calls);
+        assert!(svc.max_call_rows > 0);
+    }
+
+    #[test]
+    fn pipelined_service_sim_run_completes() {
+        let mut cfg = RunConfig::default();
+        cfg.max_steps = 4;
+        cfg.eval_every = 2;
+        cfg.dataset_size = 2000;
+        cfg.pipeline = true;
+        cfg.workers = 2;
+        cfg.service = true;
+        let rec = run_sim(&cfg).unwrap();
+        assert_eq!(rec.steps.len(), 4);
+        let svc = rec.service.expect("service counters attached");
+        assert!(svc.calls > 0 && svc.submissions >= svc.calls);
+        // per-step deltas: sum to at most the run totals, never out of range
+        let step_calls: u64 = rec.steps.iter().map(|s| s.service_calls).sum();
+        assert!(step_calls > 0, "per-step service deltas missing");
+        assert!(step_calls <= svc.calls);
+        assert!(rec.steps.iter().all(|s| (0.0..=1.0).contains(&s.service_fill)));
     }
 
     #[test]

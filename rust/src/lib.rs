@@ -33,7 +33,10 @@
 //! * [`policy`]      — the two-trait policy layer: `RolloutEngine`
 //!                     (generate + evaluate) and `Trainable` (update +
 //!                     weight versioning), implemented by the PJRT
-//!                     transformer (`real`) and the IRT simulator (`sim`).
+//!                     transformer (`real`) and the IRT simulator (`sim`);
+//!                     plus the shared inference service (`service`) that
+//!                     coalesces rollout requests across workers into one
+//!                     maximally-packed engine (DESIGN.md §8).
 //! * [`runtime`]     — PJRT client, artifact manifest, device-resident
 //!                     parameter store.
 //! * [`metrics`]     — phase timers, run records, curve logging, and the

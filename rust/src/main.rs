@@ -24,6 +24,7 @@ use speed_rl::policy::real::RealPolicy;
 use speed_rl::policy::RolloutEngine;
 use speed_rl::rl::algo::BaseAlgo;
 use speed_rl::util::cli::Cli;
+use speed_rl::util::json::Json;
 use speed_rl::util::logging::{self, level_from_str};
 
 fn main() {
@@ -46,6 +47,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(rest),
         "info" => cmd_info(rest),
         "report" => cmd_report(rest),
+        "bench" => cmd_bench(rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -63,7 +65,8 @@ fn print_usage() {
          \x20 sft        supervised warmup of the real transformer\n\
          \x20 eval       score a real model checkpoint on the benchmarks\n\
          \x20 info       print the artifact manifest summary\n\
-         \x20 report     ASCII accuracy-vs-time charts from run records\n"
+         \x20 report     ASCII accuracy-vs-time charts from run records\n\
+         \x20 bench      serial vs pipelined vs coalescing-service smoke bench\n"
     );
 }
 
@@ -104,6 +107,19 @@ fn print_summary(record: &RunRecord, model: &str) {
     }
     if record.mean_staleness() > 0.0 {
         println!("mean buffer staleness {:.2} steps", record.mean_staleness());
+    }
+    if let Some(svc) = &record.service {
+        println!(
+            "service: {} calls from {} submissions ({:.1} coalesced/call, fill {:.0}%, \
+             queue wait {:.2} ms, {} installs, {} deadline dispatches)",
+            svc.calls,
+            svc.submissions,
+            svc.mean_coalesced(),
+            100.0 * svc.mean_fill(),
+            1e3 * svc.mean_queue_wait_s(),
+            svc.installs,
+            svc.deadline_dispatches,
+        );
     }
     if record.counters.prompts_skipped > 0 || record.counters.brier_n > 0 {
         println!(
@@ -160,7 +176,18 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             None,
             "predictive-speed: probability of screening a confidently-skipped prompt anyway",
         )
-        .flag("pipeline", "overlap inference with updates (producer/consumer)");
+        .opt(
+            "coalesce-wait-ms",
+            None,
+            "service: micro-batch deadline before a partially-filled call executes",
+        )
+        .opt(
+            "fill-waterline",
+            None,
+            "service: fraction of engine capacity that dispatches a call immediately",
+        )
+        .flag("pipeline", "overlap inference with updates (producer/consumer)")
+        .flag("service", "coalesce all rollout requests through one shared inference service");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
 
@@ -209,6 +236,15 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     if args.has_flag("pipeline") || cfg.workers > 1 {
         cfg.pipeline = true;
+    }
+    if args.has_flag("service") {
+        cfg.service = true;
+    }
+    if let Some(v) = args.get("coalesce-wait-ms") {
+        cfg.coalesce_wait_ms = v.parse::<u64>().context("--coalesce-wait-ms")?;
+    }
+    if let Some(v) = args.get("fill-waterline") {
+        cfg.fill_waterline = v.parse::<f64>().context("--fill-waterline")?;
     }
     if let Some(h) = args.get("max-hours") {
         cfg.max_seconds = h.parse::<f64>().context("--max-hours")? * 3600.0;
@@ -407,6 +443,11 @@ fn cmd_info(argv: &[String]) -> Result<()> {
 fn cmd_report(argv: &[String]) -> Result<()> {
     let cli = Cli::new("speed-rl report", "render run-record JSONs as ASCII charts")
         .opt("bench", Some("dapo1k"), "benchmark to chart (or 'all')")
+        .opt(
+            "metric",
+            Some("accuracy"),
+            "accuracy | skip-rate | explore-rate | service-fill | staleness (per-step charts)",
+        )
         .opt("width", Some("72"), "chart width")
         .opt("height", Some("16"), "chart height");
     let args = cli.parse(argv)?;
@@ -422,6 +463,11 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     let refs: Vec<&RunRecord> = records.iter().collect();
     let width = args.usize("width")?;
     let height = args.usize("height")?;
+    let metric = args.string("metric")?;
+    if metric != "accuracy" {
+        println!("{}", speed_rl::metrics::report::step_chart(&refs, &metric, width, height)?);
+        return Ok(());
+    }
     let benches: Vec<String> = if args.get("bench") == Some("all") {
         let mut b: Vec<String> = records
             .iter()
@@ -436,5 +482,93 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     for b in benches {
         println!("{}", speed_rl::metrics::report::ascii_chart(&refs, &b, width, height));
     }
+    Ok(())
+}
+
+/// The coalescing smoke bench `rust/ci.sh` runs: the same sim scenario
+/// executed serial, pipelined (K private engines), and pipelined through
+/// the shared service, with machine-readable results in
+/// `BENCH_coalesce.json` so the perf trajectory is tracked per commit.
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    let cli = common_cli("speed-rl bench", "serial vs pipelined vs coalescing-service bench")
+        .opt("steps", Some("12"), "training steps per mode")
+        .opt("workers", Some("4"), "rollout workers for the pipelined modes")
+        .opt("batch-size", Some("8"), "training batch size B")
+        .opt("dataset-size", Some("4000"), "training prompts to generate");
+    let args = cli.parse(argv)?;
+    logging::set_level(level_from_str(args.get("log-level").unwrap_or("warn")));
+    let steps = args.usize("steps")?;
+    let workers = args.usize("workers")?;
+
+    let base = |label: &str| -> RunConfig {
+        let mut c = RunConfig::default();
+        c.label = label.to_string();
+        c.batch_size = args.usize("batch-size").unwrap_or(8);
+        c.dataset_size = args.usize("dataset-size").unwrap_or(4000);
+        c.max_steps = steps;
+        c.eval_every = steps; // one mid/final eval point, cheap
+        c.seed = args.u64("seed").unwrap_or(0);
+        c
+    };
+    let serial = base("serial");
+    let mut pipelined = base("pipelined");
+    pipelined.pipeline = true;
+    pipelined.workers = workers;
+    let mut serviced = base("pipelined+service");
+    serviced.pipeline = true;
+    serviced.workers = workers;
+    serviced.service = true;
+
+    let mut table = speed_rl::bench::Table::new(&[
+        "mode",
+        "steps/s",
+        "engine calls",
+        "mean fill %",
+        "rollouts",
+        "virtual time s",
+    ]);
+    let mut modes = Vec::new();
+    for cfg in [serial, pipelined, serviced] {
+        let t0 = std::time::Instant::now();
+        let rec = driver::run_sim(&cfg)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let steps_per_sec = rec.steps.len() as f64 / wall_s.max(1e-9);
+        // Engine-call accounting: with the service on, worker counters
+        // count SUBMISSIONS; the executed calls live in the service stats.
+        let (engine_calls, mean_fill) = match &rec.service {
+            Some(svc) => (svc.calls, svc.mean_fill()),
+            None => (rec.counters.calls, rec.counters.utilization()),
+        };
+        table.row(vec![
+            cfg.label.clone(),
+            format!("{steps_per_sec:.1}"),
+            engine_calls.to_string(),
+            format!("{:.1}", 100.0 * mean_fill),
+            rec.counters.rollouts.to_string(),
+            format!("{:.1}", rec.total_time()),
+        ]);
+        modes.push(Json::obj(vec![
+            ("label", Json::str(cfg.label.clone())),
+            ("steps", Json::num(rec.steps.len() as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("steps_per_sec", Json::num(steps_per_sec)),
+            ("engine_calls", Json::num(engine_calls as f64)),
+            ("submissions", Json::num(rec.counters.calls as f64)),
+            ("mean_fill", Json::num(mean_fill)),
+            ("rollouts", Json::num(rec.counters.rollouts as f64)),
+            ("virtual_time_s", Json::num(rec.total_time())),
+            ("final_dapo1k", Json::num(rec.final_accuracy("dapo1k").unwrap_or(0.0))),
+        ]));
+    }
+    table.print();
+    let out = args.get("out").unwrap_or("BENCH_coalesce.json");
+    let j = Json::obj(vec![
+        ("bench", Json::str("coalesce")),
+        ("steps", Json::num(steps as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("modes", Json::Arr(modes)),
+    ]);
+    std::fs::write(out, j.to_string_pretty()).with_context(|| format!("write {out}"))?;
+    info!("bench", "results written to {out}");
     Ok(())
 }

@@ -194,6 +194,116 @@ impl AtomicCounters {
     }
 }
 
+/// Cumulative counters of the shared [`InferenceService`]: one engine
+/// behind a submission queue, coalescing requests across rollout workers.
+/// `Copy` so per-step snapshots are cheap.
+///
+/// [`InferenceService`]: crate::policy::service::InferenceService
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceCounters {
+    /// Engine calls actually executed (after coalescing).
+    pub calls: u64,
+    /// Submissions received from workers (before coalescing).
+    pub submissions: u64,
+    /// Rows carrying data across all executed calls.
+    pub rows_used: u64,
+    /// Engine capacity summed over executed calls (the fill denominator).
+    pub rows_capacity: u64,
+    /// Largest single executed call, in rows (must stay <= capacity).
+    pub max_call_rows: u64,
+    /// Total submission-to-execution wait, seconds (real time).
+    pub queue_wait_s: f64,
+    /// Weight installs performed at the engine (once per version, however
+    /// many workers requested it).
+    pub installs: u64,
+    /// Calls dispatched by the `coalesce_wait_ms` deadline before the fill
+    /// waterline was reached (the anti-starvation path).
+    pub deadline_dispatches: u64,
+    /// Histogram of submissions coalesced per call: 1, 2, 3, 4, 5-8, >8.
+    pub coalesced_hist: [u64; 6],
+}
+
+impl ServiceCounters {
+    /// Histogram bucket index for `n` submissions in one call.
+    pub fn hist_bucket(n: usize) -> usize {
+        match n {
+            0 | 1 => 0,
+            2 => 1,
+            3 => 2,
+            4 => 3,
+            5..=8 => 4,
+            _ => 5,
+        }
+    }
+
+    /// Mean call fill: rows carrying data / rows executed.
+    pub fn mean_fill(&self) -> f64 {
+        if self.rows_capacity == 0 {
+            0.0
+        } else {
+            self.rows_used as f64 / self.rows_capacity as f64
+        }
+    }
+
+    /// Mean submission-to-execution wait, seconds.
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.submissions == 0 {
+            0.0
+        } else {
+            self.queue_wait_s / self.submissions as f64
+        }
+    }
+
+    /// Mean submissions coalesced per executed call.
+    pub fn mean_coalesced(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.submissions as f64 / self.calls as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("calls", Json::num(self.calls as f64)),
+            ("submissions", Json::num(self.submissions as f64)),
+            ("rows_used", Json::num(self.rows_used as f64)),
+            ("rows_capacity", Json::num(self.rows_capacity as f64)),
+            ("max_call_rows", Json::num(self.max_call_rows as f64)),
+            ("queue_wait_s", Json::num(self.queue_wait_s)),
+            ("installs", Json::num(self.installs as f64)),
+            ("deadline_dispatches", Json::num(self.deadline_dispatches as f64)),
+            ("mean_fill", Json::num(self.mean_fill())),
+            ("mean_coalesced", Json::num(self.mean_coalesced())),
+            (
+                "coalesced_hist",
+                Json::arr(self.coalesced_hist.iter().map(|c| Json::num(*c as f64))),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ServiceCounters {
+        let f = |k: &str| j.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+        let mut hist = [0u64; 6];
+        if let Some(arr) = j.get("coalesced_hist").and_then(|x| x.as_arr()) {
+            for (slot, v) in hist.iter_mut().zip(arr) {
+                *slot = v.as_f64().unwrap_or(0.0) as u64;
+            }
+        }
+        ServiceCounters {
+            calls: f("calls") as u64,
+            submissions: f("submissions") as u64,
+            rows_used: f("rows_used") as u64,
+            rows_capacity: f("rows_capacity") as u64,
+            max_call_rows: f("max_call_rows") as u64,
+            queue_wait_s: f("queue_wait_s"),
+            installs: f("installs") as u64,
+            deadline_dispatches: f("deadline_dispatches") as u64,
+            coalesced_hist: hist,
+        }
+    }
+}
+
 /// One training step's record.
 #[derive(Clone, Copy, Debug)]
 pub struct StepRecord {
@@ -224,6 +334,23 @@ pub struct StepRecord {
     /// Mean Brier score of the predictor's acceptance forecasts so far (0
     /// when nothing has been scored).
     pub predictor_brier: f64,
+    /// Fraction of THIS step's candidate prompts the predictor skipped
+    /// (skipped / (skipped + screened) over the step's deltas; 0 when no
+    /// candidates were drawn — unlike `prompts_skipped`, not cumulative).
+    pub step_skip_rate: f64,
+    /// Of this step's skip-rule firings, the fraction screened anyway
+    /// (explored / (skipped + explored) over the step's deltas).
+    pub step_explore_rate: f64,
+    /// Engine calls the shared inference service executed DURING this step
+    /// (delta between step snapshots; 0 when no service is running — the
+    /// run-level totals live in [`RunRecord::service`]).
+    pub service_calls: u64,
+    /// Mean fill of THIS step's service calls (rows used / rows executed
+    /// over the step's deltas; 0 when no call landed in the step).
+    pub service_fill: f64,
+    /// Mean submission-to-execution wait of THIS step's submissions,
+    /// seconds (0 when none landed in the step).
+    pub service_queue_wait_s: f64,
 }
 
 impl StepRecord {
@@ -243,6 +370,11 @@ impl StepRecord {
             ("prompts_skipped", Json::num(self.prompts_skipped as f64)),
             ("rollouts_saved", Json::num(self.rollouts_saved as f64)),
             ("predictor_brier", Json::num(self.predictor_brier)),
+            ("step_skip_rate", Json::num(self.step_skip_rate)),
+            ("step_explore_rate", Json::num(self.step_explore_rate)),
+            ("service_calls", Json::num(self.service_calls as f64)),
+            ("service_fill", Json::num(self.service_fill)),
+            ("service_queue_wait_s", Json::num(self.service_queue_wait_s)),
         ])
     }
 }
@@ -274,6 +406,9 @@ pub struct RunRecord {
     pub steps: Vec<StepRecord>,
     pub evals: Vec<EvalRecord>,
     pub counters: InferenceCounters,
+    /// Shared-inference-service counters (runs routed through the
+    /// coalescing [`crate::policy::service::InferenceService`] only).
+    pub service: Option<ServiceCounters>,
 }
 
 impl RunRecord {
@@ -313,7 +448,7 @@ impl RunRecord {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("label", Json::str(self.label.clone())),
             ("steps", Json::arr(self.steps.iter().map(|s| s.to_json()))),
             ("evals", Json::arr(self.evals.iter().map(|e| e.to_json()))),
@@ -336,7 +471,11 @@ impl RunRecord {
                     ("predictor_recall", Json::num(self.counters.predictor_recall())),
                 ]),
             ),
-        ])
+        ];
+        if let Some(service) = &self.service {
+            fields.push(("service", service.to_json()));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -385,6 +524,50 @@ mod tests {
         let rec = RunRecord { label: "t".into(), ..Default::default() };
         let j = rec.to_json();
         assert!(j.get("steps").is_some());
+        // the service block appears only when a service actually ran
+        assert!(j.get("service").is_none());
+        let rec = RunRecord {
+            label: "t".into(),
+            service: Some(ServiceCounters { calls: 3, ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(rec.to_json().get("service").is_some());
+    }
+
+    #[test]
+    fn service_counters_ratios_buckets_and_json() {
+        let mut c = ServiceCounters {
+            calls: 4,
+            submissions: 10,
+            rows_used: 300,
+            rows_capacity: 400,
+            max_call_rows: 96,
+            queue_wait_s: 0.5,
+            installs: 2,
+            deadline_dispatches: 1,
+            coalesced_hist: [1, 0, 1, 2, 0, 0],
+        };
+        assert!((c.mean_fill() - 0.75).abs() < 1e-12);
+        assert!((c.mean_queue_wait_s() - 0.05).abs() < 1e-12);
+        assert!((c.mean_coalesced() - 2.5).abs() < 1e-12);
+        for (n, bucket) in [(1, 0), (2, 1), (3, 2), (4, 3), (5, 4), (8, 4), (9, 5)] {
+            assert_eq!(ServiceCounters::hist_bucket(n), bucket, "n={n}");
+        }
+        c.coalesced_hist[ServiceCounters::hist_bucket(7)] += 1;
+        let back = ServiceCounters::from_json(&c.to_json());
+        assert_eq!(back.calls, c.calls);
+        assert_eq!(back.submissions, c.submissions);
+        assert_eq!(back.rows_used, c.rows_used);
+        assert_eq!(back.rows_capacity, c.rows_capacity);
+        assert_eq!(back.max_call_rows, c.max_call_rows);
+        assert_eq!(back.installs, c.installs);
+        assert_eq!(back.deadline_dispatches, c.deadline_dispatches);
+        assert_eq!(back.coalesced_hist, c.coalesced_hist);
+        assert!((back.queue_wait_s - c.queue_wait_s).abs() < 1e-12);
+        let empty = ServiceCounters::default();
+        assert_eq!(empty.mean_fill(), 0.0);
+        assert_eq!(empty.mean_queue_wait_s(), 0.0);
+        assert_eq!(empty.mean_coalesced(), 0.0);
     }
 
     #[test]

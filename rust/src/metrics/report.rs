@@ -1,8 +1,9 @@
-//! ASCII report rendering for run records: accuracy-vs-time curves and
+//! ASCII report rendering for run records: accuracy-vs-time curves,
+//! per-step diagnostic curves (skip/exploration rates, service fill), and
 //! side-by-side run comparison (the terminal stand-in for the paper's
 //! matplotlib figures). Used by `speed-rl report` and the benches.
 
-use crate::metrics::RunRecord;
+use crate::metrics::{RunRecord, ServiceCounters, StepRecord};
 use crate::util::json::Json;
 
 /// Render one benchmark's curves for several runs as an ASCII chart.
@@ -20,6 +21,61 @@ pub fn ascii_chart(
     if curves.is_empty() {
         return format!("(no data for {benchmark})\n");
     }
+    render_chart(&format!("{benchmark} (accuracy vs time)"), &curves, width, height, 3600.0, "h")
+}
+
+/// Per-step metrics `speed-rl report --metric` can chart, extracted from
+/// [`StepRecord`] (ROADMAP item: the cumulative counters hid how the
+/// predictor's skip rate warms up and how full the service keeps calls).
+pub fn step_metric(metric: &str) -> Option<fn(&StepRecord) -> f64> {
+    match metric {
+        "skip-rate" => Some(|s: &StepRecord| s.step_skip_rate),
+        "explore-rate" => Some(|s: &StepRecord| s.step_explore_rate),
+        "service-fill" => Some(|s: &StepRecord| s.service_fill),
+        "staleness" => Some(|s: &StepRecord| s.mean_staleness),
+        _ => None,
+    }
+}
+
+/// Render one per-step metric for several runs (x = step, y = metric).
+pub fn step_chart(
+    records: &[&RunRecord],
+    metric: &str,
+    width: usize,
+    height: usize,
+) -> anyhow::Result<String> {
+    let f = step_metric(metric).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown per-step metric '{metric}' (valid: skip-rate, explore-rate, \
+             service-fill, staleness; eval curves use the default accuracy mode)"
+        )
+    })?;
+    let curves: Vec<(&str, Vec<(f64, f64)>)> = records
+        .iter()
+        .map(|r| {
+            let pts = r.steps.iter().map(|s| (s.step as f64, f(s))).collect::<Vec<_>>();
+            (r.label.as_str(), pts)
+        })
+        .filter(|(_, c)| !c.is_empty())
+        .collect();
+    if curves.is_empty() {
+        return Ok(format!("(no step data for {metric})\n"));
+    }
+    Ok(render_chart(&format!("{metric} (per step)"), &curves, width, height, 1.0, "steps"))
+}
+
+/// Shared grid renderer: linear interpolation across columns, one mark per
+/// run, y scaled to the observed maximum; the header reports the x range
+/// as `x_max / x_scale` in `x_unit` (hours for time axes, steps for
+/// per-step axes).
+fn render_chart(
+    title: &str,
+    curves: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+    x_scale: f64,
+    x_unit: &str,
+) -> String {
     let t_max = curves
         .iter()
         .flat_map(|(_, c)| c.iter().map(|(t, _)| *t))
@@ -49,7 +105,7 @@ pub fn ascii_chart(
         }
     }
     let mut out = String::new();
-    out.push_str(&format!("{benchmark} (accuracy vs time; max t = {:.2} h)\n", t_max / 3600.0));
+    out.push_str(&format!("{title}; max x = {:.2} {x_unit}\n", t_max / x_scale));
     for (i, row) in grid.iter().enumerate() {
         let yval = a_max * (height - 1 - i) as f64 / (height - 1) as f64;
         out.push_str(&format!("{yval:5.2} |{}|\n", row.iter().collect::<String>()));
@@ -83,7 +139,7 @@ fn interp(curve: &[(f64, f64)], t: f64) -> f64 {
 
 /// Parse a run record back from the JSON written by `RunRecord::to_json`.
 pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
-    use crate::metrics::{EvalRecord, StepRecord};
+    use crate::metrics::EvalRecord;
     let mut rec = RunRecord {
         label: j.get("label").and_then(|x| x.as_str()).unwrap_or("run").to_string(),
         ..Default::default()
@@ -106,9 +162,15 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 prompts_skipped: f("prompts_skipped") as u64,
                 rollouts_saved: f("rollouts_saved") as u64,
                 predictor_brier: f("predictor_brier"),
+                step_skip_rate: f("step_skip_rate"),
+                step_explore_rate: f("step_explore_rate"),
+                service_calls: f("service_calls") as u64,
+                service_fill: f("service_fill"),
+                service_queue_wait_s: f("service_queue_wait_s"),
             });
         }
     }
+    rec.service = j.get("service").map(ServiceCounters::from_json);
     if let Some(evals) = j.get("evals").and_then(|x| x.as_arr()) {
         for e in evals {
             let f = |k: &str| e.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
@@ -172,5 +234,81 @@ mod tests {
         let back = record_from_json(&a.to_json()).unwrap();
         assert_eq!(back.label, "x");
         assert_eq!(back.curve("b"), a.curve("b"));
+        assert!(back.service.is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_step_rates_and_service() {
+        let mut a = rec("x", &[(0.0, 0.2)]);
+        a.steps.push(StepRecord {
+            step: 0,
+            time_s: 1.0,
+            inference_s: 0.7,
+            update_s: 0.3,
+            train_pass_rate: 0.5,
+            grad_norm: 0.1,
+            loss: -0.5,
+            clip_frac: 0.0,
+            prompts_consumed: 10,
+            buffer_len: 2,
+            mean_staleness: 0.5,
+            prompts_skipped: 3,
+            rollouts_saved: 24,
+            predictor_brier: 0.1,
+            step_skip_rate: 0.25,
+            step_explore_rate: 0.1,
+            service_calls: 4,
+            service_fill: 0.8,
+            service_queue_wait_s: 0.002,
+        });
+        a.service = Some(ServiceCounters {
+            calls: 4,
+            submissions: 9,
+            rows_used: 300,
+            rows_capacity: 400,
+            ..Default::default()
+        });
+        let back = record_from_json(&a.to_json()).unwrap();
+        let s = &back.steps[0];
+        assert!((s.step_skip_rate - 0.25).abs() < 1e-12);
+        assert!((s.step_explore_rate - 0.1).abs() < 1e-12);
+        assert_eq!(s.service_calls, 4);
+        assert!((s.service_fill - 0.8).abs() < 1e-12);
+        let svc = back.service.expect("service parsed");
+        assert_eq!(svc.calls, 4);
+        assert_eq!(svc.submissions, 9);
+        assert!((svc.mean_fill() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_chart_renders_and_rejects_unknown_metric() {
+        let mut a = rec("run", &[]);
+        for step in 0..5 {
+            a.steps.push(StepRecord {
+                step,
+                time_s: step as f64,
+                inference_s: 0.0,
+                update_s: 0.0,
+                train_pass_rate: 0.5,
+                grad_norm: 0.0,
+                loss: 0.0,
+                clip_frac: 0.0,
+                prompts_consumed: step,
+                buffer_len: 0,
+                mean_staleness: 0.0,
+                prompts_skipped: 0,
+                rollouts_saved: 0,
+                predictor_brier: 0.0,
+                step_skip_rate: 0.1 * step as f64,
+                step_explore_rate: 0.0,
+                service_calls: 0,
+                service_fill: 0.0,
+                service_queue_wait_s: 0.0,
+            });
+        }
+        let chart = step_chart(&[&a], "skip-rate", 30, 8).unwrap();
+        assert!(chart.contains("skip-rate") && chart.contains("run"));
+        let err = step_chart(&[&a], "bogus", 30, 8).unwrap_err().to_string();
+        assert!(err.contains("bogus") && err.contains("service-fill"), "{err}");
     }
 }

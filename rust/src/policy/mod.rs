@@ -14,9 +14,14 @@
 //! * [`ForkEngine`]    — replication of the inference side into independent
 //!   engines, one per rollout worker (simulator substrate only; the real
 //!   substrate has a single compiled engine).
+//! * [`service`]       — the shared inference service: ONE engine behind a
+//!   submission queue whose scheduler coalesces generation requests across
+//!   workers into maximally-packed calls (handles implement
+//!   [`RolloutEngine`], so workers run unchanged).
 
 pub mod real;
 pub mod sampler;
+pub mod service;
 pub mod sim;
 
 use anyhow::Result;

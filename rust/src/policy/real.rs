@@ -93,7 +93,7 @@ impl RealPolicy {
         let key = self.rng.jax_key();
         let t0 = Instant::now();
         let out = exe.run_state_and_data(
-            &self.store.param_literals(),
+            self.store.param_literals(),
             &[
                 Tensor::i32(vec![rows, plan.prompt_len], packed.tokens),
                 Tensor::i32(vec![rows], packed.lens),
@@ -156,7 +156,7 @@ impl RealPolicy {
             Tensor::scalar_f32(0.0), // no weight decay in warmup
             Tensor::scalar_f32(1.0),
         ];
-        let out = exe.run_state_and_data(&self.store.opt_literals(), &data)?;
+        let out = exe.run_state_groups(&self.store.opt_groups(), &data)?;
         let stats = self.store.absorb_update(out)?;
         self.sft_steps += 1;
         stats[0].scalar()
@@ -230,21 +230,19 @@ impl Trainable for RealPolicy {
         let (tokens, mask, old_lp, adv) = batch.tensors();
         let exe = self.runtime.executable_by_prefix("train")?;
         let t0 = Instant::now();
-        let out = exe.run_state_and_data(
-            &self.store.opt_literals(),
-            &[
-                Tensor::scalar_i32(self.store.step),
-                tokens,
-                mask,
-                old_lp,
-                adv,
-                Tensor::scalar_f32(algo.lr as f32),
-                Tensor::scalar_f32(algo.clip_low),
-                Tensor::scalar_f32(algo.clip_high),
-                Tensor::scalar_f32(algo.weight_decay as f32),
-                Tensor::scalar_f32(algo.max_grad_norm as f32),
-            ],
-        )?;
+        let data = [
+            Tensor::scalar_i32(self.store.step),
+            tokens,
+            mask,
+            old_lp,
+            adv,
+            Tensor::scalar_f32(algo.lr as f32),
+            Tensor::scalar_f32(algo.clip_low),
+            Tensor::scalar_f32(algo.clip_high),
+            Tensor::scalar_f32(algo.weight_decay as f32),
+            Tensor::scalar_f32(algo.max_grad_norm as f32),
+        ];
+        let out = exe.run_state_groups(&self.store.opt_groups(), &data)?;
         let cost_s = t0.elapsed().as_secs_f64();
         let stats = self.store.absorb_update(out)?;
         self.version += 1;

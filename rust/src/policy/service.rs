@@ -1,0 +1,755 @@
+//! The shared inference service: ONE real engine behind a submission
+//! queue, coalescing generation requests *across* rollout workers into
+//! maximally-packed calls (DESIGN.md §8).
+//!
+//! The pipelined coordinator's original design forks a private engine per
+//! worker, so each of the K workers issues its own lightly-filled
+//! fixed-shape calls and installs every weight snapshot K times — exactly
+//! the under-utilization SPEED's pre-fetch batcher exists to avoid *within*
+//! one worker (paper §4.3). This module applies the same idea one level up:
+//!
+//! ```text
+//!   worker 0 ──submit──┐
+//!   worker 1 ──submit──┤   queue    ┌──────────┐  one generate()  engine
+//!   worker K ──submit──┼──────────▶ │ scheduler│ ───────────────▶ (the only
+//!     ...              │ (deadline/ │  thread  │ ◀─── results ─── real one)
+//!   Ticket::wait ◀─fan-out─waterline)└──────────┘
+//! ```
+//!
+//! * [`SubmitHandle`] — the cheap per-worker handle. It *is* a
+//!   [`RolloutEngine`], so workers and curricula run unchanged; `generate`
+//!   becomes submit + block on the [`Ticket`]. The advertised
+//!   `rollout_capacity` is the submit quantum (engine capacity / K), so K
+//!   workers' plans coalesce into one full call.
+//! * scheduler — drains the queue; waits up to `coalesce_wait_ms` for the
+//!   fill waterline, then merges the leading submissions that fit the
+//!   engine's capacity into ONE call (the engine itself still picks its
+//!   smallest compiled row variant, as in `RealPolicy::rollout_call`),
+//!   executes, and fans the per-request groups back out per ticket. The
+//!   deadline guarantees no ticket ever starves waiting for co-travelers.
+//! * weights — handles dedupe installs by version: however many workers
+//!   notice a new snapshot, the engine installs it once, and installs jump
+//!   the queue so the next call serves the freshest published weights.
+//!
+//! Inference cost is apportioned to tickets by row share (the last ticket
+//! takes the exact remainder), so per-worker `InferenceCounters` still sum
+//! to the true engine cost. With a single producer the scheduler dispatches
+//! immediately and every call carries exactly one submission, which is what
+//! makes the serial-through-service path ([`ServicedPolicy`]) reproduce the
+//! plain serial `RunRecord` bit for bit (`rust/tests/service_sim.rs`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::tasks::TaskInstance;
+use crate::metrics::ServiceCounters;
+use crate::policy::{
+    EvalResult, GenRequest, GenResult, RolloutEngine, TrainResult, Trainable, WeightSnapshot,
+};
+use crate::rl::algo::AlgoConfig;
+use crate::rl::update::PromptGroup;
+
+/// Scheduler knobs (the `--coalesce-wait-ms` / `--fill-waterline` CLI
+/// flags). The deadline trades a little extra on-policy staleness for
+/// fuller calls; the waterline dispatches early once a call is full enough.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// After the first pending submission arrives, wait at most this long
+    /// (real milliseconds) for more before executing.
+    pub coalesce_wait_ms: u64,
+    /// Fraction of engine capacity that triggers immediate dispatch.
+    pub fill_waterline: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { coalesce_wait_ms: 2, fill_waterline: 0.85 }
+    }
+}
+
+/// One queued generation submission awaiting the scheduler.
+struct GenWork {
+    requests: Vec<GenRequest>,
+    temperature: f32,
+    rows: usize,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<GenResult>>,
+}
+
+/// Queue entries: generation (coalescable) and evaluation (runs alone).
+enum Work {
+    Generate(GenWork),
+    Evaluate { tasks: Vec<TaskInstance>, tx: mpsc::Sender<Result<EvalResult>> },
+}
+
+#[derive(Default)]
+struct ServiceQueue {
+    q: VecDeque<Work>,
+    /// Newest learner snapshot not yet installed at the engine. Installs
+    /// jump the queue (checked before every dispatch).
+    pending_install: Option<WeightSnapshot>,
+    closed: bool,
+}
+
+struct Shared {
+    queue: Mutex<ServiceQueue>,
+    work_ready: Condvar,
+    /// Version the service serves once any pending install lands — what
+    /// handles report as `serving_version`, deduping K workers' installs.
+    version: AtomicU64,
+    stats: Mutex<ServiceCounters>,
+}
+
+/// A pending reply for one submission. `wait` blocks until the scheduler
+/// has executed the coalesced call containing it.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<GenResult>>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<GenResult> {
+        self.rx.recv().map_err(|_| anyhow!("inference service shut down before replying"))?
+    }
+}
+
+/// The cheap per-worker handle: submit generation batches, block on
+/// tickets. Implements [`RolloutEngine`] so rollout workers and curricula
+/// drive the shared service exactly as they would a private engine.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    shared: Arc<Shared>,
+    /// Rows this handle advertises to its curriculum (engine capacity / K,
+    /// floored at the screening rule's full group so every plan stays
+    /// executable).
+    quantum: usize,
+    gen_len: usize,
+    label: String,
+}
+
+impl SubmitHandle {
+    /// Enqueue one generation batch; returns immediately with a ticket.
+    pub fn submit(&self, requests: Vec<GenRequest>, temperature: f32) -> Ticket {
+        let rows = requests.iter().map(|r| r.n_samples).sum();
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.closed {
+            let _ = tx.send(Err(anyhow!("inference service is closed")));
+        } else {
+            q.q.push_back(Work::Generate(GenWork {
+                requests,
+                temperature,
+                rows,
+                enqueued: Instant::now(),
+                tx,
+            }));
+            self.shared.work_ready.notify_all();
+        }
+        Ticket { rx }
+    }
+}
+
+impl RolloutEngine for SubmitHandle {
+    fn generate(&mut self, requests: &[GenRequest], temperature: f32) -> Result<GenResult> {
+        self.submit(requests.to_vec(), temperature).wait()
+    }
+
+    fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.closed {
+                return Err(anyhow!("inference service is closed"));
+            }
+            q.q.push_back(Work::Evaluate { tasks: tasks.to_vec(), tx });
+            self.shared.work_ready.notify_all();
+        }
+        rx.recv().map_err(|_| anyhow!("inference service shut down before replying"))?
+    }
+
+    fn rollout_capacity(&self) -> usize {
+        self.quantum
+    }
+
+    fn gen_len(&self) -> usize {
+        self.gen_len
+    }
+
+    fn install(&mut self, snap: &WeightSnapshot) {
+        let mut q = self.shared.queue.lock().unwrap();
+        // Dedupe: the first handle to notice a published version queues the
+        // install; the rest see `serving_version` already advanced.
+        if self.shared.version.load(Ordering::Acquire) < snap.version {
+            self.shared.version.store(snap.version, Ordering::Release);
+            q.pending_install = Some(snap.clone());
+            self.shared.work_ready.notify_all();
+        }
+    }
+
+    fn serving_version(&self) -> u64 {
+        self.shared.version.load(Ordering::Acquire)
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// The service: owns the scheduler thread that owns the one real engine.
+/// Dropping it closes the queue and joins the scheduler.
+pub struct InferenceService {
+    shared: Arc<Shared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    quantum: usize,
+    gen_len: usize,
+    label: String,
+}
+
+impl InferenceService {
+    /// Spawn the scheduler around `engine`. `producers` is the number of
+    /// workers that will hold handles (sets the submit quantum);
+    /// `min_quantum` floors the quantum so one full screening/continuation
+    /// group always fits a single submission (pass the rule's `n_total`).
+    pub fn spawn(
+        engine: Box<dyn RolloutEngine + Send>,
+        cfg: ServiceConfig,
+        producers: usize,
+        min_quantum: usize,
+    ) -> InferenceService {
+        let capacity = engine.rollout_capacity();
+        let quantum = (capacity / producers.max(1)).max(min_quantum).clamp(1, capacity.max(1));
+        let gen_len = engine.gen_len();
+        let label = engine.name().to_string();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(ServiceQueue::default()),
+            work_ready: Condvar::new(),
+            version: AtomicU64::new(engine.serving_version()),
+            stats: Mutex::new(ServiceCounters::default()),
+        });
+        let thread = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("speedrl-inference-service".to_string())
+                .spawn(move || scheduler(engine, shared, cfg, producers))
+                .expect("spawn inference-service scheduler")
+        };
+        InferenceService { shared, thread: Some(thread), quantum, gen_len, label }
+    }
+
+    /// A fresh handle for one producer (cheap: one `Arc` clone).
+    pub fn handle(&self) -> SubmitHandle {
+        SubmitHandle {
+            shared: Arc::clone(&self.shared),
+            quantum: self.quantum,
+            gen_len: self.gen_len,
+            label: self.label.clone(),
+        }
+    }
+
+    /// Rows each producer's handle advertises (engine capacity / K).
+    pub fn quantum(&self) -> usize {
+        self.quantum
+    }
+
+    /// Live counters snapshot.
+    pub fn stats(&self) -> ServiceCounters {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// Close the queue: in-flight work is served, new submissions fail.
+    pub fn close(&self) {
+        self.shared.queue.lock().unwrap().closed = true;
+        self.shared.work_ready.notify_all();
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        self.close();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Rows in the queue's leading run of generate submissions that could join
+/// the next call (same temperature, FIFO, stopping at an evaluate).
+fn leading_rows(q: &VecDeque<Work>) -> usize {
+    let mut rows = 0usize;
+    let mut temp: Option<f32> = None;
+    for w in q {
+        match w {
+            Work::Generate(g) => {
+                if *temp.get_or_insert(g.temperature) != g.temperature {
+                    break;
+                }
+                rows += g.rows;
+            }
+            Work::Evaluate { .. } => break,
+        }
+    }
+    rows
+}
+
+/// The scheduler loop: install → evaluate → coalesce-and-generate, until
+/// the queue is closed and drained.
+fn scheduler(
+    mut engine: Box<dyn RolloutEngine + Send>,
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+    producers: usize,
+) {
+    let capacity = engine.rollout_capacity();
+    let waterline_rows =
+        ((capacity as f64 * cfg.fill_waterline).ceil() as usize).clamp(1, capacity);
+    let wait = Duration::from_millis(cfg.coalesce_wait_ms);
+    loop {
+        let mut guard = shared.queue.lock().unwrap();
+        // Phase 1: wait for any work at all.
+        while guard.q.is_empty() && guard.pending_install.is_none() {
+            if guard.closed {
+                return;
+            }
+            guard = shared.work_ready.wait(guard).unwrap();
+        }
+        // Phase 2: installs jump the queue — once per published version,
+        // however many workers requested it.
+        if let Some(snap) = guard.pending_install.take() {
+            drop(guard);
+            engine.install(&snap);
+            shared.stats.lock().unwrap().installs += 1;
+            continue;
+        }
+        // Phase 3: evaluation runs alone (greedy; excluded from fill
+        // accounting like the trainers exclude eval time).
+        if matches!(guard.q.front(), Some(Work::Evaluate { .. })) {
+            let Some(Work::Evaluate { tasks, tx }) = guard.q.pop_front() else {
+                unreachable!("front checked above");
+            };
+            drop(guard);
+            let _ = tx.send(engine.evaluate(&tasks));
+            continue;
+        }
+        // Phase 4: micro-batch — wait for the waterline until the deadline.
+        // A single producer cannot submit again while blocked on its
+        // ticket, so dispatch immediately (the serial-equivalence rail).
+        let mut deadline_fired = false;
+        if producers > 1 {
+            let deadline = Instant::now() + wait;
+            loop {
+                if guard.closed || guard.pending_install.is_some() {
+                    break;
+                }
+                if leading_rows(&guard.q) >= waterline_rows {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    deadline_fired = true;
+                    break;
+                }
+                let (g, timeout) = shared.work_ready.wait_timeout(guard, deadline - now).unwrap();
+                guard = g;
+                if timeout.timed_out() {
+                    deadline_fired = true;
+                    break;
+                }
+            }
+            if guard.pending_install.is_some() {
+                continue; // install first, then re-gather
+            }
+        }
+        // Phase 5: drain the leading submissions that fit one call.
+        let mut subs: Vec<GenWork> = Vec::new();
+        let mut rows_total = 0usize;
+        while let Some(front) = guard.q.front() {
+            match front {
+                Work::Generate(g) => {
+                    if let Some(first) = subs.first() {
+                        if g.temperature != first.temperature || rows_total + g.rows > capacity {
+                            break;
+                        }
+                    }
+                    let Some(Work::Generate(g)) = guard.q.pop_front() else {
+                        unreachable!("front checked above");
+                    };
+                    rows_total += g.rows;
+                    subs.push(g);
+                }
+                Work::Evaluate { .. } => break,
+            }
+        }
+        drop(guard);
+        if subs.is_empty() {
+            continue; // raced with close/install; re-enter the wait loop
+        }
+        // An oversized lone submission can never execute — fail its ticket
+        // instead of panicking the scheduler (quantum <= capacity makes
+        // this unreachable through SubmitHandle::generate).
+        if rows_total > capacity {
+            let g = subs.remove(0);
+            let _ = g.tx.send(Err(anyhow!(
+                "submission needs {} rows, engine capacity is {capacity}",
+                g.rows
+            )));
+            continue;
+        }
+        execute_call(&mut *engine, subs, rows_total, capacity, deadline_fired, &shared);
+    }
+}
+
+/// Execute one coalesced call and fan the results back out per ticket.
+fn execute_call(
+    engine: &mut dyn RolloutEngine,
+    mut subs: Vec<GenWork>,
+    rows_total: usize,
+    capacity: usize,
+    deadline_fired: bool,
+    shared: &Shared,
+) {
+    let temperature = subs[0].temperature;
+    // Drain, don't clone: the submissions are owned and only their request
+    // counts are needed for the fan-out split.
+    let n_requests: Vec<usize> = subs.iter().map(|s| s.requests.len()).collect();
+    let merged: Vec<GenRequest> = subs.iter_mut().flat_map(|s| s.requests.drain(..)).collect();
+    let started = Instant::now();
+    let expected_groups = merged.len();
+    let result = engine.generate(&merged, temperature).and_then(|res| {
+        // A short groups vector would silently shift later tickets' groups
+        // onto the wrong submissions — fail the whole call instead.
+        anyhow::ensure!(
+            res.groups.len() == expected_groups,
+            "engine returned {} groups for {expected_groups} requests",
+            res.groups.len()
+        );
+        Ok(res)
+    });
+    {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.calls += 1;
+        stats.submissions += subs.len() as u64;
+        stats.rows_used += rows_total as u64;
+        stats.rows_capacity += capacity as u64;
+        stats.max_call_rows = stats.max_call_rows.max(rows_total as u64);
+        stats.coalesced_hist[ServiceCounters::hist_bucket(subs.len())] += 1;
+        if deadline_fired {
+            stats.deadline_dispatches += 1;
+        }
+        for s in &subs {
+            stats.queue_wait_s += started.saturating_duration_since(s.enqueued).as_secs_f64();
+        }
+    }
+    match result {
+        Ok(res) => {
+            // Fan out: per-request groups split by submission, inference
+            // cost apportioned by row share with the last ticket taking the
+            // exact remainder (per-worker counters sum to the true cost).
+            let mut groups = res.groups.into_iter();
+            let mut cost_left = res.cost_s;
+            let n = subs.len();
+            for (i, s) in subs.into_iter().enumerate() {
+                let share = if i + 1 == n {
+                    cost_left
+                } else {
+                    res.cost_s * s.rows as f64 / rows_total.max(1) as f64
+                };
+                cost_left -= share;
+                let out = GenResult {
+                    groups: groups.by_ref().take(n_requests[i]).collect(),
+                    cost_s: share,
+                    rows_used: s.rows,
+                    weight_version: res.weight_version,
+                };
+                let _ = s.tx.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for s in subs {
+                let _ = s.tx.send(Err(anyhow!("coalesced inference call failed: {msg}")));
+            }
+        }
+    }
+}
+
+/// The serial trainer's view of a serviced run: the inference half goes
+/// through a [`SubmitHandle`] (one producer, so every call carries exactly
+/// one submission), the learner half stays on the real policy, and every
+/// `train` re-publishes the snapshot so the service engine tracks the
+/// learner exactly — the bit-for-bit equivalence rail of DESIGN.md §8.
+pub struct ServicedPolicy<'a, P: Trainable> {
+    handle: SubmitHandle,
+    learner: &'a mut P,
+}
+
+impl<'a, P: Trainable> ServicedPolicy<'a, P> {
+    pub fn new(handle: SubmitHandle, learner: &'a mut P) -> ServicedPolicy<'a, P> {
+        ServicedPolicy { handle, learner }
+    }
+}
+
+impl<P: Trainable> RolloutEngine for ServicedPolicy<'_, P> {
+    fn generate(&mut self, requests: &[GenRequest], temperature: f32) -> Result<GenResult> {
+        self.handle.generate(requests, temperature)
+    }
+
+    fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
+        self.handle.evaluate(tasks)
+    }
+
+    fn rollout_capacity(&self) -> usize {
+        self.handle.rollout_capacity()
+    }
+
+    fn gen_len(&self) -> usize {
+        self.handle.gen_len()
+    }
+
+    fn install(&mut self, snap: &WeightSnapshot) {
+        self.handle.install(snap);
+    }
+
+    fn serving_version(&self) -> u64 {
+        self.handle.serving_version()
+    }
+
+    fn name(&self) -> &str {
+        self.handle.name()
+    }
+}
+
+impl<P: Trainable> Trainable for ServicedPolicy<'_, P> {
+    fn train(&mut self, groups: &[PromptGroup], algo: &AlgoConfig) -> Result<TrainResult> {
+        let tr = self.learner.train(groups, algo)?;
+        // Sync point: the serial loop expects the next collect to run under
+        // the post-update weights, exactly as when engine == learner.
+        self.handle.install(&self.learner.snapshot());
+        Ok(tr)
+    }
+
+    fn train_capacity(&self) -> usize {
+        self.learner.train_capacity()
+    }
+
+    fn weight_version(&self) -> u64 {
+        self.learner.weight_version()
+    }
+
+    fn snapshot(&self) -> WeightSnapshot {
+        self.learner.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{generate, TaskFamily};
+    use crate::rl::update::Rollout;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicUsize;
+
+    /// Deterministic engine: reward = 1.0 for every rollout, cost 1.0 per
+    /// call + 0.1 per row; records per-call row counts and installs.
+    struct CountingEngine {
+        capacity: usize,
+        calls: Arc<Mutex<Vec<usize>>>,
+        installs: Arc<AtomicUsize>,
+        version: u64,
+    }
+
+    impl RolloutEngine for CountingEngine {
+        fn generate(&mut self, requests: &[GenRequest], _t: f32) -> Result<GenResult> {
+            let rows_used: usize = requests.iter().map(|r| r.n_samples).sum();
+            anyhow::ensure!(rows_used <= self.capacity, "call exceeds capacity");
+            self.calls.lock().unwrap().push(rows_used);
+            let groups = requests
+                .iter()
+                .map(|req| {
+                    (0..req.n_samples)
+                        .map(|_| Rollout {
+                            gen_tokens: vec![2],
+                            gen_logprobs: vec![-0.1],
+                            reward: 1.0,
+                        })
+                        .collect()
+                })
+                .collect();
+            Ok(GenResult {
+                groups,
+                cost_s: 1.0 + 0.1 * rows_used as f64,
+                rows_used,
+                weight_version: self.version,
+            })
+        }
+
+        fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
+            Ok(EvalResult { accuracy: 0.25, cost_s: tasks.len() as f64 })
+        }
+
+        fn rollout_capacity(&self) -> usize {
+            self.capacity
+        }
+
+        fn gen_len(&self) -> usize {
+            4
+        }
+
+        fn install(&mut self, snap: &WeightSnapshot) {
+            self.installs.fetch_add(1, Ordering::Relaxed);
+            self.version = snap.version;
+        }
+
+        fn serving_version(&self) -> u64 {
+            self.version
+        }
+
+        fn name(&self) -> &str {
+            "counting"
+        }
+    }
+
+    type TestEngine = (Box<dyn RolloutEngine + Send>, Arc<Mutex<Vec<usize>>>, Arc<AtomicUsize>);
+
+    fn engine(capacity: usize) -> TestEngine {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let installs = Arc::new(AtomicUsize::new(0));
+        let e = CountingEngine {
+            capacity,
+            calls: Arc::clone(&calls),
+            installs: Arc::clone(&installs),
+            version: 0,
+        };
+        (Box::new(e), calls, installs)
+    }
+
+    fn reqs(rng: &mut Rng, n_prompts: usize, n_samples: usize) -> Vec<GenRequest> {
+        (0..n_prompts)
+            .map(|i| GenRequest {
+                prompt_idx: i,
+                task: generate(rng, TaskFamily::Add, 3, 20),
+                n_samples,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_producer_passes_calls_through_unchanged() {
+        let (e, calls, _) = engine(64);
+        let service = InferenceService::spawn(e, ServiceConfig::default(), 1, 8);
+        assert_eq!(service.quantum(), 64);
+        let mut h = service.handle();
+        let mut rng = Rng::new(1);
+        let r = reqs(&mut rng, 3, 4);
+        let res = h.generate(&r, 1.0).unwrap();
+        assert_eq!(res.groups.len(), 3);
+        assert_eq!(res.rows_used, 12);
+        assert!((res.cost_s - 2.2).abs() < 1e-12, "full cost to the only ticket");
+        let stats = service.stats();
+        assert_eq!(stats.calls, 1);
+        assert_eq!(stats.submissions, 1);
+        assert_eq!(stats.coalesced_hist[0], 1);
+        assert_eq!(calls.lock().unwrap().as_slice(), &[12]);
+    }
+
+    #[test]
+    fn concurrent_submissions_coalesce_and_split_correctly() {
+        let (e, calls, _) = engine(64);
+        let cfg = ServiceConfig { coalesce_wait_ms: 200, fill_waterline: 1.0 };
+        let service = InferenceService::spawn(e, cfg, 4, 8);
+        assert_eq!(service.quantum(), 16);
+        let mut rng = Rng::new(2);
+        // Submit 4 tickets without waiting, then wait all: the scheduler
+        // must merge them (waterline 64 rows = 4 x 16) into ONE call.
+        let tickets: Vec<Ticket> =
+            (0..4).map(|_| service.handle().submit(reqs(&mut rng, 4, 4), 1.0)).collect();
+        let results: Vec<GenResult> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        assert_eq!(calls.lock().unwrap().as_slice(), &[64], "expected one coalesced call");
+        let total_cost: f64 = results.iter().map(|r| r.cost_s).sum();
+        assert!((total_cost - (1.0 + 0.1 * 64.0)).abs() < 1e-9, "cost not conserved");
+        for r in &results {
+            assert_eq!(r.groups.len(), 4, "per-ticket group split broken");
+            assert_eq!(r.rows_used, 16);
+            assert!(r.groups.iter().all(|g| g.len() == 4));
+        }
+        let stats = service.stats();
+        assert_eq!(stats.calls, 1);
+        assert_eq!(stats.submissions, 4);
+        assert_eq!(stats.max_call_rows, 64);
+        assert_eq!(stats.coalesced_hist[3], 1);
+        assert_eq!(stats.deadline_dispatches, 0, "waterline, not deadline, dispatched");
+    }
+
+    #[test]
+    fn deadline_rescues_an_unreachable_waterline() {
+        let (e, calls, _) = engine(64);
+        // Waterline requires 64 rows but only one 8-row submission will
+        // ever arrive: the deadline must fire or the ticket starves.
+        let cfg = ServiceConfig { coalesce_wait_ms: 5, fill_waterline: 1.0 };
+        let service = InferenceService::spawn(e, cfg, 4, 8);
+        let mut rng = Rng::new(3);
+        let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
+        assert_eq!(res.rows_used, 8);
+        assert_eq!(calls.lock().unwrap().as_slice(), &[8]);
+        assert_eq!(service.stats().deadline_dispatches, 1);
+    }
+
+    #[test]
+    fn installs_dedupe_by_version_across_handles() {
+        let (e, _, installs) = engine(64);
+        let service = InferenceService::spawn(e, ServiceConfig::default(), 4, 8);
+        let snap = WeightSnapshot { version: 3, values: vec![] };
+        for _ in 0..4 {
+            service.handle().install(&snap); // K workers, same snapshot
+        }
+        let mut h = service.handle();
+        assert_eq!(h.serving_version(), 3);
+        let mut rng = Rng::new(4);
+        let res = h.generate(&reqs(&mut rng, 1, 4), 1.0).unwrap();
+        assert_eq!(res.weight_version, 3, "call must run under the installed version");
+        assert_eq!(installs.load(Ordering::Relaxed), 1, "engine installed more than once");
+        // A stale snapshot is ignored entirely.
+        service.handle().install(&WeightSnapshot { version: 2, values: vec![] });
+        assert_eq!(service.handle().serving_version(), 3);
+    }
+
+    #[test]
+    fn evaluate_routes_through_the_service_engine() {
+        let (e, _, _) = engine(64);
+        let service = InferenceService::spawn(e, ServiceConfig::default(), 2, 8);
+        let mut h = service.handle();
+        let mut rng = Rng::new(5);
+        let tasks: Vec<TaskInstance> =
+            (0..3).map(|_| generate(&mut rng, TaskFamily::Add, 2, 20)).collect();
+        let res = h.evaluate(&tasks).unwrap();
+        assert_eq!(res.accuracy, 0.25);
+        assert_eq!(service.stats().calls, 0, "evaluation must not count as a rollout call");
+    }
+
+    #[test]
+    fn closed_service_fails_tickets_instead_of_hanging() {
+        let (e, _, _) = engine(64);
+        let service = InferenceService::spawn(e, ServiceConfig::default(), 1, 8);
+        let h = service.handle();
+        service.close();
+        let mut rng = Rng::new(6);
+        let err = h.submit(reqs(&mut rng, 1, 4), 1.0).wait();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn oversized_submission_errors_its_own_ticket() {
+        let (e, calls, _) = engine(16);
+        let service = InferenceService::spawn(e, ServiceConfig::default(), 1, 8);
+        let mut rng = Rng::new(7);
+        // 5 prompts x 4 samples = 20 rows > capacity 16: must error, not
+        // panic the scheduler — and the service keeps serving afterwards.
+        let err = service.handle().submit(reqs(&mut rng, 5, 4), 1.0).wait();
+        assert!(err.is_err());
+        let ok = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait();
+        assert!(ok.is_ok());
+        assert_eq!(calls.lock().unwrap().as_slice(), &[8]);
+    }
+}

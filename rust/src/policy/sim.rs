@@ -78,6 +78,14 @@ impl SimModelSpec {
 /// Inference/update cost model (seconds). Defaults approximate the paper's
 /// testbed shape: inference dominates updates ~2:1 per step (Fig. 2-right),
 /// scaled so full paper runs land in the paper's "hours" range.
+///
+/// The model charges by rows USED (`overhead + sum over requests`), so
+/// splitting the same rows across more calls costs exactly one extra
+/// `call_overhead_s` per extra call — which is how the sim reflects the
+/// coalescing service's gains: merging K lightly-filled per-worker calls
+/// into one engine call amortizes K-1 overheads without changing the
+/// per-row charge (`rust/tests/service_sim.rs` asserts the end-to-end
+/// version of this).
 #[derive(Clone, Copy, Debug)]
 pub struct SimCostModel {
     /// Fixed cost per inference-engine call (scheduling, kernel launch).
@@ -449,6 +457,26 @@ mod tests {
         let tr = s.train(&groups, &AlgoConfig::new(crate::rl::algo::BaseAlgo::Rloo)).unwrap();
         let ratio = gen.cost_s / tr.cost_s;
         assert!((1.2..4.0).contains(&ratio), "inference/train ratio {ratio}");
+    }
+
+    #[test]
+    fn cost_charges_rows_used_so_coalescing_amortizes_overhead_only() {
+        // One call carrying 4 workers' worth of requests must cost exactly
+        // 3 call overheads less than the same requests split into 4 calls:
+        // the per-row charge is identical either way (rows-used pricing).
+        let s = sim(SimModelSpec::qwen_7b()).with_shapes(384, 384, 512);
+        let mut rng = Rng::new(17);
+        let task = crate::data::tasks::generate(&mut rng, TaskFamily::Add, 5, 24);
+        let reqs: Vec<GenRequest> = (0..8)
+            .map(|i| GenRequest { prompt_idx: i, task: task.clone(), n_samples: 12 })
+            .collect();
+        let merged = s.call_cost(&reqs);
+        let split: f64 = reqs.chunks(2).map(|c| s.call_cost(c)).sum();
+        let saved = split - merged;
+        assert!(
+            (saved - 3.0 * s.cost.call_overhead_s).abs() < 1e-9,
+            "coalescing 4 calls into 1 must save exactly 3 overheads, saved {saved}"
+        );
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod store;
 
 pub use model::FeatureModel;
 pub use posterior::{beta_binomial_pmf, predicted_acceptance, BetaPosterior};
-pub use store::DifficultyStore;
+pub use store::{DifficultyStore, ObservationDelta};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -190,6 +190,38 @@ impl Predictor {
         self.store.observe(task.identity(), rewards, self.cfg.discount);
     }
 
+    /// [`observe_screening`](Self::observe_screening) with the posterior
+    /// update deferred into a worker-local delta: the feature model (one
+    /// uncontended mutex) updates immediately, the sharded store is touched
+    /// only at [`flush`](Self::flush) — once per inference call instead of
+    /// once per observed group.
+    pub fn observe_screening_deferred(
+        &self,
+        task: &TaskInstance,
+        rewards: &[f32],
+        delta: &mut ObservationDelta,
+    ) {
+        delta.push(task.identity(), rewards);
+        self.model.lock().unwrap().update(task, pass_rate(rewards));
+    }
+
+    /// [`observe_rollouts`](Self::observe_rollouts) deferred into a
+    /// worker-local delta (see above).
+    pub fn observe_rollouts_deferred(
+        &self,
+        task: &TaskInstance,
+        rewards: &[f32],
+        delta: &mut ObservationDelta,
+    ) {
+        delta.push(task.identity(), rewards);
+    }
+
+    /// Merge a worker-local delta into the shared store (each shard locked
+    /// at most once) and drain it for reuse.
+    pub fn flush(&self, delta: &mut ObservationDelta) {
+        self.store.merge(delta, self.cfg.discount);
+    }
+
     /// Prompt identities tracked so far.
     pub fn tracked(&self) -> usize {
         self.store.len()
@@ -324,6 +356,43 @@ mod tests {
         }
         // The RNG stream must be untouched by a Screen decision.
         assert_eq!(rng.next_u64(), rng_clone.next_u64());
+    }
+
+    #[test]
+    fn deferred_observation_path_matches_immediate() {
+        // Same observation stream through both paths: identical forecasts
+        // for every task afterwards (store AND feature model agree).
+        let sim = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 8);
+        let data = Dataset::training(DatasetKind::SynthDapo17k, 120, 9, 20);
+        let immediate = Predictor::new(rule(), PredictorConfig::default());
+        let deferred = Predictor::new(rule(), PredictorConfig::default());
+        let mut rng = Rng::new(10);
+        let mut delta = ObservationDelta::default();
+        for (i, t) in data.instances.iter().enumerate() {
+            let p = sim.pass_prob(t);
+            let rewards: Vec<f32> = (0..8).map(|_| if rng.bool(p) { 1.0 } else { 0.0 }).collect();
+            if i % 2 == 0 {
+                immediate.observe_screening(t, &rewards);
+                deferred.observe_screening_deferred(t, &rewards, &mut delta);
+            } else {
+                immediate.observe_rollouts(t, &rewards);
+                deferred.observe_rollouts_deferred(t, &rewards, &mut delta);
+            }
+            // Flush every few observations, as one inference call would.
+            if i % 7 == 6 {
+                deferred.flush(&mut delta);
+            }
+        }
+        deferred.flush(&mut delta);
+        assert!(delta.is_empty());
+        assert_eq!(immediate.tracked(), deferred.tracked());
+        for t in &data.instances {
+            let a = immediate.predict(t);
+            let b = deferred.predict(t);
+            assert!((a.mean - b.mean).abs() < 1e-12, "posterior mean diverged");
+            assert!((a.accept_prob - b.accept_prob).abs() < 1e-12, "forecast diverged");
+            assert_eq!(a.would_skip, b.would_skip);
+        }
     }
 
     #[test]

@@ -7,11 +7,44 @@
 //! single store; shards keep their observation merges from serializing on
 //! one mutex, the same contention shape as
 //! [`crate::metrics::AtomicCounters`] merges.
+//!
+//! Workers do not take a shard lock per observed group: they accumulate an
+//! [`ObservationDelta`] locally during result processing and [`merge`] it
+//! once per inference call — each shard lock is taken at most once per
+//! merge, mirroring how `InferenceCounters` are merged into
+//! `AtomicCounters` once per collect (ROADMAP item).
+//!
+//! [`TaskInstance::identity`]: crate::data::tasks::TaskInstance::identity
+//! [`merge`]: DifficultyStore::merge
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::predictor::posterior::BetaPosterior;
+
+/// Worker-local batch of pending observations: per key, the rewards in
+/// observation order (the discounted fold is order-dependent per key, so
+/// concatenation must preserve it — folding `r1 ++ r2` equals folding `r1`
+/// then `r2`, which is what makes deferred merging exact).
+#[derive(Debug, Default)]
+pub struct ObservationDelta {
+    entries: HashMap<u64, Vec<f32>>,
+}
+
+impl ObservationDelta {
+    pub fn push(&mut self, key: u64, rewards: &[f32]) {
+        self.entries.entry(key).or_default().extend_from_slice(rewards);
+    }
+
+    /// Pending reward observations (rollouts, not keys).
+    pub fn len(&self) -> usize {
+        self.entries.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
 
 /// Shard count: enough to make contention negligible at the repo's worker
 /// counts (K <= 8) while keeping the iteration cost of `len` trivial.
@@ -48,6 +81,30 @@ impl DifficultyStore {
     /// Current discounted counts for `key` (`None` if never observed).
     pub fn counts(&self, key: u64) -> Option<BetaPosterior> {
         self.shard(key).lock().unwrap().get(&key).copied()
+    }
+
+    /// Merge a worker-local observation batch, taking each shard lock at
+    /// most once (vs once per observed group for [`observe`]); the delta is
+    /// drained so the caller's buffer is ready for the next accumulation.
+    ///
+    /// [`observe`]: DifficultyStore::observe
+    pub fn merge(&self, delta: &mut ObservationDelta, discount: f64) {
+        if delta.entries.is_empty() {
+            return;
+        }
+        let mut by_shard: Vec<Vec<(u64, Vec<f32>)>> = (0..N_SHARDS).map(|_| Vec::new()).collect();
+        for (key, rewards) in delta.entries.drain() {
+            by_shard[(key % N_SHARDS as u64) as usize].push((key, rewards));
+        }
+        for (i, bucket) in by_shard.into_iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[i].lock().unwrap();
+            for (key, rewards) in bucket {
+                shard.entry(key).or_default().observe(&rewards, discount);
+            }
+        }
     }
 
     /// Number of prompt identities tracked.
@@ -94,6 +151,40 @@ mod tests {
         assert_eq!(store.counts(3).unwrap().alpha, 1.0);
         assert_eq!(store.counts(3 + N_SHARDS as u64).unwrap().beta, 1.0);
         assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn batched_merge_equals_sequential_observes() {
+        // The deferred path must be numerically identical to per-group
+        // observes, including repeated keys (order preserved per key) and
+        // discounting.
+        let direct = DifficultyStore::new();
+        let batched = DifficultyStore::new();
+        let discount = 0.9;
+        let obs: Vec<(u64, Vec<f32>)> = vec![
+            (1, vec![1.0, 0.0, 1.0]),
+            (2, vec![0.0; 4]),
+            (1, vec![0.0, 1.0]),
+            (2 + N_SHARDS as u64, vec![1.0]),
+        ];
+        let mut delta = ObservationDelta::default();
+        for (key, rewards) in &obs {
+            direct.observe(*key, rewards, discount);
+            delta.push(*key, rewards);
+        }
+        assert_eq!(delta.len(), 10);
+        batched.merge(&mut delta, discount);
+        assert!(delta.is_empty(), "merge must drain the delta");
+        for key in [1, 2, 2 + N_SHARDS as u64] {
+            let a = direct.counts(key).unwrap();
+            let b = batched.counts(key).unwrap();
+            assert!((a.alpha - b.alpha).abs() < 1e-12, "key {key} alpha");
+            assert!((a.beta - b.beta).abs() < 1e-12, "key {key} beta");
+        }
+        assert_eq!(direct.len(), batched.len());
+        // merging an empty delta is a no-op
+        batched.merge(&mut ObservationDelta::default(), discount);
+        assert_eq!(batched.len(), 3);
     }
 
     #[test]

@@ -31,10 +31,18 @@ impl Executable {
     /// Execute with pre-built literals (the parameter store keeps literals
     /// around between steps to skip re-marshalling).
     pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_literal_refs(&refs)
+    }
+
+    /// Execute with borrowed literals: state literals flow straight from
+    /// the [`super::ParamStore`] cache into the PJRT call without being
+    /// cloned per step (`execute` is generic over `Borrow<Literal>`).
+    pub fn run_literal_refs(&self, literals: &[&xla::Literal]) -> Result<Vec<Tensor>> {
         let t0 = Instant::now();
         let result = self
             .exe
-            .execute::<xla::Literal>(literals)
+            .execute::<&xla::Literal>(literals)
             .with_context(|| format!("execute {}", self.sig.name))?;
         let tuple = result[0][0]
             .to_literal_sync()
@@ -60,22 +68,37 @@ impl Executable {
     }
 
     /// Mixed-mode execute: literals for the leading stateful args (params /
-    /// optimizer), host tensors for the per-step data args.
+    /// optimizer), host tensors for the per-step data args. The state
+    /// literals are borrowed, never cloned — the per-call cost is
+    /// marshalling the handful of small data tensors only.
     pub fn run_state_and_data(
         &self,
         state: &[xla::Literal],
         data: &[Tensor],
     ) -> Result<Vec<Tensor>> {
+        self.run_state_groups(&[state], data)
+    }
+
+    /// [`run_state_and_data`](Executable::run_state_and_data) with the
+    /// state literals in several groups (params ++ m ++ v straight from the
+    /// [`super::ParamStore`]'s own vectors), so callers never concatenate —
+    /// and therefore never clone — device state to build a call.
+    pub fn run_state_groups(
+        &self,
+        state: &[&[xla::Literal]],
+        data: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let state_len: usize = state.iter().map(|s| s.len()).sum();
         anyhow::ensure!(
-            state.len() + data.len() == self.sig.args.len(),
+            state_len + data.len() == self.sig.args.len(),
             "{}: expected {} args, got {}+{}",
             self.sig.name,
             self.sig.args.len(),
-            state.len(),
+            state_len,
             data.len()
         );
         for (i, t) in data.iter().enumerate() {
-            let sig = &self.sig.args[state.len() + i];
+            let sig = &self.sig.args[state_len + i];
             anyhow::ensure!(
                 t.shape() == sig.shape.as_slice() && kind_matches(t.kind(), sig.dtype),
                 "{}: data arg {} ('{}') expects {:?} {:?}, got {:?} {:?}",
@@ -88,14 +111,14 @@ impl Executable {
                 t.shape()
             );
         }
-        let mut literals: Vec<xla::Literal> = Vec::with_capacity(self.sig.args.len());
-        for lit in state {
-            literals.push(lit.clone());
+        let data_literals: Vec<xla::Literal> =
+            data.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let mut literals: Vec<&xla::Literal> = Vec::with_capacity(self.sig.args.len());
+        for group in state {
+            literals.extend(group.iter());
         }
-        for t in data {
-            literals.push(t.to_literal()?);
-        }
-        self.run_literals(&literals)
+        literals.extend(data_literals.iter());
+        self.run_literal_refs(&literals)
     }
 
     fn validate(&self, args: &[Tensor]) -> Result<()> {

@@ -74,19 +74,23 @@ impl ParamStore {
         self.specs.len()
     }
 
-    /// Literals for a rollout/forward call: params only.
-    pub fn param_literals(&self) -> Vec<xla::Literal> {
-        self.params.clone()
+    /// Literals for a rollout/forward call: params only, borrowed straight
+    /// from the store (no per-call clones — the marshalled sequence is the
+    /// store itself).
+    pub fn param_literals(&self) -> &[xla::Literal] {
+        &self.params
     }
 
-    /// Literals for a train/sft call: params ++ m ++ v (step appended by the
-    /// caller as a data arg).
-    pub fn opt_literals(&self) -> Vec<xla::Literal> {
-        let mut out = Vec::with_capacity(3 * self.n());
-        out.extend(self.params.iter().cloned());
-        out.extend(self.m.iter().cloned());
-        out.extend(self.v.iter().cloned());
-        out
+    /// State literal groups for a train/sft call: params ++ m ++ v, each
+    /// borrowed straight from the store (step appended by the caller as a
+    /// data arg). The store's own vectors ARE the marshalled-literal cache;
+    /// [`absorb_update`](ParamStore::absorb_update) and
+    /// [`load`](ParamStore::load) replacing them is the invalidation — no
+    /// concatenation, no per-step clones
+    /// ([`Executable::run_state_groups`](super::Executable::run_state_groups)
+    /// chains the groups into one call).
+    pub fn opt_groups(&self) -> [&[xla::Literal]; 3] {
+        [&self.params, &self.m, &self.v]
     }
 
     /// Absorb the leading `3n+1` outputs of a train/sft step (new params, m,

@@ -225,7 +225,7 @@ fn run_pipelined_speed(
     let trainer = PipelinedTrainer::new(
         trainer_cfg(steps, seed, "pipelined"),
         AlgoConfig::new(BaseAlgo::Rloo),
-        PipelineConfig { workers, enabled: true, buffer_cap },
+        PipelineConfig { workers, enabled: true, buffer_cap, ..Default::default() },
     );
     let record = trainer.run(&mut policy, speed_spec(), &big_dataset(), &[]).expect("pipelined run");
     (policy, record)
@@ -498,7 +498,7 @@ fn pipeline_disabled_reproduces_serial_record_bit_for_bit() {
     let trainer = PipelinedTrainer::new(
         trainer_cfg(6, 41, "serial"),
         AlgoConfig::new(BaseAlgo::Rloo),
-        PipelineConfig { workers: 1, enabled: false, buffer_cap: 16 },
+        PipelineConfig { workers: 1, enabled: false, buffer_cap: 16, ..Default::default() },
     );
     let piped = trainer.run(&mut policy, speed_spec(), &big_dataset(), &[]).unwrap();
     assert_eq!(serial.steps.len(), piped.steps.len());

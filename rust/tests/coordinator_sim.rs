@@ -54,7 +54,7 @@ fn run_pipelined(max_steps: usize, seed: u64, workers: usize, enabled: bool) -> 
     let trainer = PipelinedTrainer::new(
         scenario_trainer_config(CurriculumKind::Speed, max_steps, seed),
         AlgoConfig::new(BaseAlgo::Rloo),
-        PipelineConfig { workers, enabled, buffer_cap: 64 },
+        PipelineConfig { workers, enabled, buffer_cap: 64, ..Default::default() },
     );
     let evals = benchmark_suite(123, 24);
     trainer.run(&mut policy, spec, &dataset, &evals).expect("pipelined run")

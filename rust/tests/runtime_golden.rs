@@ -40,7 +40,7 @@ fn forward_logits_match_python() {
     let tok_shape = fwd.get("tokens_shape").unwrap().as_usize_vec().unwrap();
     let tokens = Tensor::i32(tok_shape, fwd.get("tokens").unwrap().as_i32_vec().unwrap());
     let out = exe
-        .run_state_and_data(&g.store.param_literals(), &[tokens])
+        .run_state_and_data(g.store.param_literals(), &[tokens])
         .expect("execute forward");
     let logits = out[0].as_f32().unwrap();
 
@@ -99,7 +99,7 @@ fn rollout_tokens_match_python_greedy_and_sampled() {
     // greedy (temperature 0): bitwise-equal tokens
     let out = exe
         .run_state_and_data(
-            &g.store.param_literals(),
+            g.store.param_literals(),
             &[prompts.clone(), lens.clone(), rng.clone(), Tensor::scalar_f32(0.0)],
         )
         .expect("execute rollout greedy");
@@ -110,7 +110,7 @@ fn rollout_tokens_match_python_greedy_and_sampled() {
     // temperature 1 with the same threefry key: bitwise-equal sampled tokens
     let out = exe
         .run_state_and_data(
-            &g.store.param_literals(),
+            g.store.param_literals(),
             &[prompts, lens, rng, Tensor::scalar_f32(1.0)],
         )
         .expect("execute rollout t=1");
@@ -152,7 +152,7 @@ fn sft_step_roundtrip_updates_state() {
         Tensor::scalar_f32(1.0),
     ];
     let out = exe
-        .run_state_and_data(&g.store.opt_literals(), &data)
+        .run_state_groups(&g.store.opt_groups(), &data)
         .expect("execute sft");
     let stats = g.store.absorb_update(out).expect("absorb");
     let loss0 = stats[0].scalar().unwrap();
@@ -168,7 +168,7 @@ fn sft_step_roundtrip_updates_state() {
         Tensor::scalar_f32(0.0),
         Tensor::scalar_f32(1.0),
     ];
-    let out = exe.run_state_and_data(&g.store.opt_literals(), &data).expect("sft 2");
+    let out = exe.run_state_groups(&g.store.opt_groups(), &data).expect("sft 2");
     let stats = g.store.absorb_update(out).expect("absorb 2");
     let loss1 = stats[0].scalar().unwrap();
     assert!(loss1 < loss0, "loss did not decrease: {loss0} -> {loss1}");

@@ -1,0 +1,215 @@
+//! Integration: the shared coalescing inference service on the SimPolicy
+//! substrate (DESIGN.md §8).
+//!
+//! Three rails:
+//! * serial equivalence — a 1-producer serviced run reproduces the plain
+//!   serial `RunRecord` bit for bit (every step/eval/counter field);
+//! * coalescing wins — with K=4 request producers, the service executes
+//!   strictly fewer engine calls at strictly higher mean fill than K
+//!   private per-worker engines, at matched final accuracy;
+//! * safety — no coalesced call ever exceeds engine capacity, no ticket
+//!   starves (runs complete under an unreachable waterline: the
+//!   `coalesce_wait_ms` deadline dispatches partial calls).
+
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::{CurriculumKind, CurriculumSpec};
+use speed_rl::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
+use speed_rl::coordinator::screening::ScreeningRule;
+use speed_rl::coordinator::trainer::TrainerConfig;
+use speed_rl::data::dataset::{Dataset, DatasetKind};
+use speed_rl::driver;
+use speed_rl::eval::benchmark_suite;
+use speed_rl::metrics::RunRecord;
+use speed_rl::policy::service::ServiceConfig;
+use speed_rl::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
+use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
+
+#[test]
+fn one_producer_service_reproduces_serial_runrecord_bit_for_bit() {
+    // The same config through the plain serial trainer and through the
+    // serial-delegating service path (`workers = 1, pipeline = off`,
+    // service on): the acceptance rail for the refactor.
+    let mut cfg = RunConfig::default();
+    cfg.max_steps = 20;
+    cfg.eval_every = 5;
+    cfg.dataset_size = 4000;
+    cfg.seed = 9;
+    let serial = driver::run_sim(&cfg).unwrap();
+    cfg.service = true;
+    let serviced = driver::run_sim(&cfg).unwrap();
+
+    assert_eq!(serial.steps.len(), serviced.steps.len());
+    for (a, b) in serial.steps.iter().zip(serviced.steps.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.inference_s, b.inference_s);
+        assert_eq!(a.update_s, b.update_s);
+        assert_eq!(a.train_pass_rate, b.train_pass_rate);
+        assert_eq!(a.grad_norm, b.grad_norm);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.clip_frac, b.clip_frac);
+        assert_eq!(a.prompts_consumed, b.prompts_consumed);
+        assert_eq!(a.buffer_len, b.buffer_len);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+    }
+    assert_eq!(serial.evals.len(), serviced.evals.len());
+    for (a, b) in serial.evals.iter().zip(serviced.evals.iter()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+    assert_eq!(serial.counters.calls, serviced.counters.calls);
+    assert_eq!(serial.counters.rows_used, serviced.counters.rows_used);
+    assert_eq!(serial.counters.rows_capacity, serviced.counters.rows_capacity);
+    assert_eq!(serial.counters.rollouts, serviced.counters.rollouts);
+    assert_eq!(serial.counters.cost_s, serviced.counters.cost_s);
+
+    // And the service actually ran: one submission per call, installed
+    // once per train step, no call over the engine's capacity.
+    let svc = serviced.service.expect("service counters");
+    assert!(serial.service.is_none());
+    assert_eq!(svc.submissions, svc.calls);
+    assert_eq!(svc.coalesced_hist[0], svc.calls);
+    assert_eq!(svc.installs, serviced.steps.len() as u64);
+    assert!(svc.max_call_rows as usize <= cfg.batch_size * cfg.n_total());
+}
+
+/// The pipelined scenario both modes share: K workers over a Uniform
+/// curriculum whose per-collect inference (B x N rows) fills only half of
+/// the compiled call — the regime where per-worker engines pay for
+/// lightly-filled fixed-shape calls and the service provably coalesces.
+fn run_pipelined(workers: usize, service: bool, seed: u64) -> RunRecord {
+    let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
+    let mut policy = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), seed)
+        .with_shapes(384, 384, 24);
+    let spec = CurriculumSpec {
+        kind: CurriculumKind::Uniform,
+        rule: ScreeningRule::new(8, 16), // N = 24 rollouts per prompt
+        pool_factor: 4,
+        buffer_cap: usize::MAX,
+        predictor: None,
+    };
+    let trainer = PipelinedTrainer::new(
+        TrainerConfig {
+            batch_size: 8, // 8 x 24 = 192 rows per collect vs 384 capacity
+            eval_every: 10,
+            max_steps: 30,
+            label: if service { "service".into() } else { "per-worker".into() },
+            seed,
+            ..Default::default()
+        },
+        AlgoConfig::new(BaseAlgo::Rloo),
+        PipelineConfig {
+            workers,
+            enabled: true,
+            buffer_cap: 32,
+            service,
+            // Generous deadline so the coalescing assertions below hold on
+            // slow/loaded CI runners too: the waterline still dispatches
+            // immediately once K submissions are queued, so the deadline
+            // only ever stretches the rare partial rounds.
+            service_cfg: ServiceConfig { coalesce_wait_ms: 100, fill_waterline: 0.85 },
+        },
+    );
+    let evals = benchmark_suite(123, 24);
+    trainer.run(&mut policy, spec, &dataset, &evals).expect("pipelined run")
+}
+
+#[test]
+fn coalescing_reduces_calls_and_raises_utilization_at_matched_accuracy() {
+    let per_worker = run_pipelined(4, false, 13);
+    let serviced = run_pipelined(4, true, 13);
+    let svc = serviced.service.expect("service counters");
+
+    // (1) fewer engine calls: K workers' half-filled calls merge.
+    assert!(
+        svc.calls < per_worker.counters.calls,
+        "service must reduce engine calls: {} vs per-worker {}",
+        svc.calls,
+        per_worker.counters.calls
+    );
+    // (2) higher mean call fill (per-worker Uniform calls are ~50% full by
+    // construction; coalesced calls pack multiple workers' submissions).
+    let pw_fill = per_worker.counters.utilization();
+    assert!(
+        svc.mean_fill() > pw_fill + 0.1,
+        "service fill {:.3} not above per-worker fill {:.3}",
+        svc.mean_fill(),
+        pw_fill
+    );
+    assert!(
+        svc.mean_coalesced() > 1.5,
+        "cross-worker coalescing never happened: {:.2} submissions/call",
+        svc.mean_coalesced()
+    );
+
+    // (3) no coalesced call exceeded the engine's compiled capacity.
+    assert!(svc.max_call_rows <= 384, "over-capacity call: {} rows", svc.max_call_rows);
+
+    // (4) accounting conservation: worker-side counters sum the same rows
+    // the service executed, and cost apportionment preserved totals.
+    assert_eq!(svc.rows_used, serviced.counters.rows_used, "rows lost in fan-out");
+    assert_eq!(svc.submissions, serviced.counters.calls, "one submission per worker call");
+
+    // (5) identical learning up to RNG-stream noise: the service changes
+    // how rollouts are batched, not what is learned. The band is wide
+    // because the serviced engine's reward stream depends on (scheduler-
+    // nondeterministic) call composition.
+    for bench in ["math500", "dapo1k"] {
+        let a = per_worker.final_accuracy(bench).unwrap();
+        let b = serviced.final_accuracy(bench).unwrap();
+        assert!((a - b).abs() < 0.1, "{bench}: per-worker {a:.3} vs serviced {b:.3}");
+    }
+
+    // (6) the virtual inference bill shrinks with the saved overheads.
+    assert!(
+        serviced.counters.cost_s < per_worker.counters.cost_s,
+        "coalescing must amortize call overhead: {:.1}s vs {:.1}s",
+        serviced.counters.cost_s,
+        per_worker.counters.cost_s
+    );
+}
+
+#[test]
+fn unreachable_waterline_never_starves_tickets() {
+    // fill_waterline 1.0 demands perfectly full calls, which K=3 workers
+    // of quantum 128 only reach when all three submissions are in flight;
+    // the deadline must dispatch partial calls or the run would hang.
+    let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
+    let mut policy = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 5)
+        .with_shapes(384, 384, 24);
+    let spec = CurriculumSpec {
+        kind: CurriculumKind::Speed,
+        rule: ScreeningRule::new(8, 16),
+        pool_factor: 4,
+        buffer_cap: usize::MAX,
+        predictor: None,
+    };
+    let trainer = PipelinedTrainer::new(
+        TrainerConfig {
+            batch_size: 8,
+            eval_every: 0,
+            max_steps: 10,
+            label: "waterline-1.0".into(),
+            seed: 5,
+            ..Default::default()
+        },
+        AlgoConfig::new(BaseAlgo::Rloo),
+        PipelineConfig {
+            workers: 3,
+            enabled: true,
+            buffer_cap: 32,
+            service: true,
+            service_cfg: ServiceConfig { coalesce_wait_ms: 1, fill_waterline: 1.0 },
+        },
+    );
+    let rec = trainer.run(&mut policy, spec, &dataset, &[]).expect("run must not starve");
+    assert_eq!(rec.steps.len(), 10);
+    let svc = rec.service.expect("service counters");
+    assert!(svc.calls > 0);
+    assert!(svc.max_call_rows <= 384);
+    // per-step service telemetry flows through StepRecord as deltas
+    let step_calls: u64 = rec.steps.iter().map(|s| s.service_calls).sum();
+    assert!(step_calls > 0 && step_calls <= svc.calls);
+}
