@@ -115,6 +115,8 @@ fn main() {
                     task: tasks[i].clone(),
                     screening: vec![],
                     born_step: 0,
+                    n_cont: rule.n_cont,
+                    forecast_var: 0.25,
                 })
                 .collect();
             let mut k = 0usize;
@@ -199,13 +201,7 @@ fn main() {
             seed: 7,
             ..Default::default()
         };
-        let spec = CurriculumSpec {
-            kind: CurriculumKind::Speed,
-            rule,
-            pool_factor: 4,
-            buffer_cap: usize::MAX,
-            predictor: None,
-        };
+        let spec = CurriculumSpec::fixed(CurriculumKind::Speed, rule);
 
         let run_serial = || -> (f64, RunRecord) {
             let mut policy = mk_policy();

@@ -18,6 +18,13 @@ echo "== speed-rl bench (coalescing smoke -> BENCH_coalesce.json) =="
 # steps/sec). Reuses the release build from the first step.
 cargo run --release --bin speed-rl -- bench --steps 6 --workers 4 --out BENCH_coalesce.json
 
+echo "== speed-rl bench --mode alloc (fixed vs adaptive budgets -> BENCH_alloc.json) =="
+# Fixed vs posterior-variance-proportional continuation budgets on the
+# serial SPEED curriculum: rollouts spent to reach the same dapo1k bar
+# (adaptive should get there on fewer rollouts).
+cargo run --release --bin speed-rl -- bench --mode alloc --steps 40 --target 0.45 \
+  --out BENCH_alloc.json
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

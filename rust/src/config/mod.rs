@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::alloc::AllocKind;
 use crate::coordinator::curriculum::CurriculumKind;
 use crate::data::dataset::DatasetKind;
 use crate::policy::service::ServiceConfig;
@@ -32,9 +33,20 @@ pub struct RunConfig {
     pub dataset_size: usize,
     pub curriculum: CurriculumKind,
     pub algo: BaseAlgo,
-    /// SPEED split. Non-SPEED curricula use n_init + n_cont rollouts.
+    /// SPEED split. Non-SPEED curricula use n_init + n_cont rollouts; with
+    /// adaptive allocation `n_cont` is the *reference* budget (it sets the
+    /// per-step rollout target `batch_size * (n_init + n_cont)`).
     pub n_init: usize,
     pub n_cont: usize,
+    /// Continuation-budget allocator: `fixed` spends exactly `n_cont` per
+    /// qualified prompt (the paper's Algorithm 2, bit-for-bit the
+    /// pre-refactor behaviour); `adaptive` sizes each prompt's budget from
+    /// its posterior reward variance within `[n_cont_min, n_cont_max]`.
+    pub alloc: AllocKind,
+    /// Adaptive-allocation floor (0 = auto: `max(1, n_cont / 2)`).
+    pub n_cont_min: usize,
+    /// Adaptive-allocation ceiling (0 = auto: `2 * n_cont`).
+    pub n_cont_max: usize,
     /// Screening thresholds (paper default 0/1 strict).
     pub p_low: f64,
     pub p_high: f64,
@@ -77,6 +89,10 @@ pub struct RunConfig {
     /// Service fill waterline: dispatch immediately once queued rows reach
     /// this fraction of engine capacity.
     pub fill_waterline: f64,
+    /// Scale the service's micro-batch deadline with the observed
+    /// inter-submission gap (EWMA) instead of the fixed `coalesce_wait_ms`
+    /// constant (which then only bounds the adaptive deadline).
+    pub coalesce_adaptive: bool,
 }
 
 impl Default for RunConfig {
@@ -95,6 +111,9 @@ impl Default for RunConfig {
             algo: BaseAlgo::Rloo,
             n_init: 4,
             n_cont: 20,
+            alloc: AllocKind::Fixed,
+            n_cont_min: 0,
+            n_cont_max: 0,
             p_low: 0.0,
             p_high: 1.0,
             batch_size: 16,
@@ -114,14 +133,39 @@ impl Default for RunConfig {
             service: false,
             coalesce_wait_ms: service_cfg.coalesce_wait_ms,
             fill_waterline: service_cfg.fill_waterline,
+            coalesce_adaptive: service_cfg.adaptive,
         }
     }
 }
 
 impl RunConfig {
-    /// Total rollouts per trained prompt (paper: 24).
+    /// Total rollouts per trained prompt (paper: 24). With adaptive
+    /// allocation this is the *reference* total (the rollout batch target);
+    /// realized groups span `n_init + [n_cont_min, n_cont_max]`.
     pub fn n_total(&self) -> usize {
         self.n_init + self.n_cont
+    }
+
+    /// The resolved continuation-budget bounds `(n_cont_min, n_cont_max)`:
+    /// degenerate `(n_cont, n_cont)` for the fixed allocator, the explicit
+    /// knobs for adaptive with `0` = auto (`max(1, n_cont/2)` and
+    /// `2 * n_cont` — a symmetric band around the reference budget).
+    pub fn alloc_bounds(&self) -> (usize, usize) {
+        match self.alloc {
+            AllocKind::Fixed => (self.n_cont, self.n_cont),
+            AllocKind::Adaptive => {
+                let min =
+                    if self.n_cont_min == 0 { (self.n_cont / 2).max(1) } else { self.n_cont_min };
+                let max = if self.n_cont_max == 0 { 2 * self.n_cont } else { self.n_cont_max };
+                (min, max)
+            }
+        }
+    }
+
+    /// Largest possible group under the resolved budget bounds — what
+    /// capacity checks must admit.
+    pub fn max_group_rollouts(&self) -> usize {
+        self.n_init + self.alloc_bounds().1
     }
 
     /// Screening/predictor invariants, checked at load time and by the run
@@ -168,6 +212,50 @@ impl RunConfig {
         }
         if self.batch_size < 1 {
             bail!("batch_size must be >= 1 (got {})", self.batch_size);
+        }
+        // Budget-band knobs silently doing nothing would misrepresent the
+        // run (the config JSON would record a band no allocator enforces).
+        if self.alloc == AllocKind::Fixed && (self.n_cont_min != 0 || self.n_cont_max != 0) {
+            bail!(
+                "n_cont_min/n_cont_max (got {}/{}) only apply to alloc=adaptive — the fixed \
+                 allocator always spends exactly n_cont",
+                self.n_cont_min,
+                self.n_cont_max
+            );
+        }
+        // Same hazard one level up: only the SPEED-family curricula consult
+        // the allocator at all (they are the ones with a continuation
+        // phase), so adaptive allocation on any other curriculum would run
+        // uniform while the config claims otherwise.
+        let allocates =
+            matches!(self.curriculum, CurriculumKind::Speed | CurriculumKind::PredictiveSpeed);
+        if self.alloc == AllocKind::Adaptive && !allocates {
+            bail!(
+                "alloc=adaptive requires a budget-allocating curriculum (speed or \
+                 predictive-speed); '{}' spends uniform rollouts per prompt",
+                self.curriculum.name()
+            );
+        }
+        let (alloc_min, alloc_max) = self.alloc_bounds();
+        if alloc_min > alloc_max {
+            bail!(
+                "n_cont_min must be <= n_cont_max (got {} > {}); 0 = auto",
+                alloc_min,
+                alloc_max
+            );
+        }
+        // A single maximum-budget group must fit the per-step rollout
+        // target, or the batch take could never complete.
+        if self.max_group_rollouts() > self.batch_size * self.n_total() {
+            bail!(
+                "a maximum-budget group ({} rollouts = n_init {} + n_cont_max {}) exceeds the \
+                 rollout batch target {} (batch_size x (n_init + n_cont)) — lower n_cont_max or \
+                 raise batch_size/n_cont",
+                self.max_group_rollouts(),
+                self.n_init,
+                alloc_max,
+                self.batch_size * self.n_total()
+            );
         }
         if !(self.skip_confidence > 0.0 && self.skip_confidence <= 1.0) {
             bail!(
@@ -232,6 +320,9 @@ impl RunConfig {
             ("algo", Json::str(self.algo.name())),
             ("n_init", Json::num(self.n_init as f64)),
             ("n_cont", Json::num(self.n_cont as f64)),
+            ("alloc", Json::str(self.alloc.name())),
+            ("n_cont_min", Json::num(self.n_cont_min as f64)),
+            ("n_cont_max", Json::num(self.n_cont_max as f64)),
             ("p_low", Json::num(self.p_low)),
             ("p_high", Json::num(self.p_high)),
             ("batch_size", Json::num(self.batch_size as f64)),
@@ -251,6 +342,7 @@ impl RunConfig {
             ("service", Json::Bool(self.service)),
             ("coalesce_wait_ms", Json::num(self.coalesce_wait_ms as f64)),
             ("fill_waterline", Json::num(self.fill_waterline)),
+            ("coalesce_adaptive", Json::Bool(self.coalesce_adaptive)),
         ])
     }
 
@@ -280,6 +372,9 @@ impl RunConfig {
         if let Some(v) = get_str("algo") {
             cfg.algo = BaseAlgo::parse(v).with_context(|| format!("algo '{v}'"))?;
         }
+        if let Some(v) = get_str("alloc") {
+            cfg.alloc = AllocKind::parse_or_err(v)?;
+        }
         macro_rules! num_field {
             ($key:literal, $field:ident, $ty:ty) => {
                 if let Some(v) = get_num($key) {
@@ -290,6 +385,8 @@ impl RunConfig {
         num_field!("dataset_size", dataset_size, usize);
         num_field!("n_init", n_init, usize);
         num_field!("n_cont", n_cont, usize);
+        num_field!("n_cont_min", n_cont_min, usize);
+        num_field!("n_cont_max", n_cont_max, usize);
         num_field!("p_low", p_low, f64);
         num_field!("p_high", p_high, f64);
         num_field!("batch_size", batch_size, usize);
@@ -312,6 +409,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("service").and_then(|x| x.as_bool()) {
             cfg.service = v;
+        }
+        if let Some(v) = j.get("coalesce_adaptive").and_then(|x| x.as_bool()) {
+            cfg.coalesce_adaptive = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -465,6 +565,68 @@ mod tests {
         let err = RunConfig::from_json(&j).unwrap_err().to_string();
         assert!(err.contains("bogus-curriculum"), "{err}");
         assert!(err.contains("predictive-speed") && err.contains("uniform"), "{err}");
+    }
+
+    #[test]
+    fn alloc_knobs_roundtrip_resolve_and_validate() {
+        // Fixed (the default): degenerate bounds at n_cont, whatever the
+        // min/max knobs say.
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.alloc, AllocKind::Fixed);
+        assert_eq!(cfg.alloc_bounds(), (cfg.n_cont, cfg.n_cont));
+        assert_eq!(cfg.max_group_rollouts(), cfg.n_total());
+        // Adaptive auto bounds: symmetric band around the reference budget.
+        let mut cfg = RunConfig::default();
+        cfg.alloc = AllocKind::Adaptive;
+        assert_eq!(cfg.alloc_bounds(), (10, 40));
+        assert_eq!(cfg.max_group_rollouts(), 44);
+        assert!(cfg.validate().is_ok());
+        // Explicit bounds round-trip through JSON.
+        cfg.n_cont_min = 8;
+        cfg.n_cont_max = 32;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.alloc, AllocKind::Adaptive);
+        assert_eq!(back.alloc_bounds(), (8, 32));
+        // Inverted bounds are rejected with the invariant in the message.
+        let mut bad = RunConfig::default();
+        bad.alloc = AllocKind::Adaptive;
+        bad.n_cont_min = 32;
+        bad.n_cont_max = 8;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("n_cont_min"), "unhelpful error: {msg}");
+        // Band knobs under the fixed allocator would be silently ignored —
+        // rejected instead, so the recorded config never lies.
+        let mut bad = RunConfig::default();
+        bad.n_cont_min = 8;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("alloc=adaptive"), "unhelpful error: {msg}");
+        // Adaptive allocation on a curriculum with no continuation phase
+        // would likewise run uniform while the config claims a band.
+        let mut bad = RunConfig::default();
+        bad.curriculum = CurriculumKind::Uniform;
+        bad.alloc = AllocKind::Adaptive;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("uniform"), "unhelpful error: {msg}");
+        let mut ok = RunConfig::default();
+        ok.curriculum = CurriculumKind::PredictiveSpeed;
+        ok.alloc = AllocKind::Adaptive;
+        assert!(ok.validate().is_ok());
+        // A max-budget group that cannot fit one rollout batch target is
+        // rejected (batch_size 1: n_init + 2*n_cont > n_init + n_cont).
+        let mut bad = RunConfig::default();
+        bad.alloc = AllocKind::Adaptive;
+        bad.batch_size = 1;
+        let msg = bad.validate().unwrap_err().to_string();
+        assert!(msg.contains("rollout batch target"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn coalesce_adaptive_roundtrips_and_defaults_off() {
+        assert!(!RunConfig::default().coalesce_adaptive);
+        let mut cfg = RunConfig::default();
+        cfg.coalesce_adaptive = true;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.coalesce_adaptive);
     }
 
     #[test]

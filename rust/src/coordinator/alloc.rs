@@ -1,0 +1,335 @@
+//! Per-prompt rollout budgets (CurES-style allocation; PAPERS.md).
+//!
+//! SPEED's estimator quality per prompt is governed by the reward variance
+//! p(1-p) (Theorem 3.1): rollouts spent where the posterior already
+//! forecasts a near-uniform outcome buy almost no gradient signal, while
+//! high-variance prompts are exactly where extra rollouts sharpen the
+//! group baseline. The seed code nevertheless spent a *uniform* `n_cont`
+//! on every qualified prompt. This module replaces that scalar contract
+//! with a per-prompt [`RolloutBudget`] chosen by an [`Allocator`]:
+//!
+//! * [`AllocKind::Fixed`]    — every qualified prompt gets `rule.n_cont`
+//!   continuation rollouts, reproducing the pre-refactor behaviour bit for
+//!   bit (the equivalence rail that makes this refactor safe to land).
+//! * [`AllocKind::Adaptive`] — the budget is proportional to the
+//!   *posterior* reward variance p̂(1-p̂), where p̂ blends the difficulty
+//!   [`Predictor`]'s discounted Beta posterior (when available) with the
+//!   just-realized screening outcome, linearly mapped from variance 0
+//!   (budget `n_cont_min`) to the maximum 0.25 (budget `n_cont_max`).
+//!
+//! The forecast variance behind every allocation is kept with the pending
+//! continuation and scored against the realized group variance when the
+//! group completes (`alloc_calib_*` in
+//! [`crate::metrics::InferenceCounters`]) so miscalibrated budgets are
+//! visible, not silent.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::screening::ScreeningRule;
+use crate::data::tasks::TaskInstance;
+use crate::predictor::{ObservationDelta, Predictor};
+
+/// Allocation strategy selector (the `--alloc` CLI knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocKind {
+    /// Uniform `n_cont` per qualified prompt (the paper's Algorithm 2).
+    Fixed,
+    /// Posterior-variance-proportional budgets in `[n_cont_min, n_cont_max]`.
+    Adaptive,
+}
+
+impl AllocKind {
+    pub const ALL: [AllocKind; 2] = [AllocKind::Fixed, AllocKind::Adaptive];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocKind::Fixed => "fixed",
+            AllocKind::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AllocKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" | "uniform" => Some(AllocKind::Fixed),
+            "adaptive" | "posterior" | "variance" => Some(AllocKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    /// [`parse`](Self::parse) with an error listing every valid name.
+    pub fn parse_or_err(s: &str) -> Result<AllocKind> {
+        AllocKind::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = AllocKind::ALL.iter().map(|k| k.name()).collect();
+            anyhow!("unknown allocator '{s}' (valid: {})", names.join(", "))
+        })
+    }
+}
+
+/// One prompt's rollout budget: screening rows it already consumed plus the
+/// continuation rows it was allocated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RolloutBudget {
+    pub n_init: usize,
+    pub n_cont: usize,
+}
+
+impl RolloutBudget {
+    pub fn n_total(&self) -> usize {
+        self.n_init + self.n_cont
+    }
+}
+
+/// The outcome of one allocation decision.
+#[derive(Clone, Copy, Debug)]
+pub struct Allocation {
+    pub budget: RolloutBudget,
+    /// The forecast reward variance p̂(1-p̂) the budget was derived from;
+    /// scored against the realized group variance for calibration.
+    pub forecast_var: f64,
+}
+
+/// Chooses each qualified prompt's continuation budget. Cheap to `Clone`
+/// (the predictor handle is an `Arc`), so every pipelined rollout worker's
+/// curriculum carries its own copy pricing from the shared posterior store.
+#[derive(Clone, Debug)]
+pub struct Allocator {
+    pub kind: AllocKind,
+    pub rule: ScreeningRule,
+    pub n_cont_min: usize,
+    pub n_cont_max: usize,
+    /// Posterior source for `Adaptive`. Absent, the allocator prices from
+    /// the screening rewards alone (a uniform Beta(1,1) prior).
+    predictor: Option<Arc<Predictor>>,
+    /// Fold screening outcomes into the predictor's posterior store from
+    /// inside [`allocate`](Self::allocate). On for plain `speed` (nothing
+    /// else feeds the store), off for `predictive-speed` (the curriculum
+    /// already observes every outcome — feeding twice would double-count).
+    feed_posterior: bool,
+}
+
+impl Allocator {
+    /// The uniform allocator: `rule.n_cont` for every prompt. Reproduces
+    /// the pre-refactor rollout stream bit for bit — no RNG draws, no
+    /// store access, budgets independent of the screening outcome.
+    pub fn fixed(rule: ScreeningRule) -> Allocator {
+        Allocator {
+            kind: AllocKind::Fixed,
+            rule,
+            n_cont_min: rule.n_cont,
+            n_cont_max: rule.n_cont,
+            predictor: None,
+            feed_posterior: false,
+        }
+    }
+
+    /// Posterior-variance-proportional budgets in `[n_cont_min, n_cont_max]`.
+    pub fn adaptive(
+        rule: ScreeningRule,
+        n_cont_min: usize,
+        n_cont_max: usize,
+        predictor: Option<Arc<Predictor>>,
+        feed_posterior: bool,
+    ) -> Allocator {
+        let n_cont_min = n_cont_min.max(1);
+        Allocator {
+            kind: AllocKind::Adaptive,
+            rule,
+            n_cont_min,
+            n_cont_max: n_cont_max.max(n_cont_min),
+            predictor,
+            feed_posterior,
+        }
+    }
+
+    /// Smallest possible complete group (screening + minimum budget).
+    pub fn min_n_total(&self) -> usize {
+        self.rule.n_init + self.n_cont_min
+    }
+
+    /// Largest possible complete group — what capacity checks must admit.
+    pub fn max_n_total(&self) -> usize {
+        self.rule.n_init + self.n_cont_max
+    }
+
+    /// Choose the continuation budget for a prompt that just passed
+    /// screening with `screening_rewards`.
+    ///
+    /// When this allocator feeds the posterior itself (plain `speed`), the
+    /// observation is deferred into `delta` — one sharded-store merge per
+    /// inference call via [`flush`](Self::flush), mirroring the
+    /// predictive-speed curriculum's batched-observation pattern instead of
+    /// taking a shard lock per accepted prompt.
+    pub fn allocate(
+        &self,
+        task: &TaskInstance,
+        screening_rewards: &[f32],
+        delta: &mut ObservationDelta,
+    ) -> Allocation {
+        let n = screening_rewards.len();
+        let k = screening_rewards.iter().filter(|&&r| r > 0.5).count();
+        // Beta posterior over the pass rate: the predictor's discounted
+        // per-identity counts (blended with its feature-model prior) when
+        // available, else uniform Beta(1,1) — plus the screening outcome.
+        let (a0, b0) = match &self.predictor {
+            Some(p) => {
+                let pred = p.predict(task);
+                // Strength grows with the identity's discounted evidence so
+                // revisited prompts trust their history over one screen.
+                let s = 2.0 + pred.weight.min(16.0);
+                (s * pred.mean, s * (1.0 - pred.mean))
+            }
+            None => (1.0, 1.0),
+        };
+        if self.feed_posterior {
+            delta.push(task.identity(), screening_rewards);
+        }
+        let a = a0 + k as f64;
+        let b = b0 + (n - k) as f64;
+        let p_hat = a / (a + b);
+        let forecast_var = p_hat * (1.0 - p_hat);
+        let n_cont = match self.kind {
+            AllocKind::Fixed => self.rule.n_cont,
+            AllocKind::Adaptive => {
+                // Linear map from forecast variance to budget: v = 0 earns
+                // the floor, the maximum v = 0.25 earns the ceiling.
+                let span = (self.n_cont_max - self.n_cont_min) as f64;
+                let raw = self.n_cont_min as f64 + span * (forecast_var / 0.25);
+                (raw.round() as usize).clamp(self.n_cont_min, self.n_cont_max)
+            }
+        };
+        Allocation { budget: RolloutBudget { n_init: self.rule.n_init, n_cont }, forecast_var }
+    }
+
+    /// Merge observations deferred by [`allocate`](Self::allocate) into
+    /// the posterior store (one sharded-lock pass; call once per inference
+    /// call). A no-op for allocators that do not feed the store — the
+    /// delta then stays empty, or is owned by the curriculum's own
+    /// observation path (predictive-speed).
+    pub fn flush(&self, delta: &mut ObservationDelta) {
+        if let Some(p) = self.predictor.as_ref().filter(|_| self.feed_posterior) {
+            p.flush(delta);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::PredictorConfig;
+    use crate::util::rng::Rng;
+
+    fn task(seed: u64) -> TaskInstance {
+        let mut rng = Rng::new(seed);
+        crate::data::tasks::generate(&mut rng, crate::data::tasks::TaskFamily::Add, 3, 20)
+    }
+
+    fn allocate(alloc: &Allocator, task: &TaskInstance, rewards: &[f32]) -> Allocation {
+        alloc.allocate(task, rewards, &mut ObservationDelta::default())
+    }
+
+    #[test]
+    fn parse_covers_all_kinds() {
+        for kind in AllocKind::ALL {
+            assert_eq!(AllocKind::parse(kind.name()), Some(kind));
+            assert_eq!(AllocKind::parse_or_err(kind.name()).unwrap(), kind);
+        }
+        let err = AllocKind::parse_or_err("bogus").unwrap_err().to_string();
+        assert!(err.contains("fixed") && err.contains("adaptive"), "{err}");
+    }
+
+    #[test]
+    fn fixed_budget_ignores_screening_outcome() {
+        let rule = ScreeningRule::new(4, 20);
+        let alloc = Allocator::fixed(rule);
+        for rewards in [[0.0f32, 0.0, 0.0, 1.0], [1.0, 1.0, 1.0, 0.0], [1.0, 0.0, 1.0, 0.0]] {
+            let a = allocate(&alloc, &task(1), &rewards);
+            assert_eq!(a.budget.n_cont, 20);
+            assert_eq!(a.budget.n_total(), 24);
+        }
+        assert_eq!(alloc.min_n_total(), 24);
+        assert_eq!(alloc.max_n_total(), 24);
+    }
+
+    #[test]
+    fn adaptive_budget_grows_with_forecast_variance() {
+        let rule = ScreeningRule::new(8, 16);
+        let alloc = Allocator::adaptive(rule, 4, 32, None, false);
+        // Near-extreme screening outcome (1/8) forecasts low variance;
+        // balanced (4/8) forecasts the maximum.
+        let low = allocate(&alloc, &task(2), &[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let high = allocate(&alloc, &task(2), &[1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(
+            high.budget.n_cont > low.budget.n_cont,
+            "balanced outcome must earn more rollouts: {} vs {}",
+            high.budget.n_cont,
+            low.budget.n_cont
+        );
+        assert!(high.forecast_var > low.forecast_var);
+        for a in [low, high] {
+            assert!((4..=32).contains(&a.budget.n_cont), "budget out of clamp: {a:?}");
+        }
+        assert_eq!(alloc.min_n_total(), 12);
+        assert_eq!(alloc.max_n_total(), 40);
+    }
+
+    #[test]
+    fn degenerate_bounds_reduce_adaptive_to_fixed_budgets() {
+        let rule = ScreeningRule::new(4, 20);
+        let adaptive = Allocator::adaptive(rule, 20, 20, None, false);
+        let fixed = Allocator::fixed(rule);
+        for rewards in [[1.0f32, 0.0, 0.0, 0.0], [1.0, 1.0, 1.0, 0.0]] {
+            let a = allocate(&adaptive, &task(3), &rewards);
+            let f = allocate(&fixed, &task(3), &rewards);
+            assert_eq!(a.budget, f.budget, "n_cont_min = n_cont_max must pin the budget");
+        }
+    }
+
+    #[test]
+    fn predictor_posterior_steers_the_budget() {
+        let rule = ScreeningRule::new(8, 16);
+        let predictor = Arc::new(Predictor::new(rule, PredictorConfig::default()));
+        let t = task(4);
+        // Teach the store a long near-certain history for this identity.
+        for _ in 0..6 {
+            predictor.observe_rollouts(&t, &[1.0; 8]);
+        }
+        let informed = Allocator::adaptive(rule, 4, 32, Some(Arc::clone(&predictor)), false);
+        let blind = Allocator::adaptive(rule, 4, 32, None, false);
+        // Same *balanced* screening outcome: the informed allocator knows
+        // the identity is near-trivial and allocates below the blind one.
+        let rewards = [1.0f32, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let a = allocate(&informed, &t, &rewards);
+        let b = allocate(&blind, &t, &rewards);
+        assert!(
+            a.budget.n_cont < b.budget.n_cont,
+            "history must pull the budget down: informed {} vs blind {}",
+            a.budget.n_cont,
+            b.budget.n_cont
+        );
+    }
+
+    #[test]
+    fn feed_posterior_defers_observations_until_flush() {
+        let rule = ScreeningRule::new(8, 16);
+        let predictor = Arc::new(Predictor::new(rule, PredictorConfig::default()));
+        let alloc = Allocator::adaptive(rule, 4, 32, Some(Arc::clone(&predictor)), true);
+        let mut delta = ObservationDelta::default();
+        assert_eq!(predictor.tracked(), 0);
+        alloc.allocate(&task(5), &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0], &mut delta);
+        // Deferred: the shard lock is not touched per allocation...
+        assert_eq!(predictor.tracked(), 0);
+        assert!(!delta.is_empty());
+        // ...the per-call flush merges it.
+        alloc.flush(&mut delta);
+        assert!(delta.is_empty());
+        assert_eq!(predictor.tracked(), 1, "allocator must feed the shared posterior");
+        // And the non-feeding allocator leaves store AND delta untouched.
+        let silent = Allocator::adaptive(rule, 4, 32, Some(Arc::clone(&predictor)), false);
+        silent.allocate(&task(6), &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0], &mut delta);
+        assert!(delta.is_empty());
+        silent.flush(&mut delta);
+        assert_eq!(predictor.tracked(), 1);
+    }
+}

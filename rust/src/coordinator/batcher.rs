@@ -62,6 +62,22 @@ pub struct PendingContinuation {
     /// Screening rollouts to be merged with the continuation ones.
     pub screening: Vec<crate::rl::update::Rollout>,
     pub born_step: usize,
+    /// Continuation rows this prompt was allocated (the per-prompt budget
+    /// chosen by [`crate::coordinator::alloc::Allocator`]; the fixed
+    /// allocator pins it to the rule's `n_cont`).
+    pub n_cont: usize,
+    /// Forecast reward variance behind the allocation (scored against the
+    /// realized group variance when the continuation completes).
+    pub forecast_var: f64,
+}
+
+/// Rollout rows the pending queue represents (the `n_init` screening rows
+/// each entry already holds plus its allocated continuation budget) — the
+/// pending half of the SPEED curricula's rollout-unit backlog throttle.
+/// Shared by `Speed` and `PredictiveSpeed` so the two mirrored loops
+/// cannot drift on what "backlog" means.
+pub fn pending_rows(pending: &VecDeque<PendingContinuation>, n_init: usize) -> usize {
+    pending.iter().map(|p| n_init + p.n_cont).sum()
 }
 
 /// Pack the next inference call: continuations first (they complete groups
@@ -79,26 +95,30 @@ pub fn plan_call(
     max_screen: usize,
 ) -> CallPlan {
     assert!(rule.n_init <= capacity, "N_init exceeds call capacity");
-    assert!(rule.n_cont <= capacity, "N_cont exceeds call capacity");
     let mut requests = Vec::new();
     let mut purposes = Vec::new();
     let mut continuations = Vec::new();
     let mut rows = 0usize;
 
     // Phase A: continuation rows for previously-qualified prompts (FIFO).
-    while pending.front().is_some() {
-        if rows + rule.n_cont > capacity {
+    // Budgets vary per prompt, so each pending entry's own `n_cont` drives
+    // the packing; the spill stays strictly FIFO — the first entry that
+    // does not fit ends the phase, even if a smaller later entry would
+    // (reordering would unbound a large-budget prompt's wait).
+    while let Some(front) = pending.front() {
+        assert!(front.n_cont <= capacity, "allocated N_cont exceeds call capacity");
+        if rows + front.n_cont > capacity {
             break;
         }
         let p = pending.pop_front().unwrap();
         requests.push(GenRequest {
             prompt_idx: p.prompt_idx,
             task: p.task.clone(),
-            n_samples: rule.n_cont,
+            n_samples: p.n_cont,
         });
         purposes.push(Purpose::Continue);
+        rows += p.n_cont;
         continuations.push(p);
-        rows += rule.n_cont;
     }
 
     // Phase B: screening rows for the next wave of prompts.
@@ -127,7 +147,12 @@ mod tests {
         generate(rng, TaskFamily::Add, 3, 24)
     }
 
-    fn pend(rng: &mut Rng, idx: usize, n_init: usize) -> PendingContinuation {
+    fn pend_with_budget(
+        rng: &mut Rng,
+        idx: usize,
+        n_init: usize,
+        n_cont: usize,
+    ) -> PendingContinuation {
         PendingContinuation {
             prompt_idx: idx,
             task: task(rng),
@@ -136,14 +161,21 @@ mod tests {
                 n_init
             ],
             born_step: 0,
+            n_cont,
+            forecast_var: 0.25,
         }
+    }
+
+    fn pend(rng: &mut Rng, idx: usize, rule: &ScreeningRule) -> PendingContinuation {
+        // The fixed-budget shape: every pending carries the rule's n_cont.
+        pend_with_budget(rng, idx, rule.n_init, rule.n_cont)
     }
 
     #[test]
     fn continuations_take_priority() {
         let mut rng = Rng::new(0);
         let rule = ScreeningRule::new(4, 12);
-        let mut pending: VecDeque<_> = (0..2).map(|i| pend(&mut rng, i, 4)).collect();
+        let mut pending: VecDeque<_> = (0..2).map(|i| pend(&mut rng, i, &rule)).collect();
         let mut rng2 = Rng::new(1);
         let mut next = 100usize;
         let plan = plan_call(
@@ -168,7 +200,7 @@ mod tests {
     fn oversized_pending_spills_to_next_call() {
         let mut rng = Rng::new(3);
         let rule = ScreeningRule::new(8, 24);
-        let mut pending: VecDeque<_> = (0..5).map(|i| pend(&mut rng, i, 8)).collect();
+        let mut pending: VecDeque<_> = (0..5).map(|i| pend(&mut rng, i, &rule)).collect();
         let mut rng2 = Rng::new(4);
         let plan = plan_call(&mut pending, || (0, task(&mut rng2)), &rule, 64, usize::MAX);
         // two continuations fit (48 rows), then screening fills 2x8 = 16
@@ -188,8 +220,7 @@ mod tests {
         let quantum = engine_capacity / k;
         let mut total = 0usize;
         for w in 0..k {
-            let mut pending: VecDeque<_> =
-                (0..w).map(|i| pend(&mut rng, i, rule.n_init)).collect();
+            let mut pending: VecDeque<_> = (0..w).map(|i| pend(&mut rng, i, &rule)).collect();
             let mut rng2 = Rng::new(w as u64);
             let plan = plan_call(&mut pending, || (0, task(&mut rng2)), &rule, quantum, usize::MAX);
             assert!(plan.rows_used <= quantum);
@@ -202,12 +233,96 @@ mod tests {
     fn max_screen_zero_disables_prefetch() {
         let mut rng = Rng::new(5);
         let rule = ScreeningRule::new(4, 12);
-        let mut pending: VecDeque<_> = vec![pend(&mut rng, 0, 4)].into();
+        let mut pending: VecDeque<_> = vec![pend(&mut rng, 0, &rule)].into();
         let mut rng2 = Rng::new(6);
         let plan = plan_call(&mut pending, || (0, task(&mut rng2)), &rule, 64, 0);
         assert_eq!(plan.n_continue(), 1);
         assert_eq!(plan.n_screen(), 0);
         assert_eq!(plan.rows_used, 12);
+    }
+
+    #[test]
+    fn variable_budgets_pack_and_spill_fifo() {
+        let mut rng = Rng::new(21);
+        let rule = ScreeningRule::new(4, 16);
+        // Budgets 20 + 30 fit a 56-row call with one 4-row screening; the
+        // 40-budget third entry spills even though a later 8 would fit.
+        let mut pending: VecDeque<_> = [20usize, 30, 40, 8]
+            .iter()
+            .enumerate()
+            .map(|(i, &n_cont)| pend_with_budget(&mut rng, i, 4, n_cont))
+            .collect();
+        let mut rng2 = Rng::new(22);
+        let plan = plan_call(&mut pending, || (0, task(&mut rng2)), &rule, 56, usize::MAX);
+        assert_eq!(plan.n_continue(), 2, "FIFO spill must stop at the first misfit");
+        assert_eq!(pending.len(), 2);
+        assert_eq!(pending.front().unwrap().n_cont, 40);
+        assert_eq!(plan.n_screen(), 1); // 20 + 30 + 4 = 54, one screen fits
+        assert_eq!(plan.rows_used, 54);
+        assert_eq!(plan.requests[0].n_samples, 20);
+        assert_eq!(plan.requests[1].n_samples, 30);
+    }
+
+    #[test]
+    fn variable_budget_packing_invariants() {
+        // The satellite property test: heterogeneous budgets never
+        // overflow capacity and continuations always precede screenings.
+        check("batcher-variable-budgets", 120, |rng| {
+            let n_init = rng.range_usize(2, 8);
+            let n_cont_max = rng.range_usize(4, 40);
+            let capacity = rng.range_usize(n_init.max(n_cont_max), 128);
+            let rule = ScreeningRule::new(n_init, n_cont_max);
+            let n_pending = rng.range_usize(0, 8);
+            let mut seed_rng = Rng::new(rng.next_u64());
+            let budgets: Vec<usize> =
+                (0..n_pending).map(|_| rng.range_usize(1, n_cont_max)).collect();
+            let mut pending: VecDeque<_> = budgets
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| pend_with_budget(&mut seed_rng, i, n_init, b))
+                .collect();
+            let mut supply_rng = Rng::new(rng.next_u64());
+            let before = pending.len();
+            let plan =
+                plan_call(&mut pending, || (9, task(&mut supply_rng)), &rule, capacity, usize::MAX);
+            let rows: usize = plan.requests.iter().map(|r| r.n_samples).sum();
+            prop_assert!(rows == plan.rows_used, "row accounting mismatch");
+            prop_assert!(plan.rows_used <= capacity, "over capacity");
+            // each continuation request carries its pending's own budget
+            let mut cont_idx = 0usize;
+            for (req, purpose) in plan.requests.iter().zip(&plan.purposes) {
+                if *purpose == Purpose::Continue {
+                    prop_assert!(
+                        req.n_samples == plan.continuations[cont_idx].n_cont,
+                        "budget lost in the plan"
+                    );
+                    cont_idx += 1;
+                }
+            }
+            prop_assert!(cont_idx == plan.continuations.len(), "continuation bookkeeping");
+            // FIFO spill: taken continuations are exactly the longest
+            // prefix of the original queue that fits
+            prop_assert!(plan.n_continue() == before - pending.len(), "pending accounting");
+            let mut prefix_rows = 0usize;
+            let mut prefix = 0usize;
+            for b in &budgets {
+                if prefix_rows + b > capacity {
+                    break;
+                }
+                prefix_rows += b;
+                prefix += 1;
+            }
+            prop_assert!(plan.n_continue() == prefix, "spill not FIFO-prefix");
+            // all continuations precede all screenings
+            let first_screen = plan.purposes.iter().position(|p| *p == Purpose::Screen);
+            if let Some(fs) = first_screen {
+                prop_assert!(
+                    plan.purposes[fs..].iter().all(|p| *p == Purpose::Screen),
+                    "interleaved purposes"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -220,7 +335,7 @@ mod tests {
             let n_pending = rng.range_usize(0, 6);
             let mut seed_rng = Rng::new(rng.next_u64());
             let mut pending: VecDeque<_> =
-                (0..n_pending).map(|i| pend(&mut seed_rng, i, n_init)).collect();
+                (0..n_pending).map(|i| pend(&mut seed_rng, i, &rule)).collect();
             let mut supply_rng = Rng::new(rng.next_u64());
             let before = pending.len();
             let plan = plan_call(&mut pending, || (7, task(&mut supply_rng)), &rule, capacity, usize::MAX);

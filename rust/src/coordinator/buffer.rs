@@ -28,6 +28,32 @@ struct Buffered {
     born_step: usize,
 }
 
+/// The longest FIFO prefix of `sizes` (per-group rollout counts) that fits
+/// `target_rows`: returns `(take, complete)`. The batch is `complete` when
+/// the prefix meets the target exactly, when a queued group overflows it
+/// (the batch is as full as FIFO order allows), or when the front group
+/// alone exceeds the target — that misfit is taken by itself so the
+/// downstream capacity check fails loudly instead of the supply loop
+/// spinning forever. Shared by [`SamplingBuffer::take_rollouts`] and
+/// [`SharedBuffer::pop_rollouts`] so the serial and pipelined paths can
+/// never drift apart on this invariant.
+fn rollout_prefix(sizes: impl Iterator<Item = usize>, target_rows: usize) -> (usize, bool) {
+    let mut rows = 0usize;
+    let mut take = 0usize;
+    for n in sizes {
+        if rows + n > target_rows {
+            // A queued group overflows the remaining headroom: the batch
+            // is as full as FIFO order allows (take = 0 is the oversized
+            // front, taken alone).
+            return (take.max(1), true);
+        }
+        rows += n;
+        take += 1;
+    }
+    // Queue exhausted under the target: complete only on an exact hit.
+    (take, rows == target_rows)
+}
+
 #[derive(Debug)]
 pub struct SamplingBuffer {
     q: VecDeque<Buffered>,
@@ -97,6 +123,10 @@ impl SamplingBuffer {
     /// Pop exactly `b` groups (FIFO: oldest first, bounding staleness).
     /// Returns None when fewer than `b` are buffered — the caller keeps
     /// running inference (Alg. 2 line 4).
+    ///
+    /// Production paths batch by ROLLOUTS
+    /// ([`take_rollouts`](Self::take_rollouts)); this group-counted take is
+    /// the uniform-budget reference the equivalence tests compare against.
     pub fn take_batch(&mut self, b: usize, train_step: usize) -> Option<Vec<PromptGroup>> {
         if self.q.len() < b {
             return None;
@@ -109,6 +139,46 @@ impl SamplingBuffer {
             out.push(item.group);
         }
         Some(out)
+    }
+
+    /// Pop the longest FIFO prefix of groups whose rollouts fit
+    /// `target_rows` — the variable-budget batch take: training batches
+    /// are accounted in *rollouts* (what the compiled train step actually
+    /// consumes), not in groups, since per-prompt budgets make group sizes
+    /// heterogeneous. Returns `None` while the whole buffer still fits
+    /// under the target (the caller keeps running inference); returns a
+    /// batch once the target is met exactly or the next group would
+    /// overflow it. With uniform groups of `n` rollouts and a target of
+    /// `b * n` this is exactly [`take_batch`](Self::take_batch)`(b)`.
+    ///
+    /// An oversized front group (alone above the target) is returned by
+    /// itself so the downstream capacity check fails loudly instead of the
+    /// supply loop spinning forever; run drivers validate budgets against
+    /// the train shape so this cannot happen in configured runs.
+    pub fn take_rollouts(
+        &mut self,
+        target_rows: usize,
+        train_step: usize,
+    ) -> Option<Vec<PromptGroup>> {
+        let sizes = self.q.iter().map(|b| b.group.rollouts.len());
+        let (take, complete) = rollout_prefix(sizes, target_rows);
+        if !complete {
+            return None;
+        }
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            let item = self.q.pop_front().unwrap();
+            self.staleness_sum += (train_step.saturating_sub(item.born_step)) as u64;
+            self.consumed += 1;
+            out.push(item.group);
+        }
+        Some(out)
+    }
+
+    /// Total rollout rows currently buffered (the rollout-unit backlog the
+    /// SPEED curricula throttle screening on).
+    pub fn rollout_rows(&self) -> usize {
+        self.q.iter().map(|b| b.group.rollouts.len()).sum()
     }
 
     /// Mean steps-in-buffer over all consumed groups.
@@ -213,6 +283,10 @@ impl SharedBuffer {
     /// Blocking pop of exactly `b` groups; `train_step`/`version` are the
     /// learner's current step and weight version (for staleness stats).
     /// Returns None when the buffer is closed with fewer than `b` left.
+    ///
+    /// Production paths batch by ROLLOUTS
+    /// ([`pop_rollouts`](Self::pop_rollouts)); this group-counted pop is
+    /// the uniform-budget reference the equivalence tests compare against.
     pub fn pop_batch(
         &self,
         b: usize,
@@ -224,6 +298,44 @@ impl SharedBuffer {
             if g.q.len() >= b {
                 let mut out = Vec::with_capacity(b);
                 for _ in 0..b {
+                    let item = g.q.pop_front().unwrap();
+                    g.staleness_sum += train_step.saturating_sub(item.born_step) as u64;
+                    g.version_lag_sum += version.saturating_sub(item.born_version);
+                    g.popped += 1;
+                    out.push(item.group);
+                }
+                self.not_full.notify_all();
+                return Some(out);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop of the longest FIFO prefix of groups whose rollouts
+    /// fit `target_rows` (the variable-budget analogue of
+    /// [`pop_batch`](Self::pop_batch) — training batches are accounted in
+    /// rollouts, not groups). Blocks until the target is met exactly or a
+    /// queued group overflows it; with uniform groups of `n` rollouts and
+    /// a target of `b * n` this pops exactly `b` groups. Returns `None`
+    /// when the buffer closes before a full batch accumulates. An
+    /// oversized front group is popped alone (see
+    /// [`SamplingBuffer::take_rollouts`]).
+    pub fn pop_rollouts(
+        &self,
+        target_rows: usize,
+        train_step: usize,
+        version: u64,
+    ) -> Option<Vec<PromptGroup>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            let sizes = g.q.iter().map(|e| e.group.rollouts.len());
+            let (take, complete) = rollout_prefix(sizes, target_rows);
+            if complete {
+                let mut out = Vec::with_capacity(take);
+                for _ in 0..take {
                     let item = g.q.pop_front().unwrap();
                     g.staleness_sum += train_step.saturating_sub(item.born_step) as u64;
                     g.version_lag_sum += version.saturating_sub(item.born_version);
@@ -290,7 +402,7 @@ mod tests {
     use crate::util::proptest::check;
     use crate::{prop_assert, prop_assert_eq};
 
-    fn group(idx: usize) -> PromptGroup {
+    fn sized_group(idx: usize, rollouts: usize) -> PromptGroup {
         PromptGroup {
             prompt_idx: idx,
             task: crate::data::tasks::TaskInstance {
@@ -299,8 +411,15 @@ mod tests {
                 prompt: "1+1=".into(),
                 answer: 2,
             },
-            rollouts: vec![Rollout { gen_tokens: vec![2], gen_logprobs: vec![-0.1], reward: 1.0 }],
+            rollouts: vec![
+                Rollout { gen_tokens: vec![2], gen_logprobs: vec![-0.1], reward: 1.0 };
+                rollouts
+            ],
         }
+    }
+
+    fn group(idx: usize) -> PromptGroup {
+        sized_group(idx, 1)
     }
 
     #[test]
@@ -372,6 +491,96 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn take_rollouts_matches_take_batch_for_uniform_groups() {
+        // Uniform groups of n rollouts + target b*n == take_batch(b): the
+        // fixed-allocator equivalence at the buffer layer.
+        let mut by_groups = SamplingBuffer::new();
+        let mut by_rows = SamplingBuffer::new();
+        for i in 0..5 {
+            by_groups.push(sized_group(i, 24), i);
+            by_rows.push(sized_group(i, 24), i);
+        }
+        assert!(by_rows.take_rollouts(6 * 24, 5).is_none(), "short buffer must not take");
+        assert_eq!(by_rows.len(), 5);
+        let a = by_groups.take_batch(3, 7).unwrap();
+        let b = by_rows.take_rollouts(3 * 24, 7).unwrap();
+        assert_eq!(
+            a.iter().map(|g| g.prompt_idx).collect::<Vec<_>>(),
+            b.iter().map(|g| g.prompt_idx).collect::<Vec<_>>()
+        );
+        assert_eq!(by_groups.mean_staleness(), by_rows.mean_staleness());
+    }
+
+    #[test]
+    fn take_rollouts_fills_up_to_the_target_with_variable_groups() {
+        let mut buf = SamplingBuffer::new();
+        for (i, n) in [14, 44, 30, 14].iter().enumerate() {
+            buf.push(sized_group(i, *n), 0);
+        }
+        // 14 + 44 + 30 = 88; the next 14 would fit 100? no: 88 + 14 = 102 > 100
+        let batch = buf.take_rollouts(100, 1).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.iter().map(|g| g.rollouts.len()).sum::<usize>(), 88);
+        assert_eq!(buf.len(), 1);
+        // remaining 14 alone under a 100-row target: buffer might grow, so
+        // no take yet
+        assert!(buf.take_rollouts(100, 1).is_none());
+        // an exact-target prefix completes even when it drains the buffer
+        buf.push(sized_group(9, 86), 0);
+        let batch = buf.take_rollouts(100, 1).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn take_rollouts_surfaces_an_oversized_front_group() {
+        // A group larger than the target alone is returned by itself (the
+        // downstream capacity check rejects it loudly) instead of wedging
+        // the supply loop.
+        let mut buf = SamplingBuffer::new();
+        buf.push(sized_group(0, 50), 0);
+        buf.push(sized_group(1, 10), 0);
+        let batch = buf.take_rollouts(48, 1).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].rollouts.len(), 50);
+        assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    fn shared_buffer_pop_rollouts_takes_variable_prefix() {
+        let buf = SharedBuffer::new(8);
+        for (i, n) in [24usize, 24, 40, 20].iter().enumerate() {
+            assert!(buf.push(sized_group(i, *n), 0, 0));
+        }
+        // 24 + 24 = 48; the 40-row group overflows a 64-row target
+        let batch = buf.pop_rollouts(64, 1, 0).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(buf.len(), 2);
+        // uniform case: exact target
+        let batch = buf.pop_rollouts(60, 1, 0).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(buf.is_empty());
+        buf.close();
+        assert!(buf.pop_rollouts(10, 1, 0).is_none());
+    }
+
+    #[test]
+    fn shared_buffer_pop_rollouts_blocks_until_target() {
+        use std::sync::Arc;
+        let buf = Arc::new(SharedBuffer::new(8));
+        assert!(buf.push(sized_group(0, 24), 0, 0));
+        let consumer = {
+            let buf = Arc::clone(&buf);
+            std::thread::spawn(move || buf.pop_rollouts(48, 0, 0))
+        };
+        // The consumer needs 48 rows; only 24 are queued. Feed the rest.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(buf.push(sized_group(1, 24), 0, 0));
+        let batch = consumer.join().unwrap().expect("batch once target met");
+        assert_eq!(batch.len(), 2);
     }
 
     #[test]

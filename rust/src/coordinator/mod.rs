@@ -2,6 +2,9 @@
 //! scheduling of inference and training.
 //!
 //! * [`screening`]  — the lightweight pass-rate test over `N_init` rollouts
+//! * [`alloc`]      — per-prompt continuation budgets: the [`alloc::Allocator`]
+//!                    maps the posterior reward variance to each qualified
+//!                    prompt's `n_cont` (fixed = the paper's uniform split)
 //! * [`buffer`]     — the sampling buffers decoupling qualified-prompt
 //!                    supply from the fixed training batch size (Alg. 2):
 //!                    the serial bounded deque and the `Mutex`+`Condvar`
@@ -24,6 +27,7 @@
 //!                    shared coalescing [`crate::policy::service`] instead
 //!                    of owning private engines (DESIGN.md §8)
 
+pub mod alloc;
 pub mod batcher;
 pub mod naive;
 pub mod buffer;
@@ -33,6 +37,7 @@ pub mod predictive;
 pub mod screening;
 pub mod trainer;
 
+pub use alloc::{AllocKind, Allocator, RolloutBudget};
 pub use curriculum::{Curriculum, CurriculumKind, CurriculumSpec};
 pub use pipeline::{PipelineConfig, PipelinedTrainer};
 pub use screening::ScreeningRule;

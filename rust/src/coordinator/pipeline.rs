@@ -31,7 +31,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::buffer::SharedBuffer;
 use crate::coordinator::curriculum::{CurriculumSpec, StepContext};
 use crate::coordinator::trainer::{
-    evaluate_all, step_rates, target_reached, EvalSet, Trainer, TrainerConfig,
+    evaluate_all, step_alloc_rows, step_rates, target_reached, EvalSet, Trainer, TrainerConfig,
 };
 use crate::data::dataset::Dataset;
 use crate::data::loader::{Loader, SharedSource};
@@ -134,10 +134,20 @@ impl PipelinedTrainer {
         }
 
         let b = self.config.batch_size;
-        let shared = Arc::new(SharedBuffer::new(self.pipeline.buffer_cap.max(b)));
+        // Batch accounting is in rollouts (per-prompt budgets make group
+        // sizes heterogeneous): the learner pops `b * n_total` rows per
+        // step, which may span more than `b` groups when the allocator
+        // issues below-reference budgets — the buffer capacity and the
+        // production cap must be sized in groups accordingly. With the
+        // fixed allocator `groups_per_batch == b` and both reduce to the
+        // pre-refactor values exactly.
+        let target_rows = b * spec.rule.n_total();
+        let groups_per_batch = target_rows.div_ceil(spec.alloc.min_n_total().max(1)).max(b);
+        let shared = Arc::new(SharedBuffer::new(self.pipeline.buffer_cap.max(groups_per_batch)));
         // Production is capped at what the learner can ever consume, so
         // workers wind down instead of burning inference at run end.
-        shared.set_demand((self.config.max_steps as u64).saturating_mul(b as u64));
+        let demand = (self.config.max_steps as u64).saturating_mul(groups_per_batch as u64);
+        shared.set_demand(demand);
         let loader = Arc::new(Mutex::new(Loader::new(dataset.len(), self.config.seed)));
         let dataset = Arc::new(dataset.clone());
         let counters = Arc::new(AtomicCounters::default());
@@ -156,7 +166,10 @@ impl PipelinedTrainer {
                 policy.fork_engine(0),
                 self.pipeline.service_cfg,
                 self.pipeline.workers,
-                spec.rule.n_total(),
+                // The quantum must admit the LARGEST possible group: with
+                // adaptive budgets that is n_init + n_cont_max, not the
+                // rule's reference total.
+                spec.alloc.max_n_total(),
             )
         });
 
@@ -197,6 +210,7 @@ impl PipelinedTrainer {
             &clock,
             evals,
             service.as_ref(),
+            target_rows,
             &mut record,
         );
 
@@ -232,9 +246,9 @@ impl PipelinedTrainer {
         clock: &AtomicUsize,
         evals: &[EvalSet],
         service: Option<&InferenceService>,
+        target_rows: usize,
         record: &mut RunRecord,
     ) -> Result<()> {
-        let b = self.config.batch_size;
         // Step-0 evaluation so every curve starts at the base model.
         evaluate_all(policy, evals, 0, 0.0, record)?;
         let mut update_s = 0.0f64;
@@ -242,7 +256,8 @@ impl PipelinedTrainer {
         let mut prev_svc = ServiceCounters::default();
 
         for step in 0..self.config.max_steps {
-            let Some(batch) = shared.pop_batch(b, step, policy.weight_version()) else {
+            let version = policy.weight_version();
+            let Some(batch) = shared.pop_rollouts(target_rows, step, version) else {
                 break; // closed early: a worker failed (caller reports it)
             };
             let groups: Vec<_> =
@@ -271,6 +286,7 @@ impl PipelinedTrainer {
             let time_s = inference_s + update_s;
             let stats = shared.stats();
             let (step_skip_rate, step_explore_rate) = step_rates(&prev_snap, &counter_snap);
+            let alloc_rows = step_alloc_rows(&prev_snap, &counter_snap);
             prev_snap = counter_snap;
             // Per-step service deltas (same convention as the skip rates):
             // cumulative means would blur the warm-up the charts exist for.
@@ -311,6 +327,9 @@ impl PipelinedTrainer {
                 service_calls,
                 service_fill,
                 service_queue_wait_s,
+                rollouts: counter_snap.rollouts,
+                step_alloc_rows: alloc_rows,
+                alloc_calibration: counter_snap.alloc_calibration(),
             });
 
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
@@ -338,7 +357,7 @@ impl PipelinedTrainer {
 
 /// Converts a worker panic into the regular failure path: without this a
 /// panicking worker would die silently and the learner would block in
-/// `pop_batch` forever.
+/// `pop_rollouts` forever.
 struct PanicGuard {
     shared: Arc<SharedBuffer>,
     errors: Arc<Mutex<Vec<String>>>,

@@ -33,6 +33,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::coordinator::alloc::Allocator;
 use crate::coordinator::batcher::{plan_call, PendingContinuation, Purpose};
 use crate::coordinator::buffer::SamplingBuffer;
 use crate::coordinator::curriculum::{Curriculum, CurriculumKind, StepContext};
@@ -56,6 +57,11 @@ struct Ticket {
 
 pub struct PredictiveSpeed {
     pub rule: ScreeningRule,
+    /// Per-prompt continuation-budget allocator (fixed by default). The
+    /// adaptive allocator here prices from the same shared posterior the
+    /// pre-screen uses — the curriculum already observes every outcome, so
+    /// the allocator must NOT feed the store itself.
+    pub alloc: Allocator,
     predictor: Arc<Predictor>,
     pending: VecDeque<PendingContinuation>,
     buffer: SamplingBuffer,
@@ -77,6 +83,7 @@ impl PredictiveSpeed {
         let rng = Rng::new(predictor.instance_seed() ^ 0x9d1c_7a5e_55ed_5e1f);
         PredictiveSpeed {
             rule,
+            alloc: Allocator::fixed(rule),
             predictor,
             pending: VecDeque::new(),
             buffer: SamplingBuffer::new(),
@@ -89,6 +96,12 @@ impl PredictiveSpeed {
     /// Bound the sampling buffer (oldest-first eviction past `cap` groups).
     pub fn with_buffer_cap(mut self, cap: usize) -> PredictiveSpeed {
         self.buffer = SamplingBuffer::new().with_max_len(cap);
+        self
+    }
+
+    /// Choose continuation budgets with `alloc` instead of the fixed rule.
+    pub fn with_allocator(mut self, alloc: Allocator) -> PredictiveSpeed {
+        self.alloc = alloc;
         self
     }
 
@@ -105,12 +118,19 @@ impl Curriculum for PredictiveSpeed {
         ctx: &mut StepContext<'_>,
         batch_size: usize,
     ) -> Result<Vec<PromptGroup>> {
+        // Rollout-target batch accounting, mirroring `Speed` (with the
+        // fixed allocator this is exactly `batch_size` groups).
+        let target_rows = batch_size * self.rule.n_total();
         loop {
-            if let Some(batch) = self.buffer.take_batch(batch_size, ctx.train_step) {
+            if let Some(batch) = self.buffer.take_rollouts(target_rows, ctx.train_step) {
                 return Ok(batch);
             }
-            let backlog = self.buffer.len() + self.pending.len();
-            let screening_on = backlog < self.backlog_batches * batch_size;
+            // Rollout-unit backlog throttle, mirroring `Speed` (see the
+            // comment there; group counts would mis-throttle under
+            // variable budgets).
+            let backlog_rows = self.buffer.rollout_rows()
+                + crate::coordinator::batcher::pending_rows(&self.pending, self.rule.n_init);
+            let screening_on = backlog_rows < self.backlog_batches * target_rows;
             let capacity = ctx.engine.rollout_capacity();
             let rule = self.rule;
             let n_init = rule.n_init as u64;
@@ -193,11 +213,20 @@ impl Curriculum for PredictiveSpeed {
                         );
                         if accepted {
                             ctx.counters.prompts_accepted += 1;
+                            // The allocator shares this curriculum's
+                            // predictor and never feeds it (the screening
+                            // observation above already covers it), so the
+                            // delta it receives stays untouched.
+                            let allocation =
+                                self.alloc.allocate(&req.task, &rewards, &mut self.delta);
+                            ctx.counters.record_allocation(allocation.budget.n_cont);
                             self.pending.push_back(PendingContinuation {
                                 prompt_idx: req.prompt_idx,
                                 task: req.task,
                                 screening: rollouts,
                                 born_step: ctx.train_step,
+                                n_cont: allocation.budget.n_cont,
+                                forecast_var: allocation.forecast_var,
                             });
                         }
                     }
@@ -214,15 +243,14 @@ impl Curriculum for PredictiveSpeed {
                         );
                         let mut all = pend.screening;
                         all.extend(rollouts);
-                        debug_assert_eq!(all.len(), self.rule.n_total());
-                        self.buffer.push(
-                            PromptGroup {
-                                prompt_idx: req.prompt_idx,
-                                task: req.task,
-                                rollouts: all,
-                            },
-                            pend.born_step,
-                        );
+                        debug_assert_eq!(all.len(), self.rule.n_init + pend.n_cont);
+                        let group = PromptGroup {
+                            prompt_idx: req.prompt_idx,
+                            task: req.task,
+                            rollouts: all,
+                        };
+                        ctx.counters.record_alloc_outcome(pend.forecast_var, group.pass_rate());
+                        self.buffer.push(group, pend.born_step);
                     }
                 }
             }

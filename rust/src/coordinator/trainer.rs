@@ -94,6 +94,12 @@ pub(crate) fn step_rates(prev: &InferenceCounters, cur: &InferenceCounters) -> (
     (skip_rate, explore_rate)
 }
 
+/// Continuation rows allocated between two cumulative counter snapshots
+/// (the per-step allocated-rows telemetry; shared by both trainers).
+pub(crate) fn step_alloc_rows(prev: &InferenceCounters, cur: &InferenceCounters) -> u64 {
+    cur.cont_rows_allocated.saturating_sub(prev.cont_rows_allocated)
+}
+
 /// True when the most recent eval of `bench` has reached `target` (the
 /// early-stop condition of Table 1 runs).
 pub(crate) fn target_reached(record: &RunRecord, bench: &str, target: f64) -> bool {
@@ -194,6 +200,9 @@ impl Trainer {
                 service_calls: 0,
                 service_fill: 0.0,
                 service_queue_wait_s: 0.0,
+                rollouts: counters.rollouts,
+                step_alloc_rows: step_alloc_rows(&counters_before, &counters),
+                alloc_calibration: counters.alloc_calibration(),
             });
 
             // ---- periodic evaluation (excluded from training time) ----

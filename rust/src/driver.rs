@@ -8,6 +8,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{RunConfig, Substrate};
+use crate::coordinator::alloc::{AllocKind, Allocator};
 use crate::coordinator::curriculum::{Curriculum, CurriculumKind, CurriculumSpec};
 use crate::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
 use crate::coordinator::screening::ScreeningRule;
@@ -43,16 +44,36 @@ pub fn predictor_config(cfg: &RunConfig) -> PredictorConfig {
     }
 }
 
+/// The per-prompt continuation-budget allocator for a run. Adaptive
+/// allocation prices budgets from a posterior: `predictive-speed` shares
+/// the curriculum's own predictor (which already observes every outcome),
+/// while plain `speed` hands the allocator a predictor it must feed itself
+/// from the screening outcomes it allocates on.
+pub fn build_allocator(cfg: &RunConfig, predictor: Option<Arc<Predictor>>) -> Allocator {
+    let rule = screening_rule(cfg);
+    match cfg.alloc {
+        AllocKind::Fixed => Allocator::fixed(rule),
+        AllocKind::Adaptive => {
+            let (n_cont_min, n_cont_max) = cfg.alloc_bounds();
+            let feed_posterior = cfg.curriculum != CurriculumKind::PredictiveSpeed;
+            Allocator::adaptive(rule, n_cont_min, n_cont_max, predictor, feed_posterior)
+        }
+    }
+}
+
 pub fn curriculum_spec(cfg: &RunConfig) -> CurriculumSpec {
     let rule = screening_rule(cfg);
     // One shared difficulty predictor per run: every rollout worker's
     // predictive-speed instance observes into (and prices from) the same
-    // store.
-    let predictor = (cfg.curriculum == CurriculumKind::PredictiveSpeed)
-        .then(|| Arc::new(Predictor::new(rule, predictor_config(cfg))));
+    // store. Adaptive allocation wants one too (for any screening
+    // curriculum), so budgets learn across prompt revisits.
+    let needs_predictor = cfg.curriculum == CurriculumKind::PredictiveSpeed
+        || (cfg.alloc == AllocKind::Adaptive && cfg.curriculum == CurriculumKind::Speed);
+    let predictor = needs_predictor.then(|| Arc::new(Predictor::new(rule, predictor_config(cfg))));
     CurriculumSpec {
         kind: cfg.curriculum,
         rule,
+        alloc: build_allocator(cfg, predictor.clone()),
         pool_factor: cfg.pool_factor,
         // In pipelined runs `buffer_cap` bounds the SHARED buffer (see
         // `pipeline_config`), so worker-internal SPEED buffers keep the
@@ -73,7 +94,11 @@ pub fn build_curriculum(cfg: &RunConfig) -> Box<dyn Curriculum> {
 }
 
 pub fn service_config(cfg: &RunConfig) -> ServiceConfig {
-    ServiceConfig { coalesce_wait_ms: cfg.coalesce_wait_ms, fill_waterline: cfg.fill_waterline }
+    ServiceConfig {
+        coalesce_wait_ms: cfg.coalesce_wait_ms,
+        fill_waterline: cfg.fill_waterline,
+        adaptive: cfg.coalesce_adaptive,
+    }
 }
 
 pub fn pipeline_config(cfg: &RunConfig) -> PipelineConfig {
@@ -102,8 +127,9 @@ pub fn build_sim_policy(cfg: &RunConfig) -> Result<SimPolicy> {
     let spec = SimModelSpec::parse(&cfg.model)
         .with_context(|| format!("unknown sim model '{}'", cfg.model))?;
     // Paper shapes: generation batch 64 prompts worth of rows; train batch
-    // B x N rows.
-    let capacity = (cfg.batch_size * cfg.n_total()).max(cfg.n_total());
+    // B x N rows. The call must also fit the allocator's largest possible
+    // group (n_init + n_cont_max under adaptive budgets).
+    let capacity = (cfg.batch_size * cfg.n_total()).max(cfg.max_group_rollouts());
     Ok(SimPolicy::new(spec, SimCostModel::default(), cfg.seed)
         .with_shapes(capacity, cfg.batch_size * cfg.n_total(), 512))
 }
@@ -142,8 +168,12 @@ pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
         // producer — DESIGN.md §8's equivalence rail: this must reproduce
         // the plain serial RunRecord bit for bit (rust/tests/service_sim.rs).
         check_capacity(cfg, policy.rollout_capacity())?;
-        let service =
-            InferenceService::spawn(policy.fork_engine(0), service_config(cfg), 1, cfg.n_total());
+        let service = InferenceService::spawn(
+            policy.fork_engine(0),
+            service_config(cfg),
+            1,
+            cfg.max_group_rollouts(),
+        );
         let handle = service.handle();
         let record = {
             let mut serviced = ServicedPolicy::new(handle, &mut policy);
@@ -158,12 +188,14 @@ pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
     run_with_policy(cfg, &mut policy, &dataset, &evals)
 }
 
-/// The compiled (or simulated) inference call must fit a full group.
+/// The compiled (or simulated) inference call must fit a full group — the
+/// LARGEST one the allocator can issue, not just the reference split.
 fn check_capacity(cfg: &RunConfig, rollout_capacity: usize) -> Result<()> {
-    let n_total = cfg.n_total();
-    if n_total > rollout_capacity {
+    let max_group = cfg.max_group_rollouts();
+    if max_group > rollout_capacity {
         bail!(
-            "N={n_total} exceeds rollout capacity {rollout_capacity} — recompile artifacts or lower n_init/n_cont"
+            "a maximum-budget group of {max_group} rollouts exceeds rollout capacity \
+             {rollout_capacity} — recompile artifacts or lower n_init/n_cont/n_cont_max"
         );
     }
     Ok(())

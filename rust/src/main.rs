@@ -66,7 +66,7 @@ fn print_usage() {
          \x20 eval       score a real model checkpoint on the benchmarks\n\
          \x20 info       print the artifact manifest summary\n\
          \x20 report     ASCII accuracy-vs-time charts from run records\n\
-         \x20 bench      serial vs pipelined vs coalescing-service smoke bench\n"
+         \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets)\n"
     );
 }
 
@@ -154,7 +154,10 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         )
         .opt("algo", Some("rloo"), "rloo | dapo | grpo | reinforce | reinforce++")
         .opt("n-init", Some("8"), "screening rollouts per prompt")
-        .opt("n-cont", Some("16"), "continuation rollouts per prompt")
+        .opt("n-cont", Some("16"), "continuation rollouts per prompt (adaptive: the reference)")
+        .opt("alloc", None, "continuation-budget allocator: fixed | adaptive")
+        .opt("n-cont-min", None, "adaptive allocation floor (0 = auto: n-cont/2)")
+        .opt("n-cont-max", None, "adaptive allocation ceiling (0 = auto: 2*n-cont)")
         .opt("batch-size", Some("16"), "training batch size B")
         .opt("steps", Some("400"), "max training steps")
         .opt("max-hours", None, "stop after this much simulated time")
@@ -187,7 +190,11 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             "service: fraction of engine capacity that dispatches a call immediately",
         )
         .flag("pipeline", "overlap inference with updates (producer/consumer)")
-        .flag("service", "coalesce all rollout requests through one shared inference service");
+        .flag("service", "coalesce all rollout requests through one shared inference service")
+        .flag(
+            "coalesce-adaptive",
+            "scale the service's micro-batch deadline with the observed submission gap",
+        );
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
 
@@ -234,11 +241,23 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     if let Some(v) = args.get("explore-rate") {
         cfg.explore_rate = v.parse::<f64>().context("--explore-rate")?;
     }
+    if let Some(v) = args.get("alloc") {
+        cfg.alloc = speed_rl::coordinator::alloc::AllocKind::parse_or_err(v)?;
+    }
+    if let Some(v) = args.get("n-cont-min") {
+        cfg.n_cont_min = v.parse::<usize>().context("--n-cont-min")?;
+    }
+    if let Some(v) = args.get("n-cont-max") {
+        cfg.n_cont_max = v.parse::<usize>().context("--n-cont-max")?;
+    }
     if args.has_flag("pipeline") || cfg.workers > 1 {
         cfg.pipeline = true;
     }
     if args.has_flag("service") {
         cfg.service = true;
+    }
+    if args.has_flag("coalesce-adaptive") {
+        cfg.coalesce_adaptive = true;
     }
     if let Some(v) = args.get("coalesce-wait-ms") {
         cfg.coalesce_wait_ms = v.parse::<u64>().context("--coalesce-wait-ms")?;
@@ -272,7 +291,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         )
         .opt("algo", Some("rloo"), "rloo | dapo | grpo | reinforce | reinforce++")
         .opt("n-init", Some("4"), "screening rollouts")
-        .opt("n-cont", Some("12"), "continuation rollouts")
+        .opt("n-cont", Some("12"), "continuation rollouts (adaptive: the reference)")
+        .opt("alloc", None, "continuation-budget allocator: fixed | adaptive")
+        .opt("n-cont-min", None, "adaptive allocation floor (0 = auto: n-cont/2)")
+        .opt("n-cont-max", None, "adaptive allocation ceiling (0 = auto: 2*n-cont)")
         .opt(
             "skip-confidence",
             None,
@@ -317,6 +339,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     if let Some(v) = args.get("explore-rate") {
         cfg.explore_rate = v.parse::<f64>().context("--explore-rate")?;
+    }
+    if let Some(v) = args.get("alloc") {
+        cfg.alloc = speed_rl::coordinator::alloc::AllocKind::parse_or_err(v)?;
+    }
+    if let Some(v) = args.get("n-cont-min") {
+        cfg.n_cont_min = v.parse::<usize>().context("--n-cont-min")?;
+    }
+    if let Some(v) = args.get("n-cont-max") {
+        cfg.n_cont_max = v.parse::<usize>().context("--n-cont-max")?;
     }
     cfg.label = format!("real-{}-{}", cfg.curriculum.name(), cfg.algo.name());
 
@@ -446,7 +477,8 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         .opt(
             "metric",
             Some("accuracy"),
-            "accuracy | skip-rate | explore-rate | service-fill | staleness (per-step charts)",
+            "accuracy | skip-rate | explore-rate | service-fill | staleness | alloc-rows | \
+             alloc-calibration (per-step charts)",
         )
         .opt("width", Some("72"), "chart width")
         .opt("height", Some("16"), "chart height");
@@ -485,29 +517,43 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// The coalescing smoke bench `rust/ci.sh` runs: the same sim scenario
-/// executed serial, pipelined (K private engines), and pipelined through
-/// the shared service, with machine-readable results in
-/// `BENCH_coalesce.json` so the perf trajectory is tracked per commit.
+/// The smoke benches `rust/ci.sh` runs, selected by `--mode`:
+///
+/// * `coalesce` — the same sim scenario executed serial, pipelined (K
+///   private engines), and pipelined through the shared service
+///   (`BENCH_coalesce.json`);
+/// * `alloc` — fixed vs adaptive continuation-budget allocation on the
+///   serial SPEED curriculum: rollouts spent to reach the same target
+///   accuracy (`BENCH_alloc.json`).
 fn cmd_bench(argv: &[String]) -> Result<()> {
-    let cli = common_cli("speed-rl bench", "serial vs pipelined vs coalescing-service bench")
+    let cli = common_cli("speed-rl bench", "coalescing / allocation smoke benches")
+        .opt("mode", Some("coalesce"), "coalesce | alloc")
         .opt("steps", Some("12"), "training steps per mode")
         .opt("workers", Some("4"), "rollout workers for the pipelined modes")
         .opt("batch-size", Some("8"), "training batch size B")
-        .opt("dataset-size", Some("4000"), "training prompts to generate");
+        .opt("dataset-size", Some("4000"), "training prompts to generate")
+        .opt("target", Some("0.5"), "alloc mode: dapo1k accuracy bar for the rollout comparison");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("warn")));
+    match args.string("mode")?.as_str() {
+        "alloc" => return cmd_bench_alloc(&args),
+        "coalesce" => {}
+        other => bail!("unknown bench mode '{other}' (valid: coalesce, alloc)"),
+    }
     let steps = args.usize("steps")?;
     let workers = args.usize("workers")?;
+    let batch_size = args.usize("batch-size")?;
+    let dataset_size = args.usize("dataset-size")?;
+    let seed = args.u64("seed")?;
 
     let base = |label: &str| -> RunConfig {
         let mut c = RunConfig::default();
         c.label = label.to_string();
-        c.batch_size = args.usize("batch-size").unwrap_or(8);
-        c.dataset_size = args.usize("dataset-size").unwrap_or(4000);
+        c.batch_size = batch_size;
+        c.dataset_size = dataset_size;
         c.max_steps = steps;
         c.eval_every = steps; // one mid/final eval point, cheap
-        c.seed = args.u64("seed").unwrap_or(0);
+        c.seed = seed;
         c
     };
     let serial = base("serial");
@@ -566,6 +612,82 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         ("bench", Json::str("coalesce")),
         ("steps", Json::num(steps as f64)),
         ("workers", Json::num(workers as f64)),
+        ("modes", Json::Arr(modes)),
+    ]);
+    std::fs::write(out, j.to_string_pretty()).with_context(|| format!("write {out}"))?;
+    info!("bench", "results written to {out}");
+    Ok(())
+}
+
+/// `speed-rl bench --mode alloc`: fixed vs adaptive continuation-budget
+/// allocation at matched accuracy. Both runs share the seed, dataset and
+/// rollout batch target; the comparison axis is rollouts spent by the time
+/// the `dapo1k` curve first clears `--target` (fewer = better allocation).
+fn cmd_bench_alloc(args: &speed_rl::util::cli::Args) -> Result<()> {
+    use speed_rl::coordinator::alloc::AllocKind;
+    let steps = args.usize("steps")?;
+    let target = args.f64("target")?;
+    let batch_size = args.usize("batch-size")?;
+    let dataset_size = args.usize("dataset-size")?;
+    let seed = args.u64("seed")?;
+    let base = |label: &str, alloc: AllocKind| -> RunConfig {
+        let mut c = RunConfig::default();
+        c.label = label.to_string();
+        c.curriculum = CurriculumKind::Speed;
+        c.alloc = alloc;
+        c.batch_size = batch_size;
+        c.dataset_size = dataset_size;
+        c.max_steps = steps;
+        c.eval_every = 2; // fine-grained curve: the rollouts-at-target axis
+        c.seed = seed;
+        c
+    };
+    let mut table = speed_rl::bench::Table::new(&[
+        "alloc",
+        "rollouts",
+        "rollouts@target",
+        "time@target s",
+        "final dapo1k",
+        "mean n_cont",
+        "calibration",
+    ]);
+    let mut modes = Vec::new();
+    for cfg in [base("fixed", AllocKind::Fixed), base("adaptive", AllocKind::Adaptive)] {
+        let rec = driver::run_sim(&cfg)?;
+        let reached = rec.rollouts_to_target("dapo1k", target);
+        let t_target = rec.time_to_target("dapo1k", target);
+        table.row(vec![
+            cfg.label.clone(),
+            rec.counters.rollouts.to_string(),
+            reached.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+            t_target.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+            format!("{:.3}", rec.final_accuracy("dapo1k").unwrap_or(0.0)),
+            format!("{:.1}", rec.counters.mean_cont_alloc()),
+            format!("{:.4}", rec.counters.alloc_calibration()),
+        ]);
+        modes.push(Json::obj(vec![
+            ("label", Json::str(cfg.label.clone())),
+            ("steps", Json::num(rec.steps.len() as f64)),
+            ("rollouts", Json::num(rec.counters.rollouts as f64)),
+            ("rollouts_to_target", reached.map(|r| Json::num(r as f64)).unwrap_or(Json::Null)),
+            ("time_to_target_s", t_target.map(Json::num).unwrap_or(Json::Null)),
+            ("virtual_time_s", Json::num(rec.total_time())),
+            ("final_dapo1k", Json::num(rec.final_accuracy("dapo1k").unwrap_or(0.0))),
+            ("mean_cont_alloc", Json::num(rec.counters.mean_cont_alloc())),
+            ("alloc_calibration", Json::num(rec.counters.alloc_calibration())),
+            (
+                "alloc_hist",
+                Json::arr(rec.counters.alloc_hist.iter().map(|c| Json::num(*c as f64))),
+            ),
+        ]));
+    }
+    table.print();
+    let out = args.get("out").unwrap_or("BENCH_alloc.json");
+    let j = Json::obj(vec![
+        ("bench", Json::str("alloc")),
+        ("steps", Json::num(steps as f64)),
+        ("target", Json::num(target)),
+        ("benchmark", Json::str("dapo1k")),
         ("modes", Json::Arr(modes)),
     ]);
     std::fs::write(out, j.to_string_pretty()).with_context(|| format!("write {out}"))?;

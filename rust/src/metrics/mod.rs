@@ -42,6 +42,20 @@ pub struct InferenceCounters {
     /// realized accept/reject) over `brier_n` screened prompts.
     pub brier_sum: f64,
     pub brier_n: u64,
+    /// Continuation budgets issued by the allocator (one per accepted
+    /// prompt).
+    pub prompts_allocated: u64,
+    /// Continuation rows allocated across those budgets (the fixed
+    /// allocator makes this `prompts_allocated * n_cont` exactly).
+    pub cont_rows_allocated: u64,
+    /// Histogram of allocated continuation budgets: 1-4, 5-8, 9-16, 17-32,
+    /// 33-64, >64 rows.
+    pub alloc_hist: [u64; 6],
+    /// Sum of squared (forecast reward variance - realized group variance)
+    /// over `alloc_calib_n` completed groups: how well the variance
+    /// forecasts that sized the budgets tracked reality.
+    pub alloc_calib_sum: f64,
+    pub alloc_calib_n: u64,
 }
 
 impl InferenceCounters {
@@ -93,6 +107,53 @@ impl InferenceCounters {
         }
     }
 
+    /// Histogram bucket index for an allocated continuation budget.
+    pub fn alloc_hist_bucket(n_cont: usize) -> usize {
+        match n_cont {
+            0..=4 => 0,
+            5..=8 => 1,
+            9..=16 => 2,
+            17..=32 => 3,
+            33..=64 => 4,
+            _ => 5,
+        }
+    }
+
+    /// Account one continuation-budget allocation.
+    pub fn record_allocation(&mut self, n_cont: usize) {
+        self.prompts_allocated += 1;
+        self.cont_rows_allocated += n_cont as u64;
+        self.alloc_hist[Self::alloc_hist_bucket(n_cont)] += 1;
+    }
+
+    /// Score a completed group's realized variance against the forecast
+    /// that sized its budget.
+    pub fn record_alloc_outcome(&mut self, forecast_var: f64, realized_pass_rate: f64) {
+        let realized_var = realized_pass_rate * (1.0 - realized_pass_rate);
+        let err = forecast_var - realized_var;
+        self.alloc_calib_sum += err * err;
+        self.alloc_calib_n += 1;
+    }
+
+    /// Mean continuation rows allocated per accepted prompt (0 when none).
+    pub fn mean_cont_alloc(&self) -> f64 {
+        if self.prompts_allocated == 0 {
+            0.0
+        } else {
+            self.cont_rows_allocated as f64 / self.prompts_allocated as f64
+        }
+    }
+
+    /// Mean squared budget-vs-realized-variance calibration error (0 when
+    /// nothing completed; lower is better, 0.0625 = always off by 0.25).
+    pub fn alloc_calibration(&self) -> f64 {
+        if self.alloc_calib_n == 0 {
+            0.0
+        } else {
+            self.alloc_calib_sum / self.alloc_calib_n as f64
+        }
+    }
+
     /// Accumulate another counter set (per-worker totals -> run totals).
     pub fn merge(&mut self, o: &InferenceCounters) {
         self.calls += o.calls;
@@ -112,6 +173,13 @@ impl InferenceCounters {
         self.pred_fn += o.pred_fn;
         self.brier_sum += o.brier_sum;
         self.brier_n += o.brier_n;
+        self.prompts_allocated += o.prompts_allocated;
+        self.cont_rows_allocated += o.cont_rows_allocated;
+        for (slot, v) in self.alloc_hist.iter_mut().zip(o.alloc_hist) {
+            *slot += v;
+        }
+        self.alloc_calib_sum += o.alloc_calib_sum;
+        self.alloc_calib_n += o.alloc_calib_n;
     }
 }
 
@@ -137,6 +205,11 @@ pub struct AtomicCounters {
     pred_fn: AtomicU64,
     brier_sum_bits: AtomicU64,
     brier_n: AtomicU64,
+    prompts_allocated: AtomicU64,
+    cont_rows_allocated: AtomicU64,
+    alloc_hist: [AtomicU64; 6],
+    alloc_calib_sum_bits: AtomicU64,
+    alloc_calib_n: AtomicU64,
 }
 
 fn atomic_f64_add(cell: &AtomicU64, delta: f64) {
@@ -169,6 +242,13 @@ impl AtomicCounters {
         self.pred_fn.fetch_add(c.pred_fn, Ordering::Relaxed);
         atomic_f64_add(&self.brier_sum_bits, c.brier_sum);
         self.brier_n.fetch_add(c.brier_n, Ordering::Relaxed);
+        self.prompts_allocated.fetch_add(c.prompts_allocated, Ordering::Relaxed);
+        self.cont_rows_allocated.fetch_add(c.cont_rows_allocated, Ordering::Relaxed);
+        for (slot, v) in self.alloc_hist.iter().zip(c.alloc_hist) {
+            slot.fetch_add(v, Ordering::Relaxed);
+        }
+        atomic_f64_add(&self.alloc_calib_sum_bits, c.alloc_calib_sum);
+        self.alloc_calib_n.fetch_add(c.alloc_calib_n, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> InferenceCounters {
@@ -190,6 +270,17 @@ impl AtomicCounters {
             pred_fn: self.pred_fn.load(Ordering::Relaxed),
             brier_sum: f64::from_bits(self.brier_sum_bits.load(Ordering::Relaxed)),
             brier_n: self.brier_n.load(Ordering::Relaxed),
+            prompts_allocated: self.prompts_allocated.load(Ordering::Relaxed),
+            cont_rows_allocated: self.cont_rows_allocated.load(Ordering::Relaxed),
+            alloc_hist: {
+                let mut hist = [0u64; 6];
+                for (slot, v) in hist.iter_mut().zip(&self.alloc_hist) {
+                    *slot = v.load(Ordering::Relaxed);
+                }
+                hist
+            },
+            alloc_calib_sum: f64::from_bits(self.alloc_calib_sum_bits.load(Ordering::Relaxed)),
+            alloc_calib_n: self.alloc_calib_n.load(Ordering::Relaxed),
         }
     }
 }
@@ -219,6 +310,12 @@ pub struct ServiceCounters {
     /// Calls dispatched by the `coalesce_wait_ms` deadline before the fill
     /// waterline was reached (the anti-starvation path).
     pub deadline_dispatches: u64,
+    /// Engine calls spent splitting oversized submissions across successive
+    /// invocations (each split chunk counts here AND in `calls`).
+    pub split_calls: u64,
+    /// Latest EWMA of the inter-submission gap, seconds (drives the
+    /// adaptive coalesce deadline; 0 until two submissions were observed).
+    pub ewma_gap_s: f64,
     /// Histogram of submissions coalesced per call: 1, 2, 3, 4, 5-8, >8.
     pub coalesced_hist: [u64; 6],
 }
@@ -273,6 +370,8 @@ impl ServiceCounters {
             ("queue_wait_s", Json::num(self.queue_wait_s)),
             ("installs", Json::num(self.installs as f64)),
             ("deadline_dispatches", Json::num(self.deadline_dispatches as f64)),
+            ("split_calls", Json::num(self.split_calls as f64)),
+            ("ewma_gap_s", Json::num(self.ewma_gap_s)),
             ("mean_fill", Json::num(self.mean_fill())),
             ("mean_coalesced", Json::num(self.mean_coalesced())),
             (
@@ -299,6 +398,8 @@ impl ServiceCounters {
             queue_wait_s: f("queue_wait_s"),
             installs: f("installs") as u64,
             deadline_dispatches: f("deadline_dispatches") as u64,
+            split_calls: f("split_calls") as u64,
+            ewma_gap_s: f("ewma_gap_s"),
             coalesced_hist: hist,
         }
     }
@@ -351,6 +452,15 @@ pub struct StepRecord {
     /// Mean submission-to-execution wait of THIS step's submissions,
     /// seconds (0 when none landed in the step).
     pub service_queue_wait_s: f64,
+    /// Rollouts generated so far (cumulative; the x-axis of the
+    /// fixed-vs-adaptive allocation comparison).
+    pub rollouts: u64,
+    /// Continuation rows allocated DURING this step (delta between step
+    /// snapshots; 0 for non-screening curricula).
+    pub step_alloc_rows: u64,
+    /// Mean squared budget-vs-realized-variance calibration error so far
+    /// (cumulative; 0 when no allocated group completed yet).
+    pub alloc_calibration: f64,
 }
 
 impl StepRecord {
@@ -375,6 +485,9 @@ impl StepRecord {
             ("service_calls", Json::num(self.service_calls as f64)),
             ("service_fill", Json::num(self.service_fill)),
             ("service_queue_wait_s", Json::num(self.service_queue_wait_s)),
+            ("rollouts", Json::num(self.rollouts as f64)),
+            ("step_alloc_rows", Json::num(self.step_alloc_rows as f64)),
+            ("alloc_calibration", Json::num(self.alloc_calibration)),
         ])
     }
 }
@@ -423,6 +536,16 @@ impl RunRecord {
             .map(|e| e.time_s)
     }
 
+    /// Rollouts generated by the time `benchmark` first reached `target`
+    /// (the compute axis of the fixed-vs-adaptive allocation comparison:
+    /// same accuracy, fewer rollouts = better allocation). Uses the last
+    /// step record preceding the qualifying eval.
+    pub fn rollouts_to_target(&self, benchmark: &str, target: f64) -> Option<u64> {
+        let eval = self.evals.iter().find(|e| e.benchmark == benchmark && e.accuracy >= target)?;
+        let last_step = self.steps.iter().rev().find(|s| s.step < eval.step);
+        Some(last_step.map(|s| s.rollouts).unwrap_or(0))
+    }
+
     /// Final accuracy on a benchmark.
     pub fn final_accuracy(&self, benchmark: &str) -> Option<f64> {
         self.evals.iter().rev().find(|e| e.benchmark == benchmark).map(|e| e.accuracy)
@@ -469,6 +592,14 @@ impl RunRecord {
                     ("predictor_brier", Json::num(self.counters.predictor_brier())),
                     ("predictor_precision", Json::num(self.counters.predictor_precision())),
                     ("predictor_recall", Json::num(self.counters.predictor_recall())),
+                    ("prompts_allocated", Json::num(self.counters.prompts_allocated as f64)),
+                    ("cont_rows_allocated", Json::num(self.counters.cont_rows_allocated as f64)),
+                    ("mean_cont_alloc", Json::num(self.counters.mean_cont_alloc())),
+                    ("alloc_calibration", Json::num(self.counters.alloc_calibration())),
+                    (
+                        "alloc_hist",
+                        Json::arr(self.counters.alloc_hist.iter().map(|c| Json::num(*c as f64))),
+                    ),
                 ]),
             ),
         ];
@@ -545,6 +676,8 @@ mod tests {
             queue_wait_s: 0.5,
             installs: 2,
             deadline_dispatches: 1,
+            split_calls: 2,
+            ewma_gap_s: 0.003,
             coalesced_hist: [1, 0, 1, 2, 0, 0],
         };
         assert!((c.mean_fill() - 0.75).abs() < 1e-12);
@@ -562,6 +695,8 @@ mod tests {
         assert_eq!(back.max_call_rows, c.max_call_rows);
         assert_eq!(back.installs, c.installs);
         assert_eq!(back.deadline_dispatches, c.deadline_dispatches);
+        assert_eq!(back.split_calls, c.split_calls);
+        assert!((back.ewma_gap_s - c.ewma_gap_s).abs() < 1e-12);
         assert_eq!(back.coalesced_hist, c.coalesced_hist);
         assert!((back.queue_wait_s - c.queue_wait_s).abs() < 1e-12);
         let empty = ServiceCounters::default();
@@ -592,6 +727,11 @@ mod tests {
             pred_fn: 1,
             brier_sum: 0.375,
             brier_n: 7,
+            prompts_allocated: 2,
+            cont_rows_allocated: 36,
+            alloc_hist: [0, 1, 1, 0, 0, 0],
+            alloc_calib_sum: 0.5,
+            alloc_calib_n: 2,
         };
         let b = InferenceCounters {
             calls: 10,
@@ -601,6 +741,11 @@ mod tests {
             rollouts_saved: 16,
             brier_sum: 0.125,
             brier_n: 3,
+            prompts_allocated: 1,
+            cont_rows_allocated: 40,
+            alloc_hist: [0, 0, 0, 0, 1, 0],
+            alloc_calib_sum: 0.25,
+            alloc_calib_n: 1,
             ..Default::default()
         };
         let mut merged = a;
@@ -628,6 +773,36 @@ mod tests {
         assert_eq!(merged.pred_fn, snap.pred_fn);
         assert!((merged.brier_sum - snap.brier_sum).abs() < 1e-12);
         assert_eq!(merged.brier_n, snap.brier_n);
+        assert_eq!(merged.prompts_allocated, snap.prompts_allocated);
+        assert_eq!(merged.cont_rows_allocated, snap.cont_rows_allocated);
+        assert_eq!(merged.alloc_hist, snap.alloc_hist);
+        assert!((merged.alloc_calib_sum - snap.alloc_calib_sum).abs() < 1e-12);
+        assert_eq!(merged.alloc_calib_n, snap.alloc_calib_n);
+    }
+
+    #[test]
+    fn allocation_accounting_and_ratios() {
+        let mut c = InferenceCounters::default();
+        assert_eq!(c.mean_cont_alloc(), 0.0);
+        assert_eq!(c.alloc_calibration(), 0.0);
+        c.record_allocation(4);
+        c.record_allocation(20);
+        c.record_allocation(70);
+        assert_eq!(c.prompts_allocated, 3);
+        assert_eq!(c.cont_rows_allocated, 94);
+        assert_eq!(c.alloc_hist, [1, 0, 0, 1, 0, 1]);
+        assert!((c.mean_cont_alloc() - 94.0 / 3.0).abs() < 1e-12);
+        // forecast 0.25 vs realized pass rate 0.5 (var 0.25): perfect
+        c.record_alloc_outcome(0.25, 0.5);
+        assert_eq!(c.alloc_calibration(), 0.0);
+        // forecast 0.25 vs realized 0.0 (var 0.0): sq err 0.0625
+        c.record_alloc_outcome(0.25, 0.0);
+        assert!((c.alloc_calibration() - 0.0625 / 2.0).abs() < 1e-12);
+        let cases =
+            [(1, 0), (4, 0), (5, 1), (8, 1), (9, 2), (16, 2), (17, 3), (32, 3), (33, 4), (65, 5)];
+        for (n, bucket) in cases {
+            assert_eq!(InferenceCounters::alloc_hist_bucket(n), bucket, "n={n}");
+        }
     }
 
     #[test]

@@ -33,6 +33,8 @@ pub fn step_metric(metric: &str) -> Option<fn(&StepRecord) -> f64> {
         "explore-rate" => Some(|s: &StepRecord| s.step_explore_rate),
         "service-fill" => Some(|s: &StepRecord| s.service_fill),
         "staleness" => Some(|s: &StepRecord| s.mean_staleness),
+        "alloc-rows" => Some(|s: &StepRecord| s.step_alloc_rows as f64),
+        "alloc-calibration" => Some(|s: &StepRecord| s.alloc_calibration),
         _ => None,
     }
 }
@@ -47,7 +49,8 @@ pub fn step_chart(
     let f = step_metric(metric).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown per-step metric '{metric}' (valid: skip-rate, explore-rate, \
-             service-fill, staleness; eval curves use the default accuracy mode)"
+             service-fill, staleness, alloc-rows, alloc-calibration; eval curves use \
+             the default accuracy mode)"
         )
     })?;
     let curves: Vec<(&str, Vec<(f64, f64)>)> = records
@@ -167,6 +170,9 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 service_calls: f("service_calls") as u64,
                 service_fill: f("service_fill"),
                 service_queue_wait_s: f("service_queue_wait_s"),
+                rollouts: f("rollouts") as u64,
+                step_alloc_rows: f("step_alloc_rows") as u64,
+                alloc_calibration: f("alloc_calibration"),
             });
         }
     }
@@ -260,6 +266,9 @@ mod tests {
             service_calls: 4,
             service_fill: 0.8,
             service_queue_wait_s: 0.002,
+            rollouts: 768,
+            step_alloc_rows: 96,
+            alloc_calibration: 0.02,
         });
         a.service = Some(ServiceCounters {
             calls: 4,
@@ -274,6 +283,9 @@ mod tests {
         assert!((s.step_explore_rate - 0.1).abs() < 1e-12);
         assert_eq!(s.service_calls, 4);
         assert!((s.service_fill - 0.8).abs() < 1e-12);
+        assert_eq!(s.rollouts, 768);
+        assert_eq!(s.step_alloc_rows, 96);
+        assert!((s.alloc_calibration - 0.02).abs() < 1e-12);
         let svc = back.service.expect("service parsed");
         assert_eq!(svc.calls, 4);
         assert_eq!(svc.submissions, 9);
@@ -304,6 +316,9 @@ mod tests {
                 service_calls: 0,
                 service_fill: 0.0,
                 service_queue_wait_s: 0.0,
+                rollouts: 0,
+                step_alloc_rows: 0,
+                alloc_calibration: 0.0,
             });
         }
         let chart = step_chart(&[&a], "skip-rate", 30, 8).unwrap();

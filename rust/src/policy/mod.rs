@@ -150,12 +150,81 @@ pub trait ForkEngine {
     fn fork_engine(&self, stream: u64) -> Box<dyn RolloutEngine + Send>;
 }
 
-/// Split a flat row vector of rollouts back into per-request groups.
-pub fn split_rows(requests: &[GenRequest], mut rows: Vec<Rollout>) -> Vec<Vec<Rollout>> {
+/// Split a flat row vector of rollouts back into per-request groups — the
+/// checked splitting primitive for engine frontends that decode a flat
+/// fixed-shape row batch (the in-tree substrates group inline while
+/// verifying, and the service validates per-request group counts at
+/// fan-out; external engines should route their flat results through
+/// this).
+///
+/// The row count must equal `sum(n_samples)` exactly: a short (or long)
+/// vector means an engine under- or over-produced and silently clamping
+/// would shift later requests' rollouts onto the wrong groups — with
+/// variable per-prompt budgets that corruption would also be invisible to
+/// any uniform-size sanity check downstream, so it is an error here.
+pub fn split_rows(requests: &[GenRequest], mut rows: Vec<Rollout>) -> Result<Vec<Vec<Rollout>>> {
+    let expected: usize = requests.iter().map(|r| r.n_samples).sum();
+    anyhow::ensure!(
+        rows.len() == expected,
+        "row-count mismatch: {} rollout rows for {} requested samples across {} requests",
+        rows.len(),
+        expected,
+        requests.len()
+    );
     let mut out = Vec::with_capacity(requests.len());
     for req in requests {
-        let rest = rows.split_off(req.n_samples.min(rows.len()));
+        let rest = rows.split_off(req.n_samples);
         out.push(std::mem::replace(&mut rows, rest));
     }
-    out
+    debug_assert!(rows.is_empty());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{generate, TaskFamily};
+    use crate::util::rng::Rng;
+
+    fn reqs(samples: &[usize]) -> Vec<GenRequest> {
+        let mut rng = Rng::new(1);
+        samples
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| GenRequest {
+                prompt_idx: i,
+                task: generate(&mut rng, TaskFamily::Add, 2, 20),
+                n_samples: n,
+            })
+            .collect()
+    }
+
+    fn rows(n: usize) -> Vec<Rollout> {
+        (0..n)
+            .map(|i| Rollout {
+                gen_tokens: vec![i as i32],
+                gen_logprobs: vec![-0.1],
+                reward: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn split_rows_respects_variable_budgets() {
+        let groups = split_rows(&reqs(&[3, 1, 5]), rows(9)).unwrap();
+        assert_eq!(groups.iter().map(Vec::len).collect::<Vec<_>>(), vec![3, 1, 5]);
+        // rows are assigned in order, no duplication or loss
+        assert_eq!(groups[1][0].gen_tokens, vec![3]);
+        assert_eq!(groups[2][4].gen_tokens, vec![8]);
+    }
+
+    #[test]
+    fn split_rows_rejects_row_count_mismatch() {
+        // A short result must error loudly, not shift rollouts across
+        // groups (the silent-truncation bug the clamp used to hide).
+        let err = split_rows(&reqs(&[3, 2]), rows(4)).unwrap_err().to_string();
+        assert!(err.contains("4 rollout rows for 5"), "{err}");
+        assert!(split_rows(&reqs(&[3, 2]), rows(6)).is_err());
+        assert!(split_rows(&reqs(&[]), rows(0)).unwrap().is_empty());
+    }
 }

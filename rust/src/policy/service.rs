@@ -59,15 +59,21 @@ use crate::rl::update::PromptGroup;
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
     /// After the first pending submission arrives, wait at most this long
-    /// (real milliseconds) for more before executing.
+    /// (real milliseconds) for more before executing. With `adaptive` on
+    /// this becomes the upper bound of the adaptive deadline.
     pub coalesce_wait_ms: u64,
     /// Fraction of engine capacity that triggers immediate dispatch.
     pub fill_waterline: f64,
+    /// Scale the deadline with the observed inter-submission gap (EWMA)
+    /// instead of the fixed constant: fast producers get a short deadline
+    /// (less staleness), slow ones a longer window (fuller calls) — both
+    /// clamped to `[coalesce_wait_ms / 8, coalesce_wait_ms]`.
+    pub adaptive: bool,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { coalesce_wait_ms: 2, fill_waterline: 0.85 }
+        ServiceConfig { coalesce_wait_ms: 2, fill_waterline: 0.85, adaptive: false }
     }
 }
 
@@ -123,8 +129,9 @@ impl Ticket {
 pub struct SubmitHandle {
     shared: Arc<Shared>,
     /// Rows this handle advertises to its curriculum (engine capacity / K,
-    /// floored at the screening rule's full group so every plan stays
-    /// executable).
+    /// floored at the allocator's largest possible group so every plan
+    /// stays executable — oversized plans the floor admits are split
+    /// across successive engine calls by the scheduler).
     quantum: usize,
     gen_len: usize,
     label: String,
@@ -212,7 +219,8 @@ impl InferenceService {
     /// Spawn the scheduler around `engine`. `producers` is the number of
     /// workers that will hold handles (sets the submit quantum);
     /// `min_quantum` floors the quantum so one full screening/continuation
-    /// group always fits a single submission (pass the rule's `n_total`).
+    /// group always fits a single submission (pass the allocator's
+    /// `max_n_total` — the largest budget a prompt can be issued).
     pub fn spawn(
         engine: Box<dyn RolloutEngine + Send>,
         cfg: ServiceConfig,
@@ -305,8 +313,21 @@ fn scheduler(
     let capacity = engine.rollout_capacity();
     let waterline_rows =
         ((capacity as f64 * cfg.fill_waterline).ceil() as usize).clamp(1, capacity);
-    let wait = Duration::from_millis(cfg.coalesce_wait_ms);
+    let base_wait_s = cfg.coalesce_wait_ms as f64 / 1e3;
+    // Adaptive deadline state: EWMA of the gap between consecutive
+    // submission arrivals. Seeded at the configured deadline so the first
+    // calls behave exactly like the fixed-constant scheduler.
+    let mut ewma_gap_s = base_wait_s;
+    let mut last_enqueued: Option<Instant> = None;
     loop {
+        // The deadline for THIS gathering round: long enough for roughly
+        // the other producers' next submissions to arrive (3x the observed
+        // gap), never longer than the configured constant.
+        let wait = if cfg.adaptive {
+            Duration::from_secs_f64((3.0 * ewma_gap_s).clamp(base_wait_s / 8.0, base_wait_s))
+        } else {
+            Duration::from_secs_f64(base_wait_s)
+        };
         let mut guard = shared.queue.lock().unwrap();
         // Phase 1: wait for any work at all.
         while guard.q.is_empty() && guard.pending_install.is_none() {
@@ -386,19 +407,104 @@ fn scheduler(
         if subs.is_empty() {
             continue; // raced with close/install; re-enter the wait loop
         }
-        // An oversized lone submission can never execute — fail its ticket
-        // instead of panicking the scheduler (quantum <= capacity makes
-        // this unreachable through SubmitHandle::generate).
+        // Track the inter-submission gap (EWMA) that drives the adaptive
+        // deadline; arrival timestamps are recorded at enqueue, so the
+        // measurement is independent of how long this call executes.
+        for s in &subs {
+            if let Some(prev) = last_enqueued {
+                let gap = s.enqueued.saturating_duration_since(prev).as_secs_f64();
+                ewma_gap_s = 0.8 * ewma_gap_s + 0.2 * gap;
+            }
+            last_enqueued = Some(s.enqueued);
+        }
+        shared.stats.lock().unwrap().ewma_gap_s = ewma_gap_s;
+        // An oversized lone submission cannot execute as ONE call — split
+        // it across successive engine invocations and merge the results
+        // onto its single ticket (variable per-prompt budgets make such
+        // plans legitimate whenever a handle's quantum was floored at a
+        // max-budget group larger than capacity / K).
         if rows_total > capacity {
             let g = subs.remove(0);
-            let _ = g.tx.send(Err(anyhow!(
-                "submission needs {} rows, engine capacity is {capacity}",
-                g.rows
-            )));
+            debug_assert!(subs.is_empty(), "coalesced run cannot exceed capacity");
+            execute_split(&mut *engine, g, capacity, &shared);
             continue;
         }
         execute_call(&mut *engine, subs, rows_total, capacity, deadline_fired, &shared);
     }
+}
+
+/// Execute one oversized submission as successive engine calls: requests
+/// are chunked greedily (kept whole) under `capacity`, every chunk runs as
+/// its own engine call, and the per-request groups are merged back into a
+/// single [`GenResult`] for the submission's ticket. Cost and row
+/// accounting sum over the chunks, so the ticket still pays the true
+/// engine bill (including the extra per-call overheads the split costs).
+fn execute_split(engine: &mut dyn RolloutEngine, g: GenWork, capacity: usize, shared: &Shared) {
+    // A single request that alone exceeds capacity can never execute.
+    if let Some(req) = g.requests.iter().find(|r| r.n_samples > capacity) {
+        let _ = g.tx.send(Err(anyhow!(
+            "request of {} samples exceeds engine capacity {capacity} (prompt {})",
+            req.n_samples,
+            req.prompt_idx
+        )));
+        return;
+    }
+    let mut chunks: Vec<Vec<GenRequest>> = Vec::new();
+    let mut chunk: Vec<GenRequest> = Vec::new();
+    let mut chunk_rows = 0usize;
+    for req in g.requests {
+        if chunk_rows + req.n_samples > capacity {
+            chunks.push(std::mem::take(&mut chunk));
+            chunk_rows = 0;
+        }
+        chunk_rows += req.n_samples;
+        chunk.push(req);
+    }
+    if !chunk.is_empty() {
+        chunks.push(chunk);
+    }
+    let started = Instant::now();
+    let mut groups = Vec::new();
+    let mut cost_s = 0.0f64;
+    let mut weight_version = 0u64;
+    for chunk in &chunks {
+        let chunk_rows: usize = chunk.iter().map(|r| r.n_samples).sum();
+        let result = engine.generate(chunk, g.temperature).and_then(|res| {
+            anyhow::ensure!(
+                res.groups.len() == chunk.len(),
+                "engine returned {} groups for {} requests",
+                res.groups.len(),
+                chunk.len()
+            );
+            Ok(res)
+        });
+        {
+            let mut stats = shared.stats.lock().unwrap();
+            stats.calls += 1;
+            stats.split_calls += 1;
+            stats.rows_used += chunk_rows as u64;
+            stats.rows_capacity += capacity as u64;
+            stats.max_call_rows = stats.max_call_rows.max(chunk_rows as u64);
+            stats.coalesced_hist[ServiceCounters::hist_bucket(1)] += 1;
+        }
+        match result {
+            Ok(res) => {
+                groups.extend(res.groups);
+                cost_s += res.cost_s;
+                weight_version = res.weight_version;
+            }
+            Err(e) => {
+                let _ = g.tx.send(Err(anyhow!("split inference call failed: {e:#}")));
+                return;
+            }
+        }
+    }
+    {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.submissions += 1;
+        stats.queue_wait_s += started.saturating_duration_since(g.enqueued).as_secs_f64();
+    }
+    let _ = g.tx.send(Ok(GenResult { groups, cost_s, rows_used: g.rows, weight_version }));
 }
 
 /// Execute one coalesced call and fan the results back out per ticket.
@@ -657,7 +763,7 @@ mod tests {
     #[test]
     fn concurrent_submissions_coalesce_and_split_correctly() {
         let (e, calls, _) = engine(64);
-        let cfg = ServiceConfig { coalesce_wait_ms: 200, fill_waterline: 1.0 };
+        let cfg = ServiceConfig { coalesce_wait_ms: 200, fill_waterline: 1.0, adaptive: false };
         let service = InferenceService::spawn(e, cfg, 4, 8);
         assert_eq!(service.quantum(), 16);
         let mut rng = Rng::new(2);
@@ -687,7 +793,7 @@ mod tests {
         let (e, calls, _) = engine(64);
         // Waterline requires 64 rows but only one 8-row submission will
         // ever arrive: the deadline must fire or the ticket starves.
-        let cfg = ServiceConfig { coalesce_wait_ms: 5, fill_waterline: 1.0 };
+        let cfg = ServiceConfig { coalesce_wait_ms: 5, fill_waterline: 1.0, adaptive: false };
         let service = InferenceService::spawn(e, cfg, 4, 8);
         let mut rng = Rng::new(3);
         let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
@@ -740,16 +846,57 @@ mod tests {
     }
 
     #[test]
-    fn oversized_submission_errors_its_own_ticket() {
+    fn oversized_submission_splits_across_successive_calls() {
         let (e, calls, _) = engine(16);
         let service = InferenceService::spawn(e, ServiceConfig::default(), 1, 8);
         let mut rng = Rng::new(7);
-        // 5 prompts x 4 samples = 20 rows > capacity 16: must error, not
-        // panic the scheduler — and the service keeps serving afterwards.
-        let err = service.handle().submit(reqs(&mut rng, 5, 4), 1.0).wait();
-        assert!(err.is_err());
+        // 5 prompts x 4 samples = 20 rows > capacity 16: the scheduler must
+        // split the plan across engine calls (16 + 4) and merge the results
+        // onto the one ticket, instead of refusing it.
+        let res = service.handle().submit(reqs(&mut rng, 5, 4), 1.0).wait().unwrap();
+        assert_eq!(res.groups.len(), 5, "all requests served");
+        assert!(res.groups.iter().all(|g| g.len() == 4));
+        assert_eq!(res.rows_used, 20);
+        // cost sums both calls: 2 overheads + 0.1 per row
+        assert!((res.cost_s - (2.0 + 0.1 * 20.0)).abs() < 1e-9, "cost {}", res.cost_s);
+        assert_eq!(calls.lock().unwrap().as_slice(), &[16, 4]);
+        let stats = service.stats();
+        assert_eq!(stats.calls, 2);
+        assert_eq!(stats.split_calls, 2);
+        assert_eq!(stats.submissions, 1);
+        assert_eq!(stats.max_call_rows, 16);
+        // and the service keeps serving normal submissions afterwards
         let ok = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait();
         assert!(ok.is_ok());
-        assert_eq!(calls.lock().unwrap().as_slice(), &[8]);
+    }
+
+    #[test]
+    fn single_request_beyond_capacity_still_errors() {
+        let (e, calls, _) = engine(16);
+        let service = InferenceService::spawn(e, ServiceConfig::default(), 1, 8);
+        let mut rng = Rng::new(8);
+        // One request of 20 samples cannot be split (requests stay whole).
+        let err = service.handle().submit(reqs(&mut rng, 1, 20), 1.0).wait();
+        assert!(err.is_err());
+        assert!(calls.lock().unwrap().is_empty(), "no engine call for an unservable request");
+    }
+
+    #[test]
+    fn adaptive_deadline_serves_and_tracks_the_submission_gap() {
+        let (e, calls, _) = engine(64);
+        let cfg = ServiceConfig { coalesce_wait_ms: 5, fill_waterline: 1.0, adaptive: true };
+        let service = InferenceService::spawn(e, cfg, 2, 8);
+        let mut rng = Rng::new(9);
+        for _ in 0..4 {
+            let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
+            assert_eq!(res.rows_used, 8);
+        }
+        assert_eq!(calls.lock().unwrap().len(), 4);
+        let stats = service.stats();
+        assert_eq!(stats.submissions, 4);
+        // The gap EWMA was updated away from its deadline-seeded value and
+        // stays a sane non-negative duration.
+        assert!(stats.ewma_gap_s >= 0.0);
+        assert!(stats.ewma_gap_s < 10.0, "gap EWMA diverged: {}", stats.ewma_gap_s);
     }
 }

@@ -79,6 +79,23 @@ pub fn grpo(rewards: &[f32]) -> Vec<f32> {
     rewards.iter().map(|r| (r - m) / (std + 1e-6)).collect()
 }
 
+/// Equal-prompt weight for a group of `n` rollouts in a batch whose mean
+/// group size is `mean_n`.
+///
+/// With variable per-prompt rollout budgets a large-budget group would
+/// otherwise dominate the batch gradient simply by contributing more rows:
+/// scaling each rollout's advantage by `mean_n / n` keeps every *prompt's*
+/// total gradient weight equal, so extra rollouts reduce that prompt's
+/// estimator variance (what they were allocated for) without upweighting
+/// it. Uniform group sizes give `mean_n == n` and a weight of exactly 1.0
+/// for every group — bit-for-bit the unweighted batch.
+pub fn group_size_weight(n: usize, mean_n: f64) -> f32 {
+    if n == 0 {
+        return 0.0;
+    }
+    (mean_n / n as f64) as f32
+}
+
 /// Batch-level whitening (REINFORCE++ second stage): zero-mean, unit-var.
 pub fn whiten(advs: &mut [f32]) {
     let n = advs.len();
@@ -172,6 +189,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn group_size_weight_is_identity_for_uniform_groups() {
+        for n in [1usize, 2, 8, 24, 384] {
+            assert_eq!(group_size_weight(n, n as f64), 1.0, "n={n}");
+        }
+        assert_eq!(group_size_weight(0, 8.0), 0.0);
+    }
+
+    #[test]
+    fn group_size_weight_equalizes_total_group_weight() {
+        // Two groups of sizes 6 and 2 (mean 4): each prompt's total weight
+        // (rows x weight) must come out equal.
+        let w_big = group_size_weight(6, 4.0);
+        let w_small = group_size_weight(2, 4.0);
+        assert!((6.0 * w_big as f64 - 2.0 * w_small as f64).abs() < 1e-6);
+        assert!(w_big < 1.0 && w_small > 1.0);
     }
 
     #[test]

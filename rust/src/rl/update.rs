@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::data::verifier::loss_token_count;
-use crate::rl::advantage::AdvantageEstimator;
+use crate::rl::advantage::{group_size_weight, AdvantageEstimator};
 use crate::runtime::Tensor;
 
 /// One sampled response for a prompt.
@@ -64,6 +64,12 @@ impl TrainBatch {
     /// * `global_baseline` — only used by plain REINFORCE.
     ///
     /// Unused trailing rows are zero-padded (mask 0 ⇒ no gradient).
+    ///
+    /// Group-size-aware normalization: when group sizes differ (variable
+    /// per-prompt rollout budgets), each group's advantages are scaled by
+    /// `mean_group_size / group_size` so every prompt carries equal total
+    /// gradient weight — see [`group_size_weight`]. Uniform groups get a
+    /// weight of exactly 1.0, leaving the batch bit-for-bit unchanged.
     pub fn assemble(
         groups: &[PromptGroup],
         tok: &crate::data::tokenizer::Tokenizer,
@@ -77,6 +83,11 @@ impl TrainBatch {
             total_rollouts <= rows,
             "batch of {total_rollouts} rollouts exceeds compiled rows {rows}"
         );
+        let mean_group = if groups.is_empty() {
+            0.0
+        } else {
+            total_rollouts as f64 / groups.len() as f64
+        };
         let mut tokens = vec![0i32; rows * seq_len];
         let mut loss_mask = vec![0f32; rows * seq_len];
         let mut old_logprobs = vec![0f32; rows * seq_len];
@@ -84,7 +95,12 @@ impl TrainBatch {
         let mut row = 0usize;
         let mut adv_sum = 0f64;
         for g in groups {
-            let advs = estimator.advantages(&g.rewards(), global_baseline);
+            let weight = group_size_weight(g.rollouts.len(), mean_group);
+            let advs: Vec<f32> = estimator
+                .advantages(&g.rewards(), global_baseline)
+                .into_iter()
+                .map(|a| a * weight)
+                .collect();
             let prompt_tokens = tok.encode(&g.task.prompt)?;
             let plen = prompt_tokens.len();
             for (r, adv) in g.rollouts.iter().zip(advs) {
@@ -240,6 +256,47 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn uniform_groups_are_not_reweighted() {
+        // Two equal-size groups: the group-size weight is exactly 1.0, so
+        // the batch matches a per-group assembly bit for bit (the fixed-
+        // allocator equivalence rail at the train-batch layer).
+        let g1 = group("1", vec![(vec![EOS], 1.0), (vec![EOS], 0.0)]);
+        let g2 = group("2", vec![(vec![EOS], 0.0), (vec![EOS], 1.0)]);
+        let b =
+            TrainBatch::assemble(&[g1, g2], &tok(), AdvantageEstimator::Rloo, 0.0, 4, 4).unwrap();
+        assert_eq!(b.advantages, vec![1.0, -1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn variable_groups_get_equal_prompt_weight() {
+        // Group sizes 6 and 2, mean 4: RLOO advantages scaled by 4/6 and
+        // 4/2 so each prompt's total gradient weight is equal.
+        let alternating: Vec<(Vec<i32>, f32)> =
+            (0..6).map(|i| (vec![EOS], (i % 2) as f32)).collect();
+        let g_big = group("1", alternating);
+        let g_small = group("2", vec![(vec![EOS], 1.0), (vec![EOS], 0.0)]);
+        let b = TrainBatch::assemble(
+            &[g_big.clone(), g_small.clone()],
+            &tok(),
+            AdvantageEstimator::Rloo,
+            0.0,
+            8,
+            4,
+        )
+        .unwrap();
+        let raw_big = AdvantageEstimator::Rloo.advantages(&g_big.rewards(), 0.0);
+        let raw_small = AdvantageEstimator::Rloo.advantages(&g_small.rewards(), 0.0);
+        for (i, raw) in raw_big.iter().enumerate() {
+            assert!((b.advantages[i] - raw * (4.0 / 6.0)).abs() < 1e-6, "row {i}");
+        }
+        for (i, raw) in raw_small.iter().enumerate() {
+            assert!((b.advantages[6 + i] - raw * 2.0).abs() < 1e-6, "row {i}");
+        }
+        // Equal total weight per prompt: rows x weight is 6 x 2/3 = 2 x 2.
+        assert!((6.0 * (4.0 / 6.0) - 2.0 * 2.0f64).abs() < 1e-12);
     }
 
     #[test]

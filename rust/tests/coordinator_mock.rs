@@ -187,13 +187,8 @@ fn run_kind(kind: CurriculumKind, steps: usize, seed: u64) -> (MockPolicy, RunRe
 // ---------------------------------------------------------------------------
 
 fn speed_spec() -> CurriculumSpec {
-    CurriculumSpec {
-        kind: CurriculumKind::Speed,
-        rule: ScreeningRule::new(4, 8),
-        pool_factor: 2,
-        buffer_cap: usize::MAX, // worker-internal SPEED buffer: reference semantics
-        predictor: None,
-    }
+    // Worker-internal SPEED buffer stays unbounded: reference semantics.
+    CurriculumSpec::fixed(CurriculumKind::Speed, ScreeningRule::new(4, 8))
 }
 
 fn trainer_cfg(steps: usize, seed: u64, label: &str) -> TrainerConfig {

@@ -44,13 +44,7 @@ fn run(kind: CurriculumKind, max_steps: usize, seed: u64) -> RunRecord {
 fn run_pipelined(max_steps: usize, seed: u64, workers: usize, enabled: bool) -> RunRecord {
     let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
     let mut policy = scenario_policy(seed);
-    let spec = CurriculumSpec {
-        kind: CurriculumKind::Speed,
-        rule: ScreeningRule::new(8, 16),
-        pool_factor: 4,
-        buffer_cap: usize::MAX,
-        predictor: None,
-    };
+    let spec = CurriculumSpec::fixed(CurriculumKind::Speed, ScreeningRule::new(8, 16));
     let trainer = PipelinedTrainer::new(
         scenario_trainer_config(CurriculumKind::Speed, max_steps, seed),
         AlgoConfig::new(BaseAlgo::Rloo),

@@ -83,13 +83,7 @@ fn run_pipelined(workers: usize, service: bool, seed: u64) -> RunRecord {
     let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
     let mut policy = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), seed)
         .with_shapes(384, 384, 24);
-    let spec = CurriculumSpec {
-        kind: CurriculumKind::Uniform,
-        rule: ScreeningRule::new(8, 16), // N = 24 rollouts per prompt
-        pool_factor: 4,
-        buffer_cap: usize::MAX,
-        predictor: None,
-    };
+    let spec = CurriculumSpec::fixed(CurriculumKind::Uniform, ScreeningRule::new(8, 16));
     let trainer = PipelinedTrainer::new(
         TrainerConfig {
             batch_size: 8, // 8 x 24 = 192 rows per collect vs 384 capacity
@@ -109,7 +103,11 @@ fn run_pipelined(workers: usize, service: bool, seed: u64) -> RunRecord {
             // slow/loaded CI runners too: the waterline still dispatches
             // immediately once K submissions are queued, so the deadline
             // only ever stretches the rare partial rounds.
-            service_cfg: ServiceConfig { coalesce_wait_ms: 100, fill_waterline: 0.85 },
+            service_cfg: ServiceConfig {
+                coalesce_wait_ms: 100,
+                fill_waterline: 0.85,
+                adaptive: false,
+            },
         },
     );
     let evals = benchmark_suite(123, 24);
@@ -179,13 +177,7 @@ fn unreachable_waterline_never_starves_tickets() {
     let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
     let mut policy = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 5)
         .with_shapes(384, 384, 24);
-    let spec = CurriculumSpec {
-        kind: CurriculumKind::Speed,
-        rule: ScreeningRule::new(8, 16),
-        pool_factor: 4,
-        buffer_cap: usize::MAX,
-        predictor: None,
-    };
+    let spec = CurriculumSpec::fixed(CurriculumKind::Speed, ScreeningRule::new(8, 16));
     let trainer = PipelinedTrainer::new(
         TrainerConfig {
             batch_size: 8,
@@ -201,7 +193,11 @@ fn unreachable_waterline_never_starves_tickets() {
             enabled: true,
             buffer_cap: 32,
             service: true,
-            service_cfg: ServiceConfig { coalesce_wait_ms: 1, fill_waterline: 1.0 },
+            service_cfg: ServiceConfig {
+                coalesce_wait_ms: 1,
+                fill_waterline: 1.0,
+                adaptive: false,
+            },
         },
     );
     let rec = trainer.run(&mut policy, spec, &dataset, &[]).expect("run must not starve");
