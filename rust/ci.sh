@@ -25,6 +25,27 @@ echo "== speed-rl bench --mode alloc (fixed vs adaptive budgets -> BENCH_alloc.j
 cargo run --release --bin speed-rl -- bench --mode alloc --steps 40 --target 0.45 \
   --out BENCH_alloc.json
 
+echo "== resume smoke (train -> save -> resume must equal the uninterrupted run) =="
+# The checkpoint-format drift gate: a 6+6-step predictive-speed resume must
+# reproduce the uninterrupted 12-step run's record byte for byte (the
+# sim-substrate equivalence rail of DESIGN.md §10). Any change to the
+# sidecar layout, the restore order, or the RNG/loader state capture that
+# breaks warm resume fails here, not in a week-long production run.
+CK_DIR="ck_resume_smoke"
+rm -rf "$CK_DIR" full_run.json resumed_run.json
+SIM_FLAGS="--curriculum predictive-speed --dataset-size 2000 --batch-size 8 --eval-every 6 --log-level warn"
+cargo run --release --bin speed-rl -- simulate $SIM_FLAGS --steps 12 --out full_run.json
+cargo run --release --bin speed-rl -- simulate $SIM_FLAGS --steps 6 --save "$CK_DIR:smoke"
+cargo run --release --bin speed-rl -- simulate $SIM_FLAGS --steps 12 --resume "$CK_DIR:smoke" \
+  --out resumed_run.json
+if ! diff -q full_run.json resumed_run.json; then
+  echo "resume smoke FAILED: resumed run diverged from the uninterrupted run"
+  diff -u full_run.json resumed_run.json | head -40
+  exit 1
+fi
+rm -rf "$CK_DIR" full_run.json resumed_run.json
+echo "resume smoke: resumed record identical to uninterrupted run"
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

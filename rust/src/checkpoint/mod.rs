@@ -1,0 +1,829 @@
+//! Run-state checkpointing: warm resume for the curriculum knowledge the
+//! run accumulated online (ROADMAP item; ISSUE 5 tentpole).
+//!
+//! [`crate::runtime::ParamStore`] persists weights + optimizer state, but
+//! SPEED's whole advantage is the *difficulty knowledge* built up during
+//! training: the [`DifficultyStore`]'s discounted Beta posteriors, the
+//! [`FeatureModel`]'s logistic weights, and the run's progress accounting.
+//! Before this module a restart threw all of that away, so a resumed run
+//! re-screened the easy/zero-pass tail from scratch — exactly the waste
+//! the paper's screening stage exists to avoid.
+//!
+//! The checkpoint format extends `ParamStore::save`'s layout (versioned
+//! JSON meta + raw buffers) with a **sidecar**, `<tag>.run_state.json`,
+//! holding:
+//!
+//! * a config **fingerprint** (screening band, allocator bounds, predictor
+//!   discount/skip-confidence, dataset, seed, …) so a mismatched resume is
+//!   rejected loudly instead of silently blending incompatible posteriors;
+//! * the [`Predictor`]'s knowledge (key-sorted Beta counts + feature-model
+//!   weights + instance counter);
+//! * run progress: next train step, weight version, cumulative
+//!   [`InferenceCounters`], inference/update clocks, and the
+//!   [`RunRecord`] so far — `StepRecord` indices and staleness accounting
+//!   continue instead of restarting at zero;
+//! * substrate/curriculum internals (sim policy RNG + skill, loader
+//!   shuffle state, sampling-buffer contents, pending continuations),
+//!   which is what makes the sim-substrate equivalence rail exact:
+//!   train N → save → load → train N ≡ an uninterrupted 2N-step run, bit
+//!   for bit (`rust/tests/checkpoint_sim.rs`).
+//!
+//! Quiesce-then-snapshot protocol (DESIGN.md §10): snapshots are taken
+//! only between training steps with no rollout worker running and every
+//! pending [`ObservationDelta`] flushed — the pipelined driver winds its
+//! workers down (pool joined) before snapshotting, so no torn state can be
+//! serialized.
+//!
+//! All u64 payloads (identity keys, RNG state, staleness sums) are encoded
+//! as decimal *strings*: the JSON layer stores numbers as f64, which would
+//! silently round anything above 2^53. f64/f32 payloads round-trip exactly
+//! through the writer's shortest-representation formatting.
+//!
+//! [`DifficultyStore`]: crate::predictor::DifficultyStore
+//! [`FeatureModel`]: crate::predictor::FeatureModel
+//! [`Predictor`]: crate::predictor::Predictor
+//! [`ObservationDelta`]: crate::predictor::ObservationDelta
+//! [`InferenceCounters`]: crate::metrics::InferenceCounters
+//! [`RunRecord`]: crate::metrics::RunRecord
+//! [`StepRecord`]: crate::metrics::StepRecord
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::batcher::PendingContinuation;
+use crate::coordinator::buffer::SamplingBufferState;
+use crate::data::loader::LoaderState;
+use crate::data::tasks::{TaskFamily, TaskInstance};
+use crate::metrics::{InferenceCounters, RunRecord};
+use crate::predictor::{BetaPosterior, FeatureModelState, PredictorState};
+use crate::rl::update::{PromptGroup, Rollout};
+use crate::util::json::Json;
+
+/// Sidecar format version; bumped on incompatible layout changes. Loads
+/// reject unknown versions loudly (checkpoint-format drift must fail the
+/// resume, not corrupt it).
+pub const FORMAT_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Checkpoint locations: the `dir:tag` spec grammar
+// ---------------------------------------------------------------------------
+
+/// A checkpoint location: directory + tag, the `dir:tag` grammar of the
+/// `--checkpoint` / `--save` / `--resume` CLI flags.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointSpec {
+    pub dir: PathBuf,
+    pub tag: String,
+}
+
+impl CheckpointSpec {
+    pub fn new(dir: impl Into<PathBuf>, tag: impl Into<String>) -> CheckpointSpec {
+        CheckpointSpec { dir: dir.into(), tag: tag.into() }
+    }
+
+    /// Parse a `dir:tag` spec. Split on the LAST colon — paths may contain
+    /// colons (`runs:2026/ck:warm` means dir `runs:2026/ck`, tag `warm`);
+    /// the old `split_once` parse mis-split exactly those. Tags therefore
+    /// cannot contain colons, which the error text spells out.
+    pub fn parse(spec: &str) -> Result<CheckpointSpec> {
+        let Some((dir, tag)) = spec.rsplit_once(':') else {
+            bail!("checkpoint spec '{spec}' must be dir:tag (e.g. ckpts:warm)");
+        };
+        if dir.is_empty() {
+            bail!("checkpoint spec '{spec}' has an empty directory (want dir:tag)");
+        }
+        if tag.is_empty() {
+            bail!(
+                "checkpoint spec '{spec}' has an empty tag (want dir:tag; the tag follows \
+                 the last ':' and cannot contain one)"
+            );
+        }
+        Ok(CheckpointSpec::new(dir, tag))
+    }
+}
+
+impl std::fmt::Display for CheckpointSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.dir.display(), self.tag)
+    }
+}
+
+/// Run-state checkpoint I/O plan for one run: where to resume from, where
+/// to save, and how often (0 = final save only).
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointIo {
+    pub resume: Option<CheckpointSpec>,
+    pub save: Option<CheckpointSpec>,
+    /// Save every this many training steps (0 = only the final save).
+    pub save_every: usize,
+}
+
+impl CheckpointIo {
+    pub fn is_noop(&self) -> bool {
+        self.resume.is_none() && self.save.is_none()
+    }
+
+    /// Reject inconsistent plans at config time, not mid-run.
+    pub fn validate(&self) -> Result<()> {
+        if self.save_every > 0 && self.save.is_none() {
+            bail!("--save-every {} given without a --save dir:tag target", self.save_every);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config fingerprint
+// ---------------------------------------------------------------------------
+
+/// The config knobs that shape the *meaning* of persisted run state. A
+/// resume whose config disagrees on any of these is rejected loudly: e.g.
+/// posteriors accumulated under one discount are not valid evidence under
+/// another, and a different screening band changes what "accept" meant.
+///
+/// Deliberately excluded: stop conditions (`max_steps`, `max_seconds`,
+/// `eval_every`) — resuming with a larger step budget is the whole point —
+/// and execution topology (`workers`, `pipeline`, `service`, coalescing
+/// knobs), which changes scheduling but not the meaning of the state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint(Json);
+
+impl Fingerprint {
+    pub fn of(cfg: &RunConfig) -> Fingerprint {
+        Fingerprint(Json::obj(vec![
+            ("model", Json::str(cfg.model.clone())),
+            ("dataset", Json::str(cfg.dataset.name())),
+            ("dataset_size", Json::num(cfg.dataset_size as f64)),
+            ("seed", ju64(cfg.seed)),
+            ("curriculum", Json::str(cfg.curriculum.name())),
+            ("algo", Json::str(cfg.algo.name())),
+            ("n_init", Json::num(cfg.n_init as f64)),
+            ("n_cont", Json::num(cfg.n_cont as f64)),
+            ("alloc", Json::str(cfg.alloc.name())),
+            ("n_cont_min", Json::num(cfg.n_cont_min as f64)),
+            ("n_cont_max", Json::num(cfg.n_cont_max as f64)),
+            ("p_low", Json::num(cfg.p_low)),
+            ("p_high", Json::num(cfg.p_high)),
+            ("batch_size", Json::num(cfg.batch_size as f64)),
+            ("temperature", Json::num(cfg.temperature as f64)),
+            ("lr", Json::num(cfg.lr)),
+            ("skip_confidence", Json::num(cfg.skip_confidence)),
+            ("predictor_discount", Json::num(cfg.predictor_discount)),
+            ("explore_rate", Json::num(cfg.explore_rate)),
+        ]))
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.0.clone()
+    }
+
+    pub fn from_json(j: &Json) -> Fingerprint {
+        Fingerprint(j.clone())
+    }
+
+    /// Reject a resume whose config disagrees with the checkpoint's,
+    /// listing every mismatched knob with both values.
+    pub fn check_matches(&self, cfg: &RunConfig) -> Result<()> {
+        let want = Fingerprint::of(cfg);
+        let saved = self.0.as_obj().cloned().unwrap_or_default();
+        let live = want.0.as_obj().cloned().unwrap_or_default();
+        let mut mismatches = Vec::new();
+        let keys: std::collections::BTreeSet<&String> =
+            saved.keys().chain(live.keys()).collect();
+        for key in keys {
+            let a = saved.get(key.as_str());
+            let b = live.get(key.as_str());
+            if a != b {
+                mismatches.push(format!(
+                    "{key}: checkpoint {} vs run {}",
+                    a.map(Json::to_string).unwrap_or_else(|| "<absent>".into()),
+                    b.map(Json::to_string).unwrap_or_else(|| "<absent>".into()),
+                ));
+            }
+        }
+        if !mismatches.is_empty() {
+            bail!(
+                "checkpoint config fingerprint does not match this run — resuming would blend \
+                 incompatible curriculum state. Mismatches: {}",
+                mismatches.join("; ")
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The run-state sidecar
+// ---------------------------------------------------------------------------
+
+/// Everything beyond raw weights that a warm resume needs; written as
+/// `<tag>.run_state.json` next to the `ParamStore` files (sim runs have no
+/// weight files — the sidecar alone is the checkpoint).
+#[derive(Clone, Debug)]
+pub struct RunState {
+    pub fingerprint: Fingerprint,
+    /// Next training step (the checkpoint was taken after `step` steps).
+    pub step: usize,
+    pub weight_version: u64,
+    /// Cumulative inference/update clocks (the paper's time axis).
+    pub inference_s: f64,
+    pub update_s: f64,
+    /// Cumulative run counters at the snapshot.
+    pub counters: InferenceCounters,
+    /// Step/eval records so far (so the resumed record is the full run's).
+    pub record: RunRecord,
+    pub loader: Option<LoaderState>,
+    /// Generation token of the weight files saved alongside this sidecar
+    /// ([`crate::policy::Trainable::params_token`]); checked at resume so
+    /// a crash between the weight writes and the sidecar write (two save
+    /// generations on disk) is detected instead of resumed torn.
+    pub params_token: Option<u64>,
+    /// Substrate-internal state ([`crate::policy::Trainable::state_json`]).
+    pub policy: Option<Json>,
+    /// Curriculum-internal state (sampling buffer, pending continuations,
+    /// exploration RNG; [`crate::coordinator::curriculum::Curriculum::state_json`]).
+    pub curriculum: Option<Json>,
+    pub predictor: Option<PredictorState>,
+}
+
+impl RunState {
+    /// Sidecar file name for a tag.
+    pub fn file_name(tag: &str) -> String {
+        format!("{tag}.run_state.json")
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("format_version", Json::num(FORMAT_VERSION as f64)),
+            ("fingerprint", self.fingerprint.to_json()),
+            ("step", Json::num(self.step as f64)),
+            ("weight_version", ju64(self.weight_version)),
+            ("inference_s", Json::num(self.inference_s)),
+            ("update_s", Json::num(self.update_s)),
+            ("counters", self.counters.to_json()),
+            ("record", self.record.to_json()),
+        ];
+        if let Some(l) = &self.loader {
+            fields.push(("loader", loader_state_to_json(l)));
+        }
+        if let Some(t) = self.params_token {
+            fields.push(("params_token", ju64(t)));
+        }
+        if let Some(p) = &self.policy {
+            fields.push(("policy", p.clone()));
+        }
+        if let Some(c) = &self.curriculum {
+            fields.push(("curriculum", c.clone()));
+        }
+        if let Some(p) = &self.predictor {
+            fields.push(("predictor", predictor_state_to_json(p)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunState> {
+        let version = j.get("format_version").and_then(|x| x.as_u64_lossy()).unwrap_or(0);
+        if version != FORMAT_VERSION {
+            bail!(
+                "run-state checkpoint format v{version} is not supported by this binary \
+                 (expected v{FORMAT_VERSION}) — the checkpoint was written by an \
+                 incompatible version"
+            );
+        }
+        let fingerprint = Fingerprint::from_json(
+            j.get("fingerprint").context("run state missing 'fingerprint'")?,
+        );
+        let counters = j
+            .get("counters")
+            .map(InferenceCounters::from_json)
+            .context("run state missing 'counters'")?;
+        let record = crate::metrics::report::record_from_json(
+            j.get("record").context("run state missing 'record'")?,
+        )?;
+        Ok(RunState {
+            fingerprint,
+            step: j.get("step").and_then(|x| x.as_usize()).context("run state missing 'step'")?,
+            weight_version: j.get("weight_version").map(pu64).transpose()?.unwrap_or(0),
+            inference_s: j.get("inference_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            update_s: j.get("update_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            counters,
+            record,
+            loader: j.get("loader").map(loader_state_from_json).transpose()?,
+            params_token: j.get("params_token").map(pu64).transpose()?,
+            policy: j.get("policy").cloned(),
+            curriculum: j.get("curriculum").cloned(),
+            predictor: j.get("predictor").map(predictor_state_from_json).transpose()?,
+        })
+    }
+
+    /// Write the sidecar (creating `dir` if needed). Written to a temp
+    /// file and renamed into place: periodic saves reuse one tag, and an
+    /// in-place rewrite would destroy the only good checkpoint if the
+    /// process died mid-write.
+    pub fn save(&self, dir: &Path, tag: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        let path = dir.join(Self::file_name(tag));
+        atomic_write(&path, self.to_json().to_string_pretty().as_bytes())
+    }
+
+    /// Load a sidecar written by [`save`](Self::save).
+    pub fn load(dir: &Path, tag: &str) -> Result<RunState> {
+        let path = dir.join(Self::file_name(tag));
+        let j = Json::parse_file(&path)
+            .with_context(|| format!("load run-state checkpoint {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("parse {}", path.display()))
+    }
+}
+
+/// Crash-safe file write: write to `<path>.tmp`, then rename over `path`.
+/// A checkpoint tag is reused by every periodic save, so the previous good
+/// file must survive until the new one is fully on disk (shared by the
+/// sidecar writer and `ParamStore::save`).
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// JSON encoding helpers (u64-safe, f32/f64 bit-exact)
+// ---------------------------------------------------------------------------
+
+/// u64 → JSON string (JSON numbers are f64: anything above 2^53 — identity
+/// hashes, RNG state — would silently round).
+pub fn ju64(x: u64) -> Json {
+    Json::str(x.to_string())
+}
+
+/// Parse a [`ju64`]-encoded value (a plain number is accepted too, for
+/// hand-written fixtures).
+pub fn pu64(j: &Json) -> Result<u64> {
+    if let Some(s) = j.as_str() {
+        return s.parse::<u64>().with_context(|| format!("bad u64 '{s}'"));
+    }
+    j.as_u64_lossy().context("expected a u64 (string or number)")
+}
+
+pub fn rng_state_to_json(s: [u64; 4]) -> Json {
+    Json::arr(s.iter().map(|x| ju64(*x)))
+}
+
+pub fn rng_state_from_json(j: &Json) -> Result<[u64; 4]> {
+    let arr = j.as_arr().context("rng state must be an array")?;
+    anyhow::ensure!(arr.len() == 4, "rng state must have 4 words, got {}", arr.len());
+    let mut s = [0u64; 4];
+    for (slot, v) in s.iter_mut().zip(arr) {
+        *slot = pu64(v)?;
+    }
+    Ok(s)
+}
+
+pub fn task_to_json(t: &TaskInstance) -> Json {
+    Json::obj(vec![
+        ("family", Json::num(t.family.index() as f64)),
+        ("level", Json::num(t.level as f64)),
+        ("prompt", Json::str(t.prompt.clone())),
+        ("answer", Json::num(t.answer as f64)),
+    ])
+}
+
+pub fn task_from_json(j: &Json) -> Result<TaskInstance> {
+    let family_idx = j.get("family").and_then(|x| x.as_usize()).context("task missing family")?;
+    Ok(TaskInstance {
+        family: TaskFamily::from_index(family_idx)
+            .with_context(|| format!("unknown task family index {family_idx}"))?,
+        level: j.get("level").and_then(|x| x.as_usize()).context("task missing level")? as u8,
+        prompt: j.get("prompt").and_then(|x| x.as_str()).context("task missing prompt")?.into(),
+        answer: j.get("answer").and_then(|x| x.as_i64()).context("task missing answer")?,
+    })
+}
+
+pub fn rollout_to_json(r: &Rollout) -> Json {
+    Json::obj(vec![
+        ("tokens", Json::arr(r.gen_tokens.iter().map(|t| Json::num(*t as f64)))),
+        ("logprobs", Json::arr(r.gen_logprobs.iter().map(|l| Json::num(*l as f64)))),
+        ("reward", Json::num(r.reward as f64)),
+    ])
+}
+
+pub fn rollout_from_json(j: &Json) -> Result<Rollout> {
+    Ok(Rollout {
+        gen_tokens: j.get("tokens").and_then(|x| x.as_i32_vec()).context("rollout tokens")?,
+        gen_logprobs: j
+            .get("logprobs")
+            .and_then(|x| x.as_f64_vec())
+            .context("rollout logprobs")?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+        reward: j.get("reward").and_then(|x| x.as_f64()).context("rollout reward")? as f32,
+    })
+}
+
+pub fn group_to_json(g: &PromptGroup) -> Json {
+    Json::obj(vec![
+        ("prompt_idx", Json::num(g.prompt_idx as f64)),
+        ("task", task_to_json(&g.task)),
+        ("rollouts", Json::arr(g.rollouts.iter().map(rollout_to_json))),
+    ])
+}
+
+pub fn group_from_json(j: &Json) -> Result<PromptGroup> {
+    Ok(PromptGroup {
+        prompt_idx: j.get("prompt_idx").and_then(|x| x.as_usize()).context("group prompt_idx")?,
+        task: task_from_json(j.get("task").context("group task")?)?,
+        rollouts: j
+            .get("rollouts")
+            .and_then(|x| x.as_arr())
+            .context("group rollouts")?
+            .iter()
+            .map(rollout_from_json)
+            .collect::<Result<_>>()?,
+    })
+}
+
+pub fn buffer_state_to_json(b: &SamplingBufferState) -> Json {
+    Json::obj(vec![
+        (
+            "entries",
+            Json::arr(b.entries.iter().map(|(g, born)| {
+                Json::obj(vec![("group", group_to_json(g)), ("born_step", Json::num(*born as f64))])
+            })),
+        ),
+        ("staleness_sum", ju64(b.staleness_sum)),
+        ("consumed", ju64(b.consumed)),
+        ("evicted", ju64(b.evicted)),
+    ])
+}
+
+pub fn buffer_state_from_json(j: &Json) -> Result<SamplingBufferState> {
+    let entries = j
+        .get("entries")
+        .and_then(|x| x.as_arr())
+        .context("buffer entries")?
+        .iter()
+        .map(|e| -> Result<(PromptGroup, usize)> {
+            Ok((
+                group_from_json(e.get("group").context("buffer entry group")?)?,
+                e.get("born_step").and_then(|x| x.as_usize()).context("buffer born_step")?,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    Ok(SamplingBufferState {
+        entries,
+        staleness_sum: j.get("staleness_sum").map(pu64).transpose()?.unwrap_or(0),
+        consumed: j.get("consumed").map(pu64).transpose()?.unwrap_or(0),
+        evicted: j.get("evicted").map(pu64).transpose()?.unwrap_or(0),
+    })
+}
+
+pub fn pending_to_json(p: &PendingContinuation) -> Json {
+    Json::obj(vec![
+        ("prompt_idx", Json::num(p.prompt_idx as f64)),
+        ("task", task_to_json(&p.task)),
+        ("screening", Json::arr(p.screening.iter().map(rollout_to_json))),
+        ("born_step", Json::num(p.born_step as f64)),
+        ("n_cont", Json::num(p.n_cont as f64)),
+        ("forecast_var", Json::num(p.forecast_var)),
+    ])
+}
+
+pub fn pending_from_json(j: &Json) -> Result<PendingContinuation> {
+    Ok(PendingContinuation {
+        prompt_idx: j.get("prompt_idx").and_then(|x| x.as_usize()).context("pending prompt_idx")?,
+        task: task_from_json(j.get("task").context("pending task")?)?,
+        screening: j
+            .get("screening")
+            .and_then(|x| x.as_arr())
+            .context("pending screening")?
+            .iter()
+            .map(rollout_from_json)
+            .collect::<Result<_>>()?,
+        born_step: j.get("born_step").and_then(|x| x.as_usize()).context("pending born_step")?,
+        n_cont: j.get("n_cont").and_then(|x| x.as_usize()).context("pending n_cont")?,
+        forecast_var: j.get("forecast_var").and_then(|x| x.as_f64()).unwrap_or(0.0),
+    })
+}
+
+fn loader_state_to_json(l: &LoaderState) -> Json {
+    Json::obj(vec![
+        ("order", Json::arr(l.order.iter().map(|i| Json::num(*i as f64)))),
+        ("cursor", Json::num(l.cursor as f64)),
+        ("epoch", Json::num(l.epoch as f64)),
+        ("rng", rng_state_to_json(l.rng)),
+    ])
+}
+
+fn loader_state_from_json(j: &Json) -> Result<LoaderState> {
+    Ok(LoaderState {
+        order: j.get("order").and_then(|x| x.as_usize_vec()).context("loader order")?,
+        cursor: j.get("cursor").and_then(|x| x.as_usize()).context("loader cursor")?,
+        epoch: j.get("epoch").and_then(|x| x.as_usize()).context("loader epoch")?,
+        rng: rng_state_from_json(j.get("rng").context("loader rng")?)?,
+    })
+}
+
+fn predictor_state_to_json(p: &PredictorState) -> Json {
+    Json::obj(vec![
+        (
+            "entries",
+            Json::arr(p.entries.iter().map(|(key, post)| {
+                Json::arr(vec![ju64(*key), Json::num(post.alpha), Json::num(post.beta)])
+            })),
+        ),
+        (
+            "model",
+            Json::obj(vec![
+                ("w", Json::arr(p.model.w.iter().map(|w| Json::num(*w)))),
+                ("lr", Json::num(p.model.lr)),
+                ("updates", ju64(p.model.updates)),
+            ]),
+        ),
+        ("instances", ju64(p.instances)),
+    ])
+}
+
+fn predictor_state_from_json(j: &Json) -> Result<PredictorState> {
+    let entries = j
+        .get("entries")
+        .and_then(|x| x.as_arr())
+        .context("predictor entries")?
+        .iter()
+        .map(|e| -> Result<(u64, BetaPosterior)> {
+            let triple = e.as_arr().context("predictor entry must be [key, alpha, beta]")?;
+            anyhow::ensure!(triple.len() == 3, "predictor entry must be [key, alpha, beta]");
+            Ok((
+                pu64(&triple[0])?,
+                BetaPosterior {
+                    alpha: triple[1].as_f64().context("entry alpha")?,
+                    beta: triple[2].as_f64().context("entry beta")?,
+                },
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let mj = j.get("model").context("predictor model")?;
+    let w_vec = mj.get("w").and_then(|x| x.as_f64_vec()).context("model weights")?;
+    let mut w = [0.0f64; crate::data::tasks::N_TASK_FEATURES];
+    anyhow::ensure!(
+        w_vec.len() == w.len(),
+        "feature-model weight count {} does not match this binary's {} features — \
+         checkpoint from an incompatible feature layout",
+        w_vec.len(),
+        w.len()
+    );
+    w.copy_from_slice(&w_vec);
+    Ok(PredictorState {
+        entries,
+        model: FeatureModelState {
+            w,
+            lr: mj.get("lr").and_then(|x| x.as_f64()).unwrap_or(0.1),
+            updates: mj.get("updates").map(pu64).transpose()?.unwrap_or(0),
+        },
+        instances: j.get("instances").map(pu64).transpose()?.unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::curriculum::CurriculumKind;
+
+    #[test]
+    fn spec_parse_splits_on_the_last_colon() {
+        // The satellite bugfix: colon-bearing paths parse correctly.
+        let s = CheckpointSpec::parse("runs:2026/ck:warm").unwrap();
+        assert_eq!(s.dir, PathBuf::from("runs:2026/ck"));
+        assert_eq!(s.tag, "warm");
+        let s = CheckpointSpec::parse("ckpts:warm").unwrap();
+        assert_eq!(s.dir, PathBuf::from("ckpts"));
+        assert_eq!(s.tag, "warm");
+        // empty dir/tag and missing colon are loud errors
+        assert!(CheckpointSpec::parse("no-colon").is_err());
+        assert!(CheckpointSpec::parse(":tag").is_err());
+        assert!(CheckpointSpec::parse("dir:").is_err());
+        let err = CheckpointSpec::parse("a/b:").unwrap_err().to_string();
+        assert!(err.contains("empty tag"), "{err}");
+    }
+
+    #[test]
+    fn io_validation_rejects_save_every_without_target() {
+        let mut io = CheckpointIo::default();
+        assert!(io.validate().is_ok());
+        io.save_every = 5;
+        assert!(io.validate().unwrap_err().to_string().contains("--save-every"));
+        io.save = Some(CheckpointSpec::new("ck", "t"));
+        assert!(io.validate().is_ok());
+    }
+
+    #[test]
+    fn fingerprint_accepts_same_config_and_rejects_drift() {
+        let cfg = RunConfig::default();
+        let fp = Fingerprint::of(&cfg);
+        assert!(fp.check_matches(&cfg).is_ok());
+        // stop conditions may change freely on resume
+        let mut more_steps = cfg.clone();
+        more_steps.max_steps = 10 * cfg.max_steps;
+        more_steps.eval_every = 1;
+        assert!(fp.check_matches(&more_steps).is_ok());
+        // ...but state-shaping knobs may not
+        let mut drifted = cfg.clone();
+        drifted.predictor_discount = 0.5;
+        drifted.n_init = cfg.n_init + 1;
+        let err = fp.check_matches(&drifted).unwrap_err().to_string();
+        assert!(err.contains("predictor_discount"), "{err}");
+        assert!(err.contains("n_init"), "{err}");
+        let mut other_curriculum = cfg.clone();
+        other_curriculum.curriculum = CurriculumKind::PredictiveSpeed;
+        assert!(fp.check_matches(&other_curriculum).is_err());
+    }
+
+    #[test]
+    fn u64_and_rng_state_roundtrip_above_2_53() {
+        let big = u64::MAX - 12345;
+        assert_eq!(pu64(&ju64(big)).unwrap(), big);
+        let s = [u64::MAX, 1, 0, 0x9E37_79B9_7F4A_7C15];
+        let back = rng_state_from_json(&rng_state_to_json(s)).unwrap();
+        assert_eq!(back, s);
+        // the round trip survives the actual serializer too
+        let text = rng_state_to_json(s).to_string();
+        assert_eq!(rng_state_from_json(&Json::parse(&text).unwrap()).unwrap(), s);
+    }
+
+    #[test]
+    fn group_roundtrip_is_bit_exact() {
+        let g = PromptGroup {
+            prompt_idx: 7,
+            task: TaskInstance {
+                family: TaskFamily::Count,
+                level: 9,
+                prompt: "#7(17477)=".into(),
+                answer: 3,
+            },
+            rollouts: vec![
+                Rollout {
+                    gen_tokens: vec![3, 1, -2],
+                    gen_logprobs: vec![-0.1, -2.5e-3, f32::MIN_POSITIVE],
+                    reward: 1.0,
+                },
+                Rollout { gen_tokens: vec![], gen_logprobs: vec![], reward: 0.0 },
+            ],
+        };
+        let text = group_to_json(&g).to_string_pretty();
+        let back = group_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.prompt_idx, g.prompt_idx);
+        assert_eq!(back.task, g.task);
+        assert_eq!(back.rollouts.len(), g.rollouts.len());
+        for (a, b) in g.rollouts.iter().zip(&back.rollouts) {
+            assert_eq!(a.gen_tokens, b.gen_tokens);
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+            assert_eq!(
+                a.gen_logprobs.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.gen_logprobs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn run_state_roundtrips_through_disk() {
+        let cfg = RunConfig::default();
+        let state = RunState {
+            fingerprint: Fingerprint::of(&cfg),
+            step: 12,
+            weight_version: 12,
+            inference_s: 123.456789,
+            update_s: 7.0 / 3.0,
+            counters: InferenceCounters {
+                calls: 40,
+                rollouts: 960,
+                cost_s: 0.1 + 0.2, // a value with no short decimal form
+                prompts_screened: 100,
+                prompts_accepted: 60,
+                brier_sum: 1.25,
+                brier_n: 100,
+                ..Default::default()
+            },
+            record: RunRecord { label: "rt".into(), ..Default::default() },
+            loader: Some(LoaderState {
+                order: vec![2, 0, 1],
+                cursor: 1,
+                epoch: 3,
+                rng: [u64::MAX, 2, 3, 4],
+            }),
+            params_token: Some(312),
+            policy: Some(Json::obj(vec![("skill", Json::num(6.125))])),
+            curriculum: None,
+            predictor: Some(PredictorState {
+                entries: vec![(u64::MAX - 7, BetaPosterior { alpha: 1.5, beta: 0.25 })],
+                model: FeatureModelState {
+                    w: [0.125; crate::data::tasks::N_TASK_FEATURES],
+                    lr: 0.1,
+                    updates: 17,
+                },
+                instances: 2,
+            }),
+        };
+        let dir = std::env::temp_dir().join(format!("speedrl-ckpt-test-{}", std::process::id()));
+        state.save(&dir, "t").unwrap();
+        let back = RunState::load(&dir, "t").unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(back.step, 12);
+        assert_eq!(back.weight_version, 12);
+        assert_eq!(back.inference_s.to_bits(), state.inference_s.to_bits());
+        assert_eq!(back.update_s.to_bits(), state.update_s.to_bits());
+        assert_eq!(back.counters.cost_s.to_bits(), state.counters.cost_s.to_bits());
+        assert_eq!(back.counters.rollouts, 960);
+        assert_eq!(back.loader.as_ref().unwrap().rng[0], u64::MAX);
+        assert_eq!(back.params_token, Some(312));
+        let pred = back.predictor.unwrap();
+        assert_eq!(pred.entries[0].0, u64::MAX - 7);
+        assert_eq!(pred.entries[0].1.alpha.to_bits(), 1.5f64.to_bits());
+        assert_eq!(pred.model.updates, 17);
+        assert!(back.fingerprint.check_matches(&cfg).is_ok());
+        assert_eq!(back.policy.unwrap().get("skill").unwrap().as_f64(), Some(6.125));
+    }
+
+    #[test]
+    fn random_predictor_and_counter_states_roundtrip_bitwise() {
+        // The satellite property test: random posterior counts, feature
+        // weights and counters must survive save → load with every bit
+        // intact (the rail's foundation — one rounded f64 would desync a
+        // resumed run's forecasts from the uninterrupted one's).
+        use crate::util::proptest::check;
+        check("checkpoint-roundtrip", 40, |rng| {
+            let n_entries = rng.range_usize(0, 40);
+            let entries: Vec<(u64, BetaPosterior)> = (0..n_entries)
+                .map(|_| {
+                    (
+                        rng.next_u64(),
+                        BetaPosterior {
+                            alpha: 32.0 * rng.f64(),
+                            beta: 32.0 * rng.f64(),
+                        },
+                    )
+                })
+                .collect();
+            let mut w = [0.0f64; crate::data::tasks::N_TASK_FEATURES];
+            for slot in w.iter_mut() {
+                *slot = 4.0 * rng.f64() - 2.0;
+            }
+            let state = PredictorState {
+                entries,
+                model: FeatureModelState { w, lr: rng.f64().max(1e-3), updates: rng.next_u64() },
+                instances: rng.next_u64(),
+            };
+            let counters = InferenceCounters {
+                calls: rng.next_u64() >> 12,
+                rollouts: rng.next_u64() >> 12,
+                cost_s: 1e4 * rng.f64(),
+                busy_s: rng.f64(),
+                brier_sum: rng.f64(),
+                brier_n: rng.next_u64() >> 12,
+                ..Default::default()
+            };
+            let text = Json::obj(vec![
+                ("predictor", predictor_state_to_json(&state)),
+                ("counters", counters.to_json()),
+            ])
+            .to_string_pretty();
+            let j = Json::parse(&text).map_err(|e| format!("reparse: {e}"))?;
+            let back = predictor_state_from_json(j.get("predictor").unwrap())
+                .map_err(|e| format!("{e:#}"))?;
+            crate::prop_assert!(back.entries.len() == state.entries.len(), "entry count");
+            for ((ka, pa), (kb, pb)) in state.entries.iter().zip(&back.entries) {
+                crate::prop_assert!(ka == kb, "key changed");
+                crate::prop_assert!(pa.alpha.to_bits() == pb.alpha.to_bits(), "alpha bits");
+                crate::prop_assert!(pa.beta.to_bits() == pb.beta.to_bits(), "beta bits");
+            }
+            crate::prop_assert!(back.model.updates == state.model.updates, "updates");
+            for (a, b) in state.model.w.iter().zip(&back.model.w) {
+                crate::prop_assert!(a.to_bits() == b.to_bits(), "weight bits");
+            }
+            crate::prop_assert!(back.instances == state.instances, "instances");
+            let cback = InferenceCounters::from_json(j.get("counters").unwrap());
+            crate::prop_assert!(cback.calls == counters.calls, "calls");
+            crate::prop_assert!(cback.rollouts == counters.rollouts, "rollouts");
+            crate::prop_assert!(cback.cost_s.to_bits() == counters.cost_s.to_bits(), "cost_s");
+            crate::prop_assert!(cback.busy_s.to_bits() == counters.busy_s.to_bits(), "busy_s");
+            crate::prop_assert!(
+                cback.brier_sum.to_bits() == counters.brier_sum.to_bits(),
+                "brier_sum"
+            );
+            crate::prop_assert!(cback.brier_n == counters.brier_n, "brier_n");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn run_state_rejects_unknown_format_version() {
+        let j = Json::obj(vec![("format_version", Json::num(99))]);
+        let err = RunState::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("v99"), "{err}");
+    }
+}

@@ -455,6 +455,21 @@ mod tests {
     }
 
     #[test]
+    fn default_config_with_infinite_max_seconds_roundtrips() {
+        // The default run has no time cap (max_seconds = infinity); its
+        // JSON must still parse back — the writer emits the "Infinity"
+        // literal the parser accepts, not Rust's "inf". A resumed run
+        // loads the config file the original run saved, so an
+        // unparseable default would block every resume of an uncapped run.
+        let cfg = RunConfig::default();
+        assert!(cfg.max_seconds.is_infinite());
+        let text = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.max_seconds.is_infinite());
+        assert_eq!(back.curriculum, cfg.curriculum);
+    }
+
+    #[test]
     fn validation_rejects_degenerate_configs() {
         let ok = RunConfig::default();
         assert!(ok.validate().is_ok());

@@ -189,6 +189,44 @@ impl SamplingBuffer {
             self.staleness_sum as f64 / self.consumed as f64
         }
     }
+
+    /// Snapshot the buffered groups and staleness accounting for a
+    /// warm-resume checkpoint (`max_len` is a construction-time capacity
+    /// choice, re-derived from the config on resume, not state).
+    pub fn state(&self) -> SamplingBufferState {
+        SamplingBufferState {
+            entries: self.q.iter().map(|b| (b.group.clone(), b.born_step)).collect(),
+            staleness_sum: self.staleness_sum,
+            consumed: self.consumed,
+            evicted: self.evicted,
+        }
+    }
+
+    /// Restore contents written by [`state`](Self::state). Entries re-enter
+    /// through [`push`](Self::push), so THIS buffer's `max_len` is
+    /// enforced — a checkpoint written with a larger (or unbounded) cap
+    /// resumed under a smaller one evicts oldest-first down to the bound,
+    /// with the evictions counted and logged like any others.
+    pub fn restore(&mut self, state: SamplingBufferState) {
+        self.q.clear();
+        self.staleness_sum = state.staleness_sum;
+        self.consumed = state.consumed;
+        self.evicted = state.evicted;
+        for (group, born_step) in state.entries {
+            self.push(group, born_step);
+        }
+    }
+}
+
+/// Serializable contents of a [`SamplingBuffer`] (warm-resume checkpoints):
+/// the queued groups with their birth steps plus the cumulative staleness
+/// accounting, so `mean_staleness` continues instead of restarting at zero.
+#[derive(Clone, Debug, Default)]
+pub struct SamplingBufferState {
+    pub entries: Vec<(PromptGroup, usize)>,
+    pub staleness_sum: u64,
+    pub consumed: u64,
+    pub evicted: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -457,6 +495,45 @@ mod tests {
         let batch = buf.take_batch(3, 5).unwrap();
         let idxs: Vec<usize> = batch.iter().map(|g| g.prompt_idx).collect();
         assert_eq!(idxs, vec![2, 3, 4]); // 0 and 1 were evicted
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_contents_and_staleness() {
+        let mut buf = SamplingBuffer::new();
+        for i in 0..6 {
+            buf.push(sized_group(i, 4), i);
+        }
+        buf.take_batch(2, 9).unwrap(); // consume some: staleness accrues
+        let mut back = SamplingBuffer::new().with_max_len(32);
+        back.restore(buf.state());
+        assert_eq!(back.len(), buf.len());
+        assert_eq!(back.rollout_rows(), buf.rollout_rows());
+        assert_eq!(back.mean_staleness(), buf.mean_staleness());
+        // FIFO order survives the round trip
+        let a = buf.take_batch(4, 12).unwrap();
+        let b = back.take_batch(4, 12).unwrap();
+        assert_eq!(
+            a.iter().map(|g| g.prompt_idx).collect::<Vec<_>>(),
+            b.iter().map(|g| g.prompt_idx).collect::<Vec<_>>()
+        );
+        assert_eq!(back.mean_staleness(), buf.mean_staleness());
+    }
+
+    #[test]
+    fn restore_enforces_the_restoring_buffers_capacity() {
+        // A checkpoint written unbounded, resumed under a smaller cap:
+        // oldest entries are evicted down to the bound and counted.
+        let mut big = SamplingBuffer::new();
+        for i in 0..6 {
+            big.push(sized_group(i, 2), i);
+        }
+        let mut small = SamplingBuffer::new().with_max_len(4);
+        small.restore(big.state());
+        assert_eq!(small.len(), 4);
+        assert_eq!(small.evicted(), 2);
+        let batch = small.take_batch(4, 6).unwrap();
+        let idxs: Vec<usize> = batch.iter().map(|g| g.prompt_idx).collect();
+        assert_eq!(idxs, vec![2, 3, 4, 5], "oldest entries must be the evicted ones");
     }
 
     #[test]

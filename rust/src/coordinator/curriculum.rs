@@ -32,6 +32,7 @@ use crate::metrics::InferenceCounters;
 use crate::policy::{GenRequest, RolloutEngine};
 use crate::predictor::{Predictor, PredictorConfig};
 use crate::rl::update::PromptGroup;
+use crate::util::json::Json;
 
 /// Strategy selector (CLI / config name).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,6 +137,24 @@ pub trait Curriculum {
     /// Mean steps-in-buffer over groups consumed so far (SPEED only).
     fn mean_staleness(&self) -> f64 {
         0.0
+    }
+
+    /// Resume-critical internal state for a warm-resume checkpoint
+    /// (sampling-buffer contents, pending continuations, exploration RNG).
+    /// `None` = stateless curriculum (Uniform/DAPO/VarianceMax hold
+    /// nothing between batches). Called only between batch collections
+    /// with all observation deltas flushed (the quiesce protocol), never
+    /// mid-call.
+    fn state_json(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore state written by [`state_json`](Curriculum::state_json).
+    /// The checkpoint loader verifies the curriculum kind via the config
+    /// fingerprint before calling this, so a default no-op is safe for
+    /// stateless kinds.
+    fn restore_state_json(&mut self, _state: &Json) -> Result<()> {
+        Ok(())
     }
 }
 
@@ -489,6 +508,37 @@ impl Curriculum for Speed {
 
     fn mean_staleness(&self) -> f64 {
         self.buffer.mean_staleness()
+    }
+
+    fn state_json(&self) -> Option<Json> {
+        // The quiesce protocol guarantees no unflushed observations at
+        // snapshot time: `collect_batch` flushes the allocator delta at the
+        // end of every inference call, so between batches it is empty.
+        debug_assert!(
+            self.alloc_delta.is_empty(),
+            "SPEED snapshot with unflushed allocator observations"
+        );
+        Some(Json::obj(vec![
+            ("buffer", crate::checkpoint::buffer_state_to_json(&self.buffer.state())),
+            (
+                "pending",
+                Json::arr(self.pending.iter().map(crate::checkpoint::pending_to_json)),
+            ),
+        ]))
+    }
+
+    fn restore_state_json(&mut self, state: &Json) -> Result<()> {
+        if let Some(b) = state.get("buffer") {
+            self.buffer.restore(crate::checkpoint::buffer_state_from_json(b)?);
+        }
+        self.pending = state
+            .get("pending")
+            .and_then(|x| x.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(crate::checkpoint::pending_from_json)
+            .collect::<Result<_>>()?;
+        Ok(())
     }
 }
 

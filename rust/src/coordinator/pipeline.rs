@@ -31,7 +31,8 @@ use anyhow::{bail, Result};
 use crate::coordinator::buffer::SharedBuffer;
 use crate::coordinator::curriculum::{CurriculumSpec, StepContext};
 use crate::coordinator::trainer::{
-    evaluate_all, step_alloc_rows, step_rates, target_reached, EvalSet, Trainer, TrainerConfig,
+    evaluate_all, step_alloc_rows, step_rates, target_reached, EvalSet, TrainState, Trainer,
+    TrainerConfig,
 };
 use crate::data::dataset::Dataset;
 use crate::data::loader::{Loader, SharedSource};
@@ -113,6 +114,24 @@ pub struct PipelinedTrainer {
     pub pipeline: PipelineConfig,
 }
 
+/// Restored learner-side progress for a warm-resumed pipelined run (the
+/// counterpart of the serial [`TrainState`]). Worker-internal SPEED
+/// buffers are NOT part of it: a pipelined checkpoint is taken after the
+/// workers quiesced (pool joined, deltas flushed), and their in-flight
+/// prefetch is intentionally dropped — fresh workers refill it. What
+/// persists is the shared knowledge (predictor store, weights) and the
+/// learner's accounting, so step indices and staleness continue.
+#[derive(Debug)]
+pub struct PipelineResume {
+    /// Next learner step to execute (= steps completed so far).
+    pub start_step: usize,
+    pub inference_s: f64,
+    pub update_s: f64,
+    pub counters: InferenceCounters,
+    pub record: RunRecord,
+    pub loader: Loader,
+}
+
 impl PipelinedTrainer {
     pub fn new(config: TrainerConfig, algo: AlgoConfig, pipeline: PipelineConfig) -> Self {
         PipelinedTrainer { config, algo, pipeline }
@@ -126,11 +145,48 @@ impl PipelinedTrainer {
         dataset: &Dataset,
         evals: &[EvalSet],
     ) -> Result<RunRecord> {
+        self.run_resumed(policy, spec, dataset, evals, None).map(|(record, _)| record)
+    }
+
+    /// [`run`](Self::run) continuing from a restored [`PipelineResume`]
+    /// (`None` = a fresh run). Also returns the final prompt-loader state,
+    /// which the checkpoint driver persists so a later resume continues
+    /// the same prompt stream.
+    pub fn run_resumed<P: Policy + ForkEngine>(
+        &self,
+        policy: &mut P,
+        spec: CurriculumSpec,
+        dataset: &Dataset,
+        evals: &[EvalSet],
+        resume: Option<PipelineResume>,
+    ) -> Result<(RunRecord, Loader)> {
         if !self.pipeline.enabled || self.pipeline.workers == 0 {
             // The safety rail: the serial trainer IS the reference path.
+            // Resume is refused here rather than half-supported: a
+            // `PipelineResume` carries no curriculum state (buffered
+            // groups / pending continuations), so restoring through this
+            // fallback would silently drop it — serial resumes go through
+            // the driver's serial path, which restores everything.
+            anyhow::ensure!(
+                resume.is_none(),
+                "cannot resume through the disabled-pipeline fallback; run the serial \
+                 driver path instead (it restores curriculum state)"
+            );
             let mut curriculum = spec.build();
             let trainer = Trainer::new(self.config.clone(), self.algo);
-            return trainer.run(policy, curriculum.as_mut(), dataset, evals);
+            let mut state =
+                TrainState::fresh(dataset.len(), self.config.seed, self.config.label.clone());
+            trainer.run_segment(
+                policy,
+                curriculum.as_mut(),
+                dataset,
+                evals,
+                &mut state,
+                self.config.max_steps,
+            )?;
+            let mut record = state.record;
+            record.counters = state.counters;
+            return Ok((record, state.loader));
         }
 
         let b = self.config.batch_size;
@@ -144,17 +200,30 @@ impl PipelinedTrainer {
         let target_rows = b * spec.rule.n_total();
         let groups_per_batch = target_rows.div_ceil(spec.alloc.min_n_total().max(1)).max(b);
         let shared = Arc::new(SharedBuffer::new(self.pipeline.buffer_cap.max(groups_per_batch)));
-        // Production is capped at what the learner can ever consume, so
+        // Resume: the learner's restored accounting; workers themselves are
+        // always fresh (their prefetch state is not checkpointed — see
+        // `PipelineResume`).
+        let (start_step, init_update_s, init_counters, init_record, init_loader) = match resume {
+            Some(res) => {
+                (res.start_step, res.update_s, res.counters, Some(res.record), Some(res.loader))
+            }
+            None => (0, 0.0, InferenceCounters::default(), None, None),
+        };
+        // Production is capped at what the learner can still consume, so
         // workers wind down instead of burning inference at run end.
-        let demand = (self.config.max_steps as u64).saturating_mul(groups_per_batch as u64);
+        let remaining_steps = self.config.max_steps.saturating_sub(start_step);
+        let demand = (remaining_steps as u64).saturating_mul(groups_per_batch as u64);
         shared.set_demand(demand);
-        let loader = Arc::new(Mutex::new(Loader::new(dataset.len(), self.config.seed)));
+        let loader = Arc::new(Mutex::new(
+            init_loader.unwrap_or_else(|| Loader::new(dataset.len(), self.config.seed)),
+        ));
         let dataset = Arc::new(dataset.clone());
         let counters = Arc::new(AtomicCounters::default());
+        counters.add(&init_counters); // resumed totals keep accumulating
         let weights = Arc::new(WeightStore::new(policy.snapshot()));
         let stop = Arc::new(AtomicBool::new(false));
         // The learner's step clock; workers stamp groups with it (born_step).
-        let clock = Arc::new(AtomicUsize::new(0));
+        let clock = Arc::new(AtomicUsize::new(start_step));
         let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
 
         // With the service on, the ONE real engine (fork stream 0) sits
@@ -200,7 +269,10 @@ impl PipelinedTrainer {
             });
         }
 
-        let mut record = RunRecord { label: self.config.label.clone(), ..Default::default() };
+        let mut record = init_record.unwrap_or_else(|| RunRecord {
+            label: self.config.label.clone(),
+            ..Default::default()
+        });
         let result = self.consume(
             policy,
             &shared,
@@ -212,6 +284,9 @@ impl PipelinedTrainer {
             service.as_ref(),
             target_rows,
             &mut record,
+            start_step,
+            init_update_s,
+            init_counters,
         );
 
         // Shutdown: wake every blocked worker, then join (ThreadPool drop).
@@ -223,7 +298,13 @@ impl PipelinedTrainer {
         drop(pool);
         record.counters = counters.snapshot();
         if let Some(svc) = &service {
-            record.service = Some(svc.stats());
+            // A resumed/segmented record may already carry earlier service
+            // generations' totals: fold them in instead of overwriting.
+            let mut stats = svc.stats();
+            if let Some(prev) = record.service.take() {
+                stats.merge(&prev);
+            }
+            record.service = Some(stats);
         }
         drop(service);
         result?;
@@ -231,7 +312,10 @@ impl PipelinedTrainer {
         if !errs.is_empty() {
             bail!("rollout worker failed: {}", errs.join("; "));
         }
-        Ok(record)
+        // Workers are joined: the loader is quiescent, and its state here
+        // is what a warm resume must continue from.
+        let loader_out = Loader::from_state(&loader.lock().unwrap().state());
+        Ok((record, loader_out))
     }
 
     /// The learner side: pop exactly-`B` batches, update, publish weights.
@@ -248,14 +332,23 @@ impl PipelinedTrainer {
         service: Option<&InferenceService>,
         target_rows: usize,
         record: &mut RunRecord,
+        start_step: usize,
+        init_update_s: f64,
+        init_counters: InferenceCounters,
     ) -> Result<()> {
-        // Step-0 evaluation so every curve starts at the base model.
-        evaluate_all(policy, evals, 0, 0.0, record)?;
-        let mut update_s = 0.0f64;
-        let mut prev_snap = InferenceCounters::default();
+        // Step-0 evaluation so every curve starts at the base model (a
+        // resumed record already carries it).
+        if start_step == 0 && record.evals.is_empty() {
+            evaluate_all(policy, evals, 0, 0.0, record)?;
+        }
+        let mut update_s = init_update_s;
+        // Per-step deltas difference against the restored totals, so the
+        // resumed run's first step reports its own activity, not the whole
+        // history's.
+        let mut prev_snap = init_counters;
         let mut prev_svc = ServiceCounters::default();
 
-        for step in 0..self.config.max_steps {
+        for step in start_step..self.config.max_steps {
             let version = policy.weight_version();
             let Some(batch) = shared.pop_rollouts(target_rows, step, version) else {
                 break; // closed early: a worker failed (caller reports it)

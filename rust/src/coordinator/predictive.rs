@@ -275,4 +275,40 @@ impl Curriculum for PredictiveSpeed {
     fn mean_staleness(&self) -> f64 {
         self.buffer.mean_staleness()
     }
+
+    fn state_json(&self) -> Option<crate::util::json::Json> {
+        use crate::util::json::Json;
+        // Quiesce protocol: `collect_batch` flushes the observation delta
+        // at the end of every inference call, so between batches (the only
+        // legal snapshot point) nothing is pending.
+        debug_assert!(
+            self.delta.is_empty(),
+            "predictive-speed snapshot with unflushed observations"
+        );
+        Some(Json::obj(vec![
+            ("buffer", crate::checkpoint::buffer_state_to_json(&self.buffer.state())),
+            (
+                "pending",
+                Json::arr(self.pending.iter().map(crate::checkpoint::pending_to_json)),
+            ),
+            ("rng", crate::checkpoint::rng_state_to_json(self.rng.state())),
+        ]))
+    }
+
+    fn restore_state_json(&mut self, state: &crate::util::json::Json) -> Result<()> {
+        if let Some(b) = state.get("buffer") {
+            self.buffer.restore(crate::checkpoint::buffer_state_from_json(b)?);
+        }
+        self.pending = state
+            .get("pending")
+            .and_then(|x| x.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(crate::checkpoint::pending_from_json)
+            .collect::<Result<_>>()?;
+        if let Some(rng_state) = state.get("rng") {
+            self.rng = Rng::from_state(crate::checkpoint::rng_state_from_json(rng_state)?);
+        }
+        Ok(())
+    }
 }

@@ -112,6 +112,47 @@ pub(crate) fn target_reached(record: &RunRecord, bench: &str, target: f64) -> bo
         .unwrap_or(false)
 }
 
+/// Mutable progress of a serial training run, factored out of
+/// [`Trainer::run`] so the checkpoint driver can run in *segments* (run K
+/// steps → snapshot everything → run K more). Segmenting is also exactly
+/// the resume path — a resumed run is a segment whose state was restored
+/// from disk — so periodic saving and warm resume share one code path, and
+/// the sim-substrate equivalence rail (segmented ≡ uninterrupted, bit for
+/// bit) covers both.
+#[derive(Debug)]
+pub struct TrainState {
+    pub loader: Loader,
+    pub counters: InferenceCounters,
+    /// Next step to execute (= steps completed so far).
+    pub next_step: usize,
+    pub inference_s: f64,
+    pub update_s: f64,
+    pub record: RunRecord,
+    /// A stop condition fired (target reached / `max_seconds`): later
+    /// segments must not run.
+    pub stopped: bool,
+}
+
+impl TrainState {
+    /// The step-0 state of a fresh run.
+    pub fn fresh(dataset_len: usize, seed: u64, label: String) -> TrainState {
+        TrainState {
+            loader: Loader::new(dataset_len, seed),
+            counters: InferenceCounters::default(),
+            next_step: 0,
+            inference_s: 0.0,
+            update_s: 0.0,
+            record: RunRecord { label, ..Default::default() },
+            stopped: false,
+        }
+    }
+
+    /// Cumulative training time so far (the paper's axis).
+    pub fn time_s(&self) -> f64 {
+        self.inference_s + self.update_s
+    }
+}
+
 pub struct Trainer {
     pub config: TrainerConfig,
     pub algo: AlgoConfig,
@@ -130,31 +171,49 @@ impl Trainer {
         dataset: &Dataset,
         evals: &[EvalSet],
     ) -> Result<RunRecord> {
-        let mut loader = Loader::new(dataset.len(), self.config.seed);
-        let mut counters = InferenceCounters::default();
-        let mut record = RunRecord { label: self.config.label.clone(), ..Default::default() };
-        let mut inference_s = 0.0f64;
-        let mut update_s = 0.0f64;
+        let mut state =
+            TrainState::fresh(dataset.len(), self.config.seed, self.config.label.clone());
+        self.run_segment(policy, curriculum, dataset, evals, &mut state, self.config.max_steps)?;
+        let mut record = state.record;
+        record.counters = state.counters;
+        Ok(record)
+    }
 
+    /// Run steps `state.next_step .. min(until_step, max_steps)`, mutating
+    /// `state` in place. Performs the step-0 evaluation only when starting
+    /// a genuinely fresh run (a resumed record already contains it). Sets
+    /// `state.stopped` when a stop condition fires.
+    pub fn run_segment(
+        &self,
+        policy: &mut dyn Policy,
+        curriculum: &mut dyn Curriculum,
+        dataset: &Dataset,
+        evals: &[EvalSet],
+        state: &mut TrainState,
+        until_step: usize,
+    ) -> Result<()> {
         // Step-0 evaluation so every curve starts at the base model.
-        evaluate_all(policy, evals, 0, 0.0, &mut record)?;
-
-        for step in 0..self.config.max_steps {
+        if state.next_step == 0 && state.record.evals.is_empty() {
+            evaluate_all(policy, evals, 0, 0.0, &mut state.record)?;
+        }
+        let last = until_step.min(self.config.max_steps);
+        while !state.stopped && state.next_step < last {
+            let step = state.next_step;
             // ---- collect one batch via the curriculum (inference phase) ----
-            let counters_before = counters;
-            let inf_before = counters.cost_s;
+            let counters_before = state.counters;
+            let inf_before = state.counters.cost_s;
             let groups = {
-                let mut source = DatasetSource { loader: &mut loader, dataset };
+                let mut source = DatasetSource { loader: &mut state.loader, dataset };
                 let mut ctx = StepContext {
                     engine: policy.as_engine(),
                     prompts: &mut source,
                     train_step: step,
                     temperature: self.config.temperature,
-                    counters: &mut counters,
+                    counters: &mut state.counters,
                 };
                 curriculum.collect_batch(&mut ctx, self.config.batch_size)?
             };
-            inference_s += counters.cost_s - inf_before;
+            state.inference_s += state.counters.cost_s - inf_before;
 
             // ---- algorithm-level group filter (DAPO keeps it on too when
             // run through Uniform; harmless for SPEED since screening
@@ -174,25 +233,27 @@ impl Trainer {
             let mut algo = self.algo;
             algo.lr = self.algo.lr_at(step);
             let tr = policy.train(&groups, &algo)?;
-            update_s += tr.cost_s;
+            state.update_s += tr.cost_s;
+            state.next_step = step + 1;
 
-            let time_s = inference_s + update_s;
-            let (step_skip_rate, step_explore_rate) = step_rates(&counters_before, &counters);
-            record.steps.push(StepRecord {
+            let time_s = state.inference_s + state.update_s;
+            let (step_skip_rate, step_explore_rate) =
+                step_rates(&counters_before, &state.counters);
+            state.record.steps.push(StepRecord {
                 step,
                 time_s,
-                inference_s,
-                update_s,
+                inference_s: state.inference_s,
+                update_s: state.update_s,
                 train_pass_rate,
                 grad_norm: tr.grad_norm,
                 loss: tr.loss,
                 clip_frac: tr.clip_frac,
-                prompts_consumed: loader.consumed(),
+                prompts_consumed: state.loader.consumed(),
                 buffer_len: curriculum.buffered(),
                 mean_staleness: curriculum.mean_staleness(),
-                prompts_skipped: counters.prompts_skipped,
-                rollouts_saved: counters.rollouts_saved,
-                predictor_brier: counters.predictor_brier(),
+                prompts_skipped: state.counters.prompts_skipped,
+                rollouts_saved: state.counters.rollouts_saved,
+                predictor_brier: state.counters.predictor_brier(),
                 step_skip_rate,
                 step_explore_rate,
                 // The serial loop has no service in scope; a serviced
@@ -200,16 +261,16 @@ impl Trainer {
                 service_calls: 0,
                 service_fill: 0.0,
                 service_queue_wait_s: 0.0,
-                rollouts: counters.rollouts,
-                step_alloc_rows: step_alloc_rows(&counters_before, &counters),
-                alloc_calibration: counters.alloc_calibration(),
+                rollouts: state.counters.rollouts,
+                step_alloc_rows: step_alloc_rows(&counters_before, &state.counters),
+                alloc_calibration: state.counters.alloc_calibration(),
             });
 
             // ---- periodic evaluation (excluded from training time) ----
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
-                evaluate_all(policy, evals, step + 1, time_s, &mut record)?;
+                evaluate_all(policy, evals, step + 1, time_s, &mut state.record)?;
                 if let Some((bench, target)) = &self.config.stop_at_target {
-                    if target_reached(&record, bench, *target) {
+                    if target_reached(&state.record, bench, *target) {
                         crate::info!(
                             "trainer",
                             "{}: target {target} on {bench} reached at step {} ({:.1}s)",
@@ -217,16 +278,15 @@ impl Trainer {
                             step + 1,
                             time_s
                         );
-                        break;
+                        state.stopped = true;
                     }
                 }
             }
             if time_s >= self.config.max_seconds {
-                break;
+                state.stopped = true;
             }
         }
-        record.counters = counters;
-        Ok(record)
+        Ok(())
     }
 }
 

@@ -53,6 +53,11 @@ impl TaskFamily {
         }
     }
 
+    /// Inverse of [`index`](Self::index), for checkpoint deserialization.
+    pub fn from_index(i: usize) -> Option<TaskFamily> {
+        ALL_FAMILIES.get(i).copied()
+    }
+
     /// Stable position in [`ALL_FAMILIES`] (the one-hot feature index).
     pub fn index(&self) -> usize {
         match self {

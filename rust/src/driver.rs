@@ -7,19 +7,21 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::checkpoint::{CheckpointIo, CheckpointSpec, Fingerprint, RunState};
 use crate::config::{RunConfig, Substrate};
 use crate::coordinator::alloc::{AllocKind, Allocator};
 use crate::coordinator::curriculum::{Curriculum, CurriculumKind, CurriculumSpec};
-use crate::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
+use crate::coordinator::pipeline::{PipelineConfig, PipelineResume, PipelinedTrainer};
 use crate::coordinator::screening::ScreeningRule;
-use crate::coordinator::trainer::{EvalSet, Trainer, TrainerConfig};
+use crate::coordinator::trainer::{EvalSet, TrainState, Trainer, TrainerConfig};
 use crate::data::dataset::Dataset;
+use crate::data::loader::Loader;
 use crate::eval::benchmark_suite;
 use crate::metrics::RunRecord;
 use crate::policy::real::RealPolicy;
 use crate::policy::service::{InferenceService, ServiceConfig, ServicedPolicy};
 use crate::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
-use crate::policy::{ForkEngine, Policy, RolloutEngine};
+use crate::policy::{ForkEngine, Policy, RolloutEngine, Trainable};
 use crate::predictor::{Predictor, PredictorConfig};
 use crate::rl::algo::AlgoConfig;
 
@@ -152,21 +154,35 @@ pub fn trainer_config(cfg: &RunConfig) -> TrainerConfig {
 /// overlapping inference with updates); otherwise the serial reference
 /// trainer.
 pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
+    run_sim_with(cfg, &CheckpointIo::default())
+}
+
+/// [`run_sim`] with run-state checkpointing: `io.resume` warm-starts from
+/// a saved checkpoint (weights + curriculum knowledge + run progress),
+/// `io.save` writes one at the end of the run and — with `io.save_every` —
+/// periodically during it. Periodic saving runs the trainer in segments,
+/// which the sim-substrate equivalence rail guarantees is bit-for-bit
+/// identical to an uninterrupted run (`rust/tests/checkpoint_sim.rs`).
+pub fn run_sim_with(cfg: &RunConfig, io: &CheckpointIo) -> Result<RunRecord> {
     anyhow::ensure!(cfg.substrate == Substrate::Sim, "config is not a sim run");
     cfg.validate()?;
+    io.validate()?;
     let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, MAX_PROMPT_CHARS);
     let mut policy = build_sim_policy(cfg)?;
     let evals = benchmark_suite(BENCH_SEED, MAX_PROMPT_CHARS);
     if cfg.pipeline {
         check_capacity(cfg, policy.rollout_capacity())?;
-        let trainer =
-            PipelinedTrainer::new(trainer_config(cfg), build_algo(cfg), pipeline_config(cfg));
-        return trainer.run(&mut policy, curriculum_spec(cfg), &dataset, &evals);
+        return run_pipelined_sim(cfg, &mut policy, &dataset, &evals, io);
     }
     if cfg.service {
         // Serial loop delegated through the coalescing service with one
         // producer — DESIGN.md §8's equivalence rail: this must reproduce
         // the plain serial RunRecord bit for bit (rust/tests/service_sim.rs).
+        anyhow::ensure!(
+            io.is_noop(),
+            "run-state checkpointing is not wired through the serial --service path; \
+             drop --service (the serial run is bit-for-bit identical) or use --pipeline"
+        );
         check_capacity(cfg, policy.rollout_capacity())?;
         let service = InferenceService::spawn(
             policy.fork_engine(0),
@@ -185,7 +201,263 @@ pub fn run_sim(cfg: &RunConfig) -> Result<RunRecord> {
         record.service = Some(service.stats());
         return Ok(record);
     }
-    run_with_policy(cfg, &mut policy, &dataset, &evals)
+    run_with_policy_io(cfg, &mut policy, &dataset, &evals, io)
+}
+
+/// Restore shared (substrate + predictor) state from a checkpoint; returns
+/// the progress pieces the caller threads into its trainer.
+fn load_resume_state(
+    cfg: &RunConfig,
+    spec: &CheckpointSpec,
+    cspec: &CurriculumSpec,
+    policy: &mut dyn Policy,
+    dataset_len: usize,
+) -> Result<(RunState, Loader)> {
+    let rs = RunState::load(&spec.dir, &spec.tag)?;
+    rs.fingerprint.check_matches(cfg).with_context(|| format!("resume from {spec}"))?;
+    policy
+        .load_params(&spec.dir, &spec.tag)
+        .with_context(|| format!("load checkpoint weights from {spec}"))?;
+    // Cross-file generation check: the weights on disk must be the ones
+    // this sidecar was saved with — a crash between the weight writes and
+    // the sidecar write leaves two generations mixed, and resuming that
+    // would silently re-train finished steps on newer weights.
+    if let (Some(want), Some(have)) = (rs.params_token, policy.params_token()) {
+        anyhow::ensure!(
+            want == have,
+            "checkpoint {spec} is torn: weight files are generation {have} but the run-state \
+             sidecar was saved with generation {want} (crash mid-save?) — restore from an \
+             older tag"
+        );
+    }
+    if let Some(pj) = &rs.policy {
+        policy.restore_state_json(pj).context("restore substrate state")?;
+    }
+    if let Some(pred_state) = &rs.predictor {
+        let pred = cspec.predictor.as_ref().with_context(|| {
+            format!(
+                "checkpoint {spec} carries difficulty-predictor state but this run builds \
+                 no predictor — fingerprint drift?"
+            )
+        })?;
+        pred.restore(pred_state);
+    }
+    let loader = rs
+        .loader
+        .as_ref()
+        .map(Loader::from_state)
+        .unwrap_or_else(|| Loader::new(dataset_len, cfg.seed));
+    crate::info!(
+        "checkpoint",
+        "resumed from {spec}: step {}, {} tracked identities",
+        rs.step,
+        rs.predictor.as_ref().map(|p| p.entries.len()).unwrap_or(0)
+    );
+    Ok((rs, loader))
+}
+
+/// Snapshot the full run state (quiesced: between steps, no workers
+/// running, deltas flushed) and write weights + sidecar — the ONE
+/// checkpoint-assembly site, shared by the serial and pipelined runners so
+/// a new `RunState` field cannot be persisted on one path and silently
+/// dropped on the other. Weights go first, sidecar last, both via
+/// temp-file + rename, so a crash at any point leaves a loadable
+/// checkpoint on disk.
+#[allow(clippy::too_many_arguments)]
+fn save_run_state(
+    cfg: &RunConfig,
+    policy: &dyn Policy,
+    curriculum_state: Option<crate::util::json::Json>,
+    spec: &CurriculumSpec,
+    step: usize,
+    inference_s: f64,
+    update_s: f64,
+    counters: crate::metrics::InferenceCounters,
+    record: &RunRecord,
+    loader_state: crate::data::loader::LoaderState,
+    save: &CheckpointSpec,
+) -> Result<()> {
+    policy.save_params(&save.dir, &save.tag)?;
+    let mut record = record.clone();
+    record.counters = counters;
+    let rs = RunState {
+        fingerprint: Fingerprint::of(cfg),
+        step,
+        weight_version: policy.weight_version(),
+        inference_s,
+        update_s,
+        counters,
+        record,
+        loader: Some(loader_state),
+        params_token: policy.params_token(),
+        policy: policy.state_json(),
+        curriculum: curriculum_state,
+        predictor: spec.predictor.as_ref().map(|p| p.snapshot()),
+    };
+    rs.save(&save.dir, &save.tag)?;
+    crate::info!("checkpoint", "run state saved to {save} at step {step}");
+    Ok(())
+}
+
+/// The serial segmented runner shared by the sim and real substrates: run
+/// until the next save point, snapshot, repeat. With no `io.save` this is
+/// one segment — exactly the plain serial run.
+fn run_serial_segments(
+    cfg: &RunConfig,
+    policy: &mut dyn Policy,
+    dataset: &Dataset,
+    evals: &[EvalSet],
+    io: &CheckpointIo,
+) -> Result<RunRecord> {
+    let spec = curriculum_spec(cfg);
+    let mut curriculum = spec.build();
+    let trainer = Trainer::new(trainer_config(cfg), build_algo(cfg));
+    let mut state = TrainState::fresh(dataset.len(), cfg.seed, cfg.label.clone());
+    if let Some(resume) = &io.resume {
+        let (rs, loader) = load_resume_state(cfg, resume, &spec, policy, dataset.len())?;
+        if let Some(cj) = &rs.curriculum {
+            curriculum.restore_state_json(cj).context("restore curriculum state")?;
+        }
+        state = TrainState {
+            loader,
+            counters: rs.counters,
+            next_step: rs.step,
+            inference_s: rs.inference_s,
+            update_s: rs.update_s,
+            record: rs.record,
+            stopped: false,
+        };
+    }
+    loop {
+        let until = if io.save.is_some() && io.save_every > 0 {
+            (state.next_step + io.save_every).min(cfg.max_steps)
+        } else {
+            cfg.max_steps
+        };
+        trainer.run_segment(policy, curriculum.as_mut(), dataset, evals, &mut state, until)?;
+        if let Some(save) = &io.save {
+            save_run_state(
+                cfg,
+                &*policy,
+                curriculum.state_json(),
+                &spec,
+                state.next_step,
+                state.inference_s,
+                state.update_s,
+                state.counters,
+                &state.record,
+                state.loader.state(),
+                save,
+            )?;
+        }
+        if state.stopped || state.next_step >= cfg.max_steps {
+            break;
+        }
+    }
+    let mut record = state.record;
+    record.counters = state.counters;
+    Ok(record)
+}
+
+/// The pipelined segmented runner. Each segment spawns rollout workers,
+/// runs the learner to the next save point, then quiesces (pool joined,
+/// observation deltas flushed — they are flushed per inference call, so a
+/// joined worker has none pending) before the snapshot: no torn state.
+/// Worker-internal prefetch (their SPEED buffers / pending continuations)
+/// is deliberately dropped at each quiesce — fresh workers refill it — so
+/// a pipelined checkpoint persists the *shared* knowledge (predictor
+/// store, weights, loader position, learner accounting), not the racy
+/// in-flight groups; pipelined runs are scheduling-nondeterministic
+/// anyway, the serial path carries the bit-exact rail.
+fn run_pipelined_sim(
+    cfg: &RunConfig,
+    policy: &mut SimPolicy,
+    dataset: &Dataset,
+    evals: &[EvalSet],
+    io: &CheckpointIo,
+) -> Result<RunRecord> {
+    let spec = curriculum_spec(cfg);
+    let mut resume: Option<PipelineResume> = None;
+    if let Some(r) = &io.resume {
+        let (rs, loader) = load_resume_state(cfg, r, &spec, policy, dataset.len())?;
+        if rs.curriculum.is_some() {
+            // A serial checkpoint carries buffered groups / pending
+            // continuations; pipelined workers build fresh curricula, so
+            // that prefetch (already paid for in the counters) is dropped.
+            // Loud, because the rollout accounting will look inflated.
+            crate::warn_log!(
+                "checkpoint",
+                "resuming a serial checkpoint into the pipelined coordinator: its buffered \
+                 groups and pending continuations are dropped (fresh workers refill the \
+                 prefetch); resume without --pipeline to keep them"
+            );
+        }
+        resume = Some(PipelineResume {
+            start_step: rs.step,
+            inference_s: rs.inference_s,
+            update_s: rs.update_s,
+            counters: rs.counters,
+            record: rs.record,
+            loader,
+        });
+    }
+    loop {
+        let start = resume.as_ref().map(|r| r.start_step).unwrap_or(0);
+        let until = if io.save.is_some() && io.save_every > 0 {
+            (start + io.save_every).min(cfg.max_steps)
+        } else {
+            cfg.max_steps
+        };
+        let mut segment_cfg = trainer_config(cfg);
+        segment_cfg.max_steps = until;
+        let trainer = PipelinedTrainer::new(segment_cfg, build_algo(cfg), pipeline_config(cfg));
+        let (record, loader) =
+            trainer.run_resumed(policy, spec.clone(), dataset, evals, resume.take())?;
+        let next_step = record.steps.last().map(|s| s.step + 1).unwrap_or(start);
+        let update_s = record.steps.last().map(|s| s.update_s).unwrap_or(0.0);
+        if let Some(save) = &io.save {
+            // Quiesced here: run_resumed joined its worker pool. No
+            // curriculum state: worker prefetch is not checkpointed.
+            save_run_state(
+                cfg,
+                &*policy,
+                None,
+                &spec,
+                next_step,
+                record.counters.cost_s,
+                update_s,
+                record.counters,
+                &record,
+                loader.state(),
+                save,
+            )?;
+        }
+        // Done when finished, stopped mid-segment, or a stop condition
+        // fired — the explicit checks mirror the learner's own break
+        // conditions (time cap, target reached), which are invisible in
+        // `next_step` when they land exactly on a save boundary (a fresh
+        // segment would otherwise train past the stop).
+        let time_capped =
+            record.steps.last().map(|s| s.time_s >= cfg.max_seconds).unwrap_or(false);
+        let target_hit = trainer
+            .config
+            .stop_at_target
+            .as_ref()
+            .is_some_and(|(bench, target)| {
+                crate::coordinator::trainer::target_reached(&record, bench, *target)
+            });
+        if next_step >= cfg.max_steps || next_step < until || time_capped || target_hit {
+            return Ok(record);
+        }
+        resume = Some(PipelineResume {
+            start_step: next_step,
+            inference_s: record.counters.cost_s,
+            update_s,
+            counters: record.counters,
+            record,
+            loader,
+        });
+    }
 }
 
 /// The compiled (or simulated) inference call must fit a full group — the
@@ -220,7 +492,21 @@ pub fn run_with_policy(
     dataset: &Dataset,
     evals: &[EvalSet],
 ) -> Result<RunRecord> {
+    run_with_policy_io(cfg, policy, dataset, evals, &CheckpointIo::default())
+}
+
+/// [`run_with_policy`] with run-state checkpointing (resume / periodic
+/// save) — the real substrate's `train --resume/--save/--save-every` path;
+/// `run_sim_with` routes its serial runs through here too.
+pub fn run_with_policy_io(
+    cfg: &RunConfig,
+    policy: &mut dyn Policy,
+    dataset: &Dataset,
+    evals: &[EvalSet],
+    io: &CheckpointIo,
+) -> Result<RunRecord> {
     cfg.validate()?;
+    io.validate()?;
     check_capacity(cfg, policy.rollout_capacity())?;
     if cfg.pipeline || cfg.service {
         // Only `run_sim` has a forkable engine; everything else (the real
@@ -234,9 +520,7 @@ pub fn run_with_policy(
             cfg.workers
         );
     }
-    let mut curriculum = build_curriculum(cfg);
-    let trainer = Trainer::new(trainer_config(cfg), build_algo(cfg));
-    trainer.run(policy, curriculum.as_mut(), dataset, evals)
+    run_serial_segments(cfg, policy, dataset, evals, io)
 }
 
 /// Table-1 accuracy targets per benchmark for each sim model scale,

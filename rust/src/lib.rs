@@ -30,6 +30,11 @@
 //!                     feature model, consulted by the `predictive-speed`
 //!                     curriculum to skip screening before any rollout is
 //!                     spent.
+//! * [`checkpoint`]  — warm-resume run-state checkpoints: the predictor's
+//!                     accumulated difficulty knowledge, run progress, and
+//!                     substrate/curriculum internals persisted in a
+//!                     sidecar next to the `ParamStore` buffers, behind a
+//!                     config fingerprint (DESIGN.md §10).
 //! * [`policy`]      — the two-trait policy layer: `RolloutEngine`
 //!                     (generate + evaluate) and `Trainable` (update +
 //!                     weight versioning), implemented by the PJRT
@@ -45,6 +50,7 @@
 //! * [`bench`]       — in-tree benchmark harness (no criterion offline).
 
 pub mod bench;
+pub mod checkpoint;
 pub mod config;
 pub mod driver;
 pub mod coordinator;

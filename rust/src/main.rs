@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use speed_rl::checkpoint::{CheckpointIo, CheckpointSpec};
 use speed_rl::config::{RunConfig, Substrate};
 use speed_rl::coordinator::curriculum::CurriculumKind;
 use speed_rl::data::dataset::{Dataset, DatasetKind};
@@ -147,6 +148,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("config", None, "JSON RunConfig file (overrides preset)")
         .opt("model", Some("sim-7b"), "sim-1.5b | sim-7b")
         .opt("dataset", Some("dapo17k"), "numina | dapo17k | deepscale")
+        .opt("dataset-size", None, "training prompts to generate (default: dataset-derived)")
         .opt(
             "curriculum",
             Some("speed"),
@@ -189,6 +191,13 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             None,
             "service: fraction of engine capacity that dispatches a call immediately",
         )
+        .opt(
+            "save",
+            None,
+            "write a run-state checkpoint to dir:tag (final, and periodic with --save-every)",
+        )
+        .opt("save-every", None, "checkpoint cadence in steps (0 = final save only; needs --save)")
+        .opt("resume", None, "warm-resume from a run-state checkpoint dir:tag")
         .flag("pipeline", "overlap inference with updates (producer/consumer)")
         .flag("service", "coalesce all rollout requests through one shared inference service")
         .flag(
@@ -219,6 +228,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         c
     };
     cfg.substrate = Substrate::Sim;
+    if let Some(v) = args.get("dataset-size") {
+        cfg.dataset_size = v.parse::<usize>().context("--dataset-size")?;
+    }
     cfg.n_init = args.usize("n-init")?;
     cfg.n_cont = args.usize("n-cont")?;
     cfg.batch_size = args.usize("batch-size")?;
@@ -268,10 +280,26 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     if let Some(h) = args.get("max-hours") {
         cfg.max_seconds = h.parse::<f64>().context("--max-hours")? * 3600.0;
     }
+    let io = checkpoint_io(&args)?;
 
-    let record = driver::run_sim(&cfg)?;
+    let record = driver::run_sim_with(&cfg, &io)?;
     print_summary(&record, &cfg.model);
     write_record(args.get("out"), &record)
+}
+
+/// The `--resume` / `--save` / `--save-every` triple shared by `simulate`
+/// and `train`.
+fn checkpoint_io(args: &speed_rl::util::cli::Args) -> Result<CheckpointIo> {
+    let io = CheckpointIo {
+        resume: args.get("resume").map(CheckpointSpec::parse).transpose()?,
+        save: args.get("save").map(CheckpointSpec::parse).transpose()?,
+        save_every: match args.get("save-every") {
+            Some(v) => v.parse::<usize>().context("--save-every")?,
+            None => 0,
+        },
+    };
+    io.validate()?;
+    Ok(io)
 }
 
 fn artifacts_arg(args: &speed_rl::util::cli::Args) -> PathBuf {
@@ -314,7 +342,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("lr", Some("3e-4"), "learning rate")
         .opt("steps", Some("50"), "max training steps")
         .opt("eval-every", Some("10"), "evaluation cadence")
-        .opt("save", None, "save checkpoint to dir:tag after training");
+        .opt("save", None, "write a run-state checkpoint (weights + curriculum state) to dir:tag")
+        .opt("save-every", None, "checkpoint cadence in steps (0 = final save only; needs --save)")
+        .opt("resume", None, "warm-resume from a run-state checkpoint dir:tag");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
 
@@ -354,20 +384,18 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let dir = artifacts_arg(&args);
     let mut policy = RealPolicy::load(&dir, cfg.seed)?;
     if let Some(spec) = args.get("checkpoint") {
-        let (d, tag) = spec.split_once(':').context("--checkpoint wants dir:tag")?;
-        policy.store.load(Path::new(d), tag)?;
-        info!("main", "loaded checkpoint {spec}");
+        // Weights-only warm start (e.g. the SFT "base model"); full
+        // run-state resume is --resume.
+        let ck = CheckpointSpec::parse(spec).context("--checkpoint")?;
+        policy.store.load(&ck.dir, &ck.tag)?;
+        info!("main", "loaded checkpoint weights from {ck}");
     }
+    let io = checkpoint_io(&args)?;
     let max_chars = policy.runtime.manifest.plan.prompt_len.min(20);
     let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, max_chars);
     let evals = benchmark_suite(driver::BENCH_SEED, max_chars);
-    let record = driver::run_with_policy(&cfg, &mut policy, &dataset, &evals)?;
+    let record = driver::run_with_policy_io(&cfg, &mut policy, &dataset, &evals, &io)?;
     print_summary(&record, "real");
-    if let Some(spec) = args.get("save") {
-        let (d, tag) = spec.split_once(':').context("--save wants dir:tag")?;
-        policy.store.save(Path::new(d), tag)?;
-        info!("main", "checkpoint saved to {spec}");
-    }
     write_record(args.get("out"), &record)
 }
 
@@ -400,10 +428,9 @@ fn cmd_sft(argv: &[String]) -> Result<()> {
             info!("sft", "step {step}: loss {loss:.4}");
         }
     }
-    let spec = args.get("save").unwrap();
-    let (d, tag) = spec.split_once(':').context("--save wants dir:tag")?;
-    policy.store.save(Path::new(d), tag)?;
-    info!("main", "warm checkpoint saved to {spec}");
+    let ck = CheckpointSpec::parse(args.get("save").unwrap()).context("--save")?;
+    policy.store.save(&ck.dir, &ck.tag)?;
+    info!("main", "warm checkpoint saved to {ck}");
     Ok(())
 }
 
@@ -417,8 +444,8 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let dir = artifacts_arg(&args);
     let mut policy = RealPolicy::load(&dir, args.u64("seed")?)?;
     if let Some(spec) = args.get("checkpoint") {
-        let (d, tag) = spec.split_once(':').context("--checkpoint wants dir:tag")?;
-        policy.store.load(Path::new(d), tag)?;
+        let ck = CheckpointSpec::parse(spec).context("--checkpoint")?;
+        policy.store.load(&ck.dir, &ck.tag)?;
     }
     let max_chars = policy.runtime.manifest.plan.prompt_len.min(20);
     for set in benchmark_suite(driver::BENCH_SEED, max_chars) {

@@ -154,6 +154,76 @@ impl InferenceCounters {
         }
     }
 
+    /// Full raw-field serialization (run records and warm-resume
+    /// checkpoints). Derived ratios are NOT stored — they are recomputed —
+    /// so a parsed counter set keeps producing consistent ratios as more
+    /// evidence accumulates on top of it after a resume.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("calls", Json::num(self.calls as f64)),
+            ("rows_used", Json::num(self.rows_used as f64)),
+            ("rows_capacity", Json::num(self.rows_capacity as f64)),
+            ("cost_s", Json::num(self.cost_s)),
+            ("prompts_screened", Json::num(self.prompts_screened as f64)),
+            ("prompts_accepted", Json::num(self.prompts_accepted as f64)),
+            ("rollouts", Json::num(self.rollouts as f64)),
+            ("busy_s", Json::num(self.busy_s)),
+            ("prompts_skipped", Json::num(self.prompts_skipped as f64)),
+            ("prompts_explored", Json::num(self.prompts_explored as f64)),
+            ("rollouts_saved", Json::num(self.rollouts_saved as f64)),
+            ("pred_tp", Json::num(self.pred_tp as f64)),
+            ("pred_fp", Json::num(self.pred_fp as f64)),
+            ("pred_tn", Json::num(self.pred_tn as f64)),
+            ("pred_fn", Json::num(self.pred_fn as f64)),
+            ("brier_sum", Json::num(self.brier_sum)),
+            ("brier_n", Json::num(self.brier_n as f64)),
+            ("prompts_allocated", Json::num(self.prompts_allocated as f64)),
+            ("cont_rows_allocated", Json::num(self.cont_rows_allocated as f64)),
+            ("alloc_hist", Json::arr(self.alloc_hist.iter().map(|c| Json::num(*c as f64)))),
+            ("alloc_calib_sum", Json::num(self.alloc_calib_sum)),
+            ("alloc_calib_n", Json::num(self.alloc_calib_n as f64)),
+        ])
+    }
+
+    /// Parse counters written by [`to_json`](Self::to_json). Every field
+    /// defaults to zero so records from earlier formats (which stored only
+    /// a subset, or only derived ratios) parse instead of erroring.
+    pub fn from_json(j: &Json) -> InferenceCounters {
+        let f = |k: &str| j.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+        let u = |k: &str| f(k) as u64;
+        let mut alloc_hist = [0u64; 6];
+        if let Some(arr) = j.get("alloc_hist").and_then(|x| x.as_arr()) {
+            for (slot, v) in alloc_hist.iter_mut().zip(arr) {
+                *slot = v.as_f64().unwrap_or(0.0) as u64;
+            }
+        }
+        InferenceCounters {
+            calls: u("calls"),
+            rows_used: u("rows_used"),
+            rows_capacity: u("rows_capacity"),
+            // Older records named the field "inference_cost_s".
+            cost_s: if j.get("cost_s").is_some() { f("cost_s") } else { f("inference_cost_s") },
+            prompts_screened: u("prompts_screened"),
+            prompts_accepted: u("prompts_accepted"),
+            rollouts: u("rollouts"),
+            busy_s: f("busy_s"),
+            prompts_skipped: u("prompts_skipped"),
+            prompts_explored: u("prompts_explored"),
+            rollouts_saved: u("rollouts_saved"),
+            pred_tp: u("pred_tp"),
+            pred_fp: u("pred_fp"),
+            pred_tn: u("pred_tn"),
+            pred_fn: u("pred_fn"),
+            brier_sum: f("brier_sum"),
+            brier_n: u("brier_n"),
+            prompts_allocated: u("prompts_allocated"),
+            cont_rows_allocated: u("cont_rows_allocated"),
+            alloc_hist,
+            alloc_calib_sum: f("alloc_calib_sum"),
+            alloc_calib_n: u("alloc_calib_n"),
+        }
+    }
+
     /// Accumulate another counter set (per-worker totals -> run totals).
     pub fn merge(&mut self, o: &InferenceCounters) {
         self.calls += o.calls;
@@ -357,6 +427,29 @@ impl ServiceCounters {
             0.0
         } else {
             self.submissions as f64 / self.calls as f64
+        }
+    }
+
+    /// Fold an earlier service generation's totals in (a resumed or
+    /// save-segmented pipelined run spawns a fresh `InferenceService` per
+    /// segment; without merging, the final record would report only the
+    /// last segment's service activity). `self` is the newer generation:
+    /// its EWMA gap — a latest-value gauge, not a total — wins.
+    pub fn merge(&mut self, earlier: &ServiceCounters) {
+        self.calls += earlier.calls;
+        self.submissions += earlier.submissions;
+        self.rows_used += earlier.rows_used;
+        self.rows_capacity += earlier.rows_capacity;
+        self.max_call_rows = self.max_call_rows.max(earlier.max_call_rows);
+        self.queue_wait_s += earlier.queue_wait_s;
+        self.installs += earlier.installs;
+        self.deadline_dispatches += earlier.deadline_dispatches;
+        self.split_calls += earlier.split_calls;
+        if self.ewma_gap_s == 0.0 {
+            self.ewma_gap_s = earlier.ewma_gap_s;
+        }
+        for (slot, v) in self.coalesced_hist.iter_mut().zip(earlier.coalesced_hist) {
+            *slot += v;
         }
     }
 
@@ -571,37 +664,29 @@ impl RunRecord {
     }
 
     pub fn to_json(&self) -> Json {
+        // The counters block is the full raw-field serialization plus the
+        // derived ratios (kept for human readers and for older tooling
+        // that charted them; parsers recompute ratios from the raw
+        // fields). "inference_cost_s" is the pre-checkpoint name of
+        // `cost_s`, kept so old readers keep working.
+        let counters = {
+            let Json::Obj(mut m) = self.counters.to_json() else { unreachable!() };
+            m.insert("inference_cost_s".into(), Json::num(self.counters.cost_s));
+            m.insert("predictor_brier".into(), Json::num(self.counters.predictor_brier()));
+            m.insert(
+                "predictor_precision".into(),
+                Json::num(self.counters.predictor_precision()),
+            );
+            m.insert("predictor_recall".into(), Json::num(self.counters.predictor_recall()));
+            m.insert("mean_cont_alloc".into(), Json::num(self.counters.mean_cont_alloc()));
+            m.insert("alloc_calibration".into(), Json::num(self.counters.alloc_calibration()));
+            Json::Obj(m)
+        };
         let mut fields = vec![
             ("label", Json::str(self.label.clone())),
             ("steps", Json::arr(self.steps.iter().map(|s| s.to_json()))),
             ("evals", Json::arr(self.evals.iter().map(|e| e.to_json()))),
-            (
-                "counters",
-                Json::obj(vec![
-                    ("calls", Json::num(self.counters.calls as f64)),
-                    ("rows_used", Json::num(self.counters.rows_used as f64)),
-                    ("rows_capacity", Json::num(self.counters.rows_capacity as f64)),
-                    ("inference_cost_s", Json::num(self.counters.cost_s)),
-                    ("prompts_screened", Json::num(self.counters.prompts_screened as f64)),
-                    ("prompts_accepted", Json::num(self.counters.prompts_accepted as f64)),
-                    ("rollouts", Json::num(self.counters.rollouts as f64)),
-                    ("busy_s", Json::num(self.counters.busy_s)),
-                    ("prompts_skipped", Json::num(self.counters.prompts_skipped as f64)),
-                    ("prompts_explored", Json::num(self.counters.prompts_explored as f64)),
-                    ("rollouts_saved", Json::num(self.counters.rollouts_saved as f64)),
-                    ("predictor_brier", Json::num(self.counters.predictor_brier())),
-                    ("predictor_precision", Json::num(self.counters.predictor_precision())),
-                    ("predictor_recall", Json::num(self.counters.predictor_recall())),
-                    ("prompts_allocated", Json::num(self.counters.prompts_allocated as f64)),
-                    ("cont_rows_allocated", Json::num(self.counters.cont_rows_allocated as f64)),
-                    ("mean_cont_alloc", Json::num(self.counters.mean_cont_alloc())),
-                    ("alloc_calibration", Json::num(self.counters.alloc_calibration())),
-                    (
-                        "alloc_hist",
-                        Json::arr(self.counters.alloc_hist.iter().map(|c| Json::num(*c as f64))),
-                    ),
-                ]),
-            ),
+            ("counters", counters),
         ];
         if let Some(service) = &self.service {
             fields.push(("service", service.to_json()));
@@ -703,6 +788,99 @@ mod tests {
         assert_eq!(empty.mean_fill(), 0.0);
         assert_eq!(empty.mean_queue_wait_s(), 0.0);
         assert_eq!(empty.mean_coalesced(), 0.0);
+    }
+
+    #[test]
+    fn service_counters_merge_sums_totals_and_keeps_latest_gauge() {
+        let earlier = ServiceCounters {
+            calls: 4,
+            submissions: 10,
+            rows_used: 300,
+            rows_capacity: 400,
+            max_call_rows: 96,
+            queue_wait_s: 0.5,
+            installs: 2,
+            deadline_dispatches: 1,
+            split_calls: 1,
+            ewma_gap_s: 0.004,
+            coalesced_hist: [1, 0, 1, 2, 0, 0],
+        };
+        let mut newer = ServiceCounters {
+            calls: 2,
+            submissions: 3,
+            rows_used: 100,
+            rows_capacity: 150,
+            max_call_rows: 80,
+            queue_wait_s: 0.25,
+            ewma_gap_s: 0.002,
+            coalesced_hist: [1, 1, 0, 0, 0, 0],
+            ..Default::default()
+        };
+        newer.merge(&earlier);
+        assert_eq!(newer.calls, 6);
+        assert_eq!(newer.submissions, 13);
+        assert_eq!(newer.rows_used, 400);
+        assert_eq!(newer.rows_capacity, 550);
+        assert_eq!(newer.max_call_rows, 96);
+        assert!((newer.queue_wait_s - 0.75).abs() < 1e-12);
+        assert_eq!(newer.installs, 2);
+        assert_eq!(newer.split_calls, 1);
+        assert_eq!(newer.coalesced_hist, [2, 1, 1, 2, 0, 0]);
+        // latest-value gauge: the newer generation's EWMA wins...
+        assert!((newer.ewma_gap_s - 0.002).abs() < 1e-12);
+        // ...unless it never observed a gap
+        let mut idle = ServiceCounters::default();
+        idle.merge(&earlier);
+        assert!((idle.ewma_gap_s - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_json_roundtrip_preserves_every_raw_field() {
+        let c = InferenceCounters {
+            calls: 3,
+            rows_used: 10,
+            rows_capacity: 20,
+            cost_s: 0.1 + 0.2, // no short decimal form: exercises exact f64 round-trip
+            prompts_screened: 9,
+            prompts_accepted: 4,
+            rollouts: 100,
+            busy_s: 1.5,
+            prompts_skipped: 2,
+            prompts_explored: 1,
+            rollouts_saved: 16,
+            pred_tp: 1,
+            pred_fp: 2,
+            pred_tn: 3,
+            pred_fn: 4,
+            brier_sum: 0.375,
+            brier_n: 9,
+            prompts_allocated: 4,
+            cont_rows_allocated: 60,
+            alloc_hist: [0, 1, 2, 1, 0, 0],
+            alloc_calib_sum: 0.5,
+            alloc_calib_n: 2,
+        };
+        let text = c.to_json().to_string();
+        let back = InferenceCounters::from_json(&crate::util::json::Json::parse(&text).unwrap());
+        let mut merged = back;
+        merged.merge(&InferenceCounters::default());
+        assert_eq!(merged.calls, c.calls);
+        assert_eq!(merged.cost_s.to_bits(), c.cost_s.to_bits());
+        assert_eq!(merged.busy_s.to_bits(), c.busy_s.to_bits());
+        assert_eq!(merged.brier_sum.to_bits(), c.brier_sum.to_bits());
+        assert_eq!(merged.pred_tp, 1);
+        assert_eq!(merged.pred_fn, 4);
+        assert_eq!(merged.alloc_hist, c.alloc_hist);
+        assert_eq!(merged.alloc_calib_n, 2);
+        assert_eq!(merged.prompts_explored, 1);
+        // legacy records spelled cost_s "inference_cost_s"
+        let legacy = crate::util::json::Json::obj(vec![
+            ("calls", Json::num(2)),
+            ("inference_cost_s", Json::num(3.5)),
+        ]);
+        let parsed = InferenceCounters::from_json(&legacy);
+        assert_eq!(parsed.calls, 2);
+        assert_eq!(parsed.cost_s, 3.5);
     }
 
     #[test]

@@ -141,12 +141,22 @@ fn interp(curve: &[(f64, f64)], t: f64) -> f64 {
 }
 
 /// Parse a run record back from the JSON written by `RunRecord::to_json`.
+///
+/// Robust to format age: every step/counter field absent from the record
+/// defaults explicitly (pre-PR-3 records lack `step_skip_rate`/service
+/// deltas, pre-PR-4 records lack `step_alloc_rows`/`alloc_calibration`/
+/// `rollouts`, and only post-checkpoint records carry raw counter fields),
+/// so `speed-rl report` keeps working on old logs — including logs a
+/// resumed run appends to, which can mix generations in one directory.
 pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
-    use crate::metrics::EvalRecord;
+    use crate::metrics::{EvalRecord, InferenceCounters};
     let mut rec = RunRecord {
         label: j.get("label").and_then(|x| x.as_str()).unwrap_or("run").to_string(),
         ..Default::default()
     };
+    if let Some(c) = j.get("counters") {
+        rec.counters = InferenceCounters::from_json(c);
+    }
     if let Some(steps) = j.get("steps").and_then(|x| x.as_arr()) {
         for s in steps {
             let f = |k: &str| s.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
@@ -290,6 +300,59 @@ mod tests {
         assert_eq!(svc.calls, 4);
         assert_eq!(svc.submissions, 9);
         assert!((svc.mean_fill() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_pre_pr3_records_with_explicit_defaults() {
+        // A fixture in the PR-2-era format: steps lack every post-PR-3/4
+        // field (per-step rates, service deltas, alloc telemetry), the
+        // counters block stores only the old subset + derived ratios, and
+        // there is no service block at all. The parser must fill explicit
+        // defaults, not error — `speed-rl report` runs on old logs that a
+        // resumed run appends new-format records next to.
+        let fixture = r#"{
+            "label": "pre-pr3",
+            "steps": [
+                {"step": 0, "time_s": 80.5, "inference_s": 55.0, "update_s": 25.5,
+                 "train_pass_rate": 0.5, "grad_norm": 0.4, "loss": -0.5, "clip_frac": 0.0,
+                 "prompts_consumed": 32, "buffer_len": 3, "mean_staleness": 0.25,
+                 "prompts_skipped": 4, "rollouts_saved": 32, "predictor_brier": 0.12}
+            ],
+            "evals": [
+                {"step": 0, "time_s": 0, "benchmark": "dapo1k", "accuracy": 0.37}
+            ],
+            "counters": {
+                "calls": 10, "rows_used": 300, "rows_capacity": 384,
+                "inference_cost_s": 55.0, "prompts_screened": 64,
+                "prompts_accepted": 30, "rollouts": 752,
+                "predictor_brier": 0.12, "predictor_precision": 0.9
+            }
+        }"#;
+        let rec = record_from_json(&Json::parse(fixture).unwrap()).unwrap();
+        assert_eq!(rec.label, "pre-pr3");
+        assert_eq!(rec.steps.len(), 1);
+        let s = &rec.steps[0];
+        // present fields survive
+        assert_eq!(s.prompts_skipped, 4);
+        assert!((s.mean_staleness - 0.25).abs() < 1e-12);
+        // absent post-PR-3/PR-4 fields get explicit defaults
+        assert_eq!(s.step_skip_rate, 0.0);
+        assert_eq!(s.service_calls, 0);
+        assert_eq!(s.rollouts, 0);
+        assert_eq!(s.step_alloc_rows, 0);
+        assert_eq!(s.alloc_calibration, 0.0);
+        // the old counters subset parses (including the legacy cost name);
+        // raw predictor fields absent from old records default to zero and
+        // the derived ratios are recomputed, not trusted
+        assert_eq!(rec.counters.calls, 10);
+        assert_eq!(rec.counters.rollouts, 752);
+        assert_eq!(rec.counters.cost_s, 55.0);
+        assert_eq!(rec.counters.brier_n, 0);
+        assert_eq!(rec.counters.predictor_brier(), 0.0);
+        // no service block: None, and the accuracy chart still renders
+        assert!(rec.service.is_none());
+        let chart = ascii_chart(&[&rec], "dapo1k", 30, 8);
+        assert!(chart.contains("pre-pr3"));
     }
 
     #[test]

@@ -126,6 +126,45 @@ pub trait Trainable {
 
     /// Export the current weights for handoff to rollout engines.
     fn snapshot(&self) -> WeightSnapshot;
+
+    /// Substrate-internal state for a warm-resume checkpoint sidecar
+    /// (`None` = nothing beyond what [`save_params`](Self::save_params)
+    /// persists). The simulator stores its skill + RNG stream here — the
+    /// piece that makes the resume-equivalence rail bit-exact.
+    fn state_json(&self) -> Option<crate::util::json::Json> {
+        None
+    }
+
+    /// Restore state written by [`state_json`](Self::state_json). The
+    /// default accepts silently so stateless substrates (and test mocks)
+    /// resume on weights alone.
+    fn restore_state_json(&mut self, _state: &crate::util::json::Json) -> Result<()> {
+        Ok(())
+    }
+
+    /// Persist raw weight/optimizer buffers next to the run-state sidecar
+    /// (`ParamStore::save` for the real substrate). Substrates whose whole
+    /// state fits the sidecar (the simulator) need nothing here.
+    fn save_params(&self, _dir: &std::path::Path, _tag: &str) -> Result<()> {
+        Ok(())
+    }
+
+    /// Load buffers written by [`save_params`](Self::save_params).
+    fn load_params(&mut self, _dir: &std::path::Path, _tag: &str) -> Result<()> {
+        Ok(())
+    }
+
+    /// A value that changes with every weight update and is persisted by
+    /// [`save_params`](Self::save_params) (the real substrate's optimizer
+    /// step). The sidecar records it at save time and the resume loader
+    /// compares it against the loaded weights, so a crash landing between
+    /// the weight files and the sidecar (two save generations on disk)
+    /// fails loudly instead of resuming torn. `None` = the substrate has
+    /// no separate weight files (the sim; its whole state is in the
+    /// sidecar, which is written atomically).
+    fn params_token(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// The combined coordinator-facing interface, implemented automatically

@@ -265,4 +265,45 @@ impl Trainable for RealPolicy {
     fn snapshot(&self) -> WeightSnapshot {
         WeightSnapshot { version: self.version, values: Vec::new() }
     }
+
+    /// Weights/optimizer state live in the [`ParamStore`] raw buffers (see
+    /// [`save_params`](Self::save_params)); the sidecar only carries what
+    /// those files cannot: the RL weight version, the sampling-RNG stream,
+    /// and the SFT step count.
+    fn state_json(&self) -> Option<crate::util::json::Json> {
+        use crate::util::json::Json;
+        Some(Json::obj(vec![
+            ("version", crate::checkpoint::ju64(self.version)),
+            ("rng", crate::checkpoint::rng_state_to_json(self.rng.state())),
+            ("sft_steps", Json::num(self.sft_steps as f64)),
+        ]))
+    }
+
+    fn restore_state_json(&mut self, state: &crate::util::json::Json) -> Result<()> {
+        self.version = state
+            .get("version")
+            .map(crate::checkpoint::pu64)
+            .transpose()?
+            .unwrap_or(0);
+        if let Some(rng_state) = state.get("rng") {
+            self.rng = Rng::from_state(crate::checkpoint::rng_state_from_json(rng_state)?);
+        }
+        self.sft_steps = state.get("sft_steps").and_then(|x| x.as_usize()).unwrap_or(0);
+        Ok(())
+    }
+
+    fn save_params(&self, dir: &std::path::Path, tag: &str) -> Result<()> {
+        self.store.save(dir, tag)
+    }
+
+    fn load_params(&mut self, dir: &std::path::Path, tag: &str) -> Result<()> {
+        self.store.load(dir, tag)
+    }
+
+    /// The optimizer step is persisted in the `ParamStore` meta and bumps
+    /// with every update — the cross-file generation token that ties a
+    /// sidecar to the weight files saved with it.
+    fn params_token(&self) -> Option<u64> {
+        Some(self.store.step as u64)
+    }
 }

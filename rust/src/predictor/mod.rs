@@ -37,7 +37,7 @@ pub mod model;
 pub mod posterior;
 pub mod store;
 
-pub use model::FeatureModel;
+pub use model::{FeatureModel, FeatureModelState};
 pub use posterior::{beta_binomial_pmf, predicted_acceptance, BetaPosterior};
 pub use store::{DifficultyStore, ObservationDelta};
 
@@ -226,6 +226,43 @@ impl Predictor {
     pub fn tracked(&self) -> usize {
         self.store.len()
     }
+
+    /// Snapshot the predictor's accumulated knowledge for a warm-resume
+    /// checkpoint: per-identity discounted Beta counts (key-sorted, so the
+    /// sidecar is byte-stable), the feature model's logistic weights, and
+    /// the instance counter (so resumed curriculum instances continue the
+    /// exploration-stream sequence instead of replaying stream 0).
+    ///
+    /// Callers quiesce first: rollout workers joined and every pending
+    /// [`ObservationDelta`] flushed — a snapshot taken mid-merge would
+    /// tear the store.
+    pub fn snapshot(&self) -> PredictorState {
+        PredictorState {
+            entries: self.store.snapshot(),
+            model: self.model.lock().unwrap().snapshot(),
+            instances: self.instances.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Restore knowledge written by [`snapshot`](Self::snapshot). The
+    /// predictor's own config (discount, skip confidence, band) is NOT in
+    /// the state — the checkpoint loader verifies the config fingerprint
+    /// and rejects a mismatched resume before calling this.
+    pub fn restore(&self, state: &PredictorState) {
+        self.store.restore(&state.entries);
+        self.model.lock().unwrap().restore(&state.model);
+        self.instances.store(state.instances, Ordering::Relaxed);
+    }
+}
+
+/// Serializable knowledge of a [`Predictor`] (see [`Predictor::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct PredictorState {
+    /// Key-sorted per-identity discounted Beta counts.
+    pub entries: Vec<(u64, BetaPosterior)>,
+    pub model: FeatureModelState,
+    /// Exploration-stream instance counter.
+    pub instances: u64,
 }
 
 #[cfg(test)]
@@ -393,6 +430,34 @@ mod tests {
             assert!((a.accept_prob - b.accept_prob).abs() < 1e-12, "forecast diverged");
             assert_eq!(a.would_skip, b.would_skip);
         }
+    }
+
+    #[test]
+    fn snapshot_restore_reproduces_forecasts_bit_for_bit() {
+        let sim = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 3);
+        let data = Dataset::training(DatasetKind::SynthDapo17k, 150, 21, 20);
+        let predictor = Predictor::new(rule(), PredictorConfig::default());
+        let mut rng = Rng::new(5);
+        for t in &data.instances {
+            let p = sim.pass_prob(t);
+            let rewards: Vec<f32> = (0..8).map(|_| if rng.bool(p) { 1.0 } else { 0.0 }).collect();
+            predictor.observe_screening(t, &rewards);
+        }
+        let _ = predictor.instance_seed(); // advance the instance counter
+        let state = predictor.snapshot();
+
+        let fresh = Predictor::new(rule(), PredictorConfig::default());
+        fresh.restore(&state);
+        assert_eq!(fresh.tracked(), predictor.tracked());
+        for t in &data.instances {
+            let a = predictor.predict(t);
+            let b = fresh.predict(t);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "posterior mean diverged");
+            assert_eq!(a.accept_prob.to_bits(), b.accept_prob.to_bits());
+            assert_eq!(a.would_skip, b.would_skip);
+        }
+        // instance streams continue the sequence instead of replaying
+        assert_eq!(fresh.instance_seed(), predictor.instance_seed());
     }
 
     #[test]

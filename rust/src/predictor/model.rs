@@ -26,6 +26,14 @@ pub struct FeatureModel {
     updates: u64,
 }
 
+/// Serializable weights of a [`FeatureModel`] (warm-resume checkpoints).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureModelState {
+    pub w: [f64; N_TASK_FEATURES],
+    pub lr: f64,
+    pub updates: u64,
+}
+
 impl Default for FeatureModel {
     fn default() -> Self {
         FeatureModel::new(0.1)
@@ -62,6 +70,18 @@ impl FeatureModel {
     pub fn updates(&self) -> u64 {
         self.updates
     }
+
+    /// Snapshot for a warm-resume checkpoint.
+    pub fn snapshot(&self) -> FeatureModelState {
+        FeatureModelState { w: self.w, lr: self.lr, updates: self.updates }
+    }
+
+    /// Restore weights written by [`snapshot`](Self::snapshot).
+    pub fn restore(&mut self, state: &FeatureModelState) {
+        self.w = state.w;
+        self.lr = state.lr;
+        self.updates = state.updates;
+    }
 }
 
 #[cfg(test)]
@@ -76,6 +96,25 @@ mod tests {
         let mut rng = Rng::new(0);
         let t = generate(&mut rng, TaskFamily::Add, 5, 20);
         assert!((m.predict(&t) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_restore_reproduces_predictions_bit_for_bit() {
+        let mut m = FeatureModel::default();
+        let mut rng = Rng::new(31);
+        for _ in 0..200 {
+            let t = generate(&mut rng, TaskFamily::Mul, 7, 20);
+            m.update(&t, 0.1);
+        }
+        let mut back = FeatureModel::new(0.5); // different lr, overwritten
+        back.restore(&m.snapshot());
+        assert_eq!(back.updates(), m.updates());
+        let t = generate(&mut rng, TaskFamily::Add, 2, 20);
+        assert_eq!(m.predict(&t).to_bits(), back.predict(&t).to_bits());
+        // further training stays in lockstep (lr restored too)
+        m.update(&t, 0.9);
+        back.update(&t, 0.9);
+        assert_eq!(m.predict(&t).to_bits(), back.predict(&t).to_bits());
     }
 
     #[test]

@@ -22,23 +22,39 @@ use std::sync::Mutex;
 
 use crate::predictor::posterior::BetaPosterior;
 
-/// Worker-local batch of pending observations: per key, the rewards in
-/// observation order (the discounted fold is order-dependent per key, so
-/// concatenation must preserve it — folding `r1 ++ r2` equals folding `r1`
-/// then `r2`, which is what makes deferred merging exact).
+/// Worker-local batch of pending observations, kept in
+/// observation-sequence order. The discounted fold is order-dependent per
+/// key, so the runs for one key must be applied in the order they were
+/// pushed — folding `r1 ++ r2` equals folding `r1` then `r2`, which is
+/// what makes deferred merging exact. The former hash-map representation
+/// preserved per-key order but applied *keys* in hash-iteration order,
+/// which made merge traversal (and with it checkpoint/debug dumps of a
+/// merge) nondeterministic across processes; a sequence of runs keeps the
+/// whole delta in one deterministic order.
 #[derive(Debug, Default)]
 pub struct ObservationDelta {
-    entries: HashMap<u64, Vec<f32>>,
+    /// `(key, rewards)` runs in push order; a key pushed twice holds two
+    /// runs whose relative order is its observation order.
+    entries: Vec<(u64, Vec<f32>)>,
 }
 
 impl ObservationDelta {
     pub fn push(&mut self, key: u64, rewards: &[f32]) {
-        self.entries.entry(key).or_default().extend_from_slice(rewards);
+        // Coalesce into the previous run when it is the same key (the
+        // common screening-then-continuation pattern); order is preserved
+        // either way.
+        if let Some((last_key, last)) = self.entries.last_mut() {
+            if *last_key == key {
+                last.extend_from_slice(rewards);
+                return;
+            }
+        }
+        self.entries.push((key, rewards.to_vec()));
     }
 
     /// Pending reward observations (rollouts, not keys).
     pub fn len(&self) -> usize {
-        self.entries.values().map(|v| v.len()).sum()
+        self.entries.iter().map(|(_, v)| v.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -87,13 +103,20 @@ impl DifficultyStore {
     /// most once (vs once per observed group for [`observe`]); the delta is
     /// drained so the caller's buffer is ready for the next accumulation.
     ///
+    /// Runs are applied in observation-sequence order: the delta's push
+    /// order is preserved when bucketing by shard (a stable partition), so
+    /// each key's discounted fold sees its rewards exactly as they were
+    /// observed and the traversal is deterministic — keys never interact
+    /// across shards, so per-shard sequence order is global sequence order
+    /// for every posterior.
+    ///
     /// [`observe`]: DifficultyStore::observe
     pub fn merge(&self, delta: &mut ObservationDelta, discount: f64) {
         if delta.entries.is_empty() {
             return;
         }
         let mut by_shard: Vec<Vec<(u64, Vec<f32>)>> = (0..N_SHARDS).map(|_| Vec::new()).collect();
-        for (key, rewards) in delta.entries.drain() {
+        for (key, rewards) in delta.entries.drain(..) {
             by_shard[(key % N_SHARDS as u64) as usize].push((key, rewards));
         }
         for (i, bucket) in by_shard.into_iter().enumerate() {
@@ -104,6 +127,31 @@ impl DifficultyStore {
             for (key, rewards) in bucket {
                 shard.entry(key).or_default().observe(&rewards, discount);
             }
+        }
+    }
+
+    /// Deterministic (key-sorted) dump of every identity's discounted
+    /// counts — the store half of a warm-resume checkpoint. Sorting makes
+    /// the serialized sidecar byte-stable across runs and hash seeds.
+    pub fn snapshot(&self) -> Vec<(u64, BetaPosterior)> {
+        let mut out: Vec<(u64, BetaPosterior)> = Vec::new();
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            out.extend(guard.iter().map(|(k, p)| (*k, *p)));
+        }
+        out.sort_unstable_by_key(|(k, _)| *k);
+        out
+    }
+
+    /// Replace the store's contents with a [`snapshot`](Self::snapshot)
+    /// (the resume path). Callers quiesce writers first — restoring under
+    /// concurrent observes would interleave old and new evidence.
+    pub fn restore(&self, entries: &[(u64, BetaPosterior)]) {
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
+        for (key, post) in entries {
+            self.shard(*key).lock().unwrap().insert(*key, *post);
         }
     }
 
@@ -185,6 +233,49 @@ mod tests {
         // merging an empty delta is a no-op
         batched.merge(&mut ObservationDelta::default(), discount);
         assert_eq!(batched.len(), 3);
+    }
+
+    #[test]
+    fn merge_applies_runs_in_observation_sequence_order() {
+        // Two runs for the same key in one delta must fold in push order —
+        // the discounted fold makes [1,1,0] then [0,0] differ from the
+        // reverse — and the traversal must not depend on any hash order.
+        let store = DifficultyStore::new();
+        let mut delta = ObservationDelta::default();
+        delta.push(5, &[1.0, 1.0, 0.0]);
+        delta.push(5 + N_SHARDS as u64, &[1.0]); // interleaved other key
+        delta.push(5, &[0.0, 0.0]);
+        store.merge(&mut delta, 0.8);
+        let mut want = BetaPosterior::default();
+        want.observe(&[1.0, 1.0, 0.0, 0.0, 0.0], 0.8);
+        let got = store.counts(5).unwrap();
+        assert!((got.alpha - want.alpha).abs() < 1e-12);
+        assert!((got.beta - want.beta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_restore_roundtrips() {
+        let store = DifficultyStore::new();
+        for key in [901u64, 7, 7 + N_SHARDS as u64, 3] {
+            store.observe(key, &[1.0, 0.0, 1.0], 0.9);
+        }
+        let snap = store.snapshot();
+        let keys: Vec<u64> = snap.iter().map(|(k, _)| *k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "snapshot iteration order must be deterministic");
+        assert_eq!(snap.len(), 4);
+
+        let fresh = DifficultyStore::new();
+        fresh.observe(999, &[0.0], 1.0); // stale content must be cleared
+        fresh.restore(&snap);
+        assert_eq!(fresh.len(), store.len());
+        assert!(fresh.counts(999).is_none());
+        for (key, post) in &snap {
+            let got = fresh.counts(*key).unwrap();
+            assert_eq!(got.alpha.to_bits(), post.alpha.to_bits(), "key {key}");
+            assert_eq!(got.beta.to_bits(), post.beta.to_bits(), "key {key}");
+        }
     }
 
     #[test]

@@ -33,6 +33,18 @@ fn zeros_like(specs: &[(String, Vec<usize>)]) -> Result<Vec<xla::Literal>> {
         .collect()
 }
 
+/// FNV-1a over a byte buffer — the cheap content fingerprint the
+/// checkpoint meta records per group so a mixed-generation (torn) set of
+/// files is detected at load.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
 impl ParamStore {
     /// Load initial parameters from the raw f32 file `aot.py` exported.
     pub fn from_init_file(manifest: &Manifest) -> Result<ParamStore> {
@@ -119,10 +131,20 @@ impl ParamStore {
         Ok(it.collect())
     }
 
-    /// Save a checkpoint: raw f32 params (+ optimizer state) and JSON meta.
+    /// Save a checkpoint: raw f32 params (+ optimizer state) and versioned
+    /// JSON meta. Warm-resume run state (difficulty posteriors, feature
+    /// model, run progress) lives in a sidecar next to these files — see
+    /// `crate::checkpoint::RunState`.
     pub fn save(&self, dir: &Path, tag: &str) -> Result<()> {
         std::fs::create_dir_all(dir)?;
-        let write_group = |name: &str, lits: &[xla::Literal]| -> Result<()> {
+        // Temp-file + rename per file: periodic saves reuse one tag, and
+        // an in-place rewrite would clobber the only good checkpoint if
+        // the process died mid-write. The meta goes LAST and carries each
+        // group's checksum, so a crash between group renames (a
+        // mixed-generation set on disk) is detected at load instead of
+        // silently training on torn state.
+        let mut checksums = Vec::new();
+        let mut write_group = |name: &'static str, lits: &[xla::Literal]| -> Result<()> {
             let mut bytes = Vec::new();
             for lit in lits {
                 let t = Tensor::from_literal(lit)?;
@@ -130,25 +152,48 @@ impl ParamStore {
                     bytes.extend_from_slice(&x.to_le_bytes());
                 }
             }
-            std::fs::write(dir.join(format!("{tag}.{name}.bin")), bytes)?;
-            Ok(())
+            checksums.push((name, crate::checkpoint::ju64(fnv1a(&bytes))));
+            crate::checkpoint::atomic_write(&dir.join(format!("{tag}.{name}.bin")), &bytes)
         };
         write_group("params", &self.params)?;
         write_group("adam_m", &self.m)?;
         write_group("adam_v", &self.v)?;
+        let numel: usize = self.specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
         let meta = Json::obj(vec![
+            ("format_version", Json::num(1.0)),
             ("tag", Json::str(tag)),
             ("step", Json::num(self.step as f64)),
             ("num_tensors", Json::num(self.n() as f64)),
+            ("numel", Json::num(numel as f64)),
+            ("checksums", Json::obj(checksums)),
         ]);
-        std::fs::write(dir.join(format!("{tag}.meta.json")), meta.to_string_pretty())?;
-        Ok(())
+        crate::checkpoint::atomic_write(
+            &dir.join(format!("{tag}.meta.json")),
+            meta.to_string_pretty().as_bytes(),
+        )
     }
 
     /// Load a checkpoint previously written by [`ParamStore::save`].
+    ///
+    /// Sizes are validated up front: a truncated or wrong-model group file
+    /// is a loud error naming file and byte counts, not a slice panic
+    /// halfway through deserialization (the bug any resume work trips on
+    /// first).
     pub fn load(&mut self, dir: &Path, tag: &str) -> Result<()> {
-        let read_group = |name: &str| -> Result<Vec<xla::Literal>> {
-            let bytes = std::fs::read(dir.join(format!("{tag}.{name}.bin")))?;
+        let expect: usize = self.specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let read_group = |name: &str| -> Result<(Vec<xla::Literal>, u64)> {
+            let path = dir.join(format!("{tag}.{name}.bin"));
+            let bytes =
+                std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            anyhow::ensure!(
+                bytes.len() == expect * 4,
+                "checkpoint group {} is {} bytes, expected {} ({} f32s) — truncated file or \
+                 checkpoint from a different model shape",
+                path.display(),
+                bytes.len(),
+                expect * 4,
+                expect
+            );
             let mut lits = Vec::with_capacity(self.specs.len());
             let mut offset = 0usize;
             for (_, shape) in &self.specs {
@@ -160,13 +205,50 @@ impl ParamStore {
                 offset += n * 4;
                 lits.push(Tensor::f32(shape.clone(), data).to_literal()?);
             }
-            anyhow::ensure!(offset == bytes.len(), "checkpoint group {name} size mismatch");
-            Ok(lits)
+            Ok((lits, fnv1a(&bytes)))
         };
-        self.params = read_group("params")?;
-        self.m = read_group("adam_m")?;
-        self.v = read_group("adam_v")?;
+        let (params, h_params) = read_group("params")?;
+        let (m, h_m) = read_group("adam_m")?;
+        let (v, h_v) = read_group("adam_v")?;
         let meta = Json::parse_file(&dir.join(format!("{tag}.meta.json")))?;
+        // Cross-file consistency: each group must hash to what the meta
+        // (written last) recorded — a crash between group renames leaves a
+        // mixed-generation set that must fail here, not train silently.
+        // Absent checksums = pre-versioning checkpoint, accepted as-is.
+        if let Some(sums) = meta.get("checksums") {
+            for (name, have) in [("params", h_params), ("adam_m", h_m), ("adam_v", h_v)] {
+                if let Some(want) = sums.get(name) {
+                    let want = crate::checkpoint::pu64(want)
+                        .with_context(|| format!("checkpoint {tag} meta checksum {name}"))?;
+                    anyhow::ensure!(
+                        want == have,
+                        "checkpoint {tag} group {name} does not match its meta checksum — \
+                         torn checkpoint (crash mid-save?); restore from an older tag"
+                    );
+                }
+            }
+        }
+        // Absent = pre-versioning checkpoints (still layout-compatible);
+        // anything other than v1 is a loud incompatibility.
+        if let Some(v) = meta.get("format_version").and_then(|x| x.as_usize()) {
+            anyhow::ensure!(
+                v == 1,
+                "param checkpoint {tag} has format v{v}; this binary reads v1 — \
+                 checkpoint from an incompatible version"
+            );
+        }
+        if let Some(n) = meta.get("num_tensors").and_then(|x| x.as_usize()) {
+            anyhow::ensure!(
+                n == self.n(),
+                "checkpoint {tag} holds {n} tensors, this model has {} — wrong artifacts?",
+                self.n()
+            );
+        }
+        // All groups validated: only now replace the store's state, so a
+        // failed load leaves the previous parameters intact.
+        self.params = params;
+        self.m = m;
+        self.v = v;
         self.step = meta.get("step").and_then(|x| x.as_i64()).unwrap_or(0) as i32;
         Ok(())
     }

@@ -75,6 +75,13 @@ impl Json {
         self.as_f64().and_then(|x| if x >= 0.0 { Some(x as usize) } else { None })
     }
 
+    /// Number as u64. Lossy above 2^53 (JSON numbers are f64): payloads
+    /// that can exceed it (identity hashes, RNG state) are string-encoded
+    /// instead — see `crate::checkpoint::ju64`.
+    pub fn as_u64_lossy(&self) -> Option<u64> {
+        self.as_f64().and_then(|x| if x >= 0.0 { Some(x as u64) } else { None })
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -154,8 +161,22 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
-                    out.push_str(&format!("{}", *x as i64));
+                if x.is_nan() {
+                    // Match the python-style literals the parser accepts;
+                    // Rust's Display would print "NaN"/"inf", and "inf"
+                    // could never be parsed back (e.g. a saved RunConfig
+                    // with the default max_seconds = infinity).
+                    out.push_str("NaN");
+                } else if x.is_infinite() {
+                    out.push_str(if *x > 0.0 { "Infinity" } else { "-Infinity" });
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
+                    // `-0.0 as i64` is 0: keep the sign so every finite
+                    // f64 round-trips bit-exactly (the checkpoint rail).
+                    if *x == 0.0 && x.is_sign_negative() {
+                        out.push_str("-0");
+                    } else {
+                        out.push_str(&format!("{}", *x as i64));
+                    }
                 } else {
                     out.push_str(&format!("{x}"));
                 }
@@ -470,5 +491,31 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(Json::num(3.0).to_string(), "3");
         assert_eq!(Json::num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn non_finite_numbers_roundtrip_through_parser_literals() {
+        // Rust's Display prints "inf", which the parser rejects; the
+        // writer must emit the python-style literals it accepts (a default
+        // RunConfig carries max_seconds = infinity).
+        assert_eq!(Json::num(f64::INFINITY).to_string(), "Infinity");
+        assert_eq!(Json::num(f64::NEG_INFINITY).to_string(), "-Infinity");
+        assert_eq!(Json::num(f64::NAN).to_string(), "NaN");
+        let back = Json::parse(&Json::num(f64::INFINITY).to_string()).unwrap();
+        assert_eq!(back.as_f64(), Some(f64::INFINITY));
+        let back = Json::parse(&Json::num(f64::NEG_INFINITY).to_string()).unwrap();
+        assert_eq!(back.as_f64(), Some(f64::NEG_INFINITY));
+        assert!(Json::parse("NaN").unwrap().as_f64().unwrap().is_nan());
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        // The checkpoint rail rests on this: every finite f64 the writer
+        // emits parses back to the same bits.
+        for x in [0.1 + 0.2, 1.0 / 3.0, 5.3e-4, f64::MIN_POSITIVE, -123456.789012345, -0.0, 0.0]
+        {
+            let back = Json::parse(&Json::num(x).to_string()).unwrap();
+            assert_eq!(back.as_f64().unwrap().to_bits(), x.to_bits(), "{x}");
+        }
     }
 }

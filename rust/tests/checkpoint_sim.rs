@@ -1,0 +1,273 @@
+//! Integration: warm-resume run-state checkpointing on the SimPolicy
+//! substrate (ISSUE 5 tentpole).
+//!
+//! The contract rails:
+//! * **Resume equivalence** — on the deterministic sim substrate,
+//!   `train N → save → load → train N` reproduces an uninterrupted
+//!   2N-step run's rollout stream and `StepRecord`s bit for bit (serial,
+//!   for plain `speed`, `predictive-speed`, and adaptive allocation);
+//!   periodic `save_every` segmentation is the same property.
+//! * **Fingerprint rejection** — a resume whose config disagrees on a
+//!   state-shaping knob fails loudly, naming the knob.
+//! * **Warm start pays** — a warm-resumed predictive-speed run issues
+//!   strictly fewer screening rollouts than the same resume with the
+//!   difficulty knowledge stripped (what every restart did before this
+//!   subsystem existed).
+//! * **Pipelined continuation** — a resumed pipelined run continues step
+//!   indices, cumulative counters, and staleness accounting (pipelined
+//!   scheduling is nondeterministic, so the bit-exact rail is serial-only).
+
+use std::path::PathBuf;
+
+use speed_rl::checkpoint::{CheckpointIo, CheckpointSpec, RunState};
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::alloc::AllocKind;
+use speed_rl::coordinator::curriculum::CurriculumKind;
+use speed_rl::driver;
+use speed_rl::metrics::RunRecord;
+
+fn scenario(kind: CurriculumKind, seed: u64, max_steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.curriculum = kind;
+    cfg.label = kind.name().to_string();
+    cfg.model = "sim-7b".into();
+    cfg.dataset_size = 800; // a few epochs per run: identities get revisited
+    cfg.n_init = 8;
+    cfg.n_cont = 16;
+    cfg.batch_size = 16;
+    cfg.eval_every = 4;
+    cfg.max_steps = max_steps;
+    cfg.seed = seed;
+    cfg
+}
+
+/// A unique throwaway checkpoint dir under the system temp root.
+fn ck_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("speedrl-ckpt-{}-{name}", std::process::id()))
+}
+
+fn assert_records_identical(full: &RunRecord, resumed: &RunRecord, what: &str) {
+    // The serialized form covers every step/eval/counter field; comparing
+    // the bytes is the strongest statement of "bit for bit".
+    let a = full.to_json().to_string_pretty();
+    let b = resumed.to_json().to_string_pretty();
+    if a != b {
+        // Narrow the failure for a readable assertion message.
+        assert_eq!(full.steps.len(), resumed.steps.len(), "{what}: step counts differ");
+        for (x, y) in full.steps.iter().zip(resumed.steps.iter()) {
+            assert_eq!(x.step, y.step, "{what}: step index");
+            assert_eq!(x.time_s.to_bits(), y.time_s.to_bits(), "{what}: time_s at {}", x.step);
+            assert_eq!(x.rollouts, y.rollouts, "{what}: rollouts at {}", x.step);
+            assert_eq!(
+                x.train_pass_rate.to_bits(),
+                y.train_pass_rate.to_bits(),
+                "{what}: pass rate at {}",
+                x.step
+            );
+        }
+        panic!(
+            "{what}: records differ outside step records:\n--- full ---\n{a}\n--- resumed ---\n{b}"
+        );
+    }
+}
+
+/// train N → save → fresh process state → resume N ≡ uninterrupted 2N.
+fn resume_equivalence(mut cfg: RunConfig, name: &str) {
+    let n = cfg.max_steps;
+    let dir = ck_dir(name);
+    let spec = CheckpointSpec::new(&dir, "half");
+
+    let mut full_cfg = cfg.clone();
+    full_cfg.max_steps = 2 * n;
+    let full = driver::run_sim(&full_cfg).expect("uninterrupted run");
+
+    let save_io =
+        CheckpointIo { resume: None, save: Some(spec.clone()), save_every: 0 };
+    driver::run_sim_with(&cfg, &save_io).expect("first half");
+
+    // Sanity on the checkpoint contents before resuming from it.
+    let state = RunState::load(&dir, "half").expect("sidecar loads");
+    assert_eq!(state.step, n);
+    assert_eq!(state.record.steps.len(), n);
+
+    cfg.max_steps = 2 * n;
+    let resume_io =
+        CheckpointIo { resume: Some(spec), save: None, save_every: 0 };
+    let resumed = driver::run_sim_with(&cfg, &resume_io).expect("resumed half");
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(resumed.steps.len(), 2 * n, "{name}: resumed record must span the full run");
+    assert_records_identical(&full, &resumed, name);
+}
+
+#[test]
+fn serial_speed_resume_matches_uninterrupted_bit_for_bit() {
+    resume_equivalence(scenario(CurriculumKind::Speed, 3, 8), "speed");
+}
+
+#[test]
+fn serial_predictive_speed_resume_matches_uninterrupted_bit_for_bit() {
+    // Exercises the exploration-RNG and predictor-store restore paths on
+    // top of the Speed ones.
+    resume_equivalence(scenario(CurriculumKind::PredictiveSpeed, 5, 8), "predictive-speed");
+}
+
+#[test]
+fn serial_adaptive_alloc_resume_matches_uninterrupted_bit_for_bit() {
+    // Adaptive budgets price from the predictor store the allocator feeds
+    // itself — the store must round-trip for budgets to continue exactly.
+    let mut cfg = scenario(CurriculumKind::Speed, 7, 8);
+    cfg.alloc = AllocKind::Adaptive;
+    cfg.label = "speed-adaptive".into();
+    resume_equivalence(cfg, "speed-adaptive");
+}
+
+#[test]
+fn periodic_save_every_segments_match_uninterrupted() {
+    // --save-every runs the trainer in segments with a snapshot between
+    // each; the run itself must be unchanged by where the cuts fall.
+    let cfg = scenario(CurriculumKind::PredictiveSpeed, 11, 12);
+    let full = driver::run_sim(&cfg).expect("uninterrupted");
+
+    let dir = ck_dir("save-every");
+    let io = CheckpointIo {
+        resume: None,
+        save: Some(CheckpointSpec::new(&dir, "periodic")),
+        save_every: 5, // cuts at 5, 10, 12
+    };
+    let segmented = driver::run_sim_with(&cfg, &io).expect("segmented");
+    let state = RunState::load(&dir, "periodic").expect("final save exists");
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(state.step, 12, "final periodic save must be at the last step");
+    assert!(
+        state.predictor.as_ref().is_some_and(|p| !p.entries.is_empty()),
+        "predictive run must persist difficulty posteriors"
+    );
+    assert_records_identical(&full, &segmented, "save-every");
+}
+
+#[test]
+fn resume_rejects_mismatched_fingerprint() {
+    let cfg = scenario(CurriculumKind::PredictiveSpeed, 13, 4);
+    let dir = ck_dir("fingerprint");
+    let spec = CheckpointSpec::new(&dir, "fp");
+    let io = CheckpointIo { resume: None, save: Some(spec.clone()), save_every: 0 };
+    driver::run_sim_with(&cfg, &io).expect("save");
+
+    // A drifted discount invalidates the persisted posteriors: loud reject.
+    let mut drifted = cfg.clone();
+    drifted.max_steps = 8;
+    drifted.predictor_discount = 0.5;
+    let io = CheckpointIo { resume: Some(spec.clone()), save: None, save_every: 0 };
+    let err = format!("{:#}", driver::run_sim_with(&drifted, &io).unwrap_err());
+    assert!(err.contains("predictor_discount"), "error must name the knob: {err}");
+
+    // Changing only the step budget is the intended resume use and passes.
+    let mut more = cfg.clone();
+    more.max_steps = 6;
+    let io = CheckpointIo { resume: Some(spec), save: None, save_every: 0 };
+    let resumed = driver::run_sim_with(&more, &io).expect("larger step budget resumes");
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(resumed.steps.len(), 6);
+}
+
+#[test]
+fn warm_resume_issues_fewer_screening_rollouts_than_cold() {
+    // The motivating waste: before this subsystem a restart dropped the
+    // DifficultyStore, so the resumed run re-screened the zero-pass tail.
+    // Simulate exactly that by stripping the predictor state from a real
+    // checkpoint and comparing the two resumes on the same prompt stream.
+    let n = 40;
+    let cfg = scenario(CurriculumKind::PredictiveSpeed, 7, n);
+    let dir = ck_dir("warm-vs-cold");
+    let warm_spec = CheckpointSpec::new(&dir, "warm");
+    let io = CheckpointIo { resume: None, save: Some(warm_spec.clone()), save_every: 0 };
+    driver::run_sim_with(&cfg, &io).expect("first half");
+
+    let baseline = RunState::load(&dir, "warm").expect("sidecar");
+    assert!(
+        baseline.predictor.as_ref().is_some_and(|p| !p.entries.is_empty()),
+        "checkpoint must carry difficulty knowledge"
+    );
+    let mut stripped = baseline.clone();
+    stripped.predictor = None; // the pre-checkpoint restart semantics
+    stripped.save(&dir, "cold").expect("stripped sidecar");
+
+    let mut resumed_cfg = cfg.clone();
+    resumed_cfg.max_steps = 2 * n;
+    let io = CheckpointIo { resume: Some(warm_spec), save: None, save_every: 0 };
+    let warm = driver::run_sim_with(&resumed_cfg, &io).expect("warm resume");
+    let io = CheckpointIo {
+        resume: Some(CheckpointSpec::new(&dir, "cold")),
+        save: None,
+        save_every: 0,
+    };
+    let cold = driver::run_sim_with(&resumed_cfg, &io).expect("cold resume");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // Both resumes start from identical counters, so final totals compare
+    // the resumed halves directly.
+    let warm_screens = warm.counters.prompts_screened - baseline.counters.prompts_screened;
+    let cold_screens = cold.counters.prompts_screened - baseline.counters.prompts_screened;
+    assert!(
+        warm_screens < cold_screens,
+        "warm resume must screen fewer prompts: warm {warm_screens} vs cold {cold_screens}"
+    );
+    assert!(
+        warm.counters.rollouts < cold.counters.rollouts,
+        "warm resume must spend fewer rollouts: warm {} vs cold {}",
+        warm.counters.rollouts,
+        cold.counters.rollouts
+    );
+    assert!(
+        warm.counters.prompts_skipped > cold.counters.prompts_skipped,
+        "warm predictor must skip more: warm {} vs cold {}",
+        warm.counters.prompts_skipped,
+        cold.counters.prompts_skipped
+    );
+}
+
+#[test]
+fn pipelined_resume_continues_steps_counters_and_staleness() {
+    // Pipelined scheduling is nondeterministic (weight-install timing),
+    // so the pipelined rail asserts *continuation*, not bit-equality: the
+    // resumed run completes the full step range on top of the restored
+    // accounting, for both SPEED-family curricula.
+    for kind in [CurriculumKind::Speed, CurriculumKind::PredictiveSpeed] {
+        let mut cfg = scenario(kind, 17, 6);
+        cfg.pipeline = true;
+        cfg.workers = 2;
+        let dir = ck_dir(&format!("pipelined-{}", kind.name()));
+        let spec = CheckpointSpec::new(&dir, "p");
+        let io = CheckpointIo { resume: None, save: Some(spec.clone()), save_every: 0 };
+        let first = driver::run_sim_with(&cfg, &io).expect("pipelined first half");
+        let saved = RunState::load(&dir, "p").expect("sidecar");
+        assert_eq!(saved.step, 6);
+
+        cfg.max_steps = 12;
+        let io = CheckpointIo { resume: Some(spec), save: None, save_every: 0 };
+        let resumed = driver::run_sim_with(&cfg, &io).expect("pipelined resume");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Step indices continue 0..12 with no gap or restart.
+        assert_eq!(resumed.steps.len(), 12, "{}", kind.name());
+        for (i, s) in resumed.steps.iter().enumerate() {
+            assert_eq!(s.step, i, "{}: step indices must be contiguous", kind.name());
+        }
+        // Cumulative accounting continues from the restored totals.
+        assert!(resumed.counters.rollouts > first.counters.rollouts, "{}", kind.name());
+        assert!(
+            resumed.counters.cost_s > first.counters.cost_s,
+            "{}: inference clock must continue",
+            kind.name()
+        );
+        let t_first = first.steps.last().unwrap().time_s;
+        let t_resumed = resumed.steps.last().unwrap().time_s;
+        assert!(t_resumed > t_first, "{}: virtual time must continue", kind.name());
+        // Exactly one step-0 eval block: the resumed record keeps the
+        // restored one instead of re-evaluating.
+        let step0_evals = resumed.evals.iter().filter(|e| e.step == 0).count();
+        assert_eq!(step0_evals, 4, "{}: one eval per benchmark at step 0", kind.name());
+    }
+}
