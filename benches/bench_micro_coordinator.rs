@@ -211,9 +211,11 @@ fn main() {
             let rec = trainer.run(&mut policy, cur.as_mut(), &dataset, &[]).unwrap();
             (t0.elapsed().as_secs_f64(), rec)
         };
-        // One closure for both pipelined modes so the serial-vs-pipelined-
-        // vs-service comparison can never drift onto different configs.
-        let run_pipelined = |workers: usize, service: bool| -> (f64, RunRecord) {
+        // One closure for all pipelined modes so the serial-vs-pipelined-
+        // vs-service-vs-pool comparison can never drift onto different
+        // configs. `engines` > 1 shards the service across E data-parallel
+        // replicas (ignored with `service` off).
+        let run_pipelined = |workers: usize, service: bool, engines: usize| -> (f64, RunRecord) {
             let mut policy = mk_policy();
             let trainer = PipelinedTrainer::new(
                 tcfg(if service { "pipelined+service" } else { "pipelined" }),
@@ -225,7 +227,8 @@ fn main() {
                     service,
                     ..Default::default()
                 },
-            );
+            )
+            .with_engines(engines);
             let t0 = std::time::Instant::now();
             let rec = trainer.run(&mut policy, spec.clone(), &dataset, &[]).unwrap();
             (t0.elapsed().as_secs_f64(), rec)
@@ -238,11 +241,11 @@ fn main() {
             steps as f64 / serial_best
         );
         for workers in [1usize, 2, 4, 8] {
-            let _ = run_pipelined(workers, false); // warmup
+            let _ = run_pipelined(workers, false, 1); // warmup
             let mut best = f64::INFINITY;
             let mut util_of_best = 0.0;
             for _ in 0..3 {
-                let (secs, rec) = run_pipelined(workers, false);
+                let (secs, rec) = run_pipelined(workers, false, 1);
                 std::hint::black_box(&rec);
                 if secs < best {
                     best = secs;
@@ -258,7 +261,7 @@ fn main() {
         }
         // The coalescing service: one engine, K request producers.
         for workers in [2usize, 4, 8] {
-            let (secs, rec) = run_pipelined(workers, true);
+            let (secs, rec) = run_pipelined(workers, true, 1);
             let svc = rec.service.expect("service counters on the serviced path");
             println!(
                 "coordinator service   K={workers}: {:7.1} steps/s ({} calls from {} submissions, \
@@ -269,6 +272,24 @@ fn main() {
                 100.0 * svc.mean_fill(),
                 svc.mean_coalesced()
             );
+        }
+        // The engine pool: K producers x E replicas behind the same service.
+        // (`speed-rl bench --mode pool` is the figure-quality version of this
+        // grid; these rows exist so a perf pass sees the pooled hot path.)
+        for workers in [4usize, 8] {
+            for engines in [1usize, 2, 4] {
+                let (secs, rec) = run_pipelined(workers, true, engines);
+                let svc = rec.service.expect("service counters on the pooled path");
+                println!(
+                    "coordinator pool K={workers} E={engines}: {:7.1} steps/s ({} calls, fill {:.0}%, \
+                     balance {:.2}, {} steals)",
+                    steps as f64 / secs,
+                    svc.calls,
+                    100.0 * svc.mean_fill(),
+                    svc.pool_balance(),
+                    svc.steals
+                );
+            }
         }
     }
 }

@@ -25,6 +25,27 @@ echo "== speed-rl bench --mode alloc (fixed vs adaptive budgets -> BENCH_alloc.j
 cargo run --release --bin speed-rl -- bench --mode alloc --steps 40 --target 0.45 \
   --out BENCH_alloc.json
 
+echo "== speed-rl bench --mode pool (engine-pool scaling -> BENCH_pool.json) =="
+# K workers x E data-parallel engine replicas behind the shared service.
+# Gate: scaling the pool changes WHERE plans execute, never how many the
+# router forms — at a fixed worker count E=2 may not issue more engine calls
+# than E=1, and the final dapo1k accuracy must stay matched.
+cargo run --release --bin speed-rl -- bench --mode pool --steps 12 --workers 8 \
+  --engines 1,2,4 --out BENCH_pool.json
+python3 - <<'EOF'
+import json
+modes = {int(m["engines"]): m for m in json.load(open("BENCH_pool.json"))["modes"]}
+e1, e2 = modes[1], modes[2]
+assert e2["engine_calls"] <= e1["engine_calls"], (
+    f"pool fragmented the stream: E=2 made {e2['engine_calls']:.0f} engine calls "
+    f"vs E=1's {e1['engine_calls']:.0f}")
+assert abs(e2["final_dapo1k"] - e1["final_dapo1k"]) < 0.15, (
+    f"pool changed learning: E=2 dapo1k {e2['final_dapo1k']:.3f} "
+    f"vs E=1 {e1['final_dapo1k']:.3f}")
+print(f"pool smoke: E=1 {e1['engine_calls']:.0f} calls / E=2 {e2['engine_calls']:.0f} calls, "
+      f"dapo1k {e1['final_dapo1k']:.3f} vs {e2['final_dapo1k']:.3f}")
+EOF
+
 echo "== resume smoke (train -> save -> resume must equal the uninterrupted run) =="
 # The checkpoint-format drift gate: a 6+6-step predictive-speed resume must
 # reproduce the uninterrupted 12-step run's record byte for byte (the

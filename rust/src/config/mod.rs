@@ -93,6 +93,11 @@ pub struct RunConfig {
     /// inter-submission gap (EWMA) instead of the fixed `coalesce_wait_ms`
     /// constant (which then only bounds the adaptive deadline).
     pub coalesce_adaptive: bool,
+    /// Data-parallel engine replicas behind the shared service (the
+    /// `--engines` flag; DESIGN.md §11). 1 = the single-engine service,
+    /// bit-for-bit identical to the pre-pool scheduler. Ignored unless
+    /// `service` is on.
+    pub engines: usize,
 }
 
 impl Default for RunConfig {
@@ -134,6 +139,7 @@ impl Default for RunConfig {
             coalesce_wait_ms: service_cfg.coalesce_wait_ms,
             fill_waterline: service_cfg.fill_waterline,
             coalesce_adaptive: service_cfg.adaptive,
+            engines: 1,
         }
     }
 }
@@ -279,6 +285,14 @@ impl RunConfig {
                 self.fill_waterline
             );
         }
+        if !(1..=crate::metrics::MAX_POOL).contains(&self.engines) {
+            bail!(
+                "engines must be in 1..={} (got {}); the per-replica counters are \
+                 fixed-size arrays",
+                crate::metrics::MAX_POOL,
+                self.engines
+            );
+        }
         Ok(())
     }
 
@@ -343,6 +357,7 @@ impl RunConfig {
             ("coalesce_wait_ms", Json::num(self.coalesce_wait_ms as f64)),
             ("fill_waterline", Json::num(self.fill_waterline)),
             ("coalesce_adaptive", Json::Bool(self.coalesce_adaptive)),
+            ("engines", Json::num(self.engines as f64)),
         ])
     }
 
@@ -404,6 +419,7 @@ impl RunConfig {
         num_field!("explore_rate", explore_rate, f64);
         num_field!("coalesce_wait_ms", coalesce_wait_ms, u64);
         num_field!("fill_waterline", fill_waterline, f64);
+        num_field!("engines", engines, usize);
         if let Some(v) = j.get("pipeline").and_then(|x| x.as_bool()) {
             cfg.pipeline = v;
         }
@@ -633,6 +649,27 @@ mod tests {
         bad.batch_size = 1;
         let msg = bad.validate().unwrap_err().to_string();
         assert!(msg.contains("rollout batch target"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn engines_roundtrips_defaults_to_one_and_validates_bounds() {
+        assert_eq!(RunConfig::default().engines, 1);
+        let mut cfg = RunConfig::default();
+        cfg.service = true;
+        cfg.engines = 4;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.engines, 4);
+        // A pre-pool record without the field parses as E=1.
+        let text = cfg.to_json().to_string_pretty().replace(",\n  \"engines\": 4", "");
+        assert!(!text.contains("engines"), "field not stripped: {text}");
+        let old = RunConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(old.engines, 1);
+        let mut bad = RunConfig::default();
+        bad.engines = 0;
+        assert!(bad.validate().unwrap_err().to_string().contains("engines"));
+        let mut bad = RunConfig::default();
+        bad.engines = crate::metrics::MAX_POOL + 1;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

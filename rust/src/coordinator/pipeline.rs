@@ -112,6 +112,10 @@ pub struct PipelinedTrainer {
     pub config: TrainerConfig,
     pub algo: AlgoConfig,
     pub pipeline: PipelineConfig,
+    /// Data-parallel engine replicas behind the shared service (the
+    /// `--engines` flag; meaningful only with `pipeline.service` on).
+    /// Defaults to 1 — set via [`with_engines`](Self::with_engines).
+    engines: usize,
 }
 
 /// Restored learner-side progress for a warm-resumed pipelined run (the
@@ -134,7 +138,16 @@ pub struct PipelineResume {
 
 impl PipelinedTrainer {
     pub fn new(config: TrainerConfig, algo: AlgoConfig, pipeline: PipelineConfig) -> Self {
-        PipelinedTrainer { config, algo, pipeline }
+        PipelinedTrainer { config, algo, pipeline, engines: 1 }
+    }
+
+    /// Shard the shared inference service across `engines` data-parallel
+    /// replicas (clamped to `1..=MAX_POOL`; ignored unless
+    /// `pipeline.service` is on). E=1 is the single-engine service
+    /// unchanged.
+    pub fn with_engines(mut self, engines: usize) -> Self {
+        self.engines = engines.clamp(1, crate::metrics::MAX_POOL);
+        self
     }
 
     /// Run the full loop; returns the complete run record.
@@ -226,13 +239,13 @@ impl PipelinedTrainer {
         let clock = Arc::new(AtomicUsize::new(start_step));
         let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
 
-        // With the service on, the ONE real engine (fork stream 0) sits
-        // behind the coalescing scheduler and every worker gets a cheap
-        // submit handle advertising capacity / K rows; weights install once
-        // per version at the service instead of K times.
+        // With the service on, a pool of E real engines (fork streams
+        // 0..E) sits behind the coalescing router and every worker gets a
+        // cheap submit handle advertising capacity x E / K rows; weights
+        // install once per version per replica instead of K times.
         let service = self.pipeline.service.then(|| {
-            InferenceService::spawn(
-                policy.fork_engine(0),
+            InferenceService::spawn_pool(
+                (0..self.engines.max(1)).map(|r| policy.fork_engine(r as u64)).collect(),
                 self.pipeline.service_cfg,
                 self.pipeline.workers,
                 // The quantum must admit the LARGEST possible group: with
@@ -383,7 +396,7 @@ impl PipelinedTrainer {
             prev_snap = counter_snap;
             // Per-step service deltas (same convention as the skip rates):
             // cumulative means would blur the warm-up the charts exist for.
-            let (service_calls, service_fill, service_queue_wait_s) =
+            let (service_calls, service_fill, service_queue_wait_s, pool_balance) =
                 match service.map(|s| s.stats()) {
                     Some(cur) => {
                         let d_calls = cur.calls.saturating_sub(prev_svc.calls);
@@ -391,14 +404,22 @@ impl PipelinedTrainer {
                         let d_cap = cur.rows_capacity.saturating_sub(prev_svc.rows_capacity);
                         let d_subs = cur.submissions.saturating_sub(prev_svc.submissions);
                         let d_wait = cur.queue_wait_s - prev_svc.queue_wait_s;
+                        let d_disp = cur.pool_dispatches.saturating_sub(prev_svc.pool_dispatches);
+                        let d_busy = cur.pool_busy_sum.saturating_sub(prev_svc.pool_busy_sum);
+                        let engines = cur.engines;
                         prev_svc = cur;
                         (
                             d_calls,
                             if d_cap == 0 { 0.0 } else { d_rows as f64 / d_cap as f64 },
                             if d_subs == 0 { 0.0 } else { d_wait / d_subs as f64 },
+                            if d_disp == 0 || engines == 0 {
+                                0.0
+                            } else {
+                                d_busy as f64 / (d_disp * engines) as f64
+                            },
                         )
                     }
-                    None => (0, 0.0, 0.0),
+                    None => (0, 0.0, 0.0, 0.0),
                 };
             record.steps.push(StepRecord {
                 step,
@@ -420,6 +441,7 @@ impl PipelinedTrainer {
                 service_calls,
                 service_fill,
                 service_queue_wait_s,
+                pool_balance,
                 rollouts: counter_snap.rollouts,
                 step_alloc_rows: alloc_rows,
                 alloc_calibration: counter_snap.alloc_calibration(),

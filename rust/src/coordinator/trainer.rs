@@ -261,6 +261,7 @@ impl Trainer {
                 service_calls: 0,
                 service_fill: 0.0,
                 service_queue_wait_s: 0.0,
+                pool_balance: 0.0,
                 rollouts: state.counters.rollouts,
                 step_alloc_rows: step_alloc_rows(&counters_before, &state.counters),
                 alloc_calibration: state.counters.alloc_calibration(),

@@ -178,28 +178,20 @@ pub fn run_sim_with(cfg: &RunConfig, io: &CheckpointIo) -> Result<RunRecord> {
         // Serial loop delegated through the coalescing service with one
         // producer — DESIGN.md §8's equivalence rail: this must reproduce
         // the plain serial RunRecord bit for bit (rust/tests/service_sim.rs).
-        anyhow::ensure!(
-            io.is_noop(),
-            "run-state checkpointing is not wired through the serial --service path; \
-             drop --service (the serial run is bit-for-bit identical) or use --pipeline"
-        );
+        // The service owns no run state, so checkpointing threads through
+        // the same segmented runner as the plain serial path; the learner
+        // restore re-publishes the snapshot so the pool's forked replicas
+        // serve the restored weights.
         check_capacity(cfg, policy.rollout_capacity())?;
-        let service = InferenceService::spawn(
-            policy.fork_engine(0),
+        let service = InferenceService::spawn_pool(
+            (0..cfg.engines.max(1)).map(|r| policy.fork_engine(r as u64)).collect(),
             service_config(cfg),
             1,
             cfg.max_group_rollouts(),
         );
         let handle = service.handle();
-        let record = {
-            let mut serviced = ServicedPolicy::new(handle, &mut policy);
-            let mut curriculum = build_curriculum(cfg);
-            let trainer = Trainer::new(trainer_config(cfg), build_algo(cfg));
-            trainer.run(&mut serviced, curriculum.as_mut(), &dataset, &evals)
-        };
-        let mut record = record?;
-        record.service = Some(service.stats());
-        return Ok(record);
+        let mut serviced = ServicedPolicy::new(handle, &mut policy);
+        return run_serial_segments(cfg, &mut serviced, &dataset, &evals, io, Some(&service));
     }
     run_with_policy_io(cfg, &mut policy, &dataset, &evals, io)
 }
@@ -301,13 +293,20 @@ fn save_run_state(
 
 /// The serial segmented runner shared by the sim and real substrates: run
 /// until the next save point, snapshot, repeat. With no `io.save` this is
-/// one segment — exactly the plain serial run.
+/// one segment — exactly the plain serial run. When the serial loop is
+/// routed through the inference service, `service` threads its counters
+/// into every sidecar and the final record: the live counters (this
+/// process only) are merged onto the counters carried by the resumed
+/// record, taken out once at resume so segments cannot double-merge.
+/// `ServiceCounters::merge` folds the per-replica arrays index by index,
+/// so resumed pool runs report stable totals in replica order.
 fn run_serial_segments(
     cfg: &RunConfig,
     policy: &mut dyn Policy,
     dataset: &Dataset,
     evals: &[EvalSet],
     io: &CheckpointIo,
+    service: Option<&InferenceService>,
 ) -> Result<RunRecord> {
     let spec = curriculum_spec(cfg);
     let mut curriculum = spec.build();
@@ -328,6 +327,14 @@ fn run_serial_segments(
             stopped: false,
         };
     }
+    let prior_service = state.record.service.take();
+    let merged_service = |svc: &InferenceService| {
+        let mut s = svc.stats();
+        if let Some(prev) = &prior_service {
+            s.merge(prev);
+        }
+        s
+    };
     loop {
         let until = if io.save.is_some() && io.save_every > 0 {
             (state.next_step + io.save_every).min(cfg.max_steps)
@@ -336,6 +343,9 @@ fn run_serial_segments(
         };
         trainer.run_segment(policy, curriculum.as_mut(), dataset, evals, &mut state, until)?;
         if let Some(save) = &io.save {
+            if let Some(svc) = service {
+                state.record.service = Some(merged_service(svc));
+            }
             save_run_state(
                 cfg,
                 &*policy,
@@ -356,6 +366,9 @@ fn run_serial_segments(
     }
     let mut record = state.record;
     record.counters = state.counters;
+    if let Some(svc) = service {
+        record.service = Some(merged_service(svc));
+    }
     Ok(record)
 }
 
@@ -410,7 +423,8 @@ fn run_pipelined_sim(
         };
         let mut segment_cfg = trainer_config(cfg);
         segment_cfg.max_steps = until;
-        let trainer = PipelinedTrainer::new(segment_cfg, build_algo(cfg), pipeline_config(cfg));
+        let trainer = PipelinedTrainer::new(segment_cfg, build_algo(cfg), pipeline_config(cfg))
+            .with_engines(cfg.engines);
         let (record, loader) =
             trainer.run_resumed(policy, spec.clone(), dataset, evals, resume.take())?;
         let next_step = record.steps.last().map(|s| s.step + 1).unwrap_or(start);
@@ -520,7 +534,7 @@ pub fn run_with_policy_io(
             cfg.workers
         );
     }
-    run_serial_segments(cfg, policy, dataset, evals, io)
+    run_serial_segments(cfg, policy, dataset, evals, io, None)
 }
 
 /// Table-1 accuracy targets per benchmark for each sim model scale,

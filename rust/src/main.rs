@@ -67,7 +67,7 @@ fn print_usage() {
          \x20 eval       score a real model checkpoint on the benchmarks\n\
          \x20 info       print the artifact manifest summary\n\
          \x20 report     ASCII accuracy-vs-time charts from run records\n\
-         \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets)\n"
+         \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets) | pool (engine scaling)\n"
     );
 }
 
@@ -121,6 +121,16 @@ fn print_summary(record: &RunRecord, model: &str) {
             svc.installs,
             svc.deadline_dispatches,
         );
+        if svc.engines > 1 {
+            let e = (svc.engines as usize).min(svc.replica_calls.len());
+            println!(
+                "pool: {} engines  balance {:.2}  {} steals  per-replica calls {:?}",
+                svc.engines,
+                svc.pool_balance(),
+                svc.steals,
+                &svc.replica_calls[..e],
+            );
+        }
     }
     if record.counters.prompts_skipped > 0 || record.counters.brier_n > 0 {
         println!(
@@ -198,6 +208,11 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         )
         .opt("save-every", None, "checkpoint cadence in steps (0 = final save only; needs --save)")
         .opt("resume", None, "warm-resume from a run-state checkpoint dir:tag")
+        .opt(
+            "engines",
+            None,
+            "data-parallel engine replicas behind the shared service (implies --service when > 1)",
+        )
         .flag("pipeline", "overlap inference with updates (producer/consumer)")
         .flag("service", "coalesce all rollout requests through one shared inference service")
         .flag(
@@ -267,6 +282,12 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     if args.has_flag("service") {
         cfg.service = true;
+    }
+    if let Some(v) = args.get("engines") {
+        cfg.engines = v.parse::<usize>().context("--engines")?;
+        if cfg.engines > 1 {
+            cfg.service = true;
+        }
     }
     if args.has_flag("coalesce-adaptive") {
         cfg.coalesce_adaptive = true;
@@ -504,8 +525,8 @@ fn cmd_report(argv: &[String]) -> Result<()> {
         .opt(
             "metric",
             Some("accuracy"),
-            "accuracy | skip-rate | explore-rate | service-fill | staleness | alloc-rows | \
-             alloc-calibration (per-step charts)",
+            "accuracy | skip-rate | explore-rate | service-fill | pool-balance | staleness | \
+             alloc-rows | alloc-calibration (per-step charts)",
         )
         .opt("width", Some("72"), "chart width")
         .opt("height", Some("16"), "chart height");
@@ -551,21 +572,25 @@ fn cmd_report(argv: &[String]) -> Result<()> {
 ///   (`BENCH_coalesce.json`);
 /// * `alloc` — fixed vs adaptive continuation-budget allocation on the
 ///   serial SPEED curriculum: rollouts spent to reach the same target
-///   accuracy (`BENCH_alloc.json`).
+///   accuracy (`BENCH_alloc.json`);
+/// * `pool` — K pipelined workers submitting through an engine pool of E
+///   data-parallel replicas, swept over E (`BENCH_pool.json`).
 fn cmd_bench(argv: &[String]) -> Result<()> {
-    let cli = common_cli("speed-rl bench", "coalescing / allocation smoke benches")
-        .opt("mode", Some("coalesce"), "coalesce | alloc")
+    let cli = common_cli("speed-rl bench", "coalescing / allocation / pool smoke benches")
+        .opt("mode", Some("coalesce"), "coalesce | alloc | pool")
         .opt("steps", Some("12"), "training steps per mode")
         .opt("workers", Some("4"), "rollout workers for the pipelined modes")
         .opt("batch-size", Some("8"), "training batch size B")
         .opt("dataset-size", Some("4000"), "training prompts to generate")
-        .opt("target", Some("0.5"), "alloc mode: dapo1k accuracy bar for the rollout comparison");
+        .opt("target", Some("0.5"), "alloc mode: dapo1k accuracy bar for the rollout comparison")
+        .opt("engines", Some("1,2,4"), "pool mode: comma-separated replica counts to sweep");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("warn")));
     match args.string("mode")?.as_str() {
         "alloc" => return cmd_bench_alloc(&args),
+        "pool" => return cmd_bench_pool(&args),
         "coalesce" => {}
-        other => bail!("unknown bench mode '{other}' (valid: coalesce, alloc)"),
+        other => bail!("unknown bench mode '{other}' (valid: coalesce, alloc, pool)"),
     }
     let steps = args.usize("steps")?;
     let workers = args.usize("workers")?;
@@ -637,6 +662,92 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     let out = args.get("out").unwrap_or("BENCH_coalesce.json");
     let j = Json::obj(vec![
         ("bench", Json::str("coalesce")),
+        ("steps", Json::num(steps as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("modes", Json::Arr(modes)),
+    ]);
+    std::fs::write(out, j.to_string_pretty()).with_context(|| format!("write {out}"))?;
+    info!("bench", "results written to {out}");
+    Ok(())
+}
+
+/// `speed-rl bench --mode pool`: K pipelined workers coalescing through an
+/// engine pool, swept over the replica count E. All sweep points share the
+/// seed and dataset, so the virtual-time and accuracy columns measure the
+/// same training run while wall-clock steps/s and the per-replica counters
+/// show how the pool spreads the load.
+fn cmd_bench_pool(args: &speed_rl::util::cli::Args) -> Result<()> {
+    let steps = args.usize("steps")?;
+    let workers = args.usize("workers")?;
+    let batch_size = args.usize("batch-size")?;
+    let dataset_size = args.usize("dataset-size")?;
+    let seed = args.u64("seed")?;
+    let engines: Vec<usize> = args
+        .string("engines")?
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().context("--engines"))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!engines.is_empty(), "--engines needs at least one replica count");
+
+    let mut table = speed_rl::bench::Table::new(&[
+        "engines",
+        "steps/s",
+        "engine calls",
+        "mean fill %",
+        "pool balance",
+        "steals",
+        "virtual time s",
+        "final dapo1k",
+    ]);
+    let mut modes = Vec::new();
+    for e in engines {
+        let mut cfg = RunConfig::default();
+        cfg.label = format!("{workers}w-{e}e");
+        cfg.batch_size = batch_size;
+        cfg.dataset_size = dataset_size;
+        cfg.max_steps = steps;
+        cfg.eval_every = steps; // one final eval point, cheap
+        cfg.seed = seed;
+        cfg.pipeline = true;
+        cfg.workers = workers;
+        cfg.service = true;
+        cfg.engines = e;
+        let t0 = std::time::Instant::now();
+        let rec = driver::run_sim(&cfg)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let steps_per_sec = rec.steps.len() as f64 / wall_s.max(1e-9);
+        let svc = rec.service.unwrap_or_default();
+        table.row(vec![
+            e.to_string(),
+            format!("{steps_per_sec:.1}"),
+            svc.calls.to_string(),
+            format!("{:.1}", 100.0 * svc.mean_fill()),
+            format!("{:.2}", svc.pool_balance()),
+            svc.steals.to_string(),
+            format!("{:.1}", rec.total_time()),
+            format!("{:.3}", rec.final_accuracy("dapo1k").unwrap_or(0.0)),
+        ]);
+        modes.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("engines", Json::num(e as f64)),
+            ("steps", Json::num(rec.steps.len() as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("steps_per_sec", Json::num(steps_per_sec)),
+            ("engine_calls", Json::num(svc.calls as f64)),
+            ("submissions", Json::num(svc.submissions as f64)),
+            ("mean_fill", Json::num(svc.mean_fill())),
+            ("pool_balance", Json::num(svc.pool_balance())),
+            ("steals", Json::num(svc.steals as f64)),
+            ("installs", Json::num(svc.installs as f64)),
+            ("rollouts", Json::num(rec.counters.rollouts as f64)),
+            ("virtual_time_s", Json::num(rec.total_time())),
+            ("final_dapo1k", Json::num(rec.final_accuracy("dapo1k").unwrap_or(0.0))),
+        ]));
+    }
+    table.print();
+    let out = args.get("out").unwrap_or("BENCH_pool.json");
+    let j = Json::obj(vec![
+        ("bench", Json::str("pool")),
         ("steps", Json::num(steps as f64)),
         ("workers", Json::num(workers as f64)),
         ("modes", Json::Arr(modes)),

@@ -355,8 +355,13 @@ impl AtomicCounters {
     }
 }
 
-/// Cumulative counters of the shared [`InferenceService`]: one engine
-/// behind a submission queue, coalescing requests across rollout workers.
+/// Hard cap on engine-pool replicas: the per-replica counters below are
+/// fixed-size arrays so [`ServiceCounters`] stays `Copy` (cheap per-step
+/// snapshots). The service and `--engines` validation both enforce it.
+pub const MAX_POOL: usize = 8;
+
+/// Cumulative counters of the shared [`InferenceService`]: an engine pool
+/// behind one submission queue, coalescing requests across rollout workers.
 /// `Copy` so per-step snapshots are cheap.
 ///
 /// [`InferenceService`]: crate::policy::service::InferenceService
@@ -388,6 +393,33 @@ pub struct ServiceCounters {
     pub ewma_gap_s: f64,
     /// Histogram of submissions coalesced per call: 1, 2, 3, 4, 5-8, >8.
     pub coalesced_hist: [u64; 6],
+    /// Engine replicas behind the service (gauge; 1 for the single-engine
+    /// service, 0 in records predating the pool).
+    pub engines: u64,
+    /// Plans an idle replica pulled from another replica's queue instead of
+    /// waiting for the router (work-stealing dispatches).
+    pub steals: u64,
+    /// Router dispatches (the pool-balance denominator).
+    pub pool_dispatches: u64,
+    /// Replicas already busy (queued or executing rows) summed over
+    /// dispatches (the pool-balance numerator).
+    pub pool_busy_sum: u64,
+    /// Histogram of busy replicas observed at dispatch: 0, 1, 2, 3, 4, >=5.
+    pub pool_hist: [u64; 6],
+    /// Per-replica executed calls. Replica index IS the sort key: segmented
+    /// runs merge these slot-by-slot, so resumed pool runs report stable
+    /// per-replica totals regardless of merge order.
+    pub replica_calls: [u64; MAX_POOL],
+    /// Per-replica rows carrying data across executed calls.
+    pub replica_rows: [u64; MAX_POOL],
+    /// Per-replica weight installs (each replica installs each announced
+    /// version once; the run total is `installs`).
+    pub replica_installs: [u64; MAX_POOL],
+    /// Per-replica stolen plans (counted at the thief).
+    pub replica_steals: [u64; MAX_POOL],
+    /// Per-replica installed weight version (gauge; never exceeds the
+    /// service's announced version — the staleness bound).
+    pub replica_weight_version: [u64; MAX_POOL],
 }
 
 impl ServiceCounters {
@@ -430,6 +462,17 @@ impl ServiceCounters {
         }
     }
 
+    /// Mean fraction of replicas already busy when the router dispatched:
+    /// ~0 = an idle pool absorbing everything, ->1 = every replica loaded
+    /// (the queue is the bottleneck). 0 when no pool dispatched anything.
+    pub fn pool_balance(&self) -> f64 {
+        if self.pool_dispatches == 0 || self.engines == 0 {
+            0.0
+        } else {
+            self.pool_busy_sum as f64 / (self.pool_dispatches * self.engines) as f64
+        }
+    }
+
     /// Fold an earlier service generation's totals in (a resumed or
     /// save-segmented pipelined run spawns a fresh `InferenceService` per
     /// segment; without merging, the final record would report only the
@@ -451,6 +494,32 @@ impl ServiceCounters {
         for (slot, v) in self.coalesced_hist.iter_mut().zip(earlier.coalesced_hist) {
             *slot += v;
         }
+        self.engines = self.engines.max(earlier.engines);
+        self.steals += earlier.steals;
+        self.pool_dispatches += earlier.pool_dispatches;
+        self.pool_busy_sum += earlier.pool_busy_sum;
+        for (slot, v) in self.pool_hist.iter_mut().zip(earlier.pool_hist) {
+            *slot += v;
+        }
+        // Per-replica counters merge slot-by-slot: replica index is the
+        // deterministic sort order, so segment totals commute.
+        for (slot, v) in self.replica_calls.iter_mut().zip(earlier.replica_calls) {
+            *slot += v;
+        }
+        for (slot, v) in self.replica_rows.iter_mut().zip(earlier.replica_rows) {
+            *slot += v;
+        }
+        for (slot, v) in self.replica_installs.iter_mut().zip(earlier.replica_installs) {
+            *slot += v;
+        }
+        for (slot, v) in self.replica_steals.iter_mut().zip(earlier.replica_steals) {
+            *slot += v;
+        }
+        // Versions are gauges: the highest ever installed per slot wins.
+        for (slot, v) in self.replica_weight_version.iter_mut().zip(earlier.replica_weight_version)
+        {
+            *slot = (*slot).max(v);
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -471,16 +540,42 @@ impl ServiceCounters {
                 "coalesced_hist",
                 Json::arr(self.coalesced_hist.iter().map(|c| Json::num(*c as f64))),
             ),
+            ("engines", Json::num(self.engines as f64)),
+            ("steals", Json::num(self.steals as f64)),
+            ("pool_dispatches", Json::num(self.pool_dispatches as f64)),
+            ("pool_busy_sum", Json::num(self.pool_busy_sum as f64)),
+            ("pool_balance", Json::num(self.pool_balance())),
+            ("pool_hist", Json::arr(self.pool_hist.iter().map(|c| Json::num(*c as f64)))),
+            (
+                "replica_calls",
+                Json::arr(self.replica_calls.iter().map(|c| Json::num(*c as f64))),
+            ),
+            ("replica_rows", Json::arr(self.replica_rows.iter().map(|c| Json::num(*c as f64)))),
+            (
+                "replica_installs",
+                Json::arr(self.replica_installs.iter().map(|c| Json::num(*c as f64))),
+            ),
+            (
+                "replica_steals",
+                Json::arr(self.replica_steals.iter().map(|c| Json::num(*c as f64))),
+            ),
+            (
+                "replica_weight_version",
+                Json::arr(self.replica_weight_version.iter().map(|c| Json::num(*c as f64))),
+            ),
         ])
     }
 
     pub fn from_json(j: &Json) -> ServiceCounters {
         let f = |k: &str| j.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
-        let mut hist = [0u64; 6];
-        if let Some(arr) = j.get("coalesced_hist").and_then(|x| x.as_arr()) {
-            for (slot, v) in hist.iter_mut().zip(arr) {
-                *slot = v.as_f64().unwrap_or(0.0) as u64;
+        fn u64s<const N: usize>(j: &Json, k: &str) -> [u64; N] {
+            let mut out = [0u64; N];
+            if let Some(arr) = j.get(k).and_then(|x| x.as_arr()) {
+                for (slot, v) in out.iter_mut().zip(arr) {
+                    *slot = v.as_f64().unwrap_or(0.0) as u64;
+                }
             }
+            out
         }
         ServiceCounters {
             calls: f("calls") as u64,
@@ -493,7 +588,17 @@ impl ServiceCounters {
             deadline_dispatches: f("deadline_dispatches") as u64,
             split_calls: f("split_calls") as u64,
             ewma_gap_s: f("ewma_gap_s"),
-            coalesced_hist: hist,
+            coalesced_hist: u64s(j, "coalesced_hist"),
+            engines: f("engines") as u64,
+            steals: f("steals") as u64,
+            pool_dispatches: f("pool_dispatches") as u64,
+            pool_busy_sum: f("pool_busy_sum") as u64,
+            pool_hist: u64s(j, "pool_hist"),
+            replica_calls: u64s(j, "replica_calls"),
+            replica_rows: u64s(j, "replica_rows"),
+            replica_installs: u64s(j, "replica_installs"),
+            replica_steals: u64s(j, "replica_steals"),
+            replica_weight_version: u64s(j, "replica_weight_version"),
         }
     }
 }
@@ -545,6 +650,10 @@ pub struct StepRecord {
     /// Mean submission-to-execution wait of THIS step's submissions,
     /// seconds (0 when none landed in the step).
     pub service_queue_wait_s: f64,
+    /// Mean busy-replica fraction over THIS step's pool dispatches (delta
+    /// between step snapshots; 0 without a service or with E=1's lone
+    /// replica idle at dispatch — see [`ServiceCounters::pool_balance`]).
+    pub pool_balance: f64,
     /// Rollouts generated so far (cumulative; the x-axis of the
     /// fixed-vs-adaptive allocation comparison).
     pub rollouts: u64,
@@ -578,6 +687,7 @@ impl StepRecord {
             ("service_calls", Json::num(self.service_calls as f64)),
             ("service_fill", Json::num(self.service_fill)),
             ("service_queue_wait_s", Json::num(self.service_queue_wait_s)),
+            ("pool_balance", Json::num(self.pool_balance)),
             ("rollouts", Json::num(self.rollouts as f64)),
             ("step_alloc_rows", Json::num(self.step_alloc_rows as f64)),
             ("alloc_calibration", Json::num(self.alloc_calibration)),
@@ -764,6 +874,7 @@ mod tests {
             split_calls: 2,
             ewma_gap_s: 0.003,
             coalesced_hist: [1, 0, 1, 2, 0, 0],
+            ..Default::default()
         };
         assert!((c.mean_fill() - 0.75).abs() < 1e-12);
         assert!((c.mean_queue_wait_s() - 0.05).abs() < 1e-12);
@@ -804,6 +915,7 @@ mod tests {
             split_calls: 1,
             ewma_gap_s: 0.004,
             coalesced_hist: [1, 0, 1, 2, 0, 0],
+            ..Default::default()
         };
         let mut newer = ServiceCounters {
             calls: 2,
@@ -832,6 +944,73 @@ mod tests {
         let mut idle = ServiceCounters::default();
         idle.merge(&earlier);
         assert!((idle.ewma_gap_s - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_counters_roundtrip_and_merge_in_replica_order() {
+        let a = ServiceCounters {
+            engines: 2,
+            steals: 3,
+            pool_dispatches: 10,
+            pool_busy_sum: 6,
+            pool_hist: [4, 6, 0, 0, 0, 0],
+            replica_calls: [6, 4, 0, 0, 0, 0, 0, 0],
+            replica_rows: [60, 40, 0, 0, 0, 0, 0, 0],
+            replica_installs: [5, 5, 0, 0, 0, 0, 0, 0],
+            replica_steals: [1, 2, 0, 0, 0, 0, 0, 0],
+            replica_weight_version: [5, 4, 0, 0, 0, 0, 0, 0],
+            ..Default::default()
+        };
+        // busy fraction: 6 busy-replica observations over 10 dispatches x 2
+        assert!((a.pool_balance() - 0.3).abs() < 1e-12);
+        assert_eq!(ServiceCounters::default().pool_balance(), 0.0);
+        let parsed = crate::util::json::Json::parse(&a.to_json().to_string()).unwrap();
+        let back = ServiceCounters::from_json(&parsed);
+        assert_eq!(back.engines, 2);
+        assert_eq!(back.steals, 3);
+        assert_eq!(back.pool_dispatches, 10);
+        assert_eq!(back.pool_busy_sum, 6);
+        assert_eq!(back.pool_hist, a.pool_hist);
+        assert_eq!(back.replica_calls, a.replica_calls);
+        assert_eq!(back.replica_rows, a.replica_rows);
+        assert_eq!(back.replica_installs, a.replica_installs);
+        assert_eq!(back.replica_steals, a.replica_steals);
+        assert_eq!(back.replica_weight_version, a.replica_weight_version);
+
+        // Merging two segments' pool counters: per-replica slots sum
+        // index-by-index (replica index = the sorted merge order), version
+        // gauges take the per-slot max — and the result is the same
+        // whichever segment folds into which, so resumed pool runs report
+        // stable totals.
+        let b = ServiceCounters {
+            engines: 2,
+            steals: 1,
+            pool_dispatches: 4,
+            pool_busy_sum: 4,
+            pool_hist: [0, 4, 0, 0, 0, 0],
+            replica_calls: [2, 7, 0, 0, 0, 0, 0, 0],
+            replica_rows: [20, 70, 0, 0, 0, 0, 0, 0],
+            replica_installs: [3, 3, 0, 0, 0, 0, 0, 0],
+            replica_steals: [0, 1, 0, 0, 0, 0, 0, 0],
+            replica_weight_version: [9, 3, 0, 0, 0, 0, 0, 0],
+            ..Default::default()
+        };
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab.replica_calls, [8, 11, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(ab.replica_calls, ba.replica_calls);
+        assert_eq!(ab.replica_rows, ba.replica_rows);
+        assert_eq!(ab.replica_installs, [8, 8, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(ab.replica_steals, ba.replica_steals);
+        assert_eq!(ab.replica_weight_version, [9, 4, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(ab.replica_weight_version, ba.replica_weight_version);
+        assert_eq!(ab.engines, 2);
+        assert_eq!(ab.steals, 4);
+        assert_eq!(ab.pool_dispatches, 14);
+        assert_eq!(ab.pool_hist, ba.pool_hist);
+        assert!((ab.pool_balance() - 10.0 / 28.0).abs() < 1e-12);
     }
 
     #[test]

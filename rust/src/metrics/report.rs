@@ -32,6 +32,7 @@ pub fn step_metric(metric: &str) -> Option<fn(&StepRecord) -> f64> {
         "skip-rate" => Some(|s: &StepRecord| s.step_skip_rate),
         "explore-rate" => Some(|s: &StepRecord| s.step_explore_rate),
         "service-fill" => Some(|s: &StepRecord| s.service_fill),
+        "pool-balance" => Some(|s: &StepRecord| s.pool_balance),
         "staleness" => Some(|s: &StepRecord| s.mean_staleness),
         "alloc-rows" => Some(|s: &StepRecord| s.step_alloc_rows as f64),
         "alloc-calibration" => Some(|s: &StepRecord| s.alloc_calibration),
@@ -49,8 +50,8 @@ pub fn step_chart(
     let f = step_metric(metric).ok_or_else(|| {
         anyhow::anyhow!(
             "unknown per-step metric '{metric}' (valid: skip-rate, explore-rate, \
-             service-fill, staleness, alloc-rows, alloc-calibration; eval curves use \
-             the default accuracy mode)"
+             service-fill, pool-balance, staleness, alloc-rows, alloc-calibration; \
+             eval curves use the default accuracy mode)"
         )
     })?;
     let curves: Vec<(&str, Vec<(f64, f64)>)> = records
@@ -180,6 +181,7 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 service_calls: f("service_calls") as u64,
                 service_fill: f("service_fill"),
                 service_queue_wait_s: f("service_queue_wait_s"),
+                pool_balance: f("pool_balance"),
                 rollouts: f("rollouts") as u64,
                 step_alloc_rows: f("step_alloc_rows") as u64,
                 alloc_calibration: f("alloc_calibration"),
@@ -276,6 +278,7 @@ mod tests {
             service_calls: 4,
             service_fill: 0.8,
             service_queue_wait_s: 0.002,
+            pool_balance: 0.4,
             rollouts: 768,
             step_alloc_rows: 96,
             alloc_calibration: 0.02,
@@ -293,6 +296,7 @@ mod tests {
         assert!((s.step_explore_rate - 0.1).abs() < 1e-12);
         assert_eq!(s.service_calls, 4);
         assert!((s.service_fill - 0.8).abs() < 1e-12);
+        assert!((s.pool_balance - 0.4).abs() < 1e-12);
         assert_eq!(s.rollouts, 768);
         assert_eq!(s.step_alloc_rows, 96);
         assert!((s.alloc_calibration - 0.02).abs() < 1e-12);
@@ -379,6 +383,7 @@ mod tests {
                 service_calls: 0,
                 service_fill: 0.0,
                 service_queue_wait_s: 0.0,
+                pool_balance: 0.0,
                 rollouts: 0,
                 step_alloc_rows: 0,
                 alloc_calibration: 0.0,

@@ -14,10 +14,11 @@
 //! * [`ForkEngine`]    — replication of the inference side into independent
 //!   engines, one per rollout worker (simulator substrate only; the real
 //!   substrate has a single compiled engine).
-//! * [`service`]       — the shared inference service: ONE engine behind a
-//!   submission queue whose scheduler coalesces generation requests across
-//!   workers into maximally-packed calls (handles implement
-//!   [`RolloutEngine`], so workers run unchanged).
+//! * [`service`]       — the shared inference service: a pool of E
+//!   data-parallel engine replicas behind one submission queue whose
+//!   router coalesces generation requests across workers into
+//!   maximally-packed calls and packs them onto the least-loaded replica
+//!   (handles implement [`RolloutEngine`], so workers run unchanged).
 
 pub mod real;
 pub mod sampler;

@@ -1,6 +1,6 @@
-//! The shared inference service: ONE real engine behind a submission
-//! queue, coalescing generation requests *across* rollout workers into
-//! maximally-packed calls (DESIGN.md §8).
+//! The shared inference service: a pool of E data-parallel engine replicas
+//! behind ONE submission queue, coalescing generation requests *across*
+//! rollout workers into maximally-packed calls (DESIGN.md §8, §11).
 //!
 //! The pipelined coordinator's original design forks a private engine per
 //! worker, so each of the K workers issues its own lightly-filled
@@ -9,32 +9,43 @@
 //! one worker (paper §4.3). This module applies the same idea one level up:
 //!
 //! ```text
-//!   worker 0 ──submit──┐
-//!   worker 1 ──submit──┤   queue    ┌──────────┐  one generate()  engine
-//!   worker K ──submit──┼──────────▶ │ scheduler│ ───────────────▶ (the only
-//!     ...              │ (deadline/ │  thread  │ ◀─── results ─── real one)
-//!   Ticket::wait ◀─fan-out─waterline)└──────────┘
+//!   worker 0 ──submit──┐                           ┌─▶ replica 0 (engine)
+//!   worker 1 ──submit──┤   queue    ┌──────────┐   ├─▶ replica 1 (engine)
+//!   worker K ──submit──┼──────────▶ │  router  │ ──┤      ...
+//!     ...              │ (deadline/ │  thread  │   └─▶ replica E-1
+//!   Ticket::wait ◀─fan-out─waterline)└──────────┘   (least-loaded dispatch
+//!                                                    + work-stealing)
 //! ```
 //!
 //! * [`SubmitHandle`] — the cheap per-worker handle. It *is* a
 //!   [`RolloutEngine`], so workers and curricula run unchanged; `generate`
 //!   becomes submit + block on the [`Ticket`]. The advertised
-//!   `rollout_capacity` is the submit quantum (engine capacity / K), so K
-//!   workers' plans coalesce into one full call.
-//! * scheduler — drains the queue; waits up to `coalesce_wait_ms` for the
-//!   fill waterline, then merges the leading submissions that fit the
-//!   engine's capacity into ONE call (the engine itself still picks its
-//!   smallest compiled row variant, as in `RealPolicy::rollout_call`),
-//!   executes, and fans the per-request groups back out per ticket. The
-//!   deadline guarantees no ticket ever starves waiting for co-travelers.
-//! * weights — handles dedupe installs by version: however many workers
-//!   notice a new snapshot, the engine installs it once, and installs jump
-//!   the queue so the next call serves the freshest published weights.
+//!   `rollout_capacity` is the submit quantum (capacity x E / K), so K
+//!   workers' plans coalesce into full calls that keep E replicas fed.
+//! * router — drains the queue; waits up to `coalesce_wait_ms` for the
+//!   fill waterline, then merges the leading submissions that fit one
+//!   replica's capacity into ONE coalesced plan and packs it onto the
+//!   least-loaded replica (by in-flight + queued rollout rows, lowest
+//!   index on ties). The deadline guarantees no ticket ever starves
+//!   waiting for co-travelers.
+//! * replicas — each owns one engine (fork stream r) and executes its
+//!   queue FIFO; a drained replica *steals* the oldest plan from the most
+//!   backlogged busy peer instead of idling (idle peers pop their own
+//!   queues, so routing stays deterministic when only one plan is ever in
+//!   flight).
+//! * weights — handles dedupe installs by version; the router publishes
+//!   each announced snapshot once and every replica installs it lazily
+//!   before its next plan (and eagerly while idle), so a replica mid-call
+//!   keeps serving its old version but never serves one newer than
+//!   announced. Per-replica installed versions are surfaced in
+//!   [`ServiceCounters::replica_weight_version`]; the existing buffer
+//!   staleness telemetry bounds the lag.
 //!
 //! Inference cost is apportioned to tickets by row share (the last ticket
 //! takes the exact remainder), so per-worker `InferenceCounters` still sum
-//! to the true engine cost. With a single producer the scheduler dispatches
-//! immediately and every call carries exactly one submission, which is what
+//! to the true engine cost. With a single producer the router dispatches
+//! immediately, every call carries exactly one submission, and E=1 routes
+//! every plan to replica 0 (fork stream 0) in FIFO order — which is what
 //! makes the serial-through-service path ([`ServicedPolicy`]) reproduce the
 //! plain serial `RunRecord` bit for bit (`rust/tests/service_sim.rs`).
 
@@ -46,7 +57,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::data::tasks::TaskInstance;
-use crate::metrics::ServiceCounters;
+use crate::metrics::{ServiceCounters, MAX_POOL};
 use crate::policy::{
     EvalResult, GenRequest, GenResult, RolloutEngine, TrainResult, Trainable, WeightSnapshot,
 };
@@ -108,6 +119,53 @@ struct Shared {
     /// handles report as `serving_version`, deduping K workers' installs.
     version: AtomicU64,
     stats: Mutex<ServiceCounters>,
+}
+
+/// One routed unit of work: the router's coalescing decisions are already
+/// made (which submissions travel together, call vs split), so replicas
+/// only execute.
+enum Plan {
+    /// A coalesced call: `subs` fit one replica's capacity together.
+    Call { subs: Vec<GenWork>, rows_total: usize, deadline_fired: bool },
+    /// One oversized submission, executed as successive chunked calls.
+    Split(GenWork),
+    /// An evaluation pass (0 rollout rows for load accounting).
+    Eval { tasks: Vec<TaskInstance>, tx: mpsc::Sender<Result<EvalResult>> },
+}
+
+/// Rollout rows a plan will occupy on its replica (the load metric for
+/// least-loaded dispatch; evaluation is excluded from fill accounting).
+fn plan_rows(plan: &Plan) -> usize {
+    match plan {
+        Plan::Call { rows_total, .. } => *rows_total,
+        Plan::Split(g) => g.rows,
+        Plan::Eval { .. } => 0,
+    }
+}
+
+/// Shared pool state: one mutex + condvar across all E replicas (E <=
+/// [`MAX_POOL`], so contention is negligible and least-loaded dispatch,
+/// stealing, and snapshot publication are race-free against each other).
+struct PoolState {
+    /// Per-replica FIFO plan queues (the router pushes, replicas pop).
+    queues: Vec<VecDeque<Plan>>,
+    /// Rollout rows queued but not yet started, per replica.
+    queued_rows: Vec<usize>,
+    /// Rollout rows currently executing, per replica.
+    inflight_rows: Vec<usize>,
+    /// Version each replica has installed (or reserved for install).
+    installed: Vec<u64>,
+    /// Newest published snapshot; replicas install it lazily before their
+    /// next plan and eagerly while idle. A replica mid-call keeps serving
+    /// its old version, never one newer than announced.
+    snap: WeightSnapshot,
+    closed: bool,
+}
+
+struct Pool {
+    engines: usize,
+    state: Mutex<PoolState>,
+    ready: Condvar,
 }
 
 /// A pending reply for one submission. `wait` blocks until the scheduler
@@ -205,8 +263,9 @@ impl RolloutEngine for SubmitHandle {
     }
 }
 
-/// The service: owns the scheduler thread that owns the one real engine.
-/// Dropping it closes the queue and joins the scheduler.
+/// The service: owns the router thread, which in turn owns one worker
+/// thread per engine replica. Dropping it closes the queue and joins the
+/// router (which joins the replicas).
 pub struct InferenceService {
     shared: Arc<Shared>,
     thread: Option<std::thread::JoinHandle<()>>,
@@ -216,32 +275,83 @@ pub struct InferenceService {
 }
 
 impl InferenceService {
-    /// Spawn the scheduler around `engine`. `producers` is the number of
-    /// workers that will hold handles (sets the submit quantum);
-    /// `min_quantum` floors the quantum so one full screening/continuation
-    /// group always fits a single submission (pass the allocator's
-    /// `max_n_total` — the largest budget a prompt can be issued).
+    /// Single-engine service: `spawn_pool` with E = 1 (the historical
+    /// entry point; every plan lands on replica 0 in FIFO order).
     pub fn spawn(
         engine: Box<dyn RolloutEngine + Send>,
         cfg: ServiceConfig,
         producers: usize,
         min_quantum: usize,
     ) -> InferenceService {
-        let capacity = engine.rollout_capacity();
-        let quantum = (capacity / producers.max(1)).max(min_quantum).clamp(1, capacity.max(1));
-        let gen_len = engine.gen_len();
-        let label = engine.name().to_string();
+        Self::spawn_pool(vec![engine], cfg, producers, min_quantum)
+    }
+
+    /// Spawn the router around a pool of E data-parallel replicas (forks of
+    /// one policy: same capacity, gen_len, and serving version).
+    /// `producers` is the number of workers that will hold handles (sets
+    /// the submit quantum, scaled by E since E replicas execute
+    /// concurrently); `min_quantum` floors the quantum so one full
+    /// screening/continuation group always fits a single submission (pass
+    /// the allocator's `max_n_total` — the largest budget a prompt can be
+    /// issued).
+    pub fn spawn_pool(
+        engines: Vec<Box<dyn RolloutEngine + Send>>,
+        cfg: ServiceConfig,
+        producers: usize,
+        min_quantum: usize,
+    ) -> InferenceService {
+        assert!(
+            !engines.is_empty() && engines.len() <= MAX_POOL,
+            "engine pool size must be 1..={MAX_POOL}, got {}",
+            engines.len()
+        );
+        let e = engines.len();
+        let capacity = engines[0].rollout_capacity();
+        let quantum =
+            (capacity * e / producers.max(1)).max(min_quantum).clamp(1, capacity.max(1));
+        let gen_len = engines[0].gen_len();
+        let label = engines[0].name().to_string();
+        let installed: Vec<u64> = engines.iter().map(|en| en.serving_version()).collect();
+        let version = installed[0];
+        let mut stats = ServiceCounters { engines: e as u64, ..Default::default() };
+        for (r, v) in installed.iter().enumerate() {
+            stats.replica_weight_version[r] = *v;
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(ServiceQueue::default()),
             work_ready: Condvar::new(),
-            version: AtomicU64::new(engine.serving_version()),
-            stats: Mutex::new(ServiceCounters::default()),
+            version: AtomicU64::new(version),
+            stats: Mutex::new(stats),
         });
+        let pool = Arc::new(Pool {
+            engines: e,
+            state: Mutex::new(PoolState {
+                queues: (0..e).map(|_| VecDeque::new()).collect(),
+                queued_rows: vec![0; e],
+                inflight_rows: vec![0; e],
+                installed,
+                snap: WeightSnapshot { version, values: Vec::new() },
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        });
+        let replicas: Vec<std::thread::JoinHandle<()>> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(r, engine)| {
+                let pool = Arc::clone(&pool);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("speedrl-engine-{r}"))
+                    .spawn(move || replica_loop(r, engine, pool, shared))
+                    .expect("spawn engine replica")
+            })
+            .collect();
         let thread = {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("speedrl-inference-service".to_string())
-                .spawn(move || scheduler(engine, shared, cfg, producers))
+                .spawn(move || scheduler(pool, replicas, capacity, shared, cfg, producers))
                 .expect("spawn inference-service scheduler")
         };
         InferenceService { shared, thread: Some(thread), quantum, gen_len, label }
@@ -302,15 +412,140 @@ fn leading_rows(q: &VecDeque<Work>) -> usize {
     rows
 }
 
-/// The scheduler loop: install → evaluate → coalesce-and-generate, until
-/// the queue is closed and drained.
-fn scheduler(
+/// Route one coalesced plan onto the least-loaded replica (queued +
+/// in-flight rollout rows, lowest index on ties). With E=1 every plan
+/// lands on replica 0 in FIFO order — the serial bit-for-bit rail. The
+/// busy-replica count *before* this assignment feeds the pool-balance
+/// histogram.
+fn dispatch(pool: &Pool, shared: &Shared, plan: Plan) {
+    let rows = plan_rows(&plan);
+    let busy = {
+        let mut ps = pool.state.lock().unwrap();
+        let busy = (0..pool.engines)
+            .filter(|&i| ps.queued_rows[i] + ps.inflight_rows[i] > 0 || !ps.queues[i].is_empty())
+            .count();
+        let r = (0..pool.engines)
+            .min_by_key(|&i| (ps.queued_rows[i] + ps.inflight_rows[i], i))
+            .expect("pool has at least one replica");
+        ps.queued_rows[r] += rows;
+        ps.queues[r].push_back(plan);
+        busy
+    };
+    pool.ready.notify_all();
+    let mut stats = shared.stats.lock().unwrap();
+    stats.pool_dispatches += 1;
+    stats.pool_busy_sum += busy as u64;
+    stats.pool_hist[busy.min(stats.pool_hist.len() - 1)] += 1;
+}
+
+/// Close the pool and join every replica (run by the router on shutdown;
+/// replicas drain their queues — and each other's — before exiting, so
+/// already-dispatched tickets are still served).
+fn shutdown_pool(pool: &Pool, replicas: Vec<std::thread::JoinHandle<()>>) {
+    pool.state.lock().unwrap().closed = true;
+    pool.ready.notify_all();
+    for h in replicas {
+        let _ = h.join();
+    }
+}
+
+/// One replica worker: install published snapshots (lazily before every
+/// plan, eagerly while idle), execute its own queue FIFO, steal the oldest
+/// plan from the most backlogged peer when drained, and exit once the pool
+/// is closed with nothing left anywhere.
+fn replica_loop(
+    r: usize,
     mut engine: Box<dyn RolloutEngine + Send>,
+    pool: Arc<Pool>,
+    shared: Arc<Shared>,
+) {
+    let capacity = engine.rollout_capacity();
+    loop {
+        let mut plan: Option<(Plan, usize)> = None;
+        let mut install: Option<WeightSnapshot> = None;
+        {
+            let mut ps = pool.state.lock().unwrap();
+            loop {
+                // Install first: a replica never starts a plan with a
+                // newer announced snapshot uninstalled (the reservation of
+                // `installed[r]` under the lock makes the install
+                // exactly-once per version per replica).
+                if ps.installed[r] < ps.snap.version {
+                    ps.installed[r] = ps.snap.version;
+                    install = Some(ps.snap.clone());
+                    break;
+                }
+                if let Some(p) = ps.queues[r].pop_front() {
+                    let rows = plan_rows(&p);
+                    ps.queued_rows[r] -= rows;
+                    ps.inflight_rows[r] += rows;
+                    plan = Some((p, rows));
+                    break;
+                }
+                // Work-stealing: drained, so pull the oldest plan from the
+                // most backlogged peer (lowest index on row ties) instead
+                // of idling. Only BUSY peers are victims: an idle peer is
+                // about to pop its own queue anyway, and racing it would
+                // make single-producer routing nondeterministic (the E=1
+                // and one-producer rails dispatch to idle replicas only).
+                let victim = (0..pool.engines)
+                    .filter(|&i| {
+                        i != r && !ps.queues[i].is_empty() && ps.inflight_rows[i] > 0
+                    })
+                    .max_by_key(|&i| (ps.queued_rows[i], std::cmp::Reverse(i)));
+                if let Some(v) = victim {
+                    let p = ps.queues[v].pop_front().expect("victim queue checked non-empty");
+                    let rows = plan_rows(&p);
+                    ps.queued_rows[v] -= rows;
+                    ps.inflight_rows[r] += rows;
+                    plan = Some((p, rows));
+                    let mut stats = shared.stats.lock().unwrap();
+                    stats.steals += 1;
+                    stats.replica_steals[r] += 1;
+                    break;
+                }
+                if ps.closed {
+                    return;
+                }
+                ps = pool.ready.wait(ps).unwrap();
+            }
+        }
+        if let Some(snap) = install {
+            engine.install(&snap);
+            let mut stats = shared.stats.lock().unwrap();
+            stats.installs += 1;
+            stats.replica_installs[r] += 1;
+            stats.replica_weight_version[r] = snap.version;
+            continue;
+        }
+        let (p, rows) = plan.expect("no install, so a plan was taken");
+        match p {
+            Plan::Call { subs, rows_total, deadline_fired } => {
+                execute_call(&mut *engine, subs, rows_total, capacity, deadline_fired, &shared, r)
+            }
+            Plan::Split(g) => execute_split(&mut *engine, g, capacity, &shared, r),
+            Plan::Eval { tasks, tx } => {
+                let _ = tx.send(engine.evaluate(&tasks));
+            }
+        }
+        pool.state.lock().unwrap().inflight_rows[r] -= rows;
+        // A peer blocked in `dispatch`-order terms doesn't exist (the
+        // router never blocks on replicas), but idle peers wake to steal
+        // and the router's load view updates on its next lock.
+        pool.ready.notify_all();
+    }
+}
+
+/// The router loop: install → evaluate → coalesce-and-dispatch, until the
+/// queue is closed and drained; then close the pool and join the replicas.
+fn scheduler(
+    pool: Arc<Pool>,
+    replicas: Vec<std::thread::JoinHandle<()>>,
+    capacity: usize,
     shared: Arc<Shared>,
     cfg: ServiceConfig,
     producers: usize,
 ) {
-    let capacity = engine.rollout_capacity();
     let waterline_rows =
         ((capacity as f64 * cfg.fill_waterline).ceil() as usize).clamp(1, capacity);
     let base_wait_s = cfg.coalesce_wait_ms as f64 / 1e3;
@@ -332,26 +567,36 @@ fn scheduler(
         // Phase 1: wait for any work at all.
         while guard.q.is_empty() && guard.pending_install.is_none() {
             if guard.closed {
+                drop(guard);
+                shutdown_pool(&pool, replicas);
                 return;
             }
             guard = shared.work_ready.wait(guard).unwrap();
         }
-        // Phase 2: installs jump the queue — once per published version,
-        // however many workers requested it.
+        // Phase 2: installs jump the queue — publish the snapshot once per
+        // version, however many workers requested it; every replica
+        // installs it before its next plan (the publish precedes any later
+        // dispatch, so a plan submitted after an install always runs under
+        // at least that version).
         if let Some(snap) = guard.pending_install.take() {
             drop(guard);
-            engine.install(&snap);
-            shared.stats.lock().unwrap().installs += 1;
+            {
+                let mut ps = pool.state.lock().unwrap();
+                if snap.version > ps.snap.version {
+                    ps.snap = snap;
+                }
+            }
+            pool.ready.notify_all();
             continue;
         }
-        // Phase 3: evaluation runs alone (greedy; excluded from fill
-        // accounting like the trainers exclude eval time).
+        // Phase 3: evaluation routes as its own plan (greedy; excluded
+        // from fill accounting like the trainers exclude eval time).
         if matches!(guard.q.front(), Some(Work::Evaluate { .. })) {
             let Some(Work::Evaluate { tasks, tx }) = guard.q.pop_front() else {
                 unreachable!("front checked above");
             };
             drop(guard);
-            let _ = tx.send(engine.evaluate(&tasks));
+            dispatch(&pool, &shared, Plan::Eval { tasks, tx });
             continue;
         }
         // Phase 4: micro-batch — wait for the waterline until the deadline.
@@ -426,10 +671,10 @@ fn scheduler(
         if rows_total > capacity {
             let g = subs.remove(0);
             debug_assert!(subs.is_empty(), "coalesced run cannot exceed capacity");
-            execute_split(&mut *engine, g, capacity, &shared);
+            dispatch(&pool, &shared, Plan::Split(g));
             continue;
         }
-        execute_call(&mut *engine, subs, rows_total, capacity, deadline_fired, &shared);
+        dispatch(&pool, &shared, Plan::Call { subs, rows_total, deadline_fired });
     }
 }
 
@@ -439,7 +684,13 @@ fn scheduler(
 /// single [`GenResult`] for the submission's ticket. Cost and row
 /// accounting sum over the chunks, so the ticket still pays the true
 /// engine bill (including the extra per-call overheads the split costs).
-fn execute_split(engine: &mut dyn RolloutEngine, g: GenWork, capacity: usize, shared: &Shared) {
+fn execute_split(
+    engine: &mut dyn RolloutEngine,
+    g: GenWork,
+    capacity: usize,
+    shared: &Shared,
+    replica: usize,
+) {
     // A single request that alone exceeds capacity can never execute.
     if let Some(req) = g.requests.iter().find(|r| r.n_samples > capacity) {
         let _ = g.tx.send(Err(anyhow!(
@@ -486,6 +737,8 @@ fn execute_split(engine: &mut dyn RolloutEngine, g: GenWork, capacity: usize, sh
             stats.rows_capacity += capacity as u64;
             stats.max_call_rows = stats.max_call_rows.max(chunk_rows as u64);
             stats.coalesced_hist[ServiceCounters::hist_bucket(1)] += 1;
+            stats.replica_calls[replica] += 1;
+            stats.replica_rows[replica] += chunk_rows as u64;
         }
         match result {
             Ok(res) => {
@@ -515,6 +768,7 @@ fn execute_call(
     capacity: usize,
     deadline_fired: bool,
     shared: &Shared,
+    replica: usize,
 ) {
     let temperature = subs[0].temperature;
     // Drain, don't clone: the submissions are owned and only their request
@@ -541,6 +795,8 @@ fn execute_call(
         stats.rows_capacity += capacity as u64;
         stats.max_call_rows = stats.max_call_rows.max(rows_total as u64);
         stats.coalesced_hist[ServiceCounters::hist_bucket(subs.len())] += 1;
+        stats.replica_calls[replica] += 1;
+        stats.replica_rows[replica] += rows_total as u64;
         if deadline_fired {
             stats.deadline_dispatches += 1;
         }
@@ -647,6 +903,35 @@ impl<P: Trainable> Trainable for ServicedPolicy<'_, P> {
     fn snapshot(&self) -> WeightSnapshot {
         self.learner.snapshot()
     }
+
+    // Warm-resume persistence delegates to the learner — the service owns
+    // no run state of its own. After restoring, re-publish the snapshot:
+    // the replica engines were forked from the pre-restore learner and
+    // must serve the restored weights for the next collect.
+
+    fn state_json(&self) -> Option<crate::util::json::Json> {
+        self.learner.state_json()
+    }
+
+    fn restore_state_json(&mut self, state: &crate::util::json::Json) -> Result<()> {
+        self.learner.restore_state_json(state)?;
+        self.handle.install(&self.learner.snapshot());
+        Ok(())
+    }
+
+    fn save_params(&self, dir: &std::path::Path, tag: &str) -> Result<()> {
+        self.learner.save_params(dir, tag)
+    }
+
+    fn load_params(&mut self, dir: &std::path::Path, tag: &str) -> Result<()> {
+        self.learner.load_params(dir, tag)?;
+        self.handle.install(&self.learner.snapshot());
+        Ok(())
+    }
+
+    fn params_token(&self) -> Option<u64> {
+        self.learner.params_token()
+    }
 }
 
 #[cfg(test)]
@@ -659,17 +944,23 @@ mod tests {
 
     /// Deterministic engine: reward = 1.0 for every rollout, cost 1.0 per
     /// call + 0.1 per row; records per-call row counts and installs.
+    /// `delay_ms` simulates execution time (pool tests pace replicas with
+    /// it to make dispatch/steal interleavings deterministic).
     struct CountingEngine {
         capacity: usize,
         calls: Arc<Mutex<Vec<usize>>>,
         installs: Arc<AtomicUsize>,
         version: u64,
+        delay_ms: u64,
     }
 
     impl RolloutEngine for CountingEngine {
         fn generate(&mut self, requests: &[GenRequest], _t: f32) -> Result<GenResult> {
             let rows_used: usize = requests.iter().map(|r| r.n_samples).sum();
             anyhow::ensure!(rows_used <= self.capacity, "call exceeds capacity");
+            if self.delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.delay_ms));
+            }
             self.calls.lock().unwrap().push(rows_used);
             let groups = requests
                 .iter()
@@ -727,8 +1018,33 @@ mod tests {
             calls: Arc::clone(&calls),
             installs: Arc::clone(&installs),
             version: 0,
+            delay_ms: 0,
         };
         (Box::new(e), calls, installs)
+    }
+
+    type TestPool =
+        (Vec<Box<dyn RolloutEngine + Send>>, Arc<Mutex<Vec<usize>>>, Arc<AtomicUsize>);
+
+    /// A pool of replicas over shared call/install counters, one entry per
+    /// replica in `delays_ms` (its simulated execution time — pool tests
+    /// pace replicas unevenly to pin down dispatch/steal interleavings).
+    fn pool_engines(capacity: usize, delays_ms: &[u64]) -> TestPool {
+        let calls = Arc::new(Mutex::new(Vec::new()));
+        let installs = Arc::new(AtomicUsize::new(0));
+        let engines = delays_ms
+            .iter()
+            .map(|&delay_ms| {
+                Box::new(CountingEngine {
+                    capacity,
+                    calls: Arc::clone(&calls),
+                    installs: Arc::clone(&installs),
+                    version: 0,
+                    delay_ms,
+                }) as Box<dyn RolloutEngine + Send>
+            })
+            .collect();
+        (engines, calls, installs)
     }
 
     fn reqs(rng: &mut Rng, n_prompts: usize, n_samples: usize) -> Vec<GenRequest> {
@@ -898,5 +1214,133 @@ mod tests {
         // stays a sane non-negative duration.
         assert!(stats.ewma_gap_s >= 0.0);
         assert!(stats.ewma_gap_s < 10.0, "gap EWMA diverged: {}", stats.ewma_gap_s);
+    }
+
+    #[test]
+    fn pool_spreads_concurrent_calls_across_replicas() {
+        // Two slow replicas, two producers issuing full-capacity calls
+        // back to back: the second dispatch must see replica 0 loaded and
+        // pick replica 1 (least-loaded routing).
+        let (engines, calls, _) = pool_engines(16, &[30, 30]);
+        let cfg = ServiceConfig { coalesce_wait_ms: 50, fill_waterline: 1.0, adaptive: false };
+        let service = InferenceService::spawn_pool(engines, cfg, 2, 8);
+        // quantum scales with the pool: capacity x E / producers
+        assert_eq!(service.quantum(), 16);
+        let mut rng = Rng::new(11);
+        let t0 = service.handle().submit(reqs(&mut rng, 4, 4), 1.0);
+        let t1 = service.handle().submit(reqs(&mut rng, 4, 4), 1.0);
+        t0.wait().unwrap();
+        t1.wait().unwrap();
+        let stats = service.stats();
+        assert_eq!(stats.engines, 2);
+        assert_eq!(stats.calls, 2);
+        assert_eq!(calls.lock().unwrap().as_slice(), &[16, 16]);
+        assert_eq!(stats.replica_calls[0], 1, "first call on replica 0");
+        assert_eq!(stats.replica_calls[1], 1, "second call routed to the idle replica");
+        assert_eq!(stats.replica_rows[0], 16);
+        assert_eq!(stats.replica_rows[1], 16);
+        // Pool-balance telemetry: first dispatch saw 0 busy replicas, the
+        // second saw 1.
+        assert_eq!(stats.pool_dispatches, 2);
+        assert_eq!(stats.pool_hist[0], 1);
+        assert_eq!(stats.pool_hist[1], 1);
+        assert!((stats.pool_balance() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drained_replica_steals_queued_plans() {
+        // Replica 0 is 10x slower than replica 1. Three full-capacity
+        // submissions: s0 -> replica 0, s1 -> replica 1, s2 queues behind
+        // the slow replica 0 (load tie, lowest index). Replica 1 drains
+        // first and must steal s2 instead of idling.
+        let (engines, calls, _) = pool_engines(16, &[100, 10]);
+        let cfg = ServiceConfig { coalesce_wait_ms: 1, fill_waterline: 1.0, adaptive: false };
+        let service = InferenceService::spawn_pool(engines, cfg, 3, 8);
+        let mut rng = Rng::new(12);
+        let tickets: Vec<Ticket> =
+            (0..3).map(|_| service.handle().submit(reqs(&mut rng, 4, 4), 1.0)).collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().rows_used, 16);
+        }
+        let stats = service.stats();
+        assert_eq!(stats.calls, 3);
+        assert_eq!(calls.lock().unwrap().len(), 3);
+        assert_eq!(stats.steals, 1, "the drained replica must pull queued work");
+        assert_eq!(stats.replica_steals[1], 1);
+        assert_eq!(stats.replica_calls[0], 1, "slow replica served only its first plan");
+        assert_eq!(stats.replica_calls[1], 2, "fast replica served its own plan + the steal");
+        assert!(stats.pool_balance() > 0.0);
+    }
+
+    #[test]
+    fn work_stealing_preserves_each_producers_fifo_order() {
+        // One producer issues 20 distinguishable submissions (row counts
+        // cycle 1..=5) without waiting in between; two unevenly-paced
+        // replicas coalesce, dispatch, and steal underneath. Every ticket
+        // must still receive ITS OWN groups — sizes pair up exactly with
+        // the submission order, whatever replica executed it.
+        let (engines, _, _) = pool_engines(8, &[3, 0]);
+        let cfg = ServiceConfig { coalesce_wait_ms: 2, fill_waterline: 0.85, adaptive: false };
+        let service = InferenceService::spawn_pool(engines, cfg, 2, 4);
+        let mut rng = Rng::new(13);
+        let h = service.handle();
+        let submitted: Vec<(usize, Ticket)> = (0..20)
+            .map(|i| {
+                let n = (i % 5) + 1;
+                (n, h.submit(reqs(&mut rng, 1, n), 1.0))
+            })
+            .collect();
+        for (n, t) in submitted {
+            let res = t.wait().unwrap();
+            assert_eq!(res.rows_used, n, "ticket answered with another submission's rows");
+            assert_eq!(res.groups.len(), 1);
+            assert_eq!(res.groups[0].len(), n);
+        }
+        let stats = service.stats();
+        assert_eq!(stats.submissions, 20);
+        assert_eq!(stats.rows_used, 60, "sum of 4 cycles of 1+2+3+4+5");
+    }
+
+    #[test]
+    fn replica_never_serves_a_version_newer_than_announced() {
+        // Interleave installs of increasing versions with generates across
+        // an unevenly-paced E=2 pool. Installs jump the queue and publish
+        // before any later dispatch, and a replica installs lazily before
+        // executing — so every result carries exactly the version announced
+        // at submit time, and per-replica installed versions never exceed
+        // the announced version.
+        let (engines, _, installs) = pool_engines(16, &[5, 0]);
+        let service = InferenceService::spawn_pool(engines, ServiceConfig::default(), 2, 8);
+        let mut h = service.handle();
+        let mut rng = Rng::new(14);
+        for v in 1..=10u64 {
+            h.install(&WeightSnapshot { version: v, values: vec![] });
+            let t0 = h.submit(reqs(&mut rng, 1, 2), 1.0);
+            let t1 = h.submit(reqs(&mut rng, 1, 2), 1.0);
+            for t in [t0, t1] {
+                let res = t.wait().unwrap();
+                assert!(
+                    res.weight_version <= h.serving_version(),
+                    "replica served v{} > announced v{}",
+                    res.weight_version,
+                    h.serving_version()
+                );
+                assert_eq!(res.weight_version, v, "post-install generate must run under v{v}");
+            }
+        }
+        let stats = service.stats();
+        for r in 0..2 {
+            assert!(
+                stats.replica_weight_version[r] <= 10,
+                "replica {r} reports v{} beyond announced v10",
+                stats.replica_weight_version[r]
+            );
+        }
+        // Each replica installs each version at most once (idle replicas
+        // may batch-skip intermediate versions, executing replicas install
+        // lazily exactly once per version they serve).
+        let n = installs.load(Ordering::Relaxed) as u64;
+        assert!((10..=20).contains(&n), "unexpected install count {n}");
+        assert_eq!(stats.installs, n);
     }
 }

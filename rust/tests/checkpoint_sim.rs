@@ -16,6 +16,9 @@
 //! * **Pipelined continuation** — a resumed pipelined run continues step
 //!   indices, cumulative counters, and staleness accounting (pipelined
 //!   scheduling is nondeterministic, so the bit-exact rail is serial-only).
+//! * **Serviced continuation** — the serial `--service` path saves and
+//!   resumes through the same segmented runner, with the service counters
+//!   carried in the sidecar and merged exactly once on resume.
 
 use std::path::PathBuf;
 
@@ -226,6 +229,81 @@ fn warm_resume_issues_fewer_screening_rollouts_than_cold() {
         warm.counters.prompts_skipped,
         cold.counters.prompts_skipped
     );
+}
+
+#[test]
+fn serviced_serial_save_resume_continues_with_merged_service_counters() {
+    // The serial --service path threads through the same segmented runner
+    // as the plain serial path. Bit-equality with an uninterrupted serviced
+    // run is NOT the contract here: the resumed process forks fresh replica
+    // engines whose rollout RNG streams restart (engine-side state is not
+    // checkpointed), so the rails are continuity, resume determinism, and
+    // exactly-once merge of the service counters carried by the sidecar.
+    // E=1 and E=2 behave identically with one producer (pool degeneracy).
+    for engines in [1usize, 2] {
+        let n = 8;
+        let mut cfg = scenario(CurriculumKind::Speed, 19, n);
+        cfg.service = true;
+        cfg.engines = engines;
+        let dir = ck_dir(&format!("serviced-e{engines}"));
+        let spec = CheckpointSpec::new(&dir, "svc");
+        let io = CheckpointIo { resume: None, save: Some(spec.clone()), save_every: 0 };
+        let first = driver::run_sim_with(&cfg, &io).expect("serviced first half");
+        let first_svc = first.service.expect("serviced run must report service counters");
+        assert_eq!(first_svc.submissions, first_svc.calls, "serial: one submission per call");
+        assert_eq!(first_svc.engines, engines as u64);
+
+        // The sidecar record carries the service counters, so a resumed
+        // process reports run totals instead of restarting them at zero.
+        let saved = RunState::load(&dir, "svc").expect("sidecar");
+        assert_eq!(saved.step, n);
+        let saved_svc = saved.record.service.expect("sidecar must carry service counters");
+        assert_eq!(saved_svc.calls, first_svc.calls);
+        assert_eq!(saved_svc.replica_calls, first_svc.replica_calls);
+
+        cfg.max_steps = 2 * n;
+        let io = CheckpointIo { resume: Some(spec), save: None, save_every: 0 };
+        let resumed = driver::run_sim_with(&cfg, &io).expect("serviced resume");
+        let resumed_again = driver::run_sim_with(&cfg, &io).expect("serviced resume, twice");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Continuity: the full step range on top of the restored record.
+        assert_eq!(resumed.steps.len(), 2 * n);
+        for (i, s) in resumed.steps.iter().enumerate() {
+            assert_eq!(s.step, i, "step indices must be contiguous");
+        }
+
+        // Exactly-once merge: totals are first half + resumed half, still
+        // obeying the serial one-submission-per-call accounting, and the
+        // per-replica arrays fold slot-by-slot (replica 0 serves the whole
+        // single-producer stream at any pool size).
+        let svc = resumed.service.expect("resumed service counters");
+        assert_eq!(svc.submissions, svc.calls);
+        assert!(svc.calls > first_svc.calls, "resumed half must add calls");
+        assert_eq!(svc.calls, resumed.counters.calls, "merged totals track worker counters");
+        assert_eq!(svc.rows_used, resumed.counters.rows_used);
+        assert_eq!(svc.replica_calls[0], svc.calls);
+        assert_eq!(svc.replica_calls[1..].iter().sum::<u64>(), 0);
+        if engines == 1 {
+            // n installs per half (flushed by the final-step eval) plus the
+            // resume's own weight re-publish after load_params.
+            assert_eq!(svc.installs, 2 * n as u64 + 1);
+        }
+
+        // Resume determinism: running the same resume twice reproduces the
+        // record exactly. Only `record.service` carries wall-clock fields
+        // (queue wait, gap EWMA), so it is stripped before comparing.
+        let strip = |mut r: RunRecord| {
+            r.service = None;
+            r.to_json().to_string_pretty()
+        };
+        assert_eq!(
+            resumed_again.service.expect("second resume counters").calls,
+            svc.calls,
+            "resumed call stream must be deterministic"
+        );
+        assert_eq!(strip(resumed), strip(resumed_again), "resume must be deterministic");
+    }
 }
 
 #[test]

@@ -1,0 +1,193 @@
+//! Integration: the engine pool behind the shared inference service on the
+//! SimPolicy substrate (DESIGN.md §11).
+//!
+//! Three rails:
+//! * pool degeneracy — with one producer, an E=2 pool reproduces the plain
+//!   serial `RunRecord` bit for bit: the blocked producer means at most one
+//!   plan is ever in flight, and the least-loaded tie-break always picks
+//!   replica 0, so replica 1 never serves a row;
+//! * starvation safety at E=2 — the unreachable-waterline scenario from
+//!   `service_sim.rs` still completes when the plans fan out over two
+//!   replicas (the deadline dispatch and work-stealing must not deadlock);
+//! * per-replica accounting — replica counters partition the pool totals.
+
+use speed_rl::config::RunConfig;
+use speed_rl::coordinator::curriculum::{CurriculumKind, CurriculumSpec};
+use speed_rl::coordinator::pipeline::{PipelineConfig, PipelinedTrainer};
+use speed_rl::coordinator::screening::ScreeningRule;
+use speed_rl::coordinator::trainer::TrainerConfig;
+use speed_rl::data::dataset::{Dataset, DatasetKind};
+use speed_rl::driver;
+use speed_rl::eval::benchmark_suite;
+use speed_rl::policy::service::ServiceConfig;
+use speed_rl::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
+use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
+
+#[test]
+fn one_producer_e2_pool_reproduces_serial_runrecord_bit_for_bit() {
+    let mut cfg = RunConfig::default();
+    cfg.max_steps = 15;
+    cfg.eval_every = 5;
+    cfg.dataset_size = 4000;
+    cfg.seed = 9;
+    let serial = driver::run_sim(&cfg).unwrap();
+    cfg.service = true;
+    cfg.engines = 2;
+    let pooled = driver::run_sim(&cfg).unwrap();
+
+    assert_eq!(serial.steps.len(), pooled.steps.len());
+    for (a, b) in serial.steps.iter().zip(pooled.steps.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.inference_s, b.inference_s);
+        assert_eq!(a.update_s, b.update_s);
+        assert_eq!(a.train_pass_rate, b.train_pass_rate);
+        assert_eq!(a.grad_norm, b.grad_norm);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.prompts_consumed, b.prompts_consumed);
+        assert_eq!(a.buffer_len, b.buffer_len);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+    }
+    assert_eq!(serial.evals.len(), pooled.evals.len());
+    for (a, b) in serial.evals.iter().zip(pooled.evals.iter()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+    assert_eq!(serial.counters.calls, pooled.counters.calls);
+    assert_eq!(serial.counters.rows_used, pooled.counters.rows_used);
+    assert_eq!(serial.counters.rollouts, pooled.counters.rollouts);
+    assert_eq!(serial.counters.cost_s, pooled.counters.cost_s);
+
+    // The pool really had two replicas, but the single blocked producer
+    // kept every plan on replica 0: no steals, no spill to replica 1.
+    let svc = pooled.service.expect("service counters");
+    assert_eq!(svc.engines, 2);
+    assert_eq!(svc.submissions, svc.calls);
+    assert_eq!(svc.replica_calls[0], svc.calls);
+    assert_eq!(svc.replica_calls[1], 0);
+    assert_eq!(svc.replica_rows[0], svc.rows_used);
+    assert_eq!(svc.steals, 0);
+    // Replica 1 only ever installs opportunistically while idle, so it can
+    // never be ahead of the replica that serves the stream.
+    assert!(svc.replica_weight_version[1] <= svc.replica_weight_version[0]);
+}
+
+#[test]
+fn e2_pool_under_unreachable_waterline_never_starves() {
+    // The `service_sim.rs` starvation scenario, E=2: fill_waterline 1.0 is
+    // only reachable with every worker's submission in flight, so the
+    // deadline must keep dispatching partial plans — and now those plans
+    // fan out across two replicas with work-stealing in the mix.
+    let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
+    let mut policy = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 5)
+        .with_shapes(384, 384, 24);
+    let spec = CurriculumSpec::fixed(CurriculumKind::Speed, ScreeningRule::new(8, 16));
+    let trainer = PipelinedTrainer::new(
+        TrainerConfig {
+            batch_size: 8,
+            eval_every: 0,
+            max_steps: 10,
+            label: "waterline-1.0-e2".into(),
+            seed: 5,
+            ..Default::default()
+        },
+        AlgoConfig::new(BaseAlgo::Rloo),
+        PipelineConfig {
+            workers: 3,
+            enabled: true,
+            buffer_cap: 32,
+            service: true,
+            service_cfg: ServiceConfig {
+                coalesce_wait_ms: 1,
+                fill_waterline: 1.0,
+                adaptive: false,
+            },
+        },
+    )
+    .with_engines(2);
+    let rec = trainer.run(&mut policy, spec, &dataset, &[]).expect("run must not starve");
+    assert_eq!(rec.steps.len(), 10);
+    let svc = rec.service.expect("service counters");
+    assert_eq!(svc.engines, 2);
+    assert!(svc.calls > 0);
+    assert!(svc.max_call_rows <= 384);
+
+    // Per-replica accounting partitions the pool totals exactly.
+    assert_eq!(svc.replica_calls.iter().sum::<u64>(), svc.calls);
+    assert_eq!(svc.replica_rows.iter().sum::<u64>(), svc.rows_used);
+    assert_eq!(svc.replica_steals.iter().sum::<u64>(), svc.steals);
+    assert!(svc.replica_calls[2..].iter().all(|&c| c == 0), "only 2 replicas exist");
+
+    // Pool-balance telemetry is a well-formed mean over dispatches.
+    assert!(svc.pool_dispatches > 0);
+    let bal = svc.pool_balance();
+    assert!((0.0..=1.0).contains(&bal), "pool balance {bal} out of range");
+    assert_eq!(svc.pool_hist.iter().sum::<u64>(), svc.pool_dispatches);
+
+    // No replica announced a weight version newer than the service did.
+    let announced = svc.replica_weight_version.iter().max().copied().unwrap();
+    assert!(svc.replica_weight_version.iter().all(|&v| v <= announced));
+
+    // Per-step pool telemetry flows through StepRecord.
+    let step_calls: u64 = rec.steps.iter().map(|s| s.service_calls).sum();
+    assert!(step_calls > 0 && step_calls <= svc.calls);
+    assert!(rec.steps.iter().all(|s| (0.0..=1.0).contains(&s.pool_balance)));
+}
+
+#[test]
+fn pipelined_e2_pool_matches_e1_accuracy_with_no_extra_calls() {
+    // Scaling the pool changes WHERE plans execute, never how many plans
+    // the router forms: at a fixed worker count the call count must not
+    // grow with E, and learning must stay in the same band.
+    let run = |engines: usize| {
+        let dataset = Dataset::training(DatasetKind::SynthDapo17k, 4000, 11, 24);
+        let mut policy = SimPolicy::new(SimModelSpec::qwen_7b(), SimCostModel::default(), 13)
+            .with_shapes(384, 384, 24);
+        let spec = CurriculumSpec::fixed(CurriculumKind::Uniform, ScreeningRule::new(8, 16));
+        let trainer = PipelinedTrainer::new(
+            TrainerConfig {
+                batch_size: 8,
+                eval_every: 10,
+                max_steps: 20,
+                label: format!("pool-e{engines}"),
+                seed: 13,
+                ..Default::default()
+            },
+            AlgoConfig::new(BaseAlgo::Rloo),
+            PipelineConfig {
+                workers: 4,
+                enabled: true,
+                buffer_cap: 32,
+                service: true,
+                service_cfg: ServiceConfig {
+                    coalesce_wait_ms: 100,
+                    fill_waterline: 0.85,
+                    adaptive: false,
+                },
+            },
+        )
+        .with_engines(engines);
+        let evals = benchmark_suite(123, 24);
+        trainer.run(&mut policy, spec, &dataset, &evals).expect("pipelined pool run")
+    };
+    let e1 = run(1);
+    let e2 = run(2);
+    let s1 = e1.service.expect("e1 counters");
+    let s2 = e2.service.expect("e2 counters");
+    assert_eq!(s1.engines, 1);
+    assert_eq!(s2.engines, 2);
+    // Same submission pressure, so the pooled router must not fragment
+    // plans: scheduling noise aside, E=2 coalesces at least as well.
+    assert!(
+        s2.calls <= s1.calls + s1.calls / 4,
+        "E=2 fragmented the stream: {} calls vs E=1's {}",
+        s2.calls,
+        s1.calls
+    );
+    for bench in ["math500", "dapo1k"] {
+        let a = e1.final_accuracy(bench).unwrap();
+        let b = e2.final_accuracy(bench).unwrap();
+        assert!((a - b).abs() < 0.1, "{bench}: E=1 {a:.3} vs E=2 {b:.3}");
+    }
+}
