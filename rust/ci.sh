@@ -67,6 +67,50 @@ fi
 rm -rf "$CK_DIR" full_run.json resumed_run.json
 echo "resume smoke: resumed record identical to uninterrupted run"
 
+echo "== trace smoke (--trace must not perturb the run; trace JSON must load) =="
+# The zero-perturbation gate of DESIGN.md §12: a serial --trace run's
+# record must be byte-for-byte identical to the untraced one (the same
+# rail tests/trace_sim.rs holds on the library API), and the exported
+# Chrome trace must be Perfetto-loadable JSON with spans from the
+# instrumented layers. Pipelined runs are scheduling-nondeterministic
+# (DESIGN.md §8), so the pipelined K=4/E=2 leg checks trace shape and
+# the analyzer, not record bytes.
+rm -f trace_base.json trace_traced.json trace_smoke.json trace_pipe.json trace_reexport.json
+TRACE_FLAGS="--dataset-size 2000 --batch-size 8 --steps 8 --eval-every 4 --log-level warn"
+cargo run --release --bin speed-rl -- simulate $TRACE_FLAGS --out trace_base.json
+cargo run --release --bin speed-rl -- simulate $TRACE_FLAGS --out trace_traced.json \
+  --trace trace_smoke.json
+if ! diff -q trace_base.json trace_traced.json; then
+  echo "trace smoke FAILED: --trace perturbed the run record"
+  diff -u trace_base.json trace_traced.json | head -40
+  exit 1
+fi
+cargo run --release --bin speed-rl -- simulate $TRACE_FLAGS --workers 4 --engines 2 \
+  --trace trace_pipe.json
+python3 - <<'EOF'
+import json
+for path, want in [
+    ("trace_smoke.json", {"optimizer-update", "collect-batch", "evaluate"}),
+    ("trace_pipe.json", {"optimizer-update", "collect-batch", "evaluate",
+                         "engine-execute", "weight-publish"}),
+]:
+    doc = json.load(open(path))
+    spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert spans, f"{path}: no complete spans"
+    for e in spans:
+        assert {"name", "cat", "pid", "tid", "ts", "dur"} <= e.keys(), f"{path}: bad span {e}"
+    names = {e["name"] for e in spans}
+    assert not want - names, f"{path}: missing spans {want - names}"
+    assert doc["otherData"]["dropped_events"] == 0, f"{path}: dropped events"
+print("trace smoke: record byte-identical; both traces Perfetto-loadable")
+EOF
+cargo run --release --bin speed-rl -- trace summarize trace_pipe.json
+cargo run --release --bin speed-rl -- trace trace_smoke.json --format chrome \
+  --out trace_reexport.json
+python3 -c "import json; json.load(open('trace_reexport.json'))"
+rm -f trace_base.json trace_traced.json trace_smoke.json trace_pipe.json trace_reexport.json
+echo "trace smoke: analyzer and re-export OK"
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

@@ -98,6 +98,11 @@ pub struct RunConfig {
     /// bit-for-bit identical to the pre-pool scheduler. Ignored unless
     /// `service` is on.
     pub engines: usize,
+    /// Write a Chrome trace-event JSON timeline of the run to this path
+    /// (`--trace`; DESIGN.md §12). `None` = tracing off. Zero-perturbation:
+    /// a traced run's `RunRecord` is bit-for-bit identical to an untraced
+    /// one, and the knob is excluded from the checkpoint fingerprint.
+    pub trace: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -140,6 +145,7 @@ impl Default for RunConfig {
             fill_waterline: service_cfg.fill_waterline,
             coalesce_adaptive: service_cfg.adaptive,
             engines: 1,
+            trace: None,
         }
     }
 }
@@ -318,7 +324,7 @@ impl RunConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("label", Json::str(self.label.clone())),
             (
                 "substrate",
@@ -358,7 +364,13 @@ impl RunConfig {
             ("fill_waterline", Json::num(self.fill_waterline)),
             ("coalesce_adaptive", Json::Bool(self.coalesce_adaptive)),
             ("engines", Json::num(self.engines as f64)),
-        ])
+        ];
+        // Only emitted when set: untraced configs stay byte-identical to
+        // the pre-trace format (the resume-smoke full-byte diff).
+        if let Some(path) = &self.trace {
+            fields.push(("trace", Json::str(path.clone())));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<RunConfig> {
@@ -428,6 +440,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("coalesce_adaptive").and_then(|x| x.as_bool()) {
             cfg.coalesce_adaptive = v;
+        }
+        if let Some(v) = get_str("trace") {
+            cfg.trace = Some(v.to_string());
         }
         cfg.validate()?;
         Ok(cfg)
@@ -670,6 +685,19 @@ mod tests {
         let mut bad = RunConfig::default();
         bad.engines = crate::metrics::MAX_POOL + 1;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn trace_knob_roundtrips_and_is_omitted_when_off() {
+        // Off by default, and the field is absent from the JSON so
+        // untraced configs keep the pre-trace byte layout.
+        let cfg = RunConfig::default();
+        assert!(cfg.trace.is_none());
+        assert!(!cfg.to_json().to_string_pretty().contains("\"trace\""));
+        let mut cfg = RunConfig::default();
+        cfg.trace = Some("out/trace.json".into());
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.trace.as_deref(), Some("out/trace.json"));
     }
 
     #[test]

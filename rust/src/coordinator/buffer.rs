@@ -306,9 +306,16 @@ impl SharedBuffer {
     /// exhausted (the producer should wind down).
     pub fn push(&self, group: PromptGroup, born_step: usize, born_version: u64) -> bool {
         let mut g = self.state.lock().unwrap();
+        // Span only when the producer actually blocked: a non-full buffer
+        // records nothing (no zero-length event flood).
+        let mut t_wait = None;
         while g.q.len() >= self.cap && !g.closed {
+            if t_wait.is_none() {
+                t_wait = crate::trace::start();
+            }
             g = self.not_full.wait(g).unwrap();
         }
+        crate::trace::span("buffer-push-wait", "buffer", t_wait, g.q.len() as i64);
         if g.closed || g.pushed >= g.demand {
             return false;
         }
@@ -332,8 +339,10 @@ impl SharedBuffer {
         version: u64,
     ) -> Option<Vec<PromptGroup>> {
         let mut g = self.state.lock().unwrap();
+        let mut t_wait = None;
         loop {
             if g.q.len() >= b {
+                crate::trace::span("buffer-pop-wait", "buffer", t_wait, b as i64);
                 let mut out = Vec::with_capacity(b);
                 for _ in 0..b {
                     let item = g.q.pop_front().unwrap();
@@ -347,6 +356,9 @@ impl SharedBuffer {
             }
             if g.closed {
                 return None;
+            }
+            if t_wait.is_none() {
+                t_wait = crate::trace::start();
             }
             g = self.not_empty.wait(g).unwrap();
         }
@@ -368,10 +380,12 @@ impl SharedBuffer {
         version: u64,
     ) -> Option<Vec<PromptGroup>> {
         let mut g = self.state.lock().unwrap();
+        let mut t_wait = None;
         loop {
             let sizes = g.q.iter().map(|e| e.group.rollouts.len());
             let (take, complete) = rollout_prefix(sizes, target_rows);
             if complete {
+                crate::trace::span("buffer-pop-wait", "buffer", t_wait, take as i64);
                 let mut out = Vec::with_capacity(take);
                 for _ in 0..take {
                     let item = g.q.pop_front().unwrap();
@@ -385,6 +399,9 @@ impl SharedBuffer {
             }
             if g.closed {
                 return None;
+            }
+            if t_wait.is_none() {
+                t_wait = crate::trace::start();
             }
             g = self.not_empty.wait(g).unwrap();
         }

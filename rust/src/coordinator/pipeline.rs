@@ -275,6 +275,9 @@ impl PipelinedTrainer {
                 SharedSource { loader: Arc::clone(&loader), dataset: Arc::clone(&dataset) };
             let temperature = self.config.temperature;
             pool.execute(move || {
+                if crate::trace::enabled() {
+                    crate::trace::set_thread_label(&format!("worker-{w}"));
+                }
                 rollout_worker(
                     engine, spec, source, shared, counters, weights, stop, clock, errors,
                     temperature, b,
@@ -349,10 +352,15 @@ impl PipelinedTrainer {
         init_update_s: f64,
         init_counters: InferenceCounters,
     ) -> Result<()> {
+        if crate::trace::enabled() {
+            crate::trace::set_thread_label("learner");
+        }
         // Step-0 evaluation so every curve starts at the base model (a
         // resumed record already carries it).
         if start_step == 0 && record.evals.is_empty() {
+            let t_eval = crate::trace::start();
             evaluate_all(policy, evals, 0, 0.0, record)?;
+            crate::trace::span("evaluate", "learner", t_eval, 0);
         }
         let mut update_s = init_update_s;
         // Per-step deltas difference against the restored totals, so the
@@ -377,9 +385,13 @@ impl PipelinedTrainer {
 
             let mut algo = self.algo;
             algo.lr = self.algo.lr_at(step);
+            let t_update = crate::trace::start();
             let tr = policy.train(&groups, &algo)?;
+            crate::trace::span("optimizer-update", "learner", t_update, step as i64);
             update_s += tr.cost_s;
+            let t_publish = crate::trace::start();
             weights.publish(policy.snapshot());
+            crate::trace::span("weight-publish", "learner", t_publish, (step + 1) as i64);
             clock.store(step + 1, Ordering::Relaxed);
 
             // The record keeps the paper's time = inference + update
@@ -396,31 +408,48 @@ impl PipelinedTrainer {
             prev_snap = counter_snap;
             // Per-step service deltas (same convention as the skip rates):
             // cumulative means would blur the warm-up the charts exist for.
-            let (service_calls, service_fill, service_queue_wait_s, pool_balance) =
-                match service.map(|s| s.stats()) {
-                    Some(cur) => {
-                        let d_calls = cur.calls.saturating_sub(prev_svc.calls);
-                        let d_rows = cur.rows_used.saturating_sub(prev_svc.rows_used);
-                        let d_cap = cur.rows_capacity.saturating_sub(prev_svc.rows_capacity);
-                        let d_subs = cur.submissions.saturating_sub(prev_svc.submissions);
-                        let d_wait = cur.queue_wait_s - prev_svc.queue_wait_s;
-                        let d_disp = cur.pool_dispatches.saturating_sub(prev_svc.pool_dispatches);
-                        let d_busy = cur.pool_busy_sum.saturating_sub(prev_svc.pool_busy_sum);
-                        let engines = cur.engines;
-                        prev_svc = cur;
-                        (
-                            d_calls,
-                            if d_cap == 0 { 0.0 } else { d_rows as f64 / d_cap as f64 },
-                            if d_subs == 0 { 0.0 } else { d_wait / d_subs as f64 },
-                            if d_disp == 0 || engines == 0 {
-                                0.0
-                            } else {
-                                d_busy as f64 / (d_disp * engines) as f64
-                            },
-                        )
+            let (
+                service_calls,
+                service_fill,
+                service_queue_wait_s,
+                pool_balance,
+                service_queue_wait_p95_s,
+                service_exec_p95_s,
+            ) = match service.map(|s| s.stats()) {
+                Some(cur) => {
+                    let d_calls = cur.calls.saturating_sub(prev_svc.calls);
+                    let d_rows = cur.rows_used.saturating_sub(prev_svc.rows_used);
+                    let d_cap = cur.rows_capacity.saturating_sub(prev_svc.rows_capacity);
+                    let d_subs = cur.submissions.saturating_sub(prev_svc.submissions);
+                    let d_wait = cur.queue_wait_s - prev_svc.queue_wait_s;
+                    let d_disp = cur.pool_dispatches.saturating_sub(prev_svc.pool_dispatches);
+                    let d_busy = cur.pool_busy_sum.saturating_sub(prev_svc.pool_busy_sum);
+                    let engines = cur.engines;
+                    // Step-local latency histograms: bucket deltas, then the
+                    // p95 upper-edge estimate (trace::hist_quantile).
+                    let mut d_qwait = [0u64; crate::trace::HIST_BUCKETS];
+                    let mut d_exec = [0u64; crate::trace::HIST_BUCKETS];
+                    for i in 0..crate::trace::HIST_BUCKETS {
+                        d_qwait[i] =
+                            cur.queue_wait_hist[i].saturating_sub(prev_svc.queue_wait_hist[i]);
+                        d_exec[i] = cur.exec_hist[i].saturating_sub(prev_svc.exec_hist[i]);
                     }
-                    None => (0, 0.0, 0.0, 0.0),
-                };
+                    prev_svc = cur;
+                    (
+                        d_calls,
+                        if d_cap == 0 { 0.0 } else { d_rows as f64 / d_cap as f64 },
+                        if d_subs == 0 { 0.0 } else { d_wait / d_subs as f64 },
+                        if d_disp == 0 || engines == 0 {
+                            0.0
+                        } else {
+                            d_busy as f64 / (d_disp * engines) as f64
+                        },
+                        crate::trace::hist_quantile(&d_qwait, 0.95),
+                        crate::trace::hist_quantile(&d_exec, 0.95),
+                    )
+                }
+                None => (0, 0.0, 0.0, 0.0, 0.0, 0.0),
+            };
             record.steps.push(StepRecord {
                 step,
                 time_s,
@@ -442,13 +471,17 @@ impl PipelinedTrainer {
                 service_fill,
                 service_queue_wait_s,
                 pool_balance,
+                service_queue_wait_p95_s,
+                service_exec_p95_s,
                 rollouts: counter_snap.rollouts,
                 step_alloc_rows: alloc_rows,
                 alloc_calibration: counter_snap.alloc_calibration(),
             });
 
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
+                let t_eval = crate::trace::start();
                 evaluate_all(policy, evals, step + 1, time_s, record)?;
+                crate::trace::span("evaluate", "learner", t_eval, (step + 1) as i64);
                 if let Some((bench, target)) = &self.config.stop_at_target {
                     if target_reached(record, bench, *target) {
                         crate::info!(
@@ -543,6 +576,7 @@ fn rollout_worker(
             curriculum.collect_batch(&mut ctx, chunk)
         };
         local.busy_s = t0.elapsed().as_secs_f64();
+        crate::trace::span_from("collect-batch", "worker", t0, born_step as i64);
         counters.add(&local);
         match collected {
             Ok(groups) => {

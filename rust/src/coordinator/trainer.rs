@@ -194,7 +194,9 @@ impl Trainer {
     ) -> Result<()> {
         // Step-0 evaluation so every curve starts at the base model.
         if state.next_step == 0 && state.record.evals.is_empty() {
+            let t_eval = crate::trace::start();
             evaluate_all(policy, evals, 0, 0.0, &mut state.record)?;
+            crate::trace::span("evaluate", "trainer", t_eval, 0);
         }
         let last = until_step.min(self.config.max_steps);
         while !state.stopped && state.next_step < last {
@@ -202,6 +204,7 @@ impl Trainer {
             // ---- collect one batch via the curriculum (inference phase) ----
             let counters_before = state.counters;
             let inf_before = state.counters.cost_s;
+            let t_collect = crate::trace::start();
             let groups = {
                 let mut source = DatasetSource { loader: &mut state.loader, dataset };
                 let mut ctx = StepContext {
@@ -213,6 +216,7 @@ impl Trainer {
                 };
                 curriculum.collect_batch(&mut ctx, self.config.batch_size)?
             };
+            crate::trace::span("collect-batch", "trainer", t_collect, step as i64);
             state.inference_s += state.counters.cost_s - inf_before;
 
             // ---- algorithm-level group filter (DAPO keeps it on too when
@@ -232,7 +236,9 @@ impl Trainer {
             // an explicit one for plain REINFORCE.)
             let mut algo = self.algo;
             algo.lr = self.algo.lr_at(step);
+            let t_update = crate::trace::start();
             let tr = policy.train(&groups, &algo)?;
+            crate::trace::span("optimizer-update", "trainer", t_update, step as i64);
             state.update_s += tr.cost_s;
             state.next_step = step + 1;
 
@@ -262,6 +268,8 @@ impl Trainer {
                 service_fill: 0.0,
                 service_queue_wait_s: 0.0,
                 pool_balance: 0.0,
+                service_queue_wait_p95_s: 0.0,
+                service_exec_p95_s: 0.0,
                 rollouts: state.counters.rollouts,
                 step_alloc_rows: step_alloc_rows(&counters_before, &state.counters),
                 alloc_calibration: state.counters.alloc_calibration(),
@@ -269,7 +277,9 @@ impl Trainer {
 
             // ---- periodic evaluation (excluded from training time) ----
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {
+                let t_eval = crate::trace::start();
                 evaluate_all(policy, evals, step + 1, time_s, &mut state.record)?;
+                crate::trace::span("evaluate", "trainer", t_eval, (step + 1) as i64);
                 if let Some((bench, target)) = &self.config.stop_at_target {
                     if target_reached(&state.record, bench, *target) {
                         crate::info!(

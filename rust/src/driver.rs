@@ -167,33 +167,69 @@ pub fn run_sim_with(cfg: &RunConfig, io: &CheckpointIo) -> Result<RunRecord> {
     anyhow::ensure!(cfg.substrate == Substrate::Sim, "config is not a sim run");
     cfg.validate()?;
     io.validate()?;
-    let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, MAX_PROMPT_CHARS);
-    let mut policy = build_sim_policy(cfg)?;
-    let evals = benchmark_suite(BENCH_SEED, MAX_PROMPT_CHARS);
-    if cfg.pipeline {
-        check_capacity(cfg, policy.rollout_capacity())?;
-        return run_pipelined_sim(cfg, &mut policy, &dataset, &evals, io);
+    with_trace(cfg, || {
+        let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, MAX_PROMPT_CHARS);
+        let mut policy = build_sim_policy(cfg)?;
+        let evals = benchmark_suite(BENCH_SEED, MAX_PROMPT_CHARS);
+        if cfg.pipeline {
+            check_capacity(cfg, policy.rollout_capacity())?;
+            return run_pipelined_sim(cfg, &mut policy, &dataset, &evals, io);
+        }
+        if cfg.service {
+            // Serial loop delegated through the coalescing service with one
+            // producer — DESIGN.md §8's equivalence rail: this must reproduce
+            // the plain serial RunRecord bit for bit (rust/tests/service_sim.rs).
+            // The service owns no run state, so checkpointing threads through
+            // the same segmented runner as the plain serial path; the learner
+            // restore re-publishes the snapshot so the pool's forked replicas
+            // serve the restored weights.
+            check_capacity(cfg, policy.rollout_capacity())?;
+            let service = InferenceService::spawn_pool(
+                (0..cfg.engines.max(1)).map(|r| policy.fork_engine(r as u64)).collect(),
+                service_config(cfg),
+                1,
+                cfg.max_group_rollouts(),
+            );
+            let handle = service.handle();
+            let mut serviced = ServicedPolicy::new(handle, &mut policy);
+            return run_serial_segments(cfg, &mut serviced, &dataset, &evals, io, Some(&service));
+        }
+        run_with_policy_io(cfg, &mut policy, &dataset, &evals, io)
+    })
+}
+
+/// Run `f` with the trace spine enabled when `cfg.trace` is set, exporting
+/// the collected timeline to that path afterwards — even when the run
+/// fails, since a partial timeline is the artifact you want most then.
+/// Without `--trace` this is just `f()` behind one branch; the spine stays
+/// disabled and every instrumentation point is a relaxed load.
+fn with_trace<T>(cfg: &RunConfig, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    // Pin the shared log/trace epoch before any spans are cut, so trace
+    // timestamps and log timestamps are directly comparable.
+    crate::util::logging::init();
+    let Some(path) = cfg.trace.clone() else {
+        return f();
+    };
+    crate::trace::enable();
+    let result = f();
+    if let Some(data) = crate::trace::finish() {
+        match std::fs::write(&path, data.to_chrome_json().to_string()) {
+            Ok(()) => crate::info!(
+                "trace",
+                "wrote {} events from {} threads to {path} ({} dropped)",
+                data.event_count(),
+                data.thread_count(),
+                data.dropped_events
+            ),
+            Err(e) => {
+                if result.is_ok() {
+                    return Err(e).with_context(|| format!("write trace to {path}"));
+                }
+                crate::warn_log!("trace", "failed to write trace to {path}: {e:#}");
+            }
+        }
     }
-    if cfg.service {
-        // Serial loop delegated through the coalescing service with one
-        // producer — DESIGN.md §8's equivalence rail: this must reproduce
-        // the plain serial RunRecord bit for bit (rust/tests/service_sim.rs).
-        // The service owns no run state, so checkpointing threads through
-        // the same segmented runner as the plain serial path; the learner
-        // restore re-publishes the snapshot so the pool's forked replicas
-        // serve the restored weights.
-        check_capacity(cfg, policy.rollout_capacity())?;
-        let service = InferenceService::spawn_pool(
-            (0..cfg.engines.max(1)).map(|r| policy.fork_engine(r as u64)).collect(),
-            service_config(cfg),
-            1,
-            cfg.max_group_rollouts(),
-        );
-        let handle = service.handle();
-        let mut serviced = ServicedPolicy::new(handle, &mut policy);
-        return run_serial_segments(cfg, &mut serviced, &dataset, &evals, io, Some(&service));
-    }
-    run_with_policy_io(cfg, &mut policy, &dataset, &evals, io)
+    result
 }
 
 /// Restore shared (substrate + predictor) state from a checkpoint; returns
@@ -269,6 +305,7 @@ fn save_run_state(
     loader_state: crate::data::loader::LoaderState,
     save: &CheckpointSpec,
 ) -> Result<()> {
+    let t_save = crate::trace::start();
     policy.save_params(&save.dir, &save.tag)?;
     let mut record = record.clone();
     record.counters = counters;
@@ -287,6 +324,7 @@ fn save_run_state(
         predictor: spec.predictor.as_ref().map(|p| p.snapshot()),
     };
     rs.save(&save.dir, &save.tag)?;
+    crate::trace::span("checkpoint-save", "checkpoint", t_save, step as i64);
     crate::info!("checkpoint", "run state saved to {save} at step {step}");
     Ok(())
 }
@@ -491,12 +529,14 @@ fn check_capacity(cfg: &RunConfig, rollout_capacity: usize) -> Result<()> {
 pub fn run_real(cfg: &RunConfig, artifacts_dir: &Path) -> Result<(RunRecord, RealPolicy)> {
     anyhow::ensure!(cfg.substrate == Substrate::Real, "config is not a real run");
     cfg.validate()?;
-    let mut policy = RealPolicy::load(artifacts_dir, cfg.seed)?;
-    let max_chars = policy.runtime.manifest.plan.prompt_len.min(MAX_PROMPT_CHARS + 4);
-    let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, max_chars);
-    let evals = benchmark_suite(BENCH_SEED, max_chars);
-    let record = run_with_policy(cfg, &mut policy, &dataset, &evals)?;
-    Ok((record, policy))
+    with_trace(cfg, || {
+        let mut policy = RealPolicy::load(artifacts_dir, cfg.seed)?;
+        let max_chars = policy.runtime.manifest.plan.prompt_len.min(MAX_PROMPT_CHARS + 4);
+        let dataset = Dataset::training(cfg.dataset, cfg.dataset_size, cfg.seed, max_chars);
+        let evals = benchmark_suite(BENCH_SEED, max_chars);
+        let record = run_with_policy(cfg, &mut policy, &dataset, &evals)?;
+        Ok((record, policy))
+    })
 }
 
 /// Shared inner loop.

@@ -46,6 +46,10 @@
 //!                     parameter store.
 //! * [`metrics`]     — phase timers, run records, curve logging, and the
 //!                     atomic per-worker inference counters.
+//! * [`trace`]       — the trace spine: per-thread bounded event rings,
+//!                     Chrome trace-event export, log-bucketed latency
+//!                     histograms, and the `speed-rl trace` analyzer
+//!                     (DESIGN.md §12). Zero-perturbation when off.
 //! * [`eval`]        — held-out benchmark evaluation.
 //! * [`bench`]       — in-tree benchmark harness (no criterion offline).
 
@@ -61,4 +65,5 @@ pub mod policy;
 pub mod predictor;
 pub mod rl;
 pub mod runtime;
+pub mod trace;
 pub mod util;

@@ -6,6 +6,9 @@
 //!   sft        supervised warmup of the real transformer ("base model")
 //!   eval       score a (checkpointed) real model on the benchmark suite
 //!   info       print the artifact manifest summary
+//!   report     ASCII accuracy-vs-time charts from run records
+//!   bench      coalescing / allocation / pool smoke benches
+//!   trace      summarize or re-export a --trace timeline
 //!
 //! Run `speed-rl <subcommand> --help` for options.
 
@@ -30,12 +33,18 @@ use speed_rl::util::logging::{self, level_from_str};
 
 fn main() {
     if let Err(e) = run() {
-        eprintln!("error: {e:#}");
+        // Through the leveled logger (never filtered: Error is the top
+        // level) so failures carry the same timestamped format as the
+        // run's other diagnostics.
+        logging::log(logging::Level::Error, "main", &format!("{e:#}"));
         std::process::exit(1);
     }
 }
 
 fn run() -> Result<()> {
+    // Pin the shared log/trace epoch at process start, not at first use:
+    // every timestamp in every sink is measured from here.
+    logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = argv.split_first() else {
         print_usage();
@@ -49,6 +58,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(rest),
         "report" => cmd_report(rest),
         "bench" => cmd_bench(rest),
+        "trace" => cmd_trace(rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -67,7 +77,8 @@ fn print_usage() {
          \x20 eval       score a real model checkpoint on the benchmarks\n\
          \x20 info       print the artifact manifest summary\n\
          \x20 report     ASCII accuracy-vs-time charts from run records\n\
-         \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets) | pool (engine scaling)\n"
+         \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets) | pool (engine scaling)\n\
+         \x20 trace      summarize a --trace timeline (per-phase breakdown, latency percentiles)\n"
     );
 }
 
@@ -213,6 +224,12 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             None,
             "data-parallel engine replicas behind the shared service (implies --service when > 1)",
         )
+        .opt(
+            "trace",
+            None,
+            "write a Chrome trace-event JSON timeline to this path (Perfetto-loadable; \
+             see 'speed-rl trace')",
+        )
         .flag("pipeline", "overlap inference with updates (producer/consumer)")
         .flag("service", "coalesce all rollout requests through one shared inference service")
         .flag(
@@ -301,6 +318,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     if let Some(h) = args.get("max-hours") {
         cfg.max_seconds = h.parse::<f64>().context("--max-hours")? * 3600.0;
     }
+    if let Some(v) = args.get("trace") {
+        cfg.trace = Some(v.to_string());
+    }
     let io = checkpoint_io(&args)?;
 
     let record = driver::run_sim_with(&cfg, &io)?;
@@ -365,7 +385,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("eval-every", Some("10"), "evaluation cadence")
         .opt("save", None, "write a run-state checkpoint (weights + curriculum state) to dir:tag")
         .opt("save-every", None, "checkpoint cadence in steps (0 = final save only; needs --save)")
-        .opt("resume", None, "warm-resume from a run-state checkpoint dir:tag");
+        .opt("resume", None, "warm-resume from a run-state checkpoint dir:tag")
+        .opt("trace", None, "write a Chrome trace-event JSON timeline to this path");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
 
@@ -401,6 +422,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         cfg.n_cont_max = v.parse::<usize>().context("--n-cont-max")?;
     }
     cfg.label = format!("real-{}-{}", cfg.curriculum.name(), cfg.algo.name());
+    if let Some(v) = args.get("trace") {
+        cfg.trace = Some(v.to_string());
+    }
 
     let dir = artifacts_arg(&args);
     let mut policy = RealPolicy::load(&dir, cfg.seed)?;
@@ -526,7 +550,7 @@ fn cmd_report(argv: &[String]) -> Result<()> {
             "metric",
             Some("accuracy"),
             "accuracy | skip-rate | explore-rate | service-fill | pool-balance | staleness | \
-             alloc-rows | alloc-calibration (per-step charts)",
+             alloc-rows | alloc-calibration | queue-wait-p95 | exec-p95 (per-step charts)",
         )
         .opt("width", Some("72"), "chart width")
         .opt("height", Some("16"), "chart height");
@@ -561,6 +585,71 @@ fn cmd_report(argv: &[String]) -> Result<()> {
     };
     for b in benches {
         println!("{}", speed_rl::metrics::report::ascii_chart(&refs, &b, width, height));
+    }
+    Ok(())
+}
+
+/// `speed-rl trace summarize <trace.json>` — analyze a Chrome trace-event
+/// timeline written by `--trace`: per-phase wall-clock breakdown with
+/// p50/p95/p99 span latencies, instant-event counts, and drop accounting.
+/// `--format chrome` re-exports the parsed document instead (normalized
+/// key order; handy for piping a validated copy elsewhere).
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("speed-rl trace", "summarize or re-export a --trace timeline")
+        .opt("format", Some("summary"), "summary | chrome (re-export the trace JSON)")
+        .opt("out", None, "with --format chrome: write the re-export here (default: stdout)");
+    let args = cli.parse(argv)?;
+    // Both `trace summarize out.json` and `trace out.json` are accepted:
+    // the action word is optional sugar for the default format.
+    let mut files: Vec<&str> = args.positional.iter().map(|s| s.as_str()).collect();
+    if files.first() == Some(&"summarize") {
+        files.remove(0);
+    }
+    anyhow::ensure!(
+        files.len() == 1,
+        "usage: speed-rl trace summarize <trace.json> [--format summary|chrome]"
+    );
+    let path = files[0];
+    let doc = Json::parse_file(Path::new(path)).with_context(|| format!("read {path}"))?;
+    // Validates the document shape either way (bails on a non-trace JSON).
+    let s = speed_rl::trace::summarize_chrome(&doc)?;
+    match args.string("format")?.as_str() {
+        "chrome" => match args.get("out") {
+            Some(out) => {
+                std::fs::write(out, doc.to_string()).with_context(|| format!("write {out}"))?;
+                info!("trace", "re-exported {} events to {out}", s.events);
+            }
+            None => println!("{doc}"),
+        },
+        "summary" => {
+            println!(
+                "trace {path}: {} threads, {} events ({} dropped), wall {:.3}s",
+                s.threads, s.events, s.dropped_events, s.wall_s
+            );
+            println!(
+                "{:<18} {:>7} {:>10} {:>10} {:>10} {:>10} {:>7}",
+                "phase", "count", "total s", "p50 ms", "p95 ms", "p99 ms", "% wall"
+            );
+            for p in &s.phases {
+                println!(
+                    "{:<18} {:>7} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>7.1}",
+                    p.name,
+                    p.count,
+                    p.total_s,
+                    1e3 * p.p50_s,
+                    1e3 * p.p95_s,
+                    1e3 * p.p99_s,
+                    100.0 * p.total_s / s.wall_s.max(1e-12)
+                );
+            }
+            if !s.instants.is_empty() {
+                println!("instant events:");
+                for (name, count) in &s.instants {
+                    println!("  {name:<16} {count}");
+                }
+            }
+        }
+        other => bail!("unknown trace format '{other}' (valid: summary, chrome)"),
     }
     Ok(())
 }

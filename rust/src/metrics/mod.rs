@@ -420,6 +420,14 @@ pub struct ServiceCounters {
     /// Per-replica installed weight version (gauge; never exceeds the
     /// service's announced version — the staleness bound).
     pub replica_weight_version: [u64; MAX_POOL],
+    /// Log-bucketed histogram of per-submission queue waits (seconds;
+    /// bucket edges in [`crate::trace::latency_bucket`]). Always on — the
+    /// same real-time measurement as `queue_wait_s`, so traced and
+    /// untraced runs build records identically.
+    pub queue_wait_hist: [u64; crate::trace::HIST_BUCKETS],
+    /// Log-bucketed histogram of engine-call execution durations (real
+    /// seconds per executed call, splits counted per chunk). Always on.
+    pub exec_hist: [u64; crate::trace::HIST_BUCKETS],
 }
 
 impl ServiceCounters {
@@ -520,6 +528,12 @@ impl ServiceCounters {
         {
             *slot = (*slot).max(v);
         }
+        for (slot, v) in self.queue_wait_hist.iter_mut().zip(earlier.queue_wait_hist) {
+            *slot += v;
+        }
+        for (slot, v) in self.exec_hist.iter_mut().zip(earlier.exec_hist) {
+            *slot += v;
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -563,6 +577,16 @@ impl ServiceCounters {
                 "replica_weight_version",
                 Json::arr(self.replica_weight_version.iter().map(|c| Json::num(*c as f64))),
             ),
+            (
+                "queue_wait_hist",
+                Json::arr(self.queue_wait_hist.iter().map(|c| Json::num(*c as f64))),
+            ),
+            ("exec_hist", Json::arr(self.exec_hist.iter().map(|c| Json::num(*c as f64)))),
+            (
+                "queue_wait_p95_s",
+                Json::num(crate::trace::hist_quantile(&self.queue_wait_hist, 0.95)),
+            ),
+            ("exec_p95_s", Json::num(crate::trace::hist_quantile(&self.exec_hist, 0.95))),
         ])
     }
 
@@ -599,6 +623,8 @@ impl ServiceCounters {
             replica_installs: u64s(j, "replica_installs"),
             replica_steals: u64s(j, "replica_steals"),
             replica_weight_version: u64s(j, "replica_weight_version"),
+            queue_wait_hist: u64s(j, "queue_wait_hist"),
+            exec_hist: u64s(j, "exec_hist"),
         }
     }
 }
@@ -654,6 +680,14 @@ pub struct StepRecord {
     /// between step snapshots; 0 without a service or with E=1's lone
     /// replica idle at dispatch — see [`ServiceCounters::pool_balance`]).
     pub pool_balance: f64,
+    /// p95 submission-to-execution queue wait over THIS step's service
+    /// submissions, seconds (upper bucket edge of the step's
+    /// `queue_wait_hist` delta; 0 when no service ran or none landed).
+    pub service_queue_wait_p95_s: f64,
+    /// p95 engine-call execution duration over THIS step's service calls,
+    /// real seconds (from the step's `exec_hist` delta; 0 without a
+    /// service).
+    pub service_exec_p95_s: f64,
     /// Rollouts generated so far (cumulative; the x-axis of the
     /// fixed-vs-adaptive allocation comparison).
     pub rollouts: u64,
@@ -688,6 +722,8 @@ impl StepRecord {
             ("service_fill", Json::num(self.service_fill)),
             ("service_queue_wait_s", Json::num(self.service_queue_wait_s)),
             ("pool_balance", Json::num(self.pool_balance)),
+            ("service_queue_wait_p95_s", Json::num(self.service_queue_wait_p95_s)),
+            ("service_exec_p95_s", Json::num(self.service_exec_p95_s)),
             ("rollouts", Json::num(self.rollouts as f64)),
             ("step_alloc_rows", Json::num(self.step_alloc_rows as f64)),
             ("alloc_calibration", Json::num(self.alloc_calibration)),
@@ -874,6 +910,8 @@ mod tests {
             split_calls: 2,
             ewma_gap_s: 0.003,
             coalesced_hist: [1, 0, 1, 2, 0, 0],
+            queue_wait_hist: [0, 3, 5, 2, 0, 0, 0, 0],
+            exec_hist: [0, 0, 1, 3, 0, 0, 0, 0],
             ..Default::default()
         };
         assert!((c.mean_fill() - 0.75).abs() < 1e-12);
@@ -895,6 +933,15 @@ mod tests {
         assert!((back.ewma_gap_s - c.ewma_gap_s).abs() < 1e-12);
         assert_eq!(back.coalesced_hist, c.coalesced_hist);
         assert!((back.queue_wait_s - c.queue_wait_s).abs() < 1e-12);
+        // The latency histograms round-trip raw; the p95 summaries in the
+        // JSON are derived (recomputed, never stored authoritatively).
+        assert_eq!(back.queue_wait_hist, c.queue_wait_hist);
+        assert_eq!(back.exec_hist, c.exec_hist);
+        let j = c.to_json();
+        assert_eq!(
+            j.get("queue_wait_p95_s").unwrap().as_f64().unwrap(),
+            crate::trace::hist_quantile(&c.queue_wait_hist, 0.95)
+        );
         let empty = ServiceCounters::default();
         assert_eq!(empty.mean_fill(), 0.0);
         assert_eq!(empty.mean_queue_wait_s(), 0.0);
@@ -915,6 +962,8 @@ mod tests {
             split_calls: 1,
             ewma_gap_s: 0.004,
             coalesced_hist: [1, 0, 1, 2, 0, 0],
+            queue_wait_hist: [1, 2, 0, 0, 0, 0, 0, 0],
+            exec_hist: [0, 1, 1, 0, 0, 0, 0, 0],
             ..Default::default()
         };
         let mut newer = ServiceCounters {
@@ -926,6 +975,8 @@ mod tests {
             queue_wait_s: 0.25,
             ewma_gap_s: 0.002,
             coalesced_hist: [1, 1, 0, 0, 0, 0],
+            queue_wait_hist: [0, 1, 1, 0, 0, 0, 0, 0],
+            exec_hist: [0, 0, 2, 0, 0, 0, 0, 0],
             ..Default::default()
         };
         newer.merge(&earlier);
@@ -938,6 +989,8 @@ mod tests {
         assert_eq!(newer.installs, 2);
         assert_eq!(newer.split_calls, 1);
         assert_eq!(newer.coalesced_hist, [2, 1, 1, 2, 0, 0]);
+        assert_eq!(newer.queue_wait_hist, [1, 3, 1, 0, 0, 0, 0, 0]);
+        assert_eq!(newer.exec_hist, [0, 1, 3, 0, 0, 0, 0, 0]);
         // latest-value gauge: the newer generation's EWMA wins...
         assert!((newer.ewma_gap_s - 0.002).abs() < 1e-12);
         // ...unless it never observed a gap

@@ -24,20 +24,31 @@ pub fn ascii_chart(
     render_chart(&format!("{benchmark} (accuracy vs time)"), &curves, width, height, 3600.0, "h")
 }
 
-/// Per-step metrics `speed-rl report --metric` can chart, extracted from
+/// The per-step metric table `speed-rl report --metric` charts from
 /// [`StepRecord`] (ROADMAP item: the cumulative counters hid how the
 /// predictor's skip rate warms up and how full the service keeps calls).
+/// One row per metric, so the chart dispatch and the unknown-metric error
+/// listing can never drift apart.
+pub const STEP_METRICS: &[(&str, fn(&StepRecord) -> f64)] = &[
+    ("skip-rate", |s: &StepRecord| s.step_skip_rate),
+    ("explore-rate", |s: &StepRecord| s.step_explore_rate),
+    ("service-fill", |s: &StepRecord| s.service_fill),
+    ("pool-balance", |s: &StepRecord| s.pool_balance),
+    ("staleness", |s: &StepRecord| s.mean_staleness),
+    ("alloc-rows", |s: &StepRecord| s.step_alloc_rows as f64),
+    ("alloc-calibration", |s: &StepRecord| s.alloc_calibration),
+    ("queue-wait-p95", |s: &StepRecord| s.service_queue_wait_p95_s),
+    ("exec-p95", |s: &StepRecord| s.service_exec_p95_s),
+];
+
+/// Look up a per-step metric by its `--metric` name.
 pub fn step_metric(metric: &str) -> Option<fn(&StepRecord) -> f64> {
-    match metric {
-        "skip-rate" => Some(|s: &StepRecord| s.step_skip_rate),
-        "explore-rate" => Some(|s: &StepRecord| s.step_explore_rate),
-        "service-fill" => Some(|s: &StepRecord| s.service_fill),
-        "pool-balance" => Some(|s: &StepRecord| s.pool_balance),
-        "staleness" => Some(|s: &StepRecord| s.mean_staleness),
-        "alloc-rows" => Some(|s: &StepRecord| s.step_alloc_rows as f64),
-        "alloc-calibration" => Some(|s: &StepRecord| s.alloc_calibration),
-        _ => None,
-    }
+    STEP_METRICS.iter().find(|(name, _)| *name == metric).map(|(_, f)| *f)
+}
+
+/// Every valid `--metric` name, comma-joined (for help/error text).
+pub fn step_metric_names() -> String {
+    STEP_METRICS.iter().map(|(name, _)| *name).collect::<Vec<_>>().join(", ")
 }
 
 /// Render one per-step metric for several runs (x = step, y = metric).
@@ -49,9 +60,9 @@ pub fn step_chart(
 ) -> anyhow::Result<String> {
     let f = step_metric(metric).ok_or_else(|| {
         anyhow::anyhow!(
-            "unknown per-step metric '{metric}' (valid: skip-rate, explore-rate, \
-             service-fill, pool-balance, staleness, alloc-rows, alloc-calibration; \
-             eval curves use the default accuracy mode)"
+            "unknown per-step metric '{metric}' (valid: {}; eval curves use the default \
+             accuracy mode)",
+            step_metric_names()
         )
     })?;
     let curves: Vec<(&str, Vec<(f64, f64)>)> = records
@@ -182,6 +193,8 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 service_fill: f("service_fill"),
                 service_queue_wait_s: f("service_queue_wait_s"),
                 pool_balance: f("pool_balance"),
+                service_queue_wait_p95_s: f("service_queue_wait_p95_s"),
+                service_exec_p95_s: f("service_exec_p95_s"),
                 rollouts: f("rollouts") as u64,
                 step_alloc_rows: f("step_alloc_rows") as u64,
                 alloc_calibration: f("alloc_calibration"),
@@ -279,6 +292,8 @@ mod tests {
             service_fill: 0.8,
             service_queue_wait_s: 0.002,
             pool_balance: 0.4,
+            service_queue_wait_p95_s: 0.01,
+            service_exec_p95_s: 0.1,
             rollouts: 768,
             step_alloc_rows: 96,
             alloc_calibration: 0.02,
@@ -297,6 +312,8 @@ mod tests {
         assert_eq!(s.service_calls, 4);
         assert!((s.service_fill - 0.8).abs() < 1e-12);
         assert!((s.pool_balance - 0.4).abs() < 1e-12);
+        assert!((s.service_queue_wait_p95_s - 0.01).abs() < 1e-12);
+        assert!((s.service_exec_p95_s - 0.1).abs() < 1e-12);
         assert_eq!(s.rollouts, 768);
         assert_eq!(s.step_alloc_rows, 96);
         assert!((s.alloc_calibration - 0.02).abs() < 1e-12);
@@ -384,6 +401,8 @@ mod tests {
                 service_fill: 0.0,
                 service_queue_wait_s: 0.0,
                 pool_balance: 0.0,
+                service_queue_wait_p95_s: 0.0,
+                service_exec_p95_s: 0.0,
                 rollouts: 0,
                 step_alloc_rows: 0,
                 alloc_calibration: 0.0,
@@ -391,7 +410,75 @@ mod tests {
         }
         let chart = step_chart(&[&a], "skip-rate", 30, 8).unwrap();
         assert!(chart.contains("skip-rate") && chart.contains("run"));
+        // The error must list EVERY valid metric (it is derived from
+        // STEP_METRICS, so new metrics appear automatically).
         let err = step_chart(&[&a], "bogus", 30, 8).unwrap_err().to_string();
-        assert!(err.contains("bogus") && err.contains("service-fill"), "{err}");
+        for (name, _) in STEP_METRICS {
+            assert!(err.contains(name), "metric '{name}' missing from error: {err}");
+        }
+        assert!(err.contains("bogus"), "{err}");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_pool_fields_and_replica_arrays() {
+        // PR-6 pool telemetry through a full serialize → parse cycle: the
+        // per-step pool_balance / p95 deltas and the run-level per-replica
+        // arrays must survive `speed-rl report`'s record parser.
+        let mut a = rec("pool", &[(0.0, 0.2)]);
+        a.steps.push(StepRecord {
+            step: 0,
+            time_s: 1.0,
+            inference_s: 0.7,
+            update_s: 0.3,
+            train_pass_rate: 0.5,
+            grad_norm: 0.1,
+            loss: -0.5,
+            clip_frac: 0.0,
+            prompts_consumed: 10,
+            buffer_len: 2,
+            mean_staleness: 0.5,
+            prompts_skipped: 0,
+            rollouts_saved: 0,
+            predictor_brier: 0.0,
+            step_skip_rate: 0.0,
+            step_explore_rate: 0.0,
+            service_calls: 6,
+            service_fill: 0.9,
+            service_queue_wait_s: 0.004,
+            pool_balance: 0.75,
+            service_queue_wait_p95_s: 0.001,
+            service_exec_p95_s: 1.0,
+            rollouts: 128,
+            step_alloc_rows: 64,
+            alloc_calibration: 0.0,
+        });
+        let mut svc = ServiceCounters { calls: 6, submissions: 12, ..Default::default() };
+        svc.engines = 2;
+        svc.steals = 3;
+        svc.pool_dispatches = 6;
+        svc.pool_busy_sum = 9;
+        svc.replica_calls[0] = 4;
+        svc.replica_calls[1] = 2;
+        svc.replica_rows[0] = 200;
+        svc.replica_rows[1] = 100;
+        svc.queue_wait_hist[2] = 5;
+        svc.exec_hist[3] = 6;
+        a.service = Some(svc);
+        let back = record_from_json(&a.to_json()).unwrap();
+        let s = &back.steps[0];
+        assert!((s.pool_balance - 0.75).abs() < 1e-12);
+        assert!((s.service_queue_wait_p95_s - 0.001).abs() < 1e-12);
+        assert!((s.service_exec_p95_s - 1.0).abs() < 1e-12);
+        let svc = back.service.expect("service parsed");
+        assert_eq!(svc.engines, 2);
+        assert_eq!(svc.steals, 3);
+        assert_eq!(svc.pool_dispatches, 6);
+        assert_eq!(svc.pool_busy_sum, 9);
+        assert_eq!(&svc.replica_calls[..2], &[4, 2]);
+        assert_eq!(&svc.replica_rows[..2], &[200, 100]);
+        assert_eq!(svc.queue_wait_hist[2], 5);
+        assert_eq!(svc.exec_hist[3], 6);
+        // pool_balance is derived from the dispatch counters, not stored
+        assert!((svc.pool_balance() - 9.0 / 12.0).abs() < 1e-12);
     }
 }

@@ -432,10 +432,13 @@ fn dispatch(pool: &Pool, shared: &Shared, plan: Plan) {
         busy
     };
     pool.ready.notify_all();
-    let mut stats = shared.stats.lock().unwrap();
-    stats.pool_dispatches += 1;
-    stats.pool_busy_sum += busy as u64;
-    stats.pool_hist[busy.min(stats.pool_hist.len() - 1)] += 1;
+    {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.pool_dispatches += 1;
+        stats.pool_busy_sum += busy as u64;
+        stats.pool_hist[busy.min(stats.pool_hist.len() - 1)] += 1;
+    }
+    crate::trace::instant("dispatch", "scheduler", busy as i64);
 }
 
 /// Close the pool and join every replica (run by the router on shutdown;
@@ -499,19 +502,26 @@ fn replica_loop(
                     ps.queued_rows[v] -= rows;
                     ps.inflight_rows[r] += rows;
                     plan = Some((p, rows));
-                    let mut stats = shared.stats.lock().unwrap();
-                    stats.steals += 1;
-                    stats.replica_steals[r] += 1;
+                    {
+                        let mut stats = shared.stats.lock().unwrap();
+                        stats.steals += 1;
+                        stats.replica_steals[r] += 1;
+                    }
+                    crate::trace::instant("steal", "replica", v as i64);
                     break;
                 }
                 if ps.closed {
                     return;
                 }
+                let t_idle = crate::trace::start();
                 ps = pool.ready.wait(ps).unwrap();
+                crate::trace::span("replica-idle", "replica", t_idle, r as i64);
             }
         }
         if let Some(snap) = install {
+            let t_install = crate::trace::start();
             engine.install(&snap);
+            crate::trace::span("weight-install", "replica", t_install, snap.version as i64);
             let mut stats = shared.stats.lock().unwrap();
             stats.installs += 1;
             stats.replica_installs[r] += 1;
@@ -604,6 +614,7 @@ fn scheduler(
         // ticket, so dispatch immediately (the serial-equivalence rail).
         let mut deadline_fired = false;
         if producers > 1 {
+            let t_coalesce = crate::trace::start();
             let deadline = Instant::now() + wait;
             loop {
                 if guard.closed || guard.pending_install.is_some() {
@@ -624,6 +635,7 @@ fn scheduler(
                     break;
                 }
             }
+            crate::trace::span("coalesce-wait", "scheduler", t_coalesce, deadline_fired as i64);
             if guard.pending_install.is_some() {
                 continue; // install first, then re-gather
             }
@@ -720,6 +732,7 @@ fn execute_split(
     let mut weight_version = 0u64;
     for chunk in &chunks {
         let chunk_rows: usize = chunk.iter().map(|r| r.n_samples).sum();
+        let chunk_started = Instant::now();
         let result = engine.generate(chunk, g.temperature).and_then(|res| {
             anyhow::ensure!(
                 res.groups.len() == chunk.len(),
@@ -729,6 +742,16 @@ fn execute_split(
             );
             Ok(res)
         });
+        // Unconditional end-of-call clock read: the exec histogram is
+        // always on, so traced and untraced runs do identical work here.
+        let chunk_finished = Instant::now();
+        crate::trace::span_between(
+            "engine-execute",
+            "replica",
+            chunk_started,
+            chunk_finished,
+            replica as i64,
+        );
         {
             let mut stats = shared.stats.lock().unwrap();
             stats.calls += 1;
@@ -739,6 +762,9 @@ fn execute_split(
             stats.coalesced_hist[ServiceCounters::hist_bucket(1)] += 1;
             stats.replica_calls[replica] += 1;
             stats.replica_rows[replica] += chunk_rows as u64;
+            stats.exec_hist[crate::trace::latency_bucket(
+                chunk_finished.saturating_duration_since(chunk_started).as_secs_f64(),
+            )] += 1;
         }
         match result {
             Ok(res) => {
@@ -755,7 +781,9 @@ fn execute_split(
     {
         let mut stats = shared.stats.lock().unwrap();
         stats.submissions += 1;
-        stats.queue_wait_s += started.saturating_duration_since(g.enqueued).as_secs_f64();
+        let wait_s = started.saturating_duration_since(g.enqueued).as_secs_f64();
+        stats.queue_wait_s += wait_s;
+        stats.queue_wait_hist[crate::trace::latency_bucket(wait_s)] += 1;
     }
     let _ = g.tx.send(Ok(GenResult { groups, cost_s, rows_used: g.rows, weight_version }));
 }
@@ -787,6 +815,10 @@ fn execute_call(
         );
         Ok(res)
     });
+    // Unconditional end-of-call clock read: the exec histogram is always
+    // on, so traced and untraced runs do identical work here.
+    let finished = Instant::now();
+    crate::trace::span_between("engine-execute", "replica", started, finished, replica as i64);
     {
         let mut stats = shared.stats.lock().unwrap();
         stats.calls += 1;
@@ -797,11 +829,16 @@ fn execute_call(
         stats.coalesced_hist[ServiceCounters::hist_bucket(subs.len())] += 1;
         stats.replica_calls[replica] += 1;
         stats.replica_rows[replica] += rows_total as u64;
+        stats.exec_hist[crate::trace::latency_bucket(
+            finished.saturating_duration_since(started).as_secs_f64(),
+        )] += 1;
         if deadline_fired {
             stats.deadline_dispatches += 1;
         }
         for s in &subs {
-            stats.queue_wait_s += started.saturating_duration_since(s.enqueued).as_secs_f64();
+            let wait_s = started.saturating_duration_since(s.enqueued).as_secs_f64();
+            stats.queue_wait_s += wait_s;
+            stats.queue_wait_hist[crate::trace::latency_bucket(wait_s)] += 1;
         }
     }
     match result {

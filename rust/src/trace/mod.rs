@@ -1,0 +1,554 @@
+//! Trace spine: per-thread bounded event buffers with a global collector
+//! that exports Chrome trace-event JSON (DESIGN.md §12).
+//!
+//! Zero-perturbation contract. Tracing is compiled in but branch-cheap
+//! when off: every instrumentation site starts with one relaxed atomic
+//! load and touches nothing else. When on, it never reads RNG state and
+//! never changes scheduling order — each thread appends to its *own* ring
+//! behind a mutex no other thread contends until the final drain — and
+//! memory is bounded by a fixed per-thread capacity with a
+//! `dropped_events` counter instead of an unbounded Vec. The CI rail in
+//! `tests/trace_sim.rs` (and the `ci.sh` trace smoke) holds a traced
+//! run's `RunRecord` bit for bit equal to an untraced one on serial,
+//! pipelined, and pooled topologies.
+//!
+//! Timestamps share the wall-clock epoch with `util::logging`, so trace
+//! spans and leveled log lines are directly comparable.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+use crate::util::logging;
+
+/// Per-thread ring capacity in events. Beyond it new events are dropped
+/// and counted — the buffer never grows past the cap.
+pub const RING_CAP: usize = 65_536;
+
+/// Event kinds in the Chrome trace-event model: complete spans (`"X"`)
+/// and instants (`"i"`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Span,
+    Instant,
+}
+
+/// One recorded event. `&'static str` names keep recording allocation-free.
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    name: &'static str,
+    cat: &'static str,
+    kind: Kind,
+    /// Microseconds since the shared logging/trace epoch.
+    ts_us: u64,
+    dur_us: u64,
+    arg: i64,
+}
+
+/// A thread's bounded event buffer. Only the owning thread pushes; the
+/// collector locks it once at drain time.
+struct Ring {
+    label: String,
+    events: Vec<Event>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(label: String, cap: usize) -> Ring {
+        // Grow lazily toward the cap instead of reserving the full buffer
+        // up front for every short-lived thread.
+        Ring { label, events: Vec::new(), cap, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Bumped on every enable/finish so stale thread-local handles from a
+/// previous collection re-register instead of writing into drained rings.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static REGISTRY: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+/// Cached copy of the logging epoch: `OnceLock::get` is one atomic load,
+/// vs. the mutex `logging::epoch()` takes (fine per call, not per event).
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static LOCAL: RefCell<Option<(u64, Arc<Mutex<Ring>>)>> = const { RefCell::new(None) };
+}
+
+/// Whether the collector is recording. One relaxed load — the fast path
+/// every instrumentation site takes when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start collecting. Anchors the trace to the shared logging epoch.
+pub fn enable() {
+    let _ = EPOCH.set(logging::epoch());
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+    REGISTRY.lock().unwrap().clear();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop collecting and drain every thread's ring. Returns `None` when
+/// tracing was not enabled. Threads may keep calling the record API
+/// concurrently; events landing after the swap are simply dropped with
+/// their rings.
+pub fn finish() -> Option<TraceData> {
+    if !ENABLED.swap(false, Ordering::SeqCst) {
+        return None;
+    }
+    GENERATION.fetch_add(1, Ordering::SeqCst);
+    let rings: Vec<Arc<Mutex<Ring>>> = std::mem::take(&mut *REGISTRY.lock().unwrap());
+    let mut threads = Vec::new();
+    let mut dropped_events = 0u64;
+    for ring in rings {
+        let mut g = ring.lock().unwrap();
+        dropped_events += g.dropped;
+        threads.push(ThreadTrace {
+            label: std::mem::take(&mut g.label),
+            dropped: g.dropped,
+            events: std::mem::take(&mut g.events),
+        });
+    }
+    // Registration order races across threads; sort for a deterministic
+    // export layout (duplicate labels keep distinct tids).
+    threads.sort_by(|a, b| a.label.cmp(&b.label));
+    Some(TraceData { threads, dropped_events })
+}
+
+/// Run `f` on the calling thread's ring, registering one (keyed to the
+/// current collection generation) on first use.
+fn with_ring(f: impl FnOnce(&mut Ring)) {
+    let generation = GENERATION.load(Ordering::Relaxed);
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let stale = match slot.as_ref() {
+            Some((g, _)) => *g != generation,
+            None => true,
+        };
+        if stale {
+            let cur = std::thread::current();
+            let label = match cur.name() {
+                Some(name) => name.to_string(),
+                None => format!("{:?}", cur.id()),
+            };
+            let ring = Arc::new(Mutex::new(Ring::new(label, RING_CAP)));
+            REGISTRY.lock().unwrap().push(Arc::clone(&ring));
+            *slot = Some((generation, ring));
+        }
+        if let Some((_, ring)) = slot.as_ref() {
+            f(&mut ring.lock().unwrap());
+        }
+    });
+}
+
+/// Name the calling thread's timeline row (unnamed pool workers would
+/// otherwise show up as opaque thread ids). No-op when tracing is off.
+pub fn set_thread_label(label: &str) {
+    if !enabled() {
+        return;
+    }
+    with_ring(|r| r.label = label.to_string());
+}
+
+fn ts_us(t: Instant) -> u64 {
+    let epoch = EPOCH.get().copied().unwrap_or(t);
+    t.duration_since(epoch).as_micros() as u64
+}
+
+/// Span opener: a timestamp when recording, `None` (and no clock read)
+/// when off. Pair with [`span`].
+#[inline]
+pub fn start() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Close a span opened by [`start`]. `arg` is a site-defined small
+/// integer (replica index, batch rows, deadline-fired flag, ...).
+pub fn span(name: &'static str, cat: &'static str, start: Option<Instant>, arg: i64) {
+    let Some(t0) = start else { return };
+    record(name, cat, Kind::Span, t0, Instant::now(), arg);
+}
+
+/// Record a span from an `Instant` the instrumented code already owns
+/// (no extra clock read on the start side, one on the end side).
+pub fn span_from(name: &'static str, cat: &'static str, t0: Instant, arg: i64) {
+    if !enabled() {
+        return;
+    }
+    record(name, cat, Kind::Span, t0, Instant::now(), arg);
+}
+
+/// Record a span between two `Instant`s the instrumented code already
+/// owns (no clock reads at all — for sites that measure durations
+/// unconditionally, e.g. the always-on latency histograms).
+pub fn span_between(name: &'static str, cat: &'static str, t0: Instant, t1: Instant, arg: i64) {
+    if !enabled() {
+        return;
+    }
+    record(name, cat, Kind::Span, t0, t1, arg);
+}
+
+/// Record a point event.
+pub fn instant(name: &'static str, cat: &'static str, arg: i64) {
+    if !enabled() {
+        return;
+    }
+    let now = Instant::now();
+    record(name, cat, Kind::Instant, now, now, arg);
+}
+
+fn record(name: &'static str, cat: &'static str, kind: Kind, t0: Instant, t1: Instant, arg: i64) {
+    let ev = Event {
+        name,
+        cat,
+        kind,
+        ts_us: ts_us(t0),
+        dur_us: t1.saturating_duration_since(t0).as_micros() as u64,
+        arg,
+    };
+    with_ring(|r| r.push(ev));
+}
+
+/// One drained per-thread timeline.
+pub struct ThreadTrace {
+    pub label: String,
+    pub dropped: u64,
+    events: Vec<Event>,
+}
+
+/// Everything [`finish`] collected, ready for export.
+pub struct TraceData {
+    threads: Vec<ThreadTrace>,
+    pub dropped_events: u64,
+}
+
+impl TraceData {
+    pub fn thread_count(&self) -> usize {
+        self.threads.len()
+    }
+
+    pub fn event_count(&self) -> usize {
+        self.threads.iter().map(|t| t.events.len()).sum()
+    }
+
+    /// Chrome trace-event JSON (the object form, loadable by Perfetto and
+    /// `chrome://tracing`): `"X"` complete spans and `"i"` instants, one
+    /// `tid` per thread with a `thread_name` metadata record, timestamps
+    /// in microseconds since the shared epoch.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::new();
+        for (idx, t) in self.threads.iter().enumerate() {
+            let tid = (idx + 1) as f64;
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid)),
+                ("args", Json::obj(vec![("name", Json::str(t.label.clone()))])),
+            ]));
+            for ev in &t.events {
+                let mut fields = vec![
+                    ("name", Json::str(ev.name)),
+                    ("cat", Json::str(ev.cat)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(tid)),
+                    ("ts", Json::num(ev.ts_us as f64)),
+                    ("args", Json::obj(vec![("arg", Json::num(ev.arg as f64))])),
+                ];
+                match ev.kind {
+                    Kind::Span => {
+                        fields.push(("ph", Json::str("X")));
+                        fields.push(("dur", Json::num(ev.dur_us as f64)));
+                    }
+                    Kind::Instant => {
+                        fields.push(("ph", Json::str("i")));
+                        fields.push(("s", Json::str("t")));
+                    }
+                }
+                events.push(Json::obj(fields));
+            }
+        }
+        Json::obj(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("dropped_events", Json::num(self.dropped_events as f64)),
+                    ("tool", Json::str("speed-rl")),
+                ]),
+            ),
+            ("traceEvents", Json::arr(events)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Log-bucketed latency histograms
+// ---------------------------------------------------------------------------
+
+/// Bucket count shared by the always-on `ServiceCounters` histograms and
+/// the analyzer.
+pub const HIST_BUCKETS: usize = 8;
+
+/// Upper bucket edges in seconds: 10µs, 100µs, 1ms, 10ms, 100ms, 1s, 10s,
+/// +inf (overflow).
+const HIST_UPPER_S: [f64; HIST_BUCKETS] = [1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, f64::INFINITY];
+
+/// Index of the log bucket holding a latency observation.
+pub fn latency_bucket(seconds: f64) -> usize {
+    HIST_UPPER_S.iter().position(|&ub| seconds < ub).unwrap_or(HIST_BUCKETS - 1)
+}
+
+/// Upper-bound quantile estimate over a log-bucketed histogram: the upper
+/// edge of the bucket holding the q-quantile observation. The overflow
+/// bucket reports the last finite edge (the estimate saturates rather
+/// than inventing a value). Empty histograms report 0.
+pub fn hist_quantile(hist: &[u64], q: f64) -> f64 {
+    let total: u64 = hist.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (i, &count) in hist.iter().enumerate() {
+        seen += count;
+        if seen >= rank {
+            let ub = HIST_UPPER_S[i.min(HIST_BUCKETS - 1)];
+            return if ub.is_finite() { ub } else { HIST_UPPER_S[HIST_BUCKETS - 2] };
+        }
+    }
+    HIST_UPPER_S[HIST_BUCKETS - 2]
+}
+
+// ---------------------------------------------------------------------------
+// Analyzer (`speed-rl trace summarize`)
+// ---------------------------------------------------------------------------
+
+/// Aggregate stats for one span name across the whole trace.
+pub struct PhaseSummary {
+    pub name: String,
+    pub count: u64,
+    pub total_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+/// What `summarize_chrome` extracts from a Chrome trace JSON document.
+pub struct TraceSummary {
+    /// Per-span-name breakdown, descending by total wall-clock.
+    pub phases: Vec<PhaseSummary>,
+    /// Instant-event counts by name.
+    pub instants: Vec<(String, u64)>,
+    pub threads: usize,
+    pub events: u64,
+    pub dropped_events: u64,
+    /// First event start to last event end, in seconds.
+    pub wall_s: f64,
+}
+
+/// Summarize a parsed Chrome trace-event document: per-phase wall-clock
+/// totals and exact p50/p95/p99 over each span name's durations.
+pub fn summarize_chrome(doc: &Json) -> Result<TraceSummary> {
+    let Some(events) = doc.get("traceEvents").and_then(|e| e.as_arr()) else {
+        bail!("not a Chrome trace document: missing 'traceEvents' array");
+    };
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut durs: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut instants: BTreeMap<String, u64> = BTreeMap::new();
+    let mut threads: BTreeSet<i64> = BTreeSet::new();
+    let mut min_ts = f64::INFINITY;
+    let mut max_end = f64::NEG_INFINITY;
+    let mut count = 0u64;
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        if ph == "M" {
+            continue;
+        }
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("?");
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).unwrap_or(0.0);
+        count += 1;
+        if let Some(tid) = ev.get("tid").and_then(|t| t.as_f64()) {
+            threads.insert(tid as i64);
+        }
+        match ph {
+            "X" => {
+                let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0);
+                min_ts = min_ts.min(ts);
+                max_end = max_end.max(ts + dur);
+                durs.entry(name.to_string()).or_default().push(dur);
+            }
+            "i" | "I" => {
+                min_ts = min_ts.min(ts);
+                max_end = max_end.max(ts);
+                *instants.entry(name.to_string()).or_default() += 1;
+            }
+            _ => {}
+        }
+    }
+    let mut phases: Vec<PhaseSummary> = durs
+        .into_iter()
+        .map(|(name, mut d)| {
+            d.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let total_us: f64 = d.iter().sum();
+            let q = |p: f64| d[((d.len() - 1) as f64 * p).round() as usize] / 1e6;
+            PhaseSummary {
+                count: d.len() as u64,
+                total_s: total_us / 1e6,
+                p50_s: q(0.50),
+                p95_s: q(0.95),
+                p99_s: q(0.99),
+                name,
+            }
+        })
+        .collect();
+    phases.sort_by(|a, b| {
+        b.total_s.partial_cmp(&a.total_s).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let dropped_events = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|d| d.as_u64_lossy())
+        .unwrap_or(0);
+    let wall_s =
+        if max_end > min_ts && min_ts.is_finite() { (max_end - min_ts) / 1e6 } else { 0.0 };
+    Ok(TraceSummary {
+        phases,
+        instants: instants.into_iter().collect(),
+        threads: threads.len(),
+        events: count,
+        dropped_events,
+        wall_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_buckets_cover_the_log_range() {
+        assert_eq!(latency_bucket(0.0), 0);
+        assert_eq!(latency_bucket(5e-6), 0);
+        assert_eq!(latency_bucket(5e-5), 1);
+        assert_eq!(latency_bucket(5e-4), 2);
+        assert_eq!(latency_bucket(5e-3), 3);
+        assert_eq!(latency_bucket(5e-2), 4);
+        assert_eq!(latency_bucket(0.5), 5);
+        assert_eq!(latency_bucket(5.0), 6);
+        assert_eq!(latency_bucket(50.0), 7);
+        assert_eq!(latency_bucket(f64::INFINITY), 7);
+    }
+
+    #[test]
+    fn hist_quantile_reports_bucket_upper_edges() {
+        let mut hist = [0u64; HIST_BUCKETS];
+        assert_eq!(hist_quantile(&hist, 0.95), 0.0);
+        // 90 observations in the 1ms bucket, 10 in the 100ms bucket: the
+        // p50 sits in the former, the p95 in the latter.
+        hist[2] = 90;
+        hist[4] = 10;
+        assert_eq!(hist_quantile(&hist, 0.50), 1e-3);
+        assert_eq!(hist_quantile(&hist, 0.95), 1e-1);
+        // The overflow bucket saturates at the last finite edge.
+        let mut over = [0u64; HIST_BUCKETS];
+        over[7] = 5;
+        assert_eq!(hist_quantile(&over, 0.5), 10.0);
+    }
+
+    #[test]
+    fn ring_drops_beyond_cap_and_counts() {
+        let ev = Event { name: "x", cat: "t", kind: Kind::Instant, ts_us: 0, dur_us: 0, arg: 0 };
+        let mut ring = Ring::new("t".into(), 2);
+        ring.push(ev);
+        ring.push(ev);
+        ring.push(ev);
+        assert_eq!(ring.events.len(), 2);
+        assert_eq!(ring.dropped, 1);
+    }
+
+    #[test]
+    fn collector_roundtrip_exports_chrome_json_and_summarizes() {
+        // The one test touching the process-global collector state (other
+        // lib tests never enable tracing, so there is nothing to race).
+        assert!(!enabled());
+        assert!(start().is_none());
+        assert!(finish().is_none(), "finish without enable must be a no-op");
+
+        enable();
+        set_thread_label("unit-test-thread");
+        let t0 = start();
+        assert!(t0.is_some());
+        span("unit-span", "test", t0, 7);
+        span_from("unit-span", "test", Instant::now(), 0);
+        instant("unit-instant", "test", 3);
+        let helper = std::thread::Builder::new()
+            .name("unit-helper".into())
+            .spawn(|| instant("helper-instant", "test", 1))
+            .unwrap();
+        helper.join().unwrap();
+
+        let data = finish().expect("collector was enabled");
+        assert!(!enabled());
+        assert_eq!(data.thread_count(), 2);
+        assert_eq!(data.event_count(), 4);
+        assert_eq!(data.dropped_events, 0);
+
+        let doc = data.to_chrome_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 4 events + 2 thread_name metadata records.
+        assert_eq!(events.len(), 6);
+        let names: Vec<&str> =
+            events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+        assert!(names.contains(&"unit-span"));
+        assert!(names.contains(&"helper-instant"));
+        let meta: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .collect();
+        let labels: Vec<&str> = meta
+            .iter()
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()))
+            .collect();
+        assert_eq!(labels, vec!["unit-helper", "unit-test-thread"], "sorted by label");
+
+        let summary = summarize_chrome(&back).unwrap();
+        assert_eq!(summary.threads, 2);
+        assert_eq!(summary.events, 4);
+        assert_eq!(summary.dropped_events, 0);
+        let phase = summary.phases.iter().find(|p| p.name == "unit-span").unwrap();
+        assert_eq!(phase.count, 2);
+        assert!(phase.total_s >= 0.0 && phase.p99_s >= phase.p50_s);
+        let inst: u64 =
+            summary.instants.iter().filter(|(n, _)| n.ends_with("instant")).map(|(_, c)| c).sum();
+        assert_eq!(inst, 2);
+
+        // After finish, recording is off again: no events accumulate.
+        span_from("late", "test", Instant::now(), 0);
+        assert!(finish().is_none());
+
+        // Not a trace document -> a helpful error.
+        let err = summarize_chrome(&Json::obj(vec![])).unwrap_err().to_string();
+        assert!(err.contains("traceEvents"), "{err}");
+    }
+}

@@ -23,6 +23,22 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(1);
 static START: Mutex<Option<Instant>> = Mutex::new(None);
 
+/// Pin the log epoch to "now". Called once at process startup (`main`)
+/// and by the run drivers: without it the epoch was lazily set by the
+/// *first log call*, so early lines always read `0.000s` and timestamps
+/// were not comparable across sinks (or with the trace spine, which
+/// shares this epoch via [`epoch`]). Idempotent — later calls keep the
+/// first epoch.
+pub fn init() {
+    let _ = epoch();
+}
+
+/// The shared wall-clock epoch all log timestamps (and trace-event
+/// timestamps) are measured from, initializing it to "now" on first use.
+pub fn epoch() -> Instant {
+    *START.lock().unwrap().get_or_insert_with(Instant::now)
+}
+
 /// Set the global log level (from `--log-level` or `SPEED_RL_LOG`).
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
@@ -38,9 +54,7 @@ pub fn level_from_str(s: &str) -> Level {
 }
 
 fn elapsed() -> f64 {
-    let mut start = START.lock().unwrap();
-    let t0 = start.get_or_insert_with(Instant::now);
-    t0.elapsed().as_secs_f64()
+    epoch().elapsed().as_secs_f64()
 }
 
 pub fn log(level: Level, target: &str, msg: &str) {
@@ -133,6 +147,16 @@ impl CsvSink {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn epoch_is_pinned_by_init_and_stable() {
+        init();
+        let e1 = epoch();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let e2 = epoch();
+        assert_eq!(e1, e2, "epoch must not move after init");
+        assert!(e1.elapsed().as_secs_f64() > 0.0);
+    }
 
     #[test]
     fn jsonl_roundtrip() {

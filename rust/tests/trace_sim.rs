@@ -1,0 +1,194 @@
+//! Integration: the trace spine's zero-perturbation contract on the sim
+//! substrate (DESIGN.md §12).
+//!
+//! Rails:
+//! * serial — a `--trace` run's `RunRecord` is byte-for-byte identical to
+//!   an untraced one, and the exported Chrome trace JSON is well formed;
+//! * pooled serial (E=2) — tracing preserves the pool degeneracy rail
+//!   (pooled ≡ plain serial on the deterministic projection,
+//!   `tests/pool_sim.rs`) while the timeline carries scheduler and
+//!   replica rows;
+//! * pipelined pooled (K=4, E=2) — a traced run completes with spans
+//!   from every layer (workers, learner, scheduler, replicas) and the
+//!   analyzer summarizes them. Pipelined runs are
+//!   scheduling-nondeterministic (DESIGN.md §8), so the byte-exact
+//!   record rail lives on the serial topologies; here the contract is
+//!   structural.
+//!
+//! The trace collector is process-global, so every test in this file —
+//! including the untraced baselines — serializes on one mutex: a
+//! parallel untraced run would otherwise register its threads into
+//! another test's enabled collection.
+
+use std::collections::BTreeSet;
+use std::sync::{Mutex, MutexGuard};
+
+use speed_rl::config::RunConfig;
+use speed_rl::driver;
+use speed_rl::trace;
+use speed_rl::util::json::Json;
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_trace_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("speedrl_trace_{}_{name}.json", std::process::id()))
+}
+
+fn base_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.max_steps = 8;
+    cfg.eval_every = 4;
+    cfg.dataset_size = 2000;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Span-name and thread-label sets from an exported Chrome trace document.
+fn trace_shape(doc: &Json) -> (BTreeSet<String>, BTreeSet<String>) {
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    let mut names = BTreeSet::new();
+    let mut labels = BTreeSet::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        if ph == "M" {
+            if let Some(l) = ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()) {
+                labels.insert(l.to_string());
+            }
+        } else if let Some(n) = ev.get("name").and_then(|n| n.as_str()) {
+            names.insert(n.to_string());
+        }
+    }
+    (names, labels)
+}
+
+#[test]
+fn traced_serial_run_reproduces_untraced_record_byte_for_byte() {
+    let _g = lock();
+    let path = tmp_trace_path("serial");
+    let untraced = driver::run_sim(&base_cfg(3)).unwrap();
+    let mut cfg = base_cfg(3);
+    cfg.trace = Some(path.display().to_string());
+    let traced = driver::run_sim(&cfg).unwrap();
+    assert_eq!(
+        untraced.to_json().to_string(),
+        traced.to_json().to_string(),
+        "tracing perturbed the serial run record"
+    );
+
+    let doc = Json::parse_file(&path).expect("trace file parses");
+    let (names, _labels) = trace_shape(&doc);
+    for want in ["collect-batch", "optimizer-update", "evaluate"] {
+        assert!(names.contains(want), "missing span '{want}' in {names:?}");
+    }
+    let summary = trace::summarize_chrome(&doc).unwrap();
+    assert_eq!(summary.dropped_events, 0);
+    let opt = summary.phases.iter().find(|p| p.name == "optimizer-update").unwrap();
+    assert_eq!(opt.count, 8, "one optimizer-update span per step");
+    assert!(opt.p50_s <= opt.p95_s && opt.p95_s <= opt.p99_s);
+    // Step-0 eval plus the periodic ones at steps 4 and 8.
+    let evals = summary.phases.iter().find(|p| p.name == "evaluate").unwrap();
+    assert_eq!(evals.count, 3);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn traced_e2_pool_preserves_the_degeneracy_rail_with_replica_rows() {
+    let _g = lock();
+    let path = tmp_trace_path("pooled");
+    let serial = driver::run_sim(&base_cfg(9)).unwrap();
+    let mut cfg = base_cfg(9);
+    cfg.service = true;
+    cfg.engines = 2;
+    cfg.trace = Some(path.display().to_string());
+    let pooled = driver::run_sim(&cfg).unwrap();
+
+    // The pool degeneracy rail with tracing on: the deterministic
+    // projection must still match plain serial exactly.
+    assert_eq!(serial.steps.len(), pooled.steps.len());
+    for (a, b) in serial.steps.iter().zip(pooled.steps.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.train_pass_rate, b.train_pass_rate);
+        assert_eq!(a.grad_norm, b.grad_norm);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.prompts_consumed, b.prompts_consumed);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+    }
+    assert_eq!(serial.evals.len(), pooled.evals.len());
+    for (a, b) in serial.evals.iter().zip(pooled.evals.iter()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+    assert_eq!(serial.counters.calls, pooled.counters.calls);
+    assert_eq!(serial.counters.cost_s, pooled.counters.cost_s);
+
+    // The always-on latency histograms filled in: every submission lands
+    // in exactly one queue-wait bucket, every executed call (or split
+    // chunk) in one exec bucket.
+    let svc = pooled.service.expect("service counters");
+    assert_eq!(svc.queue_wait_hist.iter().sum::<u64>(), svc.submissions);
+    assert!(svc.exec_hist.iter().sum::<u64>() >= svc.calls);
+
+    let doc = Json::parse_file(&path).expect("trace file parses");
+    let (names, labels) = trace_shape(&doc);
+    assert!(names.contains("engine-execute"), "{names:?}");
+    assert!(names.contains("dispatch"), "{names:?}");
+    assert!(labels.contains("speedrl-inference-service"), "{labels:?}");
+    assert!(labels.contains("speedrl-engine-0"), "{labels:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn traced_pipelined_pool_run_has_spans_from_every_layer() {
+    let _g = lock();
+    let path = tmp_trace_path("pipelined");
+    let mut cfg = base_cfg(7);
+    cfg.pipeline = true;
+    cfg.workers = 4;
+    cfg.service = true;
+    cfg.engines = 2;
+    cfg.trace = Some(path.display().to_string());
+    let rec = driver::run_sim(&cfg).unwrap();
+    assert_eq!(rec.steps.len(), 8);
+    let svc = rec.service.expect("service counters");
+    assert!(svc.calls > 0);
+    assert_eq!(svc.queue_wait_hist.iter().sum::<u64>(), svc.submissions);
+    // The per-step p95s are upper-edge estimates over histogram deltas:
+    // finite, non-negative, and present once the service saw traffic.
+    assert!(rec.steps.iter().all(|s| s.service_queue_wait_p95_s >= 0.0));
+    assert!(rec.steps.iter().all(|s| s.service_exec_p95_s.is_finite()));
+    assert!(rec.steps.iter().any(|s| s.service_exec_p95_s > 0.0));
+
+    let doc = Json::parse_file(&path).expect("trace file parses");
+    let (names, labels) = trace_shape(&doc);
+    for want in [
+        "collect-batch",
+        "optimizer-update",
+        "weight-publish",
+        "evaluate",
+        "engine-execute",
+        "dispatch",
+        "coalesce-wait",
+    ] {
+        assert!(names.contains(want), "missing span '{want}' in {names:?}");
+    }
+    for want in [
+        "learner",
+        "worker-0",
+        "worker-3",
+        "speedrl-inference-service",
+        "speedrl-engine-0",
+        "speedrl-engine-1",
+    ] {
+        assert!(labels.contains(want), "missing thread '{want}' in {labels:?}");
+    }
+    let summary = trace::summarize_chrome(&doc).unwrap();
+    assert!(summary.threads >= 7, "workers + learner + scheduler + replicas: {}", summary.threads);
+    assert!(summary.events > 0);
+    assert!(summary.wall_s > 0.0);
+    std::fs::remove_file(&path).ok();
+}
