@@ -111,6 +111,75 @@ python3 -c "import json; json.load(open('trace_reexport.json'))"
 rm -f trace_base.json trace_traced.json trace_smoke.json trace_pipe.json trace_reexport.json
 echo "trace smoke: analyzer and re-export OK"
 
+echo "== chaos smoke (fault injection: empty-plan equivalence; E=3 err+stall+die run) =="
+# The no-faults equivalence rail of DESIGN.md §13 at the CLI: arming the
+# recovery machinery with an empty plan (--fault-plan none) must leave
+# every deterministic field of the serviced record untouched. The service's
+# real-time telemetry (queue waits, exec histograms) is wall-clock and
+# differs between ANY two runs, so those keys are normalized out before
+# the comparison; rust/tests/fault_sim.rs holds the same rail field by
+# field on the library API.
+rm -f chaos_plain.json chaos_none.json chaos_run.json chaos_err.log
+CHAOS_FLAGS="--dataset-size 2000 --batch-size 8 --steps 8 --eval-every 4 --service --log-level warn"
+cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --out chaos_plain.json
+cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --fault-plan none --out chaos_none.json
+python3 - <<'EOF'
+import json
+WALL = {"queue_wait_s", "ewma_gap_s", "queue_wait_hist", "exec_hist",
+        "queue_wait_p95_s", "exec_p95_s"}
+def norm(path):
+    doc = json.load(open(path))
+    for k in WALL:
+        doc.get("service", {}).pop(k, None)
+    return doc
+plain, armed = norm("chaos_plain.json"), norm("chaos_none.json")
+assert plain == armed, "--fault-plan none perturbed the run record"
+svc = armed["service"]
+zero = ("faults_injected", "retries", "redispatches", "quarantines", "respawns")
+assert all(svc[k] == 0 for k in zero), {k: svc[k] for k in zero}
+print("chaos smoke: armed-but-empty plan record identical to the plain run")
+EOF
+# An E=3 pipelined run under a scripted err+stall+die plan (one transient
+# error, one stall past the 50ms watchdog, one hard death) must complete
+# all steps, answer every worker submission exactly once, and account
+# each recovery action in the service counters.
+cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --workers 3 --engines 3 \
+  --fault-plan "err@0:2,stall@1:3:400,die@2:4" --exec-timeout-ms 50 --respawn \
+  --out chaos_run.json
+python3 - <<'EOF'
+import json
+doc = json.load(open("chaos_run.json"))
+svc = doc["service"]
+assert len(doc["steps"]) == 8, f"chaos run died early: {len(doc['steps'])} steps"
+assert svc["faults_injected"] >= 3, f"scripted faults missing: {svc['faults_injected']}"
+assert svc["retries"] >= 1, "the transient fault was not retried"
+assert svc["quarantines"] >= 1, "neither the stalled nor the dead replica was quarantined"
+assert svc["respawns"] >= 1, "no spare respawned into a quarantined slot"
+# Exactly-once: worker-side counters count submissions in serviced runs;
+# a lost ticket hangs the run, a duplicate desyncs these totals.
+assert svc["submissions"] == doc["counters"]["calls"], (
+    f"submissions lost or duplicated: {svc['submissions']:.0f} served "
+    f"vs {doc['counters']['calls']:.0f} submitted")
+print(f"chaos smoke: E=3 run survived {svc['faults_injected']:.0f} faults "
+      f"({svc['retries']:.0f} retries, {svc['quarantines']:.0f} quarantines, "
+      f"{svc['respawns']:.0f} respawns); every submission answered once")
+EOF
+cargo run --release --bin speed-rl -- report chaos_run.json --metric faults
+cargo run --release --bin speed-rl -- report chaos_run.json --metric retries
+# A bogus plan must be rejected up front with the kinds and grammar quoted.
+if cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --fault-plan explode@0:0 \
+    > chaos_err.log 2>&1; then
+  echo "chaos smoke FAILED: bogus --fault-plan accepted"
+  exit 1
+fi
+if ! grep -q "kind@replica:call" chaos_err.log; then
+  echo "chaos smoke FAILED: --fault-plan error does not quote the grammar"
+  cat chaos_err.log
+  exit 1
+fi
+rm -f chaos_plain.json chaos_none.json chaos_run.json chaos_err.log
+echo "chaos smoke: scripted-fault run recovered; bad plans rejected with grammar"
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

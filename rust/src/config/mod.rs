@@ -103,6 +103,19 @@ pub struct RunConfig {
     /// a traced run's `RunRecord` is bit-for-bit identical to an untraced
     /// one, and the knob is excluded from the checkpoint fingerprint.
     pub trace: Option<String>,
+    /// Scripted fault-injection plan for the engine pool (`--fault-plan`;
+    /// DESIGN.md §13). `None` = no chaos harness; `Some("none")` arms the
+    /// recovery machinery with an empty script — which must reproduce the
+    /// plain run byte for byte. Execution-topology class: excluded from
+    /// the checkpoint fingerprint like `trace`/`workers`.
+    pub fault_plan: Option<String>,
+    /// Execute watchdog for the fault-tolerant pool (`--exec-timeout-ms`):
+    /// a replica whose call runs longer than this is quarantined and its
+    /// plans redispatched. 0 = no watchdog.
+    pub exec_timeout_ms: u64,
+    /// Pre-fork one spare engine per active replica and activate spares
+    /// into quarantined replicas' places (`--respawn`).
+    pub respawn: bool,
 }
 
 impl Default for RunConfig {
@@ -146,6 +159,9 @@ impl Default for RunConfig {
             coalesce_adaptive: service_cfg.adaptive,
             engines: 1,
             trace: None,
+            fault_plan: None,
+            exec_timeout_ms: 0,
+            respawn: false,
         }
     }
 }
@@ -299,6 +315,17 @@ impl RunConfig {
                 self.engines
             );
         }
+        if let Some(spec) = &self.fault_plan {
+            let plan = crate::policy::fault::FaultPlan::parse(spec).context("fault_plan")?;
+            if let Some(r) = plan.max_replica() {
+                if r >= self.engines {
+                    bail!(
+                        "fault plan names replica {r} but only {} engine(s) are configured",
+                        self.engines
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
@@ -369,6 +396,17 @@ impl RunConfig {
         // the pre-trace format (the resume-smoke full-byte diff).
         if let Some(path) = &self.trace {
             fields.push(("trace", Json::str(path.clone())));
+        }
+        // Same emit-only-when-set rule for the fault-tolerance knobs:
+        // a run without the chaos harness keeps the pre-§13 byte layout.
+        if let Some(plan) = &self.fault_plan {
+            fields.push(("fault_plan", Json::str(plan.clone())));
+        }
+        if self.exec_timeout_ms > 0 {
+            fields.push(("exec_timeout_ms", Json::num(self.exec_timeout_ms as f64)));
+        }
+        if self.respawn {
+            fields.push(("respawn", Json::Bool(true)));
         }
         Json::obj(fields)
     }
@@ -443,6 +481,13 @@ impl RunConfig {
         }
         if let Some(v) = get_str("trace") {
             cfg.trace = Some(v.to_string());
+        }
+        if let Some(v) = get_str("fault_plan") {
+            cfg.fault_plan = Some(v.to_string());
+        }
+        num_field!("exec_timeout_ms", exec_timeout_ms, u64);
+        if let Some(v) = j.get("respawn").and_then(|x| x.as_bool()) {
+            cfg.respawn = v;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -698,6 +743,49 @@ mod tests {
         cfg.trace = Some("out/trace.json".into());
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.trace.as_deref(), Some("out/trace.json"));
+    }
+
+    #[test]
+    fn fault_knobs_roundtrip_and_are_omitted_when_off() {
+        // Off by default, and absent from the JSON so non-chaos configs
+        // keep the pre-fault-tolerance byte layout.
+        let cfg = RunConfig::default();
+        assert!(cfg.fault_plan.is_none());
+        assert_eq!(cfg.exec_timeout_ms, 0);
+        assert!(!cfg.respawn);
+        let text = cfg.to_json().to_string_pretty();
+        assert!(!text.contains("fault_plan"), "{text}");
+        assert!(!text.contains("exec_timeout_ms"), "{text}");
+        assert!(!text.contains("respawn"), "{text}");
+        let mut cfg = RunConfig::default();
+        cfg.engines = 3;
+        cfg.fault_plan = Some("err@0:2,stall@1:3:400,die@2:4".into());
+        cfg.exec_timeout_ms = 50;
+        cfg.respawn = true;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.fault_plan.as_deref(), Some("err@0:2,stall@1:3:400,die@2:4"));
+        assert_eq!(back.exec_timeout_ms, 50);
+        assert!(back.respawn);
+    }
+
+    #[test]
+    fn fault_plan_is_validated_at_load_time() {
+        // A malformed spec is rejected with the grammar in the message.
+        let mut bad = RunConfig::default();
+        bad.fault_plan = Some("explode@0:0".into());
+        let msg = format!("{:#}", bad.validate().unwrap_err());
+        assert!(msg.contains("kind@replica:call"), "no grammar in: {msg}");
+        // A plan naming a replica beyond the configured pool is rejected.
+        let mut bad = RunConfig::default();
+        bad.engines = 2;
+        bad.fault_plan = Some("err@2:0".into());
+        let msg = format!("{:#}", bad.validate().unwrap_err());
+        assert!(msg.contains("replica 2"), "{msg}");
+        assert!(msg.contains("2 engine"), "{msg}");
+        // "none" arms the machinery with an empty script — always valid.
+        let mut ok = RunConfig::default();
+        ok.fault_plan = Some("none".into());
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::coordinator::trainer::{
 use crate::data::dataset::Dataset;
 use crate::data::loader::{Loader, SharedSource};
 use crate::metrics::{AtomicCounters, InferenceCounters, RunRecord, ServiceCounters, StepRecord};
+use crate::policy::fault::RecoveryConfig;
 use crate::policy::service::{InferenceService, ServiceConfig};
 use crate::policy::{ForkEngine, Policy, RolloutEngine, WeightSnapshot};
 use crate::rl::algo::AlgoConfig;
@@ -116,6 +117,11 @@ pub struct PipelinedTrainer {
     /// `--engines` flag; meaningful only with `pipeline.service` on).
     /// Defaults to 1 — set via [`with_engines`](Self::with_engines).
     engines: usize,
+    /// Fault-tolerance knobs + pre-forked spare count for the service
+    /// (DESIGN.md §13). `None` — the default — spawns the plain pool with
+    /// every recovery path disabled, preserving the bit-for-bit rails.
+    /// Set via [`with_recovery`](Self::with_recovery).
+    recovery: Option<(RecoveryConfig, usize)>,
 }
 
 /// Restored learner-side progress for a warm-resumed pipelined run (the
@@ -138,7 +144,7 @@ pub struct PipelineResume {
 
 impl PipelinedTrainer {
     pub fn new(config: TrainerConfig, algo: AlgoConfig, pipeline: PipelineConfig) -> Self {
-        PipelinedTrainer { config, algo, pipeline, engines: 1 }
+        PipelinedTrainer { config, algo, pipeline, engines: 1, recovery: None }
     }
 
     /// Shard the shared inference service across `engines` data-parallel
@@ -147,6 +153,16 @@ impl PipelinedTrainer {
     /// unchanged.
     pub fn with_engines(mut self, engines: usize) -> Self {
         self.engines = engines.clamp(1, crate::metrics::MAX_POOL);
+        self
+    }
+
+    /// Arm the service's fault-tolerance machinery (DESIGN.md §13):
+    /// bounded retry, execute watchdog, scripted fault injection, and
+    /// `spares` pre-forked standby engines for quarantine respawn. Spares
+    /// beyond what [`crate::metrics::MAX_POOL`] admits next to the active
+    /// replicas are dropped. Ignored unless `pipeline.service` is on.
+    pub fn with_recovery(mut self, recovery: RecoveryConfig, spares: usize) -> Self {
+        self.recovery = Some((recovery, spares));
         self
     }
 
@@ -244,15 +260,36 @@ impl PipelinedTrainer {
         // cheap submit handle advertising capacity x E / K rows; weights
         // install once per version per replica instead of K times.
         let service = self.pipeline.service.then(|| {
-            InferenceService::spawn_pool(
-                (0..self.engines.max(1)).map(|r| policy.fork_engine(r as u64)).collect(),
-                self.pipeline.service_cfg,
-                self.pipeline.workers,
-                // The quantum must admit the LARGEST possible group: with
-                // adaptive budgets that is n_init + n_cont_max, not the
-                // rule's reference total.
-                spec.alloc.max_n_total(),
-            )
+            let e = self.engines.max(1);
+            let engines: Vec<_> = (0..e).map(|r| policy.fork_engine(r as u64)).collect();
+            // The quantum must admit the LARGEST possible group: with
+            // adaptive budgets that is n_init + n_cont_max, not the
+            // rule's reference total.
+            let min_quantum = spec.alloc.max_n_total();
+            match &self.recovery {
+                Some((recovery, spares)) => {
+                    // Spares fork on streams E.. so their RNG streams never
+                    // collide with an active replica's; the pool caps total
+                    // slots at MAX_POOL.
+                    let n_spares = (*spares).min(crate::metrics::MAX_POOL - e);
+                    let spares: Vec<_> =
+                        (0..n_spares).map(|s| policy.fork_engine((e + s) as u64)).collect();
+                    InferenceService::spawn_pool_with_recovery(
+                        engines,
+                        spares,
+                        self.pipeline.service_cfg,
+                        recovery.clone(),
+                        self.pipeline.workers,
+                        min_quantum,
+                    )
+                }
+                None => InferenceService::spawn_pool(
+                    engines,
+                    self.pipeline.service_cfg,
+                    self.pipeline.workers,
+                    min_quantum,
+                ),
+            }
         });
 
         let pool = ThreadPool::new(self.pipeline.workers);
@@ -415,6 +452,8 @@ impl PipelinedTrainer {
                 pool_balance,
                 service_queue_wait_p95_s,
                 service_exec_p95_s,
+                service_faults,
+                service_retries,
             ) = match service.map(|s| s.stats()) {
                 Some(cur) => {
                     let d_calls = cur.calls.saturating_sub(prev_svc.calls);
@@ -424,6 +463,8 @@ impl PipelinedTrainer {
                     let d_wait = cur.queue_wait_s - prev_svc.queue_wait_s;
                     let d_disp = cur.pool_dispatches.saturating_sub(prev_svc.pool_dispatches);
                     let d_busy = cur.pool_busy_sum.saturating_sub(prev_svc.pool_busy_sum);
+                    let d_faults = cur.faults_injected.saturating_sub(prev_svc.faults_injected);
+                    let d_retries = cur.retries.saturating_sub(prev_svc.retries);
                     let engines = cur.engines;
                     // Step-local latency histograms: bucket deltas, then the
                     // p95 upper-edge estimate (trace::hist_quantile).
@@ -446,9 +487,11 @@ impl PipelinedTrainer {
                         },
                         crate::trace::hist_quantile(&d_qwait, 0.95),
                         crate::trace::hist_quantile(&d_exec, 0.95),
+                        d_faults,
+                        d_retries,
                     )
                 }
-                None => (0, 0.0, 0.0, 0.0, 0.0, 0.0),
+                None => (0, 0.0, 0.0, 0.0, 0.0, 0.0, 0, 0),
             };
             record.steps.push(StepRecord {
                 step,
@@ -476,6 +519,8 @@ impl PipelinedTrainer {
                 rollouts: counter_snap.rollouts,
                 step_alloc_rows: alloc_rows,
                 alloc_calibration: counter_snap.alloc_calibration(),
+                service_faults,
+                service_retries,
             });
 
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {

@@ -273,6 +273,8 @@ impl Trainer {
                 rollouts: state.counters.rollouts,
                 step_alloc_rows: step_alloc_rows(&counters_before, &state.counters),
                 alloc_calibration: state.counters.alloc_calibration(),
+                service_faults: 0,
+                service_retries: 0,
             });
 
             // ---- periodic evaluation (excluded from training time) ----

@@ -18,6 +18,7 @@ use crate::data::dataset::Dataset;
 use crate::data::loader::Loader;
 use crate::eval::benchmark_suite;
 use crate::metrics::RunRecord;
+use crate::policy::fault::{FaultPlan, RecoveryConfig};
 use crate::policy::real::RealPolicy;
 use crate::policy::service::{InferenceService, ServiceConfig, ServicedPolicy};
 use crate::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
@@ -103,6 +104,30 @@ pub fn service_config(cfg: &RunConfig) -> ServiceConfig {
     }
 }
 
+/// The fault-tolerance configuration for a run, or `None` when no fault
+/// knob is set — plain spawns then run the exact pre-fault service state
+/// machine (the no-faults bit-for-bit rail, DESIGN.md §13). Returns the
+/// recovery config plus the number of spare engines to pre-fork: one per
+/// active replica under `--respawn`, bounded so active + spares fit the
+/// fixed-size per-replica counter arrays.
+pub fn recovery_config(cfg: &RunConfig) -> Result<Option<(RecoveryConfig, usize)>> {
+    if cfg.fault_plan.is_none() && cfg.exec_timeout_ms == 0 && !cfg.respawn {
+        return Ok(None);
+    }
+    let recovery = RecoveryConfig {
+        exec_timeout_ms: cfg.exec_timeout_ms,
+        respawn: cfg.respawn,
+        fault_plan: match &cfg.fault_plan {
+            Some(spec) => FaultPlan::parse(spec).context("--fault-plan")?,
+            None => FaultPlan::default(),
+        },
+        ..RecoveryConfig::default()
+    };
+    let e = cfg.engines.max(1);
+    let spares = if cfg.respawn { e.min(crate::metrics::MAX_POOL - e) } else { 0 };
+    Ok(Some((recovery, spares)))
+}
+
 pub fn pipeline_config(cfg: &RunConfig) -> PipelineConfig {
     PipelineConfig {
         workers: cfg.workers.max(1),
@@ -184,12 +209,27 @@ pub fn run_sim_with(cfg: &RunConfig, io: &CheckpointIo) -> Result<RunRecord> {
             // restore re-publishes the snapshot so the pool's forked replicas
             // serve the restored weights.
             check_capacity(cfg, policy.rollout_capacity())?;
-            let service = InferenceService::spawn_pool(
-                (0..cfg.engines.max(1)).map(|r| policy.fork_engine(r as u64)).collect(),
-                service_config(cfg),
-                1,
-                cfg.max_group_rollouts(),
-            );
+            let e = cfg.engines.max(1);
+            let engines: Vec<_> = (0..e).map(|r| policy.fork_engine(r as u64)).collect();
+            let service = match recovery_config(cfg)? {
+                Some((recovery, n_spares)) => InferenceService::spawn_pool_with_recovery(
+                    engines,
+                    // Spares continue the replica seed streams so an
+                    // activated spare is just "replica E+s" — deterministic
+                    // and disjoint from every active stream.
+                    (0..n_spares).map(|s| policy.fork_engine((e + s) as u64)).collect(),
+                    service_config(cfg),
+                    recovery,
+                    1,
+                    cfg.max_group_rollouts(),
+                ),
+                None => InferenceService::spawn_pool(
+                    engines,
+                    service_config(cfg),
+                    1,
+                    cfg.max_group_rollouts(),
+                ),
+            };
             let handle = service.handle();
             let mut serviced = ServicedPolicy::new(handle, &mut policy);
             return run_serial_segments(cfg, &mut serviced, &dataset, &evals, io, Some(&service));
@@ -329,6 +369,47 @@ fn save_run_state(
     Ok(())
 }
 
+/// Best-effort emergency checkpoint for a run that is about to die with an
+/// error: write the last consistent state to the sidecar tag `<tag>-crash`
+/// (same atomic temp-file + rename path as every other save) so the work
+/// is salvageable, and log the resume command. Never masks the original
+/// error — a failing emergency save only warns.
+#[allow(clippy::too_many_arguments)]
+fn save_crash_state(
+    cfg: &RunConfig,
+    policy: &dyn Policy,
+    curriculum_state: Option<crate::util::json::Json>,
+    spec: &CurriculumSpec,
+    step: usize,
+    inference_s: f64,
+    update_s: f64,
+    counters: crate::metrics::InferenceCounters,
+    record: &RunRecord,
+    loader_state: crate::data::loader::LoaderState,
+    save: &CheckpointSpec,
+) {
+    let crash = CheckpointSpec::new(save.dir.clone(), format!("{}-crash", save.tag));
+    match save_run_state(
+        cfg,
+        policy,
+        curriculum_state,
+        spec,
+        step,
+        inference_s,
+        update_s,
+        counters,
+        record,
+        loader_state,
+        &crash,
+    ) {
+        Ok(()) => crate::info!(
+            "checkpoint",
+            "emergency checkpoint at step {step}; resume with: --resume {crash}"
+        ),
+        Err(e) => crate::warn_log!("checkpoint", "emergency checkpoint to {crash} failed: {e:#}"),
+    }
+}
+
 /// The serial segmented runner shared by the sim and real substrates: run
 /// until the next save point, snapshot, repeat. With no `io.save` this is
 /// one segment — exactly the plain serial run. When the serial loop is
@@ -379,7 +460,32 @@ fn run_serial_segments(
         } else {
             cfg.max_steps
         };
-        trainer.run_segment(policy, curriculum.as_mut(), dataset, evals, &mut state, until)?;
+        if let Err(err) =
+            trainer.run_segment(policy, curriculum.as_mut(), dataset, evals, &mut state, until)
+        {
+            // The state is mid-step but internally consistent (the trainer
+            // mutates it between phases, never partially within one), so a
+            // dying run with --save leaves a salvageable sidecar behind.
+            if let Some(save) = &io.save {
+                if let Some(svc) = service {
+                    state.record.service = Some(merged_service(svc));
+                }
+                save_crash_state(
+                    cfg,
+                    &*policy,
+                    curriculum.state_json(),
+                    &spec,
+                    state.next_step,
+                    state.inference_s,
+                    state.update_s,
+                    state.counters,
+                    &state.record,
+                    state.loader.state(),
+                    save,
+                );
+            }
+            return Err(err);
+        }
         if let Some(save) = &io.save {
             if let Some(svc) = service {
                 state.record.service = Some(merged_service(svc));
@@ -461,10 +567,51 @@ fn run_pipelined_sim(
         };
         let mut segment_cfg = trainer_config(cfg);
         segment_cfg.max_steps = until;
-        let trainer = PipelinedTrainer::new(segment_cfg, build_algo(cfg), pipeline_config(cfg))
+        let mut trainer = PipelinedTrainer::new(segment_cfg, build_algo(cfg), pipeline_config(cfg))
             .with_engines(cfg.engines);
+        if let Some((recovery, spares)) = recovery_config(cfg)? {
+            trainer = trainer.with_recovery(recovery, spares);
+        }
+        // Progress as of the segment start, kept for the crash path below:
+        // a failing segment cannot return its in-flight record, so the
+        // emergency sidecar records the last segment boundary (the weights
+        // and shared predictor still carry whatever the crash allowed).
+        let crash_progress = resume.as_ref().map(|r| {
+            (r.start_step, r.inference_s, r.update_s, r.counters, r.record.clone(), r.loader.state())
+        });
         let (record, loader) =
-            trainer.run_resumed(policy, spec.clone(), dataset, evals, resume.take())?;
+            match trainer.run_resumed(policy, spec.clone(), dataset, evals, resume.take()) {
+                Ok(v) => v,
+                Err(err) => {
+                    if let Some(save) = &io.save {
+                        let (step, inference_s, update_s, counters, record, loader_state) =
+                            crash_progress.unwrap_or_else(|| {
+                                (
+                                    0,
+                                    0.0,
+                                    0.0,
+                                    Default::default(),
+                                    RunRecord { label: cfg.label.clone(), ..Default::default() },
+                                    Loader::new(dataset.len(), cfg.seed).state(),
+                                )
+                            });
+                        save_crash_state(
+                            cfg,
+                            &*policy,
+                            None,
+                            &spec,
+                            step,
+                            inference_s,
+                            update_s,
+                            counters,
+                            &record,
+                            loader_state,
+                            save,
+                        );
+                    }
+                    return Err(err);
+                }
+            };
         let next_step = record.steps.last().map(|s| s.step + 1).unwrap_or(start);
         let update_s = record.steps.last().map(|s| s.update_s).unwrap_or(0.0);
         if let Some(save) = &io.save {

@@ -142,6 +142,16 @@ fn print_summary(record: &RunRecord, model: &str) {
                 &svc.replica_calls[..e],
             );
         }
+        if svc.faults_injected > 0 || svc.quarantines > 0 {
+            println!(
+                "faults: {} injected  {} retries  {} redispatches  {} quarantines  {} respawns",
+                svc.faults_injected,
+                svc.retries,
+                svc.redispatches,
+                svc.quarantines,
+                svc.respawns,
+            );
+        }
     }
     if record.counters.prompts_skipped > 0 || record.counters.brier_n > 0 {
         println!(
@@ -230,12 +240,25 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             "write a Chrome trace-event JSON timeline to this path (Perfetto-loadable; \
              see 'speed-rl trace')",
         )
+        .opt(
+            "fault-plan",
+            None,
+            "scripted engine faults, kind@replica:call[:millis] comma-separated \
+             (kinds: err, stall, die; 'none' arms recovery with an empty script)",
+        )
+        .opt(
+            "exec-timeout-ms",
+            None,
+            "quarantine a replica whose engine call exceeds this and redispatch its work \
+             (0 = no watchdog)",
+        )
         .flag("pipeline", "overlap inference with updates (producer/consumer)")
         .flag("service", "coalesce all rollout requests through one shared inference service")
         .flag(
             "coalesce-adaptive",
             "scale the service's micro-batch deadline with the observed submission gap",
-        );
+        )
+        .flag("respawn", "pre-fork spare engines and activate one when a replica is quarantined");
     let args = cli.parse(argv)?;
     logging::set_level(level_from_str(args.get("log-level").unwrap_or("info")));
 
@@ -321,6 +344,18 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     if let Some(v) = args.get("trace") {
         cfg.trace = Some(v.to_string());
     }
+    if let Some(v) = args.get("fault-plan") {
+        cfg.fault_plan = Some(v.to_string());
+    }
+    if let Some(v) = args.get("exec-timeout-ms") {
+        cfg.exec_timeout_ms = v.parse::<u64>().context("--exec-timeout-ms")?;
+    }
+    if args.has_flag("respawn") {
+        cfg.respawn = true;
+    }
+    // Reject a bad --fault-plan here (with the grammar quoted) instead of
+    // deep inside the spawn path; also catches plan/engine-count mismatch.
+    cfg.validate()?;
     let io = checkpoint_io(&args)?;
 
     let record = driver::run_sim_with(&cfg, &io)?;
@@ -550,7 +585,8 @@ fn cmd_report(argv: &[String]) -> Result<()> {
             "metric",
             Some("accuracy"),
             "accuracy | skip-rate | explore-rate | service-fill | pool-balance | staleness | \
-             alloc-rows | alloc-calibration | queue-wait-p95 | exec-p95 (per-step charts)",
+             alloc-rows | alloc-calibration | queue-wait-p95 | exec-p95 | faults | retries \
+             (per-step charts)",
         )
         .opt("width", Some("72"), "chart width")
         .opt("height", Some("16"), "chart height");

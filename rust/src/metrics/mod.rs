@@ -420,6 +420,25 @@ pub struct ServiceCounters {
     /// Per-replica installed weight version (gauge; never exceeds the
     /// service's announced version — the staleness bound).
     pub replica_weight_version: [u64; MAX_POOL],
+    /// Engine faults observed: failed generate attempts, execute-watchdog
+    /// expiries, and replica panics. Under a scripted
+    /// [`crate::policy::fault::FaultPlan`] this counts exactly the events
+    /// that fired (the chaos-smoke accounting rail).
+    pub faults_injected: u64,
+    /// Failed execute attempts retried on the same replica (the bounded
+    /// per-plan retry of `RecoveryConfig::retry_max`).
+    pub retries: u64,
+    /// Plans moved off a quarantined replica to healthy peers (in-flight
+    /// shadow plans and queued plans both count, one per plan).
+    pub redispatches: u64,
+    /// Replicas quarantined (retry exhaustion, watchdog timeout, or hard
+    /// death); each replica counts at most once per pool generation.
+    pub quarantines: u64,
+    /// Quarantined replicas replaced by activating a pre-forked spare.
+    pub respawns: u64,
+    /// Per-replica fault events observed at that replica (slot-by-slot
+    /// merge, same ordering contract as the other per-replica counters).
+    pub replica_faults: [u64; MAX_POOL],
     /// Log-bucketed histogram of per-submission queue waits (seconds;
     /// bucket edges in [`crate::trace::latency_bucket`]). Always on — the
     /// same real-time measurement as `queue_wait_s`, so traced and
@@ -534,6 +553,14 @@ impl ServiceCounters {
         for (slot, v) in self.exec_hist.iter_mut().zip(earlier.exec_hist) {
             *slot += v;
         }
+        self.faults_injected += earlier.faults_injected;
+        self.retries += earlier.retries;
+        self.redispatches += earlier.redispatches;
+        self.quarantines += earlier.quarantines;
+        self.respawns += earlier.respawns;
+        for (slot, v) in self.replica_faults.iter_mut().zip(earlier.replica_faults) {
+            *slot += v;
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -582,6 +609,15 @@ impl ServiceCounters {
                 Json::arr(self.queue_wait_hist.iter().map(|c| Json::num(*c as f64))),
             ),
             ("exec_hist", Json::arr(self.exec_hist.iter().map(|c| Json::num(*c as f64)))),
+            ("faults_injected", Json::num(self.faults_injected as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("redispatches", Json::num(self.redispatches as f64)),
+            ("quarantines", Json::num(self.quarantines as f64)),
+            ("respawns", Json::num(self.respawns as f64)),
+            (
+                "replica_faults",
+                Json::arr(self.replica_faults.iter().map(|c| Json::num(*c as f64))),
+            ),
             (
                 "queue_wait_p95_s",
                 Json::num(crate::trace::hist_quantile(&self.queue_wait_hist, 0.95)),
@@ -625,6 +661,12 @@ impl ServiceCounters {
             replica_weight_version: u64s(j, "replica_weight_version"),
             queue_wait_hist: u64s(j, "queue_wait_hist"),
             exec_hist: u64s(j, "exec_hist"),
+            faults_injected: f("faults_injected") as u64,
+            retries: f("retries") as u64,
+            redispatches: f("redispatches") as u64,
+            quarantines: f("quarantines") as u64,
+            respawns: f("respawns") as u64,
+            replica_faults: u64s(j, "replica_faults"),
         }
     }
 }
@@ -697,6 +739,12 @@ pub struct StepRecord {
     /// Mean squared budget-vs-realized-variance calibration error so far
     /// (cumulative; 0 when no allocated group completed yet).
     pub alloc_calibration: f64,
+    /// Engine faults the service observed DURING this step (delta between
+    /// step snapshots; 0 without a service or in a fault-free run).
+    pub service_faults: u64,
+    /// Failed execute attempts the service retried DURING this step (delta
+    /// between step snapshots; 0 without a service).
+    pub service_retries: u64,
 }
 
 impl StepRecord {
@@ -727,6 +775,8 @@ impl StepRecord {
             ("rollouts", Json::num(self.rollouts as f64)),
             ("step_alloc_rows", Json::num(self.step_alloc_rows as f64)),
             ("alloc_calibration", Json::num(self.alloc_calibration)),
+            ("service_faults", Json::num(self.service_faults as f64)),
+            ("service_retries", Json::num(self.service_retries as f64)),
         ])
     }
 }
@@ -1064,6 +1114,66 @@ mod tests {
         assert_eq!(ab.pool_dispatches, 14);
         assert_eq!(ab.pool_hist, ba.pool_hist);
         assert!((ab.pool_balance() - 10.0 / 28.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_counters_roundtrip_and_merge_slot_by_slot() {
+        let a = ServiceCounters {
+            engines: 3,
+            faults_injected: 3,
+            retries: 2,
+            redispatches: 4,
+            quarantines: 2,
+            respawns: 1,
+            replica_faults: [0, 1, 2, 0, 0, 0, 0, 0],
+            ..Default::default()
+        };
+        let parsed = crate::util::json::Json::parse(&a.to_json().to_string()).unwrap();
+        let back = ServiceCounters::from_json(&parsed);
+        assert_eq!(back.faults_injected, 3);
+        assert_eq!(back.retries, 2);
+        assert_eq!(back.redispatches, 4);
+        assert_eq!(back.quarantines, 2);
+        assert_eq!(back.respawns, 1);
+        assert_eq!(back.replica_faults, a.replica_faults);
+        // A fault-free record parses back to all-zero fault counters (and
+        // legacy records without the fields do too).
+        let clean = ServiceCounters::default();
+        let clean_back = ServiceCounters::from_json(
+            &crate::util::json::Json::parse(&clean.to_json().to_string()).unwrap(),
+        );
+        assert_eq!(clean_back.faults_injected, 0);
+        assert_eq!(clean_back.replica_faults, [0; MAX_POOL]);
+
+        // Segmented save/resume runs fold fault counters deterministically:
+        // totals sum, per-replica slots sum index-by-index, and the result
+        // is independent of merge direction.
+        let b = ServiceCounters {
+            engines: 3,
+            faults_injected: 1,
+            retries: 3,
+            redispatches: 0,
+            quarantines: 1,
+            respawns: 0,
+            replica_faults: [1, 0, 0, 0, 0, 0, 0, 0],
+            ..Default::default()
+        };
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab.faults_injected, 4);
+        assert_eq!(ab.retries, 5);
+        assert_eq!(ab.redispatches, 4);
+        assert_eq!(ab.quarantines, 3);
+        assert_eq!(ab.respawns, 1);
+        assert_eq!(ab.replica_faults, [1, 1, 2, 0, 0, 0, 0, 0]);
+        assert_eq!(ab.faults_injected, ba.faults_injected);
+        assert_eq!(ab.retries, ba.retries);
+        assert_eq!(ab.redispatches, ba.redispatches);
+        assert_eq!(ab.quarantines, ba.quarantines);
+        assert_eq!(ab.respawns, ba.respawns);
+        assert_eq!(ab.replica_faults, ba.replica_faults);
     }
 
     #[test]

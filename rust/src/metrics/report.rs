@@ -39,6 +39,8 @@ pub const STEP_METRICS: &[(&str, fn(&StepRecord) -> f64)] = &[
     ("alloc-calibration", |s: &StepRecord| s.alloc_calibration),
     ("queue-wait-p95", |s: &StepRecord| s.service_queue_wait_p95_s),
     ("exec-p95", |s: &StepRecord| s.service_exec_p95_s),
+    ("faults", |s: &StepRecord| s.service_faults as f64),
+    ("retries", |s: &StepRecord| s.service_retries as f64),
 ];
 
 /// Look up a per-step metric by its `--metric` name.
@@ -198,6 +200,8 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 rollouts: f("rollouts") as u64,
                 step_alloc_rows: f("step_alloc_rows") as u64,
                 alloc_calibration: f("alloc_calibration"),
+                service_faults: f("service_faults") as u64,
+                service_retries: f("service_retries") as u64,
             });
         }
     }
@@ -297,6 +301,8 @@ mod tests {
             rollouts: 768,
             step_alloc_rows: 96,
             alloc_calibration: 0.02,
+            service_faults: 2,
+            service_retries: 5,
         });
         a.service = Some(ServiceCounters {
             calls: 4,
@@ -317,6 +323,8 @@ mod tests {
         assert_eq!(s.rollouts, 768);
         assert_eq!(s.step_alloc_rows, 96);
         assert!((s.alloc_calibration - 0.02).abs() < 1e-12);
+        assert_eq!(s.service_faults, 2);
+        assert_eq!(s.service_retries, 5);
         let svc = back.service.expect("service parsed");
         assert_eq!(svc.calls, 4);
         assert_eq!(svc.submissions, 9);
@@ -406,6 +414,8 @@ mod tests {
                 rollouts: 0,
                 step_alloc_rows: 0,
                 alloc_calibration: 0.0,
+                service_faults: 0,
+                service_retries: 0,
             });
         }
         let chart = step_chart(&[&a], "skip-rate", 30, 8).unwrap();
@@ -451,6 +461,8 @@ mod tests {
             rollouts: 128,
             step_alloc_rows: 64,
             alloc_calibration: 0.0,
+            service_faults: 0,
+            service_retries: 0,
         });
         let mut svc = ServiceCounters { calls: 6, submissions: 12, ..Default::default() };
         svc.engines = 2;

@@ -19,7 +19,11 @@
 //!   router coalesces generation requests across workers into
 //!   maximally-packed calls and packs them onto the least-loaded replica
 //!   (handles implement [`RolloutEngine`], so workers run unchanged).
+//! * [`fault`]         — deterministic fault injection ([`fault::FaultPlan`]
+//!   / [`fault::FaultyEngine`]) and the recovery knobs
+//!   ([`fault::RecoveryConfig`]) for the fault-tolerant pool.
 
+pub mod fault;
 pub mod real;
 pub mod sampler;
 pub mod service;

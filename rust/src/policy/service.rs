@@ -50,7 +50,8 @@
 //! plain serial `RunRecord` bit for bit (`rust/tests/service_sim.rs`).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -58,11 +59,49 @@ use anyhow::{anyhow, Result};
 
 use crate::data::tasks::TaskInstance;
 use crate::metrics::{ServiceCounters, MAX_POOL};
+use crate::policy::fault::{FaultyEngine, RecoveryConfig};
 use crate::policy::{
     EvalResult, GenRequest, GenResult, RolloutEngine, TrainResult, Trainable, WeightSnapshot,
 };
 use crate::rl::algo::AlgoConfig;
 use crate::rl::update::PromptGroup;
+use crate::util::sync::{plock, pwait, pwait_timeout};
+
+/// Typed terminal failures the fault-tolerant service delivers to waiting
+/// tickets (via `anyhow`, so `Ticket::wait` callers see them as ordinary
+/// errors with a descriptive message instead of hanging).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The scheduler thread panicked: queued submissions are failed, the
+    /// queue is closed, and every later submission errors immediately.
+    SchedulerPanicked,
+    /// The replica executing this plan panicked and no healthy peer was
+    /// left to take the work over.
+    ReplicaPanicked {
+        replica: usize,
+    },
+    /// Every replica is quarantined (and no spare is left to respawn), so
+    /// the plan cannot be dispatched anywhere.
+    NoHealthyReplicas,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::SchedulerPanicked => {
+                write!(f, "inference service scheduler panicked; submission abandoned")
+            }
+            ServiceError::ReplicaPanicked { replica } => {
+                write!(f, "engine replica {replica} panicked with no healthy peer to take over")
+            }
+            ServiceError::NoHealthyReplicas => {
+                write!(f, "no healthy engine replica left in the pool")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// Scheduler knobs (the `--coalesce-wait-ms` / `--fill-waterline` CLI
 /// flags). The deadline trades a little extra on-policy staleness for
@@ -88,7 +127,10 @@ impl Default for ServiceConfig {
     }
 }
 
-/// One queued generation submission awaiting the scheduler.
+/// One queued generation submission awaiting the scheduler. Cloneable so
+/// replicas can park a shadow copy of their in-flight plan: the `Sender`
+/// clone feeds the same ticket, so whichever copy executes delivers.
+#[derive(Clone)]
 struct GenWork {
     requests: Vec<GenRequest>,
     temperature: f32,
@@ -119,11 +161,17 @@ struct Shared {
     /// handles report as `serving_version`, deduping K workers' installs.
     version: AtomicU64,
     stats: Mutex<ServiceCounters>,
+    /// Test hook: when raised, the scheduler panics at the top of its next
+    /// iteration (the containment regression: every waiter must unblock
+    /// with a typed error, not hang). Never set outside tests.
+    panic_scheduler: AtomicBool,
 }
 
 /// One routed unit of work: the router's coalescing decisions are already
 /// made (which submissions travel together, call vs split), so replicas
-/// only execute.
+/// only execute. Cloneable (see [`GenWork`]) for the shadow in-flight copy
+/// that survives a replica's death or watchdog seizure.
+#[derive(Clone)]
 enum Plan {
     /// A coalesced call: `subs` fit one replica's capacity together.
     Call { subs: Vec<GenWork>, rows_total: usize, deadline_fired: bool },
@@ -148,6 +196,8 @@ fn plan_rows(plan: &Plan) -> usize {
 /// stealing, and snapshot publication are race-free against each other).
 struct PoolState {
     /// Per-replica FIFO plan queues (the router pushes, replicas pop).
+    /// Sized to active replicas + spare slots; spare slots stay empty
+    /// until a respawn admits them.
     queues: Vec<VecDeque<Plan>>,
     /// Rollout rows queued but not yet started, per replica.
     queued_rows: Vec<usize>,
@@ -155,6 +205,22 @@ struct PoolState {
     inflight_rows: Vec<usize>,
     /// Version each replica has installed (or reserved for install).
     installed: Vec<u64>,
+    /// Replica admitted for dispatch: true for the initial E replicas,
+    /// false for spare slots and quarantined replicas. The router and
+    /// stealers only touch live replicas.
+    live: Vec<bool>,
+    /// Shadow copy of the plan each replica is executing (parked at plan
+    /// take, claimed back at completion). If the replica dies or stalls
+    /// past the watchdog, the shadow is what gets redispatched.
+    inflight_plan: Vec<Option<Plan>>,
+    /// When the current plan's execution started (drives the watchdog;
+    /// cleared when the replica claims completion).
+    exec_started: Vec<Option<Instant>>,
+    /// Set by the watchdog when it seizes a stalled replica's plan while
+    /// the replica is still executing. The zombie checks-and-clears it at
+    /// completion and discards its results — no stats, no sends — so a
+    /// redispatched plan is delivered exactly once.
+    abandoned: Vec<bool>,
     /// Newest published snapshot; replicas install it lazily before their
     /// next plan and eagerly while idle. A replica mid-call keeps serving
     /// its old version, never one newer than announced.
@@ -162,10 +228,36 @@ struct PoolState {
     closed: bool,
 }
 
+impl PoolState {
+    fn slots(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&b| b).count()
+    }
+}
+
 struct Pool {
-    engines: usize,
     state: Mutex<PoolState>,
     ready: Condvar,
+    /// Engine rows per call (for the quantum recomputed on degrade).
+    capacity: usize,
+    /// Producers the quantum divides capacity across.
+    producers: usize,
+    /// Quantum floor (the allocator's largest possible group).
+    min_quantum: usize,
+    /// The live submit quantum, shared with every [`SubmitHandle`]:
+    /// recomputed when the pool degrades (quarantine) or recovers
+    /// (respawn) so producers size future submissions to real capacity.
+    quantum: Arc<AtomicUsize>,
+    /// Pre-forked spare engines `(slot, engine)`, activated into fresh
+    /// slots at quarantine time when respawn is enabled. Never
+    /// fault-wrapped. Popped in ascending slot order.
+    spares: Mutex<Vec<(usize, Box<dyn RolloutEngine + Send>)>>,
+    /// `(slot, handle)` of respawned replica threads (the scheduler joins
+    /// them at shutdown alongside the original replicas).
+    respawned: Mutex<Vec<(usize, std::thread::JoinHandle<()>)>>,
 }
 
 /// A pending reply for one submission. `wait` blocks until the scheduler
@@ -186,11 +278,12 @@ impl Ticket {
 #[derive(Clone)]
 pub struct SubmitHandle {
     shared: Arc<Shared>,
-    /// Rows this handle advertises to its curriculum (engine capacity / K,
-    /// floored at the allocator's largest possible group so every plan
-    /// stays executable — oversized plans the floor admits are split
-    /// across successive engine calls by the scheduler).
-    quantum: usize,
+    /// Rows this handle advertises to its curriculum (engine capacity x
+    /// live replicas / K, floored at the allocator's largest possible
+    /// group so every plan stays executable — oversized plans the floor
+    /// admits are split across successive engine calls by the scheduler).
+    /// Shared with the pool: quarantine/respawn recompute it live.
+    quantum: Arc<AtomicUsize>,
     gen_len: usize,
     label: String,
 }
@@ -200,7 +293,7 @@ impl SubmitHandle {
     pub fn submit(&self, requests: Vec<GenRequest>, temperature: f32) -> Ticket {
         let rows = requests.iter().map(|r| r.n_samples).sum();
         let (tx, rx) = mpsc::channel();
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = plock(&self.shared.queue);
         if q.closed {
             let _ = tx.send(Err(anyhow!("inference service is closed")));
         } else {
@@ -225,7 +318,7 @@ impl RolloutEngine for SubmitHandle {
     fn evaluate(&mut self, tasks: &[TaskInstance]) -> Result<EvalResult> {
         let (tx, rx) = mpsc::channel();
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = plock(&self.shared.queue);
             if q.closed {
                 return Err(anyhow!("inference service is closed"));
             }
@@ -236,7 +329,7 @@ impl RolloutEngine for SubmitHandle {
     }
 
     fn rollout_capacity(&self) -> usize {
-        self.quantum
+        self.quantum.load(Ordering::Acquire)
     }
 
     fn gen_len(&self) -> usize {
@@ -244,7 +337,7 @@ impl RolloutEngine for SubmitHandle {
     }
 
     fn install(&mut self, snap: &WeightSnapshot) {
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = plock(&self.shared.queue);
         // Dedupe: the first handle to notice a published version queues the
         // install; the rest see `serving_version` already advanced.
         if self.shared.version.load(Ordering::Acquire) < snap.version {
@@ -269,7 +362,7 @@ impl RolloutEngine for SubmitHandle {
 pub struct InferenceService {
     shared: Arc<Shared>,
     thread: Option<std::thread::JoinHandle<()>>,
-    quantum: usize,
+    quantum: Arc<AtomicUsize>,
     gen_len: usize,
     label: String,
 }
@@ -300,21 +393,51 @@ impl InferenceService {
         producers: usize,
         min_quantum: usize,
     ) -> InferenceService {
-        assert!(
-            !engines.is_empty() && engines.len() <= MAX_POOL,
-            "engine pool size must be 1..={MAX_POOL}, got {}",
-            engines.len()
-        );
+        Self::spawn_pool_with_recovery(
+            engines,
+            Vec::new(),
+            cfg,
+            RecoveryConfig::inactive(),
+            producers,
+            min_quantum,
+        )
+    }
+
+    /// [`InferenceService::spawn_pool`] plus the fault-tolerance machinery
+    /// of DESIGN.md §13: active replicas are wrapped in the recovery
+    /// config's scripted [`crate::policy::fault::FaultPlan`] (a no-op for
+    /// unnamed replicas and the empty plan), failed calls retry with
+    /// bounded backoff, stalled or dead replicas are quarantined and their
+    /// work redispatched, and `spares` (never fault-wrapped) are activated
+    /// into fresh slots to replace quarantined replicas when
+    /// `recovery.respawn` is set. With `RecoveryConfig::inactive()` and no
+    /// spares this is behaviorally identical to the plain pool.
+    pub fn spawn_pool_with_recovery(
+        engines: Vec<Box<dyn RolloutEngine + Send>>,
+        spares: Vec<Box<dyn RolloutEngine + Send>>,
+        cfg: ServiceConfig,
+        recovery: RecoveryConfig,
+        producers: usize,
+        min_quantum: usize,
+    ) -> InferenceService {
         let e = engines.len();
+        let slots = e + spares.len();
+        assert!(
+            e >= 1 && slots <= MAX_POOL,
+            "engine pool size (incl. spares) must be 1..={MAX_POOL}, got {e}+{}",
+            spares.len()
+        );
         let capacity = engines[0].rollout_capacity();
-        let quantum =
-            (capacity * e / producers.max(1)).max(min_quantum).clamp(1, capacity.max(1));
+        let quantum = Arc::new(AtomicUsize::new(
+            (capacity * e / producers.max(1)).max(min_quantum).clamp(1, capacity.max(1)),
+        ));
         let gen_len = engines[0].gen_len();
         let label = engines[0].name().to_string();
-        let installed: Vec<u64> = engines.iter().map(|en| en.serving_version()).collect();
+        let mut installed: Vec<u64> = engines.iter().map(|en| en.serving_version()).collect();
+        installed.extend(spares.iter().map(|en| en.serving_version()));
         let version = installed[0];
         let mut stats = ServiceCounters { engines: e as u64, ..Default::default() };
-        for (r, v) in installed.iter().enumerate() {
+        for (r, v) in installed.iter().take(e).enumerate() {
             stats.replica_weight_version[r] = *v;
         }
         let shared = Arc::new(Shared {
@@ -322,28 +445,44 @@ impl InferenceService {
             work_ready: Condvar::new(),
             version: AtomicU64::new(version),
             stats: Mutex::new(stats),
+            panic_scheduler: AtomicBool::new(false),
         });
+        // Spares activate in ascending slot order (pop from the back).
+        let spares: Vec<(usize, Box<dyn RolloutEngine + Send>)> =
+            spares.into_iter().enumerate().map(|(i, en)| (e + i, en)).rev().collect();
         let pool = Arc::new(Pool {
-            engines: e,
             state: Mutex::new(PoolState {
-                queues: (0..e).map(|_| VecDeque::new()).collect(),
-                queued_rows: vec![0; e],
-                inflight_rows: vec![0; e],
+                queues: (0..slots).map(|_| VecDeque::new()).collect(),
+                queued_rows: vec![0; slots],
+                inflight_rows: vec![0; slots],
                 installed,
+                live: (0..slots).map(|r| r < e).collect(),
+                inflight_plan: (0..slots).map(|_| None).collect(),
+                exec_started: vec![None; slots],
+                abandoned: vec![false; slots],
                 snap: WeightSnapshot { version, values: Vec::new() },
                 closed: false,
             }),
             ready: Condvar::new(),
+            capacity,
+            producers,
+            min_quantum,
+            quantum: Arc::clone(&quantum),
+            spares: Mutex::new(spares),
+            respawned: Mutex::new(Vec::new()),
         });
+        let recovery = Arc::new(recovery);
         let replicas: Vec<std::thread::JoinHandle<()>> = engines
             .into_iter()
             .enumerate()
             .map(|(r, engine)| {
+                let engine = FaultyEngine::wrap(engine, r, &recovery.fault_plan);
                 let pool = Arc::clone(&pool);
                 let shared = Arc::clone(&shared);
+                let recovery = Arc::clone(&recovery);
                 std::thread::Builder::new()
                     .name(format!("speedrl-engine-{r}"))
-                    .spawn(move || replica_loop(r, engine, pool, shared))
+                    .spawn(move || replica_main(r, engine, pool, shared, recovery))
                     .expect("spawn engine replica")
             })
             .collect();
@@ -351,7 +490,7 @@ impl InferenceService {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("speedrl-inference-service".to_string())
-                .spawn(move || scheduler(pool, replicas, capacity, shared, cfg, producers))
+                .spawn(move || scheduler(pool, replicas, capacity, shared, cfg, producers, recovery))
                 .expect("spawn inference-service scheduler")
         };
         InferenceService { shared, thread: Some(thread), quantum, gen_len, label }
@@ -361,25 +500,34 @@ impl InferenceService {
     pub fn handle(&self) -> SubmitHandle {
         SubmitHandle {
             shared: Arc::clone(&self.shared),
-            quantum: self.quantum,
+            quantum: Arc::clone(&self.quantum),
             gen_len: self.gen_len,
             label: self.label.clone(),
         }
     }
 
-    /// Rows each producer's handle advertises (engine capacity / K).
+    /// Rows each producer's handle advertises (engine capacity x live
+    /// replicas / K; shrinks when the pool degrades, grows on respawn).
     pub fn quantum(&self) -> usize {
-        self.quantum
+        self.quantum.load(Ordering::Acquire)
     }
 
     /// Live counters snapshot.
     pub fn stats(&self) -> ServiceCounters {
-        *self.shared.stats.lock().unwrap()
+        *plock(&self.shared.stats)
     }
 
     /// Close the queue: in-flight work is served, new submissions fail.
     pub fn close(&self) {
-        self.shared.queue.lock().unwrap().closed = true;
+        plock(&self.shared.queue).closed = true;
+        self.shared.work_ready.notify_all();
+    }
+
+    /// Test hook: make the scheduler panic at its next iteration (the
+    /// containment regression — waiters must unblock, not hang).
+    #[cfg(test)]
+    fn kill_scheduler(&self) {
+        self.shared.panic_scheduler.store(true, Ordering::Release);
         self.shared.work_ready.notify_all();
     }
 }
@@ -420,20 +568,30 @@ fn leading_rows(q: &VecDeque<Work>) -> usize {
 fn dispatch(pool: &Pool, shared: &Shared, plan: Plan) {
     let rows = plan_rows(&plan);
     let busy = {
-        let mut ps = pool.state.lock().unwrap();
-        let busy = (0..pool.engines)
-            .filter(|&i| ps.queued_rows[i] + ps.inflight_rows[i] > 0 || !ps.queues[i].is_empty())
+        let mut ps = plock(&pool.state);
+        let busy = (0..ps.slots())
+            .filter(|&i| {
+                ps.live[i]
+                    && (ps.queued_rows[i] + ps.inflight_rows[i] > 0 || !ps.queues[i].is_empty())
+            })
             .count();
-        let r = (0..pool.engines)
+        let Some(r) = (0..ps.slots())
+            .filter(|&i| ps.live[i])
             .min_by_key(|&i| (ps.queued_rows[i] + ps.inflight_rows[i], i))
-            .expect("pool has at least one replica");
+        else {
+            // Every replica is quarantined and no spare was left: fail the
+            // plan's tickets instead of stranding them on a dead pool.
+            drop(ps);
+            fail_plan(plan, &ServiceError::NoHealthyReplicas.to_string());
+            return;
+        };
         ps.queued_rows[r] += rows;
         ps.queues[r].push_back(plan);
         busy
     };
     pool.ready.notify_all();
     {
-        let mut stats = shared.stats.lock().unwrap();
+        let mut stats = plock(&shared.stats);
         stats.pool_dispatches += 1;
         stats.pool_busy_sum += busy as u64;
         stats.pool_hist[busy.min(stats.pool_hist.len() - 1)] += 1;
@@ -441,34 +599,293 @@ fn dispatch(pool: &Pool, shared: &Shared, plan: Plan) {
     crate::trace::instant("dispatch", "scheduler", busy as i64);
 }
 
+/// Deliver a terminal error to every ticket riding on `plan`, using the
+/// same message shapes the execute paths use.
+fn fail_plan(plan: Plan, msg: &str) {
+    match plan {
+        Plan::Call { subs, .. } => {
+            for s in subs {
+                let _ = s.tx.send(Err(anyhow!("coalesced inference call failed: {msg}")));
+            }
+        }
+        Plan::Split(g) => {
+            let _ = g.tx.send(Err(anyhow!("split inference call failed: {msg}")));
+        }
+        Plan::Eval { tx, .. } => {
+            let _ = tx.send(Err(anyhow!("evaluation failed: {msg}")));
+        }
+    }
+}
+
+/// Deliver a terminal error to a not-yet-routed queue entry (the
+/// scheduler's crash path: queued work still holds live ticket senders, so
+/// dropping it silently would leave `Ticket::wait` blocked forever).
+fn fail_work(work: Work, err: ServiceError) {
+    match work {
+        Work::Generate(g) => {
+            let _ = g.tx.send(Err(anyhow!(err)));
+        }
+        Work::Evaluate { tx, .. } => {
+            let _ = tx.send(Err(anyhow!(err)));
+        }
+    }
+}
+
+/// Route seized plans (in-flight shadow first, then the quarantined
+/// replica's queue, preserving FIFO) back through least-loaded dispatch.
+fn redispatch(pool: &Pool, shared: &Shared, plans: Vec<Plan>) {
+    for plan in plans {
+        plock(&shared.stats).redispatches += 1;
+        crate::trace::instant("redispatch", "scheduler", plan_rows(&plan) as i64);
+        dispatch(pool, shared, plan);
+    }
+}
+
+/// Recompute the submit quantum from the live replica count (graceful
+/// degradation: producers size future submissions to the real capacity).
+fn recompute_quantum(pool: &Pool) {
+    let live = plock(&pool.state).live_count().max(1);
+    let q = (pool.capacity * live / pool.producers.max(1))
+        .max(pool.min_quantum)
+        .clamp(1, pool.capacity.max(1));
+    pool.quantum.store(q, Ordering::Release);
+}
+
+/// Activate one pre-forked spare into its reserved slot: install the
+/// announced snapshot first, then admit the slot for dispatch and spawn
+/// its replica thread. No-op when respawn is off or no spare is left.
+fn try_respawn(
+    pool: &Arc<Pool>,
+    shared: &Arc<Shared>,
+    recovery: &Arc<RecoveryConfig>,
+) {
+    if !recovery.respawn {
+        return;
+    }
+    let Some((slot, mut engine)) = plock(&pool.spares).pop() else {
+        return;
+    };
+    // Install the announced snapshot BEFORE admission so the new replica
+    // never serves pre-quarantine weights to post-quarantine plans.
+    let snap = plock(&pool.state).snap.clone();
+    if snap.version > engine.serving_version() {
+        engine.install(&snap);
+    }
+    let version = engine.serving_version();
+    {
+        let mut ps = plock(&pool.state);
+        ps.installed[slot] = version;
+        ps.live[slot] = true;
+    }
+    {
+        let mut stats = plock(&shared.stats);
+        stats.respawns += 1;
+        stats.replica_weight_version[slot] = version;
+    }
+    crate::trace::instant("respawn", "scheduler", slot as i64);
+    let handle = {
+        let pool2 = Arc::clone(pool);
+        let shared2 = Arc::clone(shared);
+        let recovery2 = Arc::clone(recovery);
+        std::thread::Builder::new()
+            .name(format!("speedrl-engine-{slot}"))
+            .spawn(move || replica_main(slot, engine, pool2, shared2, recovery2))
+            .expect("spawn respawned engine replica")
+    };
+    plock(&pool.respawned).push((slot, handle));
+    pool.ready.notify_all();
+}
+
+/// The execute watchdog: quarantine any live replica whose current plan
+/// has been executing for `exec_timeout_ms` or longer, seize its shadow
+/// plan and queue, and hand everything to healthy peers. The stalled
+/// thread becomes a zombie: the `abandoned` flag makes it discard its
+/// eventual results, so the redispatched plan delivers exactly once.
+fn watchdog_scan(pool: &Arc<Pool>, shared: &Arc<Shared>, recovery: &Arc<RecoveryConfig>) {
+    if recovery.exec_timeout_ms == 0 {
+        return;
+    }
+    let timeout = Duration::from_millis(recovery.exec_timeout_ms);
+    let now = Instant::now();
+    let mut seized: Vec<Plan> = Vec::new();
+    let mut expired: Vec<usize> = Vec::new();
+    {
+        let mut ps = plock(&pool.state);
+        for r in 0..ps.slots() {
+            let stalled = ps.live[r]
+                && ps
+                    .exec_started[r]
+                    .is_some_and(|t0| now.saturating_duration_since(t0) >= timeout);
+            if !stalled {
+                continue;
+            }
+            ps.live[r] = false;
+            ps.abandoned[r] = true;
+            ps.exec_started[r] = None;
+            if let Some(p) = ps.inflight_plan[r].take() {
+                seized.push(p);
+            }
+            seized.extend(ps.queues[r].drain(..));
+            ps.queued_rows[r] = 0;
+            ps.inflight_rows[r] = 0;
+            expired.push(r);
+        }
+    }
+    if expired.is_empty() {
+        return;
+    }
+    {
+        let mut stats = plock(&shared.stats);
+        for &r in &expired {
+            stats.faults_injected += 1;
+            stats.replica_faults[r] += 1;
+            stats.quarantines += 1;
+        }
+    }
+    for &r in &expired {
+        crate::trace::instant("quarantine", "scheduler", r as i64);
+    }
+    for _ in &expired {
+        try_respawn(pool, shared, recovery);
+    }
+    redispatch(pool, shared, seized);
+    recompute_quantum(pool);
+    pool.ready.notify_all();
+}
+
 /// Close the pool and join every replica (run by the router on shutdown;
 /// replicas drain their queues — and each other's — before exiting, so
-/// already-dispatched tickets are still served).
+/// already-dispatched tickets are still served). Zombie replicas (seized
+/// by the watchdog and possibly stuck in a hung engine call forever) are
+/// detached instead of joined, so shutdown never blocks on them.
 fn shutdown_pool(pool: &Pool, replicas: Vec<std::thread::JoinHandle<()>>) {
-    pool.state.lock().unwrap().closed = true;
+    plock(&pool.state).closed = true;
     pool.ready.notify_all();
-    for h in replicas {
-        let _ = h.join();
+    let respawned: Vec<(usize, std::thread::JoinHandle<()>)> =
+        std::mem::take(&mut *plock(&pool.respawned));
+    let originals = replicas.into_iter().enumerate();
+    for (r, h) in originals.chain(respawned) {
+        if plock(&pool.state).abandoned[r] {
+            drop(h); // zombie: detach, never block shutdown on a hung engine
+        } else {
+            let _ = h.join();
+        }
     }
+}
+
+/// What one plan's execution resolved to (see [`execute_call`] /
+/// [`execute_split`]): the claim protocol on the shadow plan decides
+/// between these, so results and stats land exactly once per plan.
+enum ExecOutcome {
+    /// Results (or a terminal error) were delivered to the tickets.
+    Done,
+    /// The watchdog seized the plan mid-execution and a peer owns it now:
+    /// results were discarded, the zombie thread must exit.
+    Abandoned,
+    /// Retries exhausted: nothing was delivered; the caller decides
+    /// between redispatch-and-quarantine and the graceful floor.
+    Failed {
+        seized: Box<Plan>,
+        msg: String,
+    },
+}
+
+/// Execution context a replica passes into the execute helpers: identity
+/// plus the shared state the retry/abandon protocol needs.
+struct ReplicaCtx<'a> {
+    r: usize,
+    pool: &'a Pool,
+    shared: &'a Shared,
+    recovery: &'a RecoveryConfig,
+}
+
+/// Replica thread entry: the worker loop runs under `catch_unwind`, so a
+/// panicking engine (a hard-death fault, or a real crash) converts into
+/// quarantine + redispatch instead of a poisoned-lock hang.
+fn replica_main(
+    r: usize,
+    engine: Box<dyn RolloutEngine + Send>,
+    pool: Arc<Pool>,
+    shared: Arc<Shared>,
+    recovery: Arc<RecoveryConfig>,
+) {
+    let panicked = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        replica_loop(r, engine, &pool, &shared, &recovery)
+    }))
+    .is_err();
+    if panicked {
+        on_replica_panic(r, &pool, &shared, &recovery);
+    }
+}
+
+/// Containment for a replica panic: quarantine the slot, hand the shadow
+/// plan and queued work to healthy peers (respawning a spare first when
+/// enabled), or — with nobody left — deliver a typed error to every
+/// waiting ticket so no worker blocks on a dead pool.
+fn on_replica_panic(
+    r: usize,
+    pool: &Arc<Pool>,
+    shared: &Arc<Shared>,
+    recovery: &Arc<RecoveryConfig>,
+) {
+    let seized: Vec<Plan> = {
+        let mut ps = plock(&pool.state);
+        if ps.abandoned[r] {
+            // The watchdog already seized everything while we were dying.
+            ps.abandoned[r] = false;
+            return;
+        }
+        ps.live[r] = false;
+        ps.exec_started[r] = None;
+        ps.inflight_rows[r] = 0;
+        ps.queued_rows[r] = 0;
+        let mut seized: Vec<Plan> = ps.inflight_plan[r].take().into_iter().collect();
+        seized.extend(ps.queues[r].drain(..));
+        seized
+    };
+    {
+        let mut stats = plock(&shared.stats);
+        stats.faults_injected += 1;
+        stats.replica_faults[r] += 1;
+        stats.quarantines += 1;
+    }
+    crate::trace::instant("quarantine", "replica", r as i64);
+    try_respawn(pool, shared, recovery);
+    let has_peer = plock(&pool.state).live_count() > 0;
+    if has_peer {
+        redispatch(pool, shared, seized);
+    } else {
+        for plan in seized {
+            fail_plan(plan, &ServiceError::ReplicaPanicked { replica: r }.to_string());
+        }
+    }
+    recompute_quantum(pool);
+    pool.ready.notify_all();
 }
 
 /// One replica worker: install published snapshots (lazily before every
 /// plan, eagerly while idle), execute its own queue FIFO, steal the oldest
 /// plan from the most backlogged peer when drained, and exit once the pool
-/// is closed with nothing left anywhere.
+/// is closed with nothing left anywhere — or once it is quarantined.
 fn replica_loop(
     r: usize,
     mut engine: Box<dyn RolloutEngine + Send>,
-    pool: Arc<Pool>,
-    shared: Arc<Shared>,
+    pool: &Arc<Pool>,
+    shared: &Arc<Shared>,
+    recovery: &Arc<RecoveryConfig>,
 ) {
     let capacity = engine.rollout_capacity();
     loop {
         let mut plan: Option<(Plan, usize)> = None;
         let mut install: Option<WeightSnapshot> = None;
         {
-            let mut ps = pool.state.lock().unwrap();
+            let mut ps = plock(&pool.state);
             loop {
+                // A quarantined replica has nothing left to do: its queue
+                // was seized and the router will never route to it again.
+                if !ps.live[r] {
+                    return;
+                }
                 // Install first: a replica never starts a plan with a
                 // newer announced snapshot uninstalled (the reservation of
                 // `installed[r]` under the lock makes the install
@@ -482,6 +899,8 @@ fn replica_loop(
                     let rows = plan_rows(&p);
                     ps.queued_rows[r] -= rows;
                     ps.inflight_rows[r] += rows;
+                    ps.inflight_plan[r] = Some(p.clone());
+                    ps.exec_started[r] = Some(Instant::now());
                     plan = Some((p, rows));
                     break;
                 }
@@ -491,9 +910,9 @@ fn replica_loop(
                 // about to pop its own queue anyway, and racing it would
                 // make single-producer routing nondeterministic (the E=1
                 // and one-producer rails dispatch to idle replicas only).
-                let victim = (0..pool.engines)
+                let victim = (0..ps.slots())
                     .filter(|&i| {
-                        i != r && !ps.queues[i].is_empty() && ps.inflight_rows[i] > 0
+                        i != r && ps.live[i] && !ps.queues[i].is_empty() && ps.inflight_rows[i] > 0
                     })
                     .max_by_key(|&i| (ps.queued_rows[i], std::cmp::Reverse(i)));
                 if let Some(v) = victim {
@@ -501,9 +920,11 @@ fn replica_loop(
                     let rows = plan_rows(&p);
                     ps.queued_rows[v] -= rows;
                     ps.inflight_rows[r] += rows;
+                    ps.inflight_plan[r] = Some(p.clone());
+                    ps.exec_started[r] = Some(Instant::now());
                     plan = Some((p, rows));
                     {
-                        let mut stats = shared.stats.lock().unwrap();
+                        let mut stats = plock(&shared.stats);
                         stats.steals += 1;
                         stats.replica_steals[r] += 1;
                     }
@@ -514,7 +935,7 @@ fn replica_loop(
                     return;
                 }
                 let t_idle = crate::trace::start();
-                ps = pool.ready.wait(ps).unwrap();
+                ps = pwait(&pool.ready, ps);
                 crate::trace::span("replica-idle", "replica", t_idle, r as i64);
             }
         }
@@ -522,32 +943,116 @@ fn replica_loop(
             let t_install = crate::trace::start();
             engine.install(&snap);
             crate::trace::span("weight-install", "replica", t_install, snap.version as i64);
-            let mut stats = shared.stats.lock().unwrap();
+            let mut stats = plock(&shared.stats);
             stats.installs += 1;
             stats.replica_installs[r] += 1;
             stats.replica_weight_version[r] = snap.version;
             continue;
         }
         let (p, rows) = plan.expect("no install, so a plan was taken");
-        match p {
+        let ctx = ReplicaCtx { r, pool, shared, recovery };
+        let outcome = match p {
             Plan::Call { subs, rows_total, deadline_fired } => {
-                execute_call(&mut *engine, subs, rows_total, capacity, deadline_fired, &shared, r)
+                execute_call(&mut *engine, subs, rows_total, capacity, deadline_fired, &ctx)
             }
-            Plan::Split(g) => execute_split(&mut *engine, g, capacity, &shared, r),
+            Plan::Split(g) => execute_split(&mut *engine, g, capacity, &ctx),
             Plan::Eval { tasks, tx } => {
-                let _ = tx.send(engine.evaluate(&tasks));
+                let res = engine.evaluate(&tasks);
+                let abandoned = {
+                    let mut ps = plock(&pool.state);
+                    if ps.abandoned[r] {
+                        ps.abandoned[r] = false;
+                        true
+                    } else {
+                        ps.inflight_plan[r] = None;
+                        ps.exec_started[r] = None;
+                        false
+                    }
+                };
+                if abandoned {
+                    ExecOutcome::Abandoned
+                } else {
+                    let _ = tx.send(res);
+                    ExecOutcome::Done
+                }
+            }
+        };
+        match outcome {
+            ExecOutcome::Done => {
+                plock(&pool.state).inflight_rows[r] -= rows;
+                // A peer blocked in `dispatch`-order terms doesn't exist
+                // (the router never blocks on replicas), but idle peers
+                // wake to steal and the router's load view updates on its
+                // next lock.
+                pool.ready.notify_all();
+            }
+            ExecOutcome::Abandoned => {
+                // The watchdog zeroed this replica's row accounting when it
+                // seized the plan; just vacate the thread.
+                pool.ready.notify_all();
+                return;
+            }
+            ExecOutcome::Failed { seized, msg } => {
+                if on_retry_exhaustion(r, rows, *seized, &msg, pool, shared, recovery) {
+                    return;
+                }
             }
         }
-        pool.state.lock().unwrap().inflight_rows[r] -= rows;
-        // A peer blocked in `dispatch`-order terms doesn't exist (the
-        // router never blocks on replicas), but idle peers wake to steal
-        // and the router's load view updates on its next lock.
-        pool.ready.notify_all();
     }
 }
 
-/// The router loop: install → evaluate → coalesce-and-dispatch, until the
-/// queue is closed and drained; then close the pool and join the replicas.
+/// Retry budget exhausted on replica `r`: quarantine it and move the failed
+/// plan (plus everything queued behind it) to healthy peers — unless it IS
+/// the last healthy replica, in which case deliver the error to the plan's
+/// tickets and keep serving (the graceful floor that preserves single-
+/// engine behavior at E=1). Returns true when the replica was quarantined
+/// (the thread must exit).
+fn on_retry_exhaustion(
+    r: usize,
+    rows: usize,
+    seized: Plan,
+    msg: &str,
+    pool: &Arc<Pool>,
+    shared: &Arc<Shared>,
+    recovery: &Arc<RecoveryConfig>,
+) -> bool {
+    let mut seized_plans = vec![seized];
+    let quarantined = {
+        let mut ps = plock(&pool.state);
+        ps.inflight_rows[r] -= rows;
+        let peers = (0..ps.slots()).filter(|&i| i != r && ps.live[i]).count();
+        if peers == 0 {
+            false
+        } else {
+            ps.live[r] = false;
+            seized_plans.extend(ps.queues[r].drain(..));
+            ps.queued_rows[r] = 0;
+            true
+        }
+    };
+    if !quarantined {
+        // Graceful floor: no peer to fall back to, so the error goes to
+        // the tickets exactly as a single-engine failure would.
+        for plan in seized_plans {
+            fail_plan(plan, msg);
+        }
+        pool.ready.notify_all();
+        return false;
+    }
+    plock(&shared.stats).quarantines += 1;
+    crate::trace::instant("quarantine", "replica", r as i64);
+    try_respawn(pool, shared, recovery);
+    redispatch(pool, shared, seized_plans);
+    recompute_quantum(pool);
+    pool.ready.notify_all();
+    true
+}
+
+/// The router thread: run the scheduling loop under `catch_unwind`; on a
+/// clean close OR a panic, close the pool and join the replicas. A panic
+/// additionally fails every queued submission with a typed
+/// [`ServiceError::SchedulerPanicked`] and closes the queue, so blocked
+/// `Ticket::wait` and future submissions error out instead of hanging.
 fn scheduler(
     pool: Arc<Pool>,
     replicas: Vec<std::thread::JoinHandle<()>>,
@@ -555,16 +1060,56 @@ fn scheduler(
     shared: Arc<Shared>,
     cfg: ServiceConfig,
     producers: usize,
+    recovery: Arc<RecoveryConfig>,
+) {
+    let panicked = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        scheduler_loop(&pool, capacity, &shared, &cfg, producers, &recovery)
+    }))
+    .is_err();
+    if panicked {
+        let drained: Vec<Work> = {
+            let mut q = plock(&shared.queue);
+            q.closed = true;
+            q.pending_install = None;
+            q.q.drain(..).collect()
+        };
+        shared.work_ready.notify_all();
+        for w in drained {
+            fail_work(w, ServiceError::SchedulerPanicked);
+        }
+    }
+    shutdown_pool(&pool, replicas);
+}
+
+/// The router loop: install → evaluate → coalesce-and-dispatch, until the
+/// queue is closed and drained. Returns (instead of shutting the pool
+/// down itself) so the panic containment in [`scheduler`] shares one
+/// shutdown path with the clean close.
+fn scheduler_loop(
+    pool: &Arc<Pool>,
+    capacity: usize,
+    shared: &Arc<Shared>,
+    cfg: &ServiceConfig,
+    producers: usize,
+    recovery: &Arc<RecoveryConfig>,
 ) {
     let waterline_rows =
         ((capacity as f64 * cfg.fill_waterline).ceil() as usize).clamp(1, capacity);
     let base_wait_s = cfg.coalesce_wait_ms as f64 / 1e3;
+    // The watchdog wakes at half the execute timeout, so a stalled replica
+    // is caught within one period of the deadline passing.
+    let watchdog_period = (recovery.exec_timeout_ms > 0)
+        .then(|| Duration::from_millis((recovery.exec_timeout_ms / 2).max(1)));
     // Adaptive deadline state: EWMA of the gap between consecutive
     // submission arrivals. Seeded at the configured deadline so the first
     // calls behave exactly like the fixed-constant scheduler.
     let mut ewma_gap_s = base_wait_s;
     let mut last_enqueued: Option<Instant> = None;
     loop {
+        if shared.panic_scheduler.load(Ordering::Acquire) {
+            panic!("injected scheduler death (test hook)");
+        }
+        watchdog_scan(pool, shared, recovery);
         // The deadline for THIS gathering round: long enough for roughly
         // the other producers' next submissions to arrive (3x the observed
         // gap), never longer than the configured constant.
@@ -573,15 +1118,33 @@ fn scheduler(
         } else {
             Duration::from_secs_f64(base_wait_s)
         };
-        let mut guard = shared.queue.lock().unwrap();
-        // Phase 1: wait for any work at all.
+        let mut guard = plock(&shared.queue);
+        // Phase 1: wait for any work at all. With the watchdog armed, wake
+        // every half-timeout to scan for stalled replicas (their tickets
+        // are in flight, not in this queue, so nothing else would wake us).
         while guard.q.is_empty() && guard.pending_install.is_none() {
             if guard.closed {
-                drop(guard);
-                shutdown_pool(&pool, replicas);
                 return;
             }
-            guard = shared.work_ready.wait(guard).unwrap();
+            if shared.panic_scheduler.load(Ordering::Acquire) {
+                panic!("injected scheduler death (test hook)");
+            }
+            match watchdog_period {
+                Some(period) => {
+                    drop(guard);
+                    watchdog_scan(pool, shared, recovery);
+                    guard = plock(&shared.queue);
+                    if !guard.q.is_empty() || guard.pending_install.is_some() {
+                        break;
+                    }
+                    if guard.closed {
+                        return;
+                    }
+                    let (g, _) = pwait_timeout(&shared.work_ready, guard, period);
+                    guard = g;
+                }
+                None => guard = pwait(&shared.work_ready, guard),
+            }
         }
         // Phase 2: installs jump the queue — publish the snapshot once per
         // version, however many workers requested it; every replica
@@ -591,7 +1154,7 @@ fn scheduler(
         if let Some(snap) = guard.pending_install.take() {
             drop(guard);
             {
-                let mut ps = pool.state.lock().unwrap();
+                let mut ps = plock(&pool.state);
                 if snap.version > ps.snap.version {
                     ps.snap = snap;
                 }
@@ -628,7 +1191,7 @@ fn scheduler(
                     deadline_fired = true;
                     break;
                 }
-                let (g, timeout) = shared.work_ready.wait_timeout(guard, deadline - now).unwrap();
+                let (g, timeout) = pwait_timeout(&shared.work_ready, guard, deadline - now);
                 guard = g;
                 if timeout.timed_out() {
                     deadline_fired = true;
@@ -674,7 +1237,7 @@ fn scheduler(
             }
             last_enqueued = Some(s.enqueued);
         }
-        shared.stats.lock().unwrap().ewma_gap_s = ewma_gap_s;
+        plock(&shared.stats).ewma_gap_s = ewma_gap_s;
         // An oversized lone submission cannot execute as ONE call — split
         // it across successive engine invocations and merge the results
         // onto its single ticket (variable per-prompt budgets make such
@@ -690,6 +1253,83 @@ fn scheduler(
     }
 }
 
+/// One logical engine call under the bounded per-plan retry: up to
+/// `1 + retry_max` attempts with doubling backoff from `retry_backoff_ms`.
+/// Every failed attempt counts as an observed fault; the retry counter
+/// only moves when a retry is actually taken, so a fault-free run's
+/// counters stay untouched and the first-attempt success path is
+/// byte-identical to the pre-recovery scheduler.
+fn generate_with_retry(
+    engine: &mut dyn RolloutEngine,
+    requests: &[GenRequest],
+    temperature: f32,
+    ctx: &ReplicaCtx,
+) -> Result<GenResult> {
+    let expected_groups = requests.len();
+    let mut attempt = 0u32;
+    loop {
+        let result = engine.generate(requests, temperature).and_then(|res| {
+            // A short groups vector would silently shift later tickets'
+            // groups onto the wrong submissions — fail the whole call.
+            anyhow::ensure!(
+                res.groups.len() == expected_groups,
+                "engine returned {} groups for {expected_groups} requests",
+                res.groups.len()
+            );
+            Ok(res)
+        });
+        let err = match result {
+            Ok(res) => return Ok(res),
+            Err(e) => e,
+        };
+        {
+            let mut stats = plock(&ctx.shared.stats);
+            stats.faults_injected += 1;
+            stats.replica_faults[ctx.r] += 1;
+        }
+        crate::trace::instant("fault", "replica", ctx.r as i64);
+        if attempt >= ctx.recovery.retry_max {
+            return Err(err);
+        }
+        let backoff = ctx.recovery.retry_backoff_ms.saturating_mul(1u64 << attempt.min(16));
+        attempt += 1;
+        plock(&ctx.shared.stats).retries += 1;
+        crate::trace::instant("retry", "replica", attempt as i64);
+        if backoff > 0 {
+            std::thread::sleep(Duration::from_millis(backoff));
+        }
+    }
+}
+
+/// Resolve the shadow plan at execution end: `Ok(shadow)` when this
+/// replica still owns the plan (it may deliver results or decide
+/// failure), `Err(())` when the watchdog seized it mid-execution — a peer
+/// owns it now, so the caller discards everything and the thread exits.
+/// Seizure and claim are mutually exclusive under the pool lock, which is
+/// what makes delivery exactly-once.
+fn claim_inflight(ctx: &ReplicaCtx) -> Result<Option<Plan>, ()> {
+    let mut ps = plock(&ctx.pool.state);
+    if ps.abandoned[ctx.r] {
+        ps.abandoned[ctx.r] = false;
+        Err(())
+    } else {
+        ps.exec_started[ctx.r] = None;
+        Ok(ps.inflight_plan[ctx.r].take())
+    }
+}
+
+/// True when the watchdog seized this replica's plan (clears the flag —
+/// the caller must discard its work and exit).
+fn seized_by_watchdog(ctx: &ReplicaCtx) -> bool {
+    let mut ps = plock(&ctx.pool.state);
+    if ps.abandoned[ctx.r] {
+        ps.abandoned[ctx.r] = false;
+        true
+    } else {
+        false
+    }
+}
+
 /// Execute one oversized submission as successive engine calls: requests
 /// are chunked greedily (kept whole) under `capacity`, every chunk runs as
 /// its own engine call, and the per-request groups are merged back into a
@@ -700,17 +1340,23 @@ fn execute_split(
     engine: &mut dyn RolloutEngine,
     g: GenWork,
     capacity: usize,
-    shared: &Shared,
-    replica: usize,
-) {
-    // A single request that alone exceeds capacity can never execute.
+    ctx: &ReplicaCtx,
+) -> ExecOutcome {
+    let replica = ctx.r;
+    let shared = ctx.shared;
+    // A single request that alone exceeds capacity can never execute: a
+    // caller error, not an engine fault — claim the shadow (so the
+    // watchdog never redispatches it) and deliver the error.
     if let Some(req) = g.requests.iter().find(|r| r.n_samples > capacity) {
+        if claim_inflight(ctx).is_err() {
+            return ExecOutcome::Abandoned;
+        }
         let _ = g.tx.send(Err(anyhow!(
             "request of {} samples exceeds engine capacity {capacity} (prompt {})",
             req.n_samples,
             req.prompt_idx
         )));
-        return;
+        return ExecOutcome::Done;
     }
     let mut chunks: Vec<Vec<GenRequest>> = Vec::new();
     let mut chunk: Vec<GenRequest> = Vec::new();
@@ -731,17 +1377,14 @@ fn execute_split(
     let mut cost_s = 0.0f64;
     let mut weight_version = 0u64;
     for chunk in &chunks {
+        // Zombie check between chunks: once seized, stop burning the
+        // engine on work a peer now owns.
+        if seized_by_watchdog(ctx) {
+            return ExecOutcome::Abandoned;
+        }
         let chunk_rows: usize = chunk.iter().map(|r| r.n_samples).sum();
         let chunk_started = Instant::now();
-        let result = engine.generate(chunk, g.temperature).and_then(|res| {
-            anyhow::ensure!(
-                res.groups.len() == chunk.len(),
-                "engine returned {} groups for {} requests",
-                res.groups.len(),
-                chunk.len()
-            );
-            Ok(res)
-        });
+        let result = generate_with_retry(engine, chunk, g.temperature, ctx);
         // Unconditional end-of-call clock read: the exec histogram is
         // always on, so traced and untraced runs do identical work here.
         let chunk_finished = Instant::now();
@@ -753,7 +1396,7 @@ fn execute_split(
             replica as i64,
         );
         {
-            let mut stats = shared.stats.lock().unwrap();
+            let mut stats = plock(&shared.stats);
             stats.calls += 1;
             stats.split_calls += 1;
             stats.rows_used += chunk_rows as u64;
@@ -773,19 +1416,32 @@ fn execute_split(
                 weight_version = res.weight_version;
             }
             Err(e) => {
-                let _ = g.tx.send(Err(anyhow!("split inference call failed: {e:#}")));
-                return;
+                let msg = format!("{e:#}");
+                let Ok(shadow) = claim_inflight(ctx) else {
+                    return ExecOutcome::Abandoned;
+                };
+                if ctx.recovery.active() {
+                    if let Some(p) = shadow {
+                        return ExecOutcome::Failed { seized: Box::new(p), msg };
+                    }
+                }
+                let _ = g.tx.send(Err(anyhow!("split inference call failed: {msg}")));
+                return ExecOutcome::Done;
             }
         }
     }
+    if claim_inflight(ctx).is_err() {
+        return ExecOutcome::Abandoned;
+    }
     {
-        let mut stats = shared.stats.lock().unwrap();
+        let mut stats = plock(&shared.stats);
         stats.submissions += 1;
         let wait_s = started.saturating_duration_since(g.enqueued).as_secs_f64();
         stats.queue_wait_s += wait_s;
         stats.queue_wait_hist[crate::trace::latency_bucket(wait_s)] += 1;
     }
     let _ = g.tx.send(Ok(GenResult { groups, cost_s, rows_used: g.rows, weight_version }));
+    ExecOutcome::Done
 }
 
 /// Execute one coalesced call and fan the results back out per ticket.
@@ -795,32 +1451,27 @@ fn execute_call(
     rows_total: usize,
     capacity: usize,
     deadline_fired: bool,
-    shared: &Shared,
-    replica: usize,
-) {
+    ctx: &ReplicaCtx,
+) -> ExecOutcome {
+    let replica = ctx.r;
+    let shared = ctx.shared;
     let temperature = subs[0].temperature;
     // Drain, don't clone: the submissions are owned and only their request
-    // counts are needed for the fan-out split.
+    // counts are needed for the fan-out split (the redispatchable copy
+    // already sits in the pool's shadow slot).
     let n_requests: Vec<usize> = subs.iter().map(|s| s.requests.len()).collect();
     let merged: Vec<GenRequest> = subs.iter_mut().flat_map(|s| s.requests.drain(..)).collect();
     let started = Instant::now();
-    let expected_groups = merged.len();
-    let result = engine.generate(&merged, temperature).and_then(|res| {
-        // A short groups vector would silently shift later tickets' groups
-        // onto the wrong submissions — fail the whole call instead.
-        anyhow::ensure!(
-            res.groups.len() == expected_groups,
-            "engine returned {} groups for {expected_groups} requests",
-            res.groups.len()
-        );
-        Ok(res)
-    });
+    let result = generate_with_retry(engine, &merged, temperature, ctx);
     // Unconditional end-of-call clock read: the exec histogram is always
     // on, so traced and untraced runs do identical work here.
     let finished = Instant::now();
     crate::trace::span_between("engine-execute", "replica", started, finished, replica as i64);
+    let Ok(shadow) = claim_inflight(ctx) else {
+        return ExecOutcome::Abandoned;
+    };
     {
-        let mut stats = shared.stats.lock().unwrap();
+        let mut stats = plock(&shared.stats);
         stats.calls += 1;
         stats.submissions += subs.len() as u64;
         stats.rows_used += rows_total as u64;
@@ -864,12 +1515,21 @@ fn execute_call(
                 };
                 let _ = s.tx.send(Ok(out));
             }
+            ExecOutcome::Done
         }
         Err(e) => {
             let msg = format!("{e:#}");
+            if ctx.recovery.active() {
+                if let Some(p) = shadow {
+                    // Hand the plan back for redispatch: a healthy peer
+                    // may well serve what this replica could not.
+                    return ExecOutcome::Failed { seized: Box::new(p), msg };
+                }
+            }
             for s in subs {
                 let _ = s.tx.send(Err(anyhow!("coalesced inference call failed: {msg}")));
             }
+            ExecOutcome::Done
         }
     }
 }
@@ -1379,5 +2039,202 @@ mod tests {
         let n = installs.load(Ordering::Relaxed) as u64;
         assert!((10..=20).contains(&n), "unexpected install count {n}");
         assert_eq!(stats.installs, n);
+    }
+
+    use crate::policy::fault::FaultPlan;
+
+    /// Recovery-enabled baseline (bounded retry) plus a scripted plan.
+    fn recovery(plan: &str) -> RecoveryConfig {
+        RecoveryConfig { fault_plan: FaultPlan::parse(plan).unwrap(), ..RecoveryConfig::default() }
+    }
+
+    #[test]
+    fn transient_fault_retries_and_succeeds() {
+        let (e, calls, _) = engine(64);
+        let service = InferenceService::spawn_pool_with_recovery(
+            vec![e],
+            Vec::new(),
+            ServiceConfig::default(),
+            recovery("err@0:0"),
+            1,
+            8,
+        );
+        let mut rng = Rng::new(20);
+        // Call 0 fails (injected), the bounded retry replays as call 1.
+        let res = service.handle().submit(reqs(&mut rng, 3, 4), 1.0).wait().unwrap();
+        assert_eq!(res.groups.len(), 3);
+        assert_eq!(res.rows_used, 12);
+        let stats = service.stats();
+        assert_eq!(stats.faults_injected, 1);
+        assert_eq!(stats.retries, 1);
+        assert_eq!(stats.replica_faults[0], 1);
+        assert_eq!(stats.calls, 1, "retries stay inside one logical call");
+        assert_eq!(calls.lock().unwrap().as_slice(), &[12], "inner engine served once");
+    }
+
+    #[test]
+    fn retry_exhaustion_quarantines_and_redispatches_to_a_peer() {
+        // Replica 0's only call fails with no retry budget: the plan must
+        // move to replica 1 and the ticket still be served, while the
+        // quantum shrinks to the degraded pool's capacity.
+        let (engines, _, _) = pool_engines(16, &[0, 0]);
+        let mut rec = recovery("err@0:0");
+        rec.retry_max = 0;
+        let service = InferenceService::spawn_pool_with_recovery(
+            engines,
+            Vec::new(),
+            ServiceConfig::default(),
+            rec,
+            2,
+            4,
+        );
+        assert_eq!(service.quantum(), 16);
+        let mut rng = Rng::new(21);
+        let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
+        assert_eq!(res.groups.len(), 2, "redispatched plan served exactly once");
+        let stats = service.stats();
+        assert_eq!(stats.faults_injected, 1);
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.quarantines, 1);
+        assert_eq!(stats.redispatches, 1);
+        assert_eq!(stats.replica_faults[0], 1);
+        assert_eq!(service.quantum(), 8, "quantum recomputed for the degraded pool");
+        // The survivor keeps serving later submissions.
+        assert!(service.handle().submit(reqs(&mut rng, 1, 4), 1.0).wait().is_ok());
+    }
+
+    #[test]
+    fn hard_death_is_contained_and_a_spare_respawns() {
+        // Replica 0 panics mid-call. The panic must convert into
+        // quarantine + redispatch (ticket served by the peer), and the
+        // pre-forked spare must be activated to restore pool capacity.
+        let (engines, _, _) = pool_engines(16, &[0, 0]);
+        let (spare, _, _) = engine(16);
+        let mut rec = recovery("die@0:0");
+        rec.respawn = true;
+        let service = InferenceService::spawn_pool_with_recovery(
+            engines,
+            vec![spare],
+            ServiceConfig::default(),
+            rec,
+            2,
+            4,
+        );
+        let mut rng = Rng::new(22);
+        let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
+        assert_eq!(res.groups.len(), 2, "plan survived the replica death exactly once");
+        let stats = service.stats();
+        assert_eq!(stats.faults_injected, 1);
+        assert_eq!(stats.quarantines, 1);
+        assert_eq!(stats.redispatches, 1);
+        assert_eq!(stats.respawns, 1, "the spare must be admitted");
+        assert_eq!(service.quantum(), 16, "respawn restores full pool capacity");
+        // The pool (peer + respawned spare) keeps serving.
+        for _ in 0..4 {
+            assert!(service.handle().submit(reqs(&mut rng, 1, 4), 1.0).wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn watchdog_seizes_a_stalled_replica_and_a_peer_delivers() {
+        // Replica 0 stalls 500ms on its first call; the 50ms execute
+        // watchdog must quarantine it and hand the plan to replica 1 long
+        // before the stall ends — and the zombie's eventual result must be
+        // discarded, not double-delivered.
+        let (engines, _, _) = pool_engines(16, &[0, 0]);
+        let mut rec = recovery("stall@0:0:500");
+        rec.exec_timeout_ms = 50;
+        let service = InferenceService::spawn_pool_with_recovery(
+            engines,
+            Vec::new(),
+            ServiceConfig::default(),
+            rec,
+            2,
+            4,
+        );
+        let mut rng = Rng::new(23);
+        let t0 = Instant::now();
+        let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
+        assert_eq!(res.groups.len(), 2);
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "ticket waited out the stall instead of being redispatched"
+        );
+        let stats = service.stats();
+        assert_eq!(stats.quarantines, 1, "stalled replica must be quarantined");
+        assert_eq!(stats.redispatches, 1);
+        assert_eq!(stats.faults_injected, 1);
+        assert!(service.handle().submit(reqs(&mut rng, 1, 4), 1.0).wait().is_ok());
+    }
+
+    #[test]
+    fn last_replica_fails_gracefully_and_keeps_serving() {
+        // E=1 with every retry exhausted: no peer exists, so the error
+        // goes to the ticket (single-engine behaviour) and the replica
+        // stays live for the next submission.
+        let (e, _, _) = engine(64);
+        let service = InferenceService::spawn_pool_with_recovery(
+            vec![e],
+            Vec::new(),
+            ServiceConfig::default(),
+            recovery("err@0:0,err@0:1,err@0:2"),
+            1,
+            8,
+        );
+        let mut rng = Rng::new(24);
+        let err = service.handle().submit(reqs(&mut rng, 1, 4), 1.0).wait().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("coalesced inference call failed"), "{msg}");
+        assert!(msg.contains("injected transient fault"), "{msg}");
+        let stats = service.stats();
+        assert_eq!(stats.faults_injected, 3, "initial attempt + 2 retries all faulted");
+        assert_eq!(stats.retries, 2);
+        assert_eq!(stats.quarantines, 0, "the last replica must never quarantine itself");
+        // Call index 3 has no scripted fault: service still serves.
+        let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
+        assert_eq!(res.groups.len(), 2);
+    }
+
+    #[test]
+    fn scheduler_death_unblocks_every_waiter_with_a_typed_error() {
+        // Kill the scheduler while producers are mid-flight: every blocked
+        // `wait` must return (served or typed error), and later submissions
+        // must fail fast instead of hanging on a dead queue.
+        let (engines, _, _) = pool_engines(16, &[20, 20]);
+        let service = InferenceService::spawn_pool(engines, ServiceConfig::default(), 2, 4);
+        let mut rng = Rng::new(25);
+        let producers: Vec<std::thread::JoinHandle<Vec<String>>> = (0..2)
+            .map(|_| {
+                let h = service.handle();
+                let r = reqs(&mut rng, 1, 4);
+                std::thread::spawn(move || {
+                    let mut errs = Vec::new();
+                    for _ in 0..20 {
+                        if let Err(e) = h.submit(r.clone(), 1.0).wait() {
+                            errs.push(format!("{e:#}"));
+                        }
+                    }
+                    errs
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30));
+        service.kill_scheduler();
+        // The join IS the regression: a hung waiter would deadlock here.
+        for p in producers {
+            for msg in p.join().expect("producer thread must finish") {
+                assert!(
+                    msg.contains("scheduler panicked") || msg.contains("closed"),
+                    "unexpected error shape: {msg}"
+                );
+            }
+        }
+        let err = service
+            .handle()
+            .submit(reqs(&mut rng, 1, 4), 1.0)
+            .wait()
+            .expect_err("post-crash submissions must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("scheduler panicked") || msg.contains("closed"), "{msg}");
     }
 }

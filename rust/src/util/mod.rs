@@ -6,4 +6,5 @@ pub mod logging;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

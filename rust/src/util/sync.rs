@@ -1,0 +1,95 @@
+//! Poison-recovering lock primitives (DESIGN.md §13).
+//!
+//! A thread that panics while holding a `Mutex` poisons it; every later
+//! `lock().unwrap()` then panics too, cascading one replica's death into
+//! every worker that touches the shared state. The service's containment
+//! story (catch_unwind + typed errors to every ticket) only works if the
+//! survivors can still *take* the lock — so the service and the shared
+//! buffer route every acquisition through these helpers, which recover
+//! the guard from a poisoned lock instead of propagating the panic.
+//!
+//! Recovery is sound here because the protected states are kept
+//! transactionally consistent: every writer either completes its update
+//! under the guard or performs only field-at-a-time writes that leave the
+//! invariants intact (queue push/pop, counter bumps, flag stores) — there
+//! are no multi-step updates that a mid-panic could tear.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// `m.lock()` that shrugs off poisoning: a panicked peer marks the mutex
+/// poisoned, but the data is still there and still consistent (see module
+/// docs) — take the guard and carry on.
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Poison-recovering [`Condvar::wait`].
+pub fn pwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Poison-recovering [`Condvar::wait_timeout`].
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn plock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        // Poison it: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("injected");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = plock(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn pwait_timeout_times_out_and_returns_the_guard() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let g = plock(&m);
+        let (g, res) = pwait_timeout(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+        assert_eq!(*g, 0);
+    }
+
+    #[test]
+    fn pwait_wakes_on_notify_even_after_poisoning() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        // Poison the mutex first.
+        let p2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("injected");
+        })
+        .join();
+        // A waiter must still see the flag flip through the poisoned lock.
+        let p3 = Arc::clone(&pair);
+        let waker = std::thread::spawn(move || {
+            let mut done = plock(&p3.0);
+            *done = true;
+            p3.1.notify_all();
+        });
+        let mut g = plock(&pair.0);
+        while !*g {
+            g = pwait(&pair.1, g);
+        }
+        waker.join().unwrap();
+    }
+}
