@@ -46,6 +46,34 @@ print(f"pool smoke: E=1 {e1['engine_calls']:.0f} calls / E=2 {e2['engine_calls']
       f"dapo1k {e1['final_dapo1k']:.3f} vs {e2['final_dapo1k']:.3f}")
 EOF
 
+echo "== speed-rl bench --mode slots (deadline vs slot admission -> BENCH_slots.json) =="
+# Deadline coalescing vs slot-level admission on the same seed. Gate: the
+# slots router admits each submission as a full-quantum call, so its mean
+# fill must not fall below the deadline router's, and accuracy must stay
+# matched (same training run, different dispatch). Queue-wait p95 is
+# wall-clock — printed for the trajectory, soft-gated with generous slack.
+cargo run --release --bin speed-rl -- bench --mode slots --steps 12 --workers 8 \
+  --engines 2 --out BENCH_slots.json
+python3 - <<'EOF'
+import json
+modes = {m["batching"]: m for m in json.load(open("BENCH_slots.json"))["modes"]}
+dl, sl = modes["deadline"], modes["slots"]
+assert sl["mean_fill"] + 1e-9 >= dl["mean_fill"], (
+    f"slot admission lost fill: slots {sl['mean_fill']:.3f} "
+    f"vs deadline {dl['mean_fill']:.3f}")
+assert abs(sl["final_dapo1k"] - dl["final_dapo1k"]) < 0.15, (
+    f"batching mode changed learning: slots dapo1k {sl['final_dapo1k']:.3f} "
+    f"vs deadline {dl['final_dapo1k']:.3f}")
+assert sl["mean_slot_occupancy"] > 0, "slots leg recorded no slot occupancy"
+if sl["queue_wait_p95_s"] > dl["queue_wait_p95_s"] * 2 + 1e-3:
+    print(f"WARNING: slots queue-wait p95 {1e3 * sl['queue_wait_p95_s']:.3f}ms well above "
+          f"deadline's {1e3 * dl['queue_wait_p95_s']:.3f}ms (wall-clock; not gated hard)")
+print(f"slots smoke: fill {dl['mean_fill']:.3f} -> {sl['mean_fill']:.3f}, "
+      f"queue-wait p95 {1e3 * dl['queue_wait_p95_s']:.3f}ms -> "
+      f"{1e3 * sl['queue_wait_p95_s']:.3f}ms, "
+      f"dapo1k {dl['final_dapo1k']:.3f} vs {sl['final_dapo1k']:.3f}")
+EOF
+
 echo "== resume smoke (train -> save -> resume must equal the uninterrupted run) =="
 # The checkpoint-format drift gate: a 6+6-step predictive-speed resume must
 # reproduce the uninterrupted 12-step run's record byte for byte (the
@@ -119,7 +147,7 @@ echo "== chaos smoke (fault injection: empty-plan equivalence; E=3 err+stall+die
 # differs between ANY two runs, so those keys are normalized out before
 # the comparison; rust/tests/fault_sim.rs holds the same rail field by
 # field on the library API.
-rm -f chaos_plain.json chaos_none.json chaos_run.json chaos_err.log
+rm -f chaos_plain.json chaos_none.json chaos_run.json chaos_slots.json chaos_err.log
 CHAOS_FLAGS="--dataset-size 2000 --batch-size 8 --steps 8 --eval-every 4 --service --log-level warn"
 cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --out chaos_plain.json
 cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --fault-plan none --out chaos_none.json
@@ -164,8 +192,30 @@ print(f"chaos smoke: E=3 run survived {svc['faults_injected']:.0f} faults "
       f"({svc['retries']:.0f} retries, {svc['quarantines']:.0f} quarantines, "
       f"{svc['respawns']:.0f} respawns); every submission answered once")
 EOF
+# The same chaos plan through the slots router: slot-granular recovery
+# must still complete the plan and answer every submission exactly once.
+cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --workers 3 --engines 3 \
+  --batching slots --fault-plan "err@0:2,stall@1:3:400,die@2:4" --exec-timeout-ms 50 \
+  --respawn --out chaos_slots.json
+python3 - <<'EOF'
+import json
+doc = json.load(open("chaos_slots.json"))
+svc = doc["service"]
+assert len(doc["steps"]) == 8, f"slots chaos run died early: {len(doc['steps'])} steps"
+assert svc["slots_mode"] == 1, "slots chaos leg did not run in slots mode"
+assert svc["faults_injected"] >= 3, f"scripted faults missing: {svc['faults_injected']}"
+assert svc["submissions"] == doc["counters"]["calls"], (
+    f"slot redispatch lost or duplicated work: {svc['submissions']:.0f} served "
+    f"vs {doc['counters']['calls']:.0f} submitted")
+assert svc["slot_admissions"] >= svc["slot_retires"] > 0, (
+    f"slot lifecycle accounting broken: {svc['slot_admissions']:.0f} admissions "
+    f"vs {svc['slot_retires']:.0f} retires")
+print(f"chaos smoke: slots-mode E=3 run survived {svc['faults_injected']:.0f} faults; "
+      f"{svc['slot_admissions']:.0f} slot admissions, every submission answered once")
+EOF
 cargo run --release --bin speed-rl -- report chaos_run.json --metric faults
 cargo run --release --bin speed-rl -- report chaos_run.json --metric retries
+cargo run --release --bin speed-rl -- report chaos_slots.json --metric slot-occupancy
 # A bogus plan must be rejected up front with the kinds and grammar quoted.
 if cargo run --release --bin speed-rl -- simulate $CHAOS_FLAGS --fault-plan explode@0:0 \
     > chaos_err.log 2>&1; then
@@ -177,7 +227,7 @@ if ! grep -q "kind@replica:call" chaos_err.log; then
   cat chaos_err.log
   exit 1
 fi
-rm -f chaos_plain.json chaos_none.json chaos_run.json chaos_err.log
+rm -f chaos_plain.json chaos_none.json chaos_run.json chaos_slots.json chaos_err.log
 echo "chaos smoke: scripted-fault run recovered; bad plans rejected with grammar"
 
 echo "== cargo fmt --check =="

@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::alloc::AllocKind;
 use crate::coordinator::curriculum::CurriculumKind;
 use crate::data::dataset::DatasetKind;
-use crate::policy::service::ServiceConfig;
+use crate::policy::service::{BatchingMode, ServiceConfig};
 use crate::rl::algo::BaseAlgo;
 use crate::util::json::Json;
 
@@ -83,6 +83,11 @@ pub struct RunConfig {
     /// workers submit to it; with `pipeline` off, the serial loop delegates
     /// through it with one producer (the bit-for-bit equivalence rail).
     pub service: bool,
+    /// Service dispatch discipline (`--batching`; DESIGN.md §14):
+    /// `deadline` is the legacy micro-batch coalescer below, `slots` is
+    /// slot-level continuous batching (admission per submission, no gather
+    /// window — the coalesce knobs don't apply and overrides are rejected).
+    pub batching: BatchingMode,
     /// Service micro-batch deadline: wait at most this long (real ms) for
     /// more submissions before executing a call.
     pub coalesce_wait_ms: u64,
@@ -154,6 +159,7 @@ impl Default for RunConfig {
             predictor_discount: 0.97,
             explore_rate: 0.05,
             service: false,
+            batching: service_cfg.batching,
             coalesce_wait_ms: service_cfg.coalesce_wait_ms,
             fill_waterline: service_cfg.fill_waterline,
             coalesce_adaptive: service_cfg.adaptive,
@@ -307,6 +313,24 @@ impl RunConfig {
                 self.fill_waterline
             );
         }
+        // Slots mode has no gather window, so a coalesce-knob override
+        // would silently do nothing while the config JSON records it as
+        // live — the same hazard as the alloc-band knobs above.
+        if self.batching == BatchingMode::Slots {
+            let defaults = ServiceConfig::default();
+            if self.coalesce_wait_ms != defaults.coalesce_wait_ms
+                || self.fill_waterline != defaults.fill_waterline
+                || self.coalesce_adaptive != defaults.adaptive
+            {
+                bail!(
+                    "--batching slots admits each submission the moment it arrives and has no \
+                     coalesce deadline; drop the coalesce-wait-ms/fill-waterline/\
+                     coalesce-adaptive overrides or use a deadline mode (valid batching \
+                     modes: {})",
+                    BatchingMode::NAMES.join(", ")
+                );
+            }
+        }
         if !(1..=crate::metrics::MAX_POOL).contains(&self.engines) {
             bail!(
                 "engines must be in 1..={} (got {}); the per-replica counters are \
@@ -397,6 +421,11 @@ impl RunConfig {
         if let Some(path) = &self.trace {
             fields.push(("trace", Json::str(path.clone())));
         }
+        // Same emit-only-when-set rule for the batching mode: deadline
+        // (the default) keeps the pre-slots byte layout.
+        if self.batching != BatchingMode::Deadline {
+            fields.push(("batching", Json::str(self.batching.name().to_string())));
+        }
         // Same emit-only-when-set rule for the fault-tolerance knobs:
         // a run without the chaos harness keeps the pre-§13 byte layout.
         if let Some(plan) = &self.fault_plan {
@@ -478,6 +507,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("coalesce_adaptive").and_then(|x| x.as_bool()) {
             cfg.coalesce_adaptive = v;
+        }
+        if let Some(v) = get_str("batching") {
+            cfg.batching = BatchingMode::parse_or_err(v)?;
         }
         if let Some(v) = get_str("trace") {
             cfg.trace = Some(v.to_string());
@@ -795,6 +827,52 @@ mod tests {
         cfg.coalesce_adaptive = true;
         let back = RunConfig::from_json(&cfg.to_json()).unwrap();
         assert!(back.coalesce_adaptive);
+    }
+
+    #[test]
+    fn batching_roundtrips_and_is_omitted_for_deadline() {
+        // Deadline is the default and absent from the JSON, so pre-slots
+        // configs keep their byte layout (the resume-smoke full-byte diff).
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.batching, BatchingMode::Deadline);
+        assert!(!cfg.to_json().to_string_pretty().contains("batching"));
+        let mut cfg = RunConfig::default();
+        cfg.batching = BatchingMode::Slots;
+        let back = RunConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.batching, BatchingMode::Slots);
+        // An unknown mode in a config file lists the valid modes.
+        let mut bad = RunConfig::default().to_json();
+        if let Json::Obj(fields) = &mut bad {
+            fields.insert("batching".to_string(), Json::str("bogus"));
+        }
+        let msg = format!("{:#}", RunConfig::from_json(&bad).unwrap_err());
+        assert!(msg.contains("deadline, slots"), "{msg}");
+    }
+
+    #[test]
+    fn slots_mode_rejects_coalesce_knob_overrides() {
+        // A coalesce override under slots mode would silently do nothing
+        // — reject it at validate() time, listing the valid modes.
+        for mutate in [
+            (|c: &mut RunConfig| c.coalesce_wait_ms = 10) as fn(&mut RunConfig),
+            |c: &mut RunConfig| c.fill_waterline = 1.0,
+            |c: &mut RunConfig| c.coalesce_adaptive = true,
+        ] {
+            let mut bad = RunConfig::default();
+            bad.batching = BatchingMode::Slots;
+            mutate(&mut bad);
+            let msg = format!("{:#}", bad.validate().unwrap_err());
+            assert!(msg.contains("--batching slots"), "{msg}");
+            assert!(msg.contains("deadline, slots"), "modes not listed: {msg}");
+        }
+        // The pure slots config (all coalesce knobs at defaults) is valid,
+        // and the deadline default still accepts its own knob overrides.
+        let mut ok = RunConfig::default();
+        ok.batching = BatchingMode::Slots;
+        assert!(ok.validate().is_ok());
+        let mut ok = RunConfig::default();
+        ok.coalesce_wait_ms = 10;
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

@@ -454,6 +454,7 @@ impl PipelinedTrainer {
                 service_exec_p95_s,
                 service_faults,
                 service_retries,
+                slot_occupancy,
             ) = match service.map(|s| s.stats()) {
                 Some(cur) => {
                     let d_calls = cur.calls.saturating_sub(prev_svc.calls);
@@ -465,6 +466,9 @@ impl PipelinedTrainer {
                     let d_busy = cur.pool_busy_sum.saturating_sub(prev_svc.pool_busy_sum);
                     let d_faults = cur.faults_injected.saturating_sub(prev_svc.faults_injected);
                     let d_retries = cur.retries.saturating_sub(prev_svc.retries);
+                    let d_osum =
+                        cur.slot_occupancy_sum.saturating_sub(prev_svc.slot_occupancy_sum);
+                    let d_ocap = cur.slot_capacity_sum.saturating_sub(prev_svc.slot_capacity_sum);
                     let engines = cur.engines;
                     // Step-local latency histograms: bucket deltas, then the
                     // p95 upper-edge estimate (trace::hist_quantile).
@@ -489,9 +493,10 @@ impl PipelinedTrainer {
                         crate::trace::hist_quantile(&d_exec, 0.95),
                         d_faults,
                         d_retries,
+                        if d_ocap == 0 { 0.0 } else { d_osum as f64 / d_ocap as f64 },
                     )
                 }
-                None => (0, 0.0, 0.0, 0.0, 0.0, 0.0, 0, 0),
+                None => (0, 0.0, 0.0, 0.0, 0.0, 0.0, 0, 0, 0.0),
             };
             record.steps.push(StepRecord {
                 step,
@@ -521,6 +526,7 @@ impl PipelinedTrainer {
                 alloc_calibration: counter_snap.alloc_calibration(),
                 service_faults,
                 service_retries,
+                slot_occupancy,
             });
 
             if self.config.eval_every > 0 && (step + 1) % self.config.eval_every == 0 {

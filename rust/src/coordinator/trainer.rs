@@ -275,6 +275,7 @@ impl Trainer {
                 alloc_calibration: state.counters.alloc_calibration(),
                 service_faults: 0,
                 service_retries: 0,
+                slot_occupancy: 0.0,
             });
 
             // ---- periodic evaluation (excluded from training time) ----

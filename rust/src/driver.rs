@@ -98,6 +98,7 @@ pub fn build_curriculum(cfg: &RunConfig) -> Box<dyn Curriculum> {
 
 pub fn service_config(cfg: &RunConfig) -> ServiceConfig {
     ServiceConfig {
+        batching: cfg.batching,
         coalesce_wait_ms: cfg.coalesce_wait_ms,
         fill_waterline: cfg.fill_waterline,
         adaptive: cfg.coalesce_adaptive,

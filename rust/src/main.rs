@@ -77,7 +77,7 @@ fn print_usage() {
          \x20 eval       score a real model checkpoint on the benchmarks\n\
          \x20 info       print the artifact manifest summary\n\
          \x20 report     ASCII accuracy-vs-time charts from run records\n\
-         \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets) | pool (engine scaling)\n\
+         \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets) | pool (engine scaling) | slots (continuous batching)\n\
          \x20 trace      summarize a --trace timeline (per-phase breakdown, latency percentiles)\n"
     );
 }
@@ -131,6 +131,14 @@ fn print_summary(record: &RunRecord, model: &str) {
             1e3 * svc.mean_queue_wait_s(),
             svc.installs,
             svc.deadline_dispatches,
+        );
+        println!(
+            "batching: {} mode  mean slot occupancy {:.2}  {} admissions / {} retires  {} steals",
+            if svc.slots_mode > 0 { "slots" } else { "deadline" },
+            svc.mean_slot_occupancy(),
+            svc.slot_admissions,
+            svc.slot_retires,
+            svc.steals,
         );
         if svc.engines > 1 {
             let e = (svc.engines as usize).min(svc.replica_calls.len());
@@ -211,6 +219,11 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             "explore-rate",
             None,
             "predictive-speed: probability of screening a confidently-skipped prompt anyway",
+        )
+        .opt(
+            "batching",
+            None,
+            "service dispatch mode: deadline (micro-batch) | slots (continuous batching)",
         )
         .opt(
             "coalesce-wait-ms",
@@ -337,6 +350,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     if let Some(v) = args.get("fill-waterline") {
         cfg.fill_waterline = v.parse::<f64>().context("--fill-waterline")?;
+    }
+    if let Some(v) = args.get("batching") {
+        cfg.batching = speed_rl::policy::service::BatchingMode::parse_or_err(v)?;
     }
     if let Some(h) = args.get("max-hours") {
         cfg.max_seconds = h.parse::<f64>().context("--max-hours")? * 3600.0;
@@ -585,8 +601,8 @@ fn cmd_report(argv: &[String]) -> Result<()> {
             "metric",
             Some("accuracy"),
             "accuracy | skip-rate | explore-rate | service-fill | pool-balance | staleness | \
-             alloc-rows | alloc-calibration | queue-wait-p95 | exec-p95 | faults | retries \
-             (per-step charts)",
+             alloc-rows | alloc-calibration | queue-wait-p95 | exec-p95 | faults | retries | \
+             slot-occupancy (per-step charts)",
         )
         .opt("width", Some("72"), "chart width")
         .opt("height", Some("16"), "chart height");
@@ -699,10 +715,13 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
 ///   serial SPEED curriculum: rollouts spent to reach the same target
 ///   accuracy (`BENCH_alloc.json`);
 /// * `pool` — K pipelined workers submitting through an engine pool of E
-///   data-parallel replicas, swept over E (`BENCH_pool.json`).
+///   data-parallel replicas, swept over E (`BENCH_pool.json`);
+/// * `slots` — the same pipelined+service scenario run twice from one
+///   seed, `--batching deadline` vs `slots`: fill, queue-wait p95 and
+///   steps/s at matched accuracy (`BENCH_slots.json`).
 fn cmd_bench(argv: &[String]) -> Result<()> {
     let cli = common_cli("speed-rl bench", "coalescing / allocation / pool smoke benches")
-        .opt("mode", Some("coalesce"), "coalesce | alloc | pool")
+        .opt("mode", Some("coalesce"), "coalesce | alloc | pool | slots")
         .opt("steps", Some("12"), "training steps per mode")
         .opt("workers", Some("4"), "rollout workers for the pipelined modes")
         .opt("batch-size", Some("8"), "training batch size B")
@@ -714,8 +733,9 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     match args.string("mode")?.as_str() {
         "alloc" => return cmd_bench_alloc(&args),
         "pool" => return cmd_bench_pool(&args),
+        "slots" => return cmd_bench_slots(&args),
         "coalesce" => {}
-        other => bail!("unknown bench mode '{other}' (valid: coalesce, alloc, pool)"),
+        other => bail!("unknown bench mode '{other}' (valid: coalesce, alloc, pool, slots)"),
     }
     let steps = args.usize("steps")?;
     let workers = args.usize("workers")?;
@@ -875,6 +895,100 @@ fn cmd_bench_pool(args: &speed_rl::util::cli::Args) -> Result<()> {
         ("bench", Json::str("pool")),
         ("steps", Json::num(steps as f64)),
         ("workers", Json::num(workers as f64)),
+        ("modes", Json::Arr(modes)),
+    ]);
+    std::fs::write(out, j.to_string_pretty()).with_context(|| format!("write {out}"))?;
+    info!("bench", "results written to {out}");
+    Ok(())
+}
+
+/// `speed-rl bench --mode slots`: deadline coalescing vs slot-level
+/// admission on one pipelined+service scenario. Both legs share the seed,
+/// dataset and replica count (the first value of `--engines`), so the
+/// accuracy column is the matched-accuracy check; the comparison axes are
+/// mean fill, queue-wait p95 and wall-clock steps/s.
+fn cmd_bench_slots(args: &speed_rl::util::cli::Args) -> Result<()> {
+    use speed_rl::policy::service::BatchingMode;
+    let steps = args.usize("steps")?;
+    let workers = args.usize("workers")?;
+    let batch_size = args.usize("batch-size")?;
+    let dataset_size = args.usize("dataset-size")?;
+    let seed = args.u64("seed")?;
+    let engines = args
+        .string("engines")?
+        .split(',')
+        .next()
+        .unwrap_or("1")
+        .trim()
+        .parse::<usize>()
+        .context("--engines")?;
+
+    let mut table = speed_rl::bench::Table::new(&[
+        "batching",
+        "steps/s",
+        "engine calls",
+        "mean fill %",
+        "queue-wait p95 ms",
+        "slot occupancy",
+        "steals",
+        "final dapo1k",
+    ]);
+    let mut modes = Vec::new();
+    for batching in [BatchingMode::Deadline, BatchingMode::Slots] {
+        let mut cfg = RunConfig::default();
+        cfg.label = format!("{workers}w-{engines}e-{}", batching.name());
+        cfg.batch_size = batch_size;
+        cfg.dataset_size = dataset_size;
+        cfg.max_steps = steps;
+        cfg.eval_every = steps; // one final eval point, cheap
+        cfg.seed = seed;
+        cfg.pipeline = true;
+        cfg.workers = workers;
+        cfg.service = true;
+        cfg.engines = engines;
+        cfg.batching = batching;
+        let t0 = std::time::Instant::now();
+        let rec = driver::run_sim(&cfg)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let steps_per_sec = rec.steps.len() as f64 / wall_s.max(1e-9);
+        let svc = rec.service.unwrap_or_default();
+        let queue_wait_p95_s = speed_rl::trace::hist_quantile(&svc.queue_wait_hist, 0.95);
+        table.row(vec![
+            batching.name().to_string(),
+            format!("{steps_per_sec:.1}"),
+            svc.calls.to_string(),
+            format!("{:.1}", 100.0 * svc.mean_fill()),
+            format!("{:.3}", 1e3 * queue_wait_p95_s),
+            format!("{:.2}", svc.mean_slot_occupancy()),
+            svc.steals.to_string(),
+            format!("{:.3}", rec.final_accuracy("dapo1k").unwrap_or(0.0)),
+        ]);
+        modes.push(Json::obj(vec![
+            ("batching", Json::str(batching.name().to_string())),
+            ("workers", Json::num(workers as f64)),
+            ("engines", Json::num(engines as f64)),
+            ("steps", Json::num(rec.steps.len() as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("steps_per_sec", Json::num(steps_per_sec)),
+            ("engine_calls", Json::num(svc.calls as f64)),
+            ("submissions", Json::num(svc.submissions as f64)),
+            ("mean_fill", Json::num(svc.mean_fill())),
+            ("queue_wait_p95_s", Json::num(queue_wait_p95_s)),
+            ("mean_slot_occupancy", Json::num(svc.mean_slot_occupancy())),
+            ("slot_admissions", Json::num(svc.slot_admissions as f64)),
+            ("steals", Json::num(svc.steals as f64)),
+            ("rollouts", Json::num(rec.counters.rollouts as f64)),
+            ("virtual_time_s", Json::num(rec.total_time())),
+            ("final_dapo1k", Json::num(rec.final_accuracy("dapo1k").unwrap_or(0.0))),
+        ]));
+    }
+    table.print();
+    let out = args.get("out").unwrap_or("BENCH_slots.json");
+    let j = Json::obj(vec![
+        ("bench", Json::str("slots")),
+        ("steps", Json::num(steps as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("engines", Json::num(engines as f64)),
         ("modes", Json::Arr(modes)),
     ]);
     std::fs::write(out, j.to_string_pretty()).with_context(|| format!("write {out}"))?;

@@ -447,6 +447,26 @@ pub struct ServiceCounters {
     /// Log-bucketed histogram of engine-call execution durations (real
     /// seconds per executed call, splits counted per chunk). Always on.
     pub exec_hist: [u64; crate::trace::HIST_BUCKETS],
+    /// Rollout-group plans admitted into a replica slot (one per generate
+    /// plan routed, including redispatched placements; evaluation plans
+    /// occupy no slots). Always on in both batching modes so deadline and
+    /// slots runs chart the same occupancy curves.
+    pub slot_admissions: u64,
+    /// Admitted plans whose execution completed and freed their slot rows.
+    /// `slot_admissions - slot_retires` = placements lost to faults.
+    pub slot_retires: u64,
+    /// Rollout rows resident on the chosen replica (queued + in-flight)
+    /// summed over admissions — the slot-occupancy numerator. Pure row
+    /// arithmetic, no clocks: deterministic across reruns.
+    pub slot_occupancy_sum: u64,
+    /// Engine capacity summed over admissions (the occupancy denominator).
+    pub slot_capacity_sum: u64,
+    /// Histogram of replica occupancy observed at admission, in eighths of
+    /// engine capacity (last bucket = at or beyond full capacity).
+    pub slot_occupancy_hist: [u64; 8],
+    /// 1 when the service ran slot-level continuous batching (gauge; 0 for
+    /// deadline mode and records predating batching modes).
+    pub slots_mode: u64,
 }
 
 impl ServiceCounters {
@@ -468,6 +488,24 @@ impl ServiceCounters {
             0.0
         } else {
             self.rows_used as f64 / self.rows_capacity as f64
+        }
+    }
+
+    /// Histogram bucket for a replica holding `occupied` rollout rows
+    /// (queued + in-flight) out of `capacity`: eighths of capacity, with
+    /// everything at or beyond full capacity in the last bucket.
+    pub fn occupancy_bucket(occupied: usize, capacity: usize) -> usize {
+        ((occupied * 8) / capacity.max(1)).min(7)
+    }
+
+    /// Mean replica occupancy observed at admission, as a fraction of
+    /// engine capacity (can exceed 1.0 when admissions queue behind a busy
+    /// replica). 0 when nothing was admitted.
+    pub fn mean_slot_occupancy(&self) -> f64 {
+        if self.slot_capacity_sum == 0 {
+            0.0
+        } else {
+            self.slot_occupancy_sum as f64 / self.slot_capacity_sum as f64
         }
     }
 
@@ -561,6 +599,15 @@ impl ServiceCounters {
         for (slot, v) in self.replica_faults.iter_mut().zip(earlier.replica_faults) {
             *slot += v;
         }
+        self.slot_admissions += earlier.slot_admissions;
+        self.slot_retires += earlier.slot_retires;
+        self.slot_occupancy_sum += earlier.slot_occupancy_sum;
+        self.slot_capacity_sum += earlier.slot_capacity_sum;
+        for (slot, v) in self.slot_occupancy_hist.iter_mut().zip(earlier.slot_occupancy_hist) {
+            *slot += v;
+        }
+        // The batching mode is a gauge: segments of one run share it.
+        self.slots_mode = self.slots_mode.max(earlier.slots_mode);
     }
 
     pub fn to_json(&self) -> Json {
@@ -623,6 +670,16 @@ impl ServiceCounters {
                 Json::num(crate::trace::hist_quantile(&self.queue_wait_hist, 0.95)),
             ),
             ("exec_p95_s", Json::num(crate::trace::hist_quantile(&self.exec_hist, 0.95))),
+            ("slot_admissions", Json::num(self.slot_admissions as f64)),
+            ("slot_retires", Json::num(self.slot_retires as f64)),
+            ("slot_occupancy_sum", Json::num(self.slot_occupancy_sum as f64)),
+            ("slot_capacity_sum", Json::num(self.slot_capacity_sum as f64)),
+            (
+                "slot_occupancy_hist",
+                Json::arr(self.slot_occupancy_hist.iter().map(|c| Json::num(*c as f64))),
+            ),
+            ("mean_slot_occupancy", Json::num(self.mean_slot_occupancy())),
+            ("slots_mode", Json::num(self.slots_mode as f64)),
         ])
     }
 
@@ -667,6 +724,12 @@ impl ServiceCounters {
             quarantines: f("quarantines") as u64,
             respawns: f("respawns") as u64,
             replica_faults: u64s(j, "replica_faults"),
+            slot_admissions: f("slot_admissions") as u64,
+            slot_retires: f("slot_retires") as u64,
+            slot_occupancy_sum: f("slot_occupancy_sum") as u64,
+            slot_capacity_sum: f("slot_capacity_sum") as u64,
+            slot_occupancy_hist: u64s(j, "slot_occupancy_hist"),
+            slots_mode: f("slots_mode") as u64,
         }
     }
 }
@@ -745,6 +808,10 @@ pub struct StepRecord {
     /// Failed execute attempts the service retried DURING this step (delta
     /// between step snapshots; 0 without a service).
     pub service_retries: u64,
+    /// Mean replica slot occupancy over THIS step's admissions, as a
+    /// fraction of engine capacity (delta of the service's occupancy sums;
+    /// 0 without a service or when nothing was admitted in the step).
+    pub slot_occupancy: f64,
 }
 
 impl StepRecord {
@@ -777,6 +844,7 @@ impl StepRecord {
             ("alloc_calibration", Json::num(self.alloc_calibration)),
             ("service_faults", Json::num(self.service_faults as f64)),
             ("service_retries", Json::num(self.service_retries as f64)),
+            ("slot_occupancy", Json::num(self.slot_occupancy)),
         ])
     }
 }
@@ -962,9 +1030,23 @@ mod tests {
             coalesced_hist: [1, 0, 1, 2, 0, 0],
             queue_wait_hist: [0, 3, 5, 2, 0, 0, 0, 0],
             exec_hist: [0, 0, 1, 3, 0, 0, 0, 0],
+            slot_admissions: 4,
+            slot_retires: 3,
+            slot_occupancy_sum: 120,
+            slot_capacity_sum: 256,
+            slot_occupancy_hist: [1, 0, 2, 0, 0, 0, 0, 1],
+            slots_mode: 1,
             ..Default::default()
         };
         assert!((c.mean_fill() - 0.75).abs() < 1e-12);
+        assert!((c.mean_slot_occupancy() - 120.0 / 256.0).abs() < 1e-12);
+        for (occ, cap, bucket) in [(0, 64, 0), (7, 64, 0), (8, 64, 1), (32, 64, 4), (64, 64, 7)] {
+            assert_eq!(ServiceCounters::occupancy_bucket(occ, cap), bucket, "occ={occ}");
+        }
+        // Over-capacity backlog and a zero-capacity engine both clamp to
+        // the last bucket instead of indexing out of bounds.
+        assert_eq!(ServiceCounters::occupancy_bucket(200, 64), 7);
+        assert_eq!(ServiceCounters::occupancy_bucket(5, 0), 7);
         assert!((c.mean_queue_wait_s() - 0.05).abs() < 1e-12);
         assert!((c.mean_coalesced() - 2.5).abs() < 1e-12);
         for (n, bucket) in [(1, 0), (2, 1), (3, 2), (4, 3), (5, 4), (8, 4), (9, 5)] {
@@ -987,6 +1069,12 @@ mod tests {
         // JSON are derived (recomputed, never stored authoritatively).
         assert_eq!(back.queue_wait_hist, c.queue_wait_hist);
         assert_eq!(back.exec_hist, c.exec_hist);
+        assert_eq!(back.slot_admissions, c.slot_admissions);
+        assert_eq!(back.slot_retires, c.slot_retires);
+        assert_eq!(back.slot_occupancy_sum, c.slot_occupancy_sum);
+        assert_eq!(back.slot_capacity_sum, c.slot_capacity_sum);
+        assert_eq!(back.slot_occupancy_hist, c.slot_occupancy_hist);
+        assert_eq!(back.slots_mode, c.slots_mode);
         let j = c.to_json();
         assert_eq!(
             j.get("queue_wait_p95_s").unwrap().as_f64().unwrap(),
@@ -996,6 +1084,7 @@ mod tests {
         assert_eq!(empty.mean_fill(), 0.0);
         assert_eq!(empty.mean_queue_wait_s(), 0.0);
         assert_eq!(empty.mean_coalesced(), 0.0);
+        assert_eq!(empty.mean_slot_occupancy(), 0.0);
     }
 
     #[test]
@@ -1014,6 +1103,12 @@ mod tests {
             coalesced_hist: [1, 0, 1, 2, 0, 0],
             queue_wait_hist: [1, 2, 0, 0, 0, 0, 0, 0],
             exec_hist: [0, 1, 1, 0, 0, 0, 0, 0],
+            slot_admissions: 4,
+            slot_retires: 4,
+            slot_occupancy_sum: 100,
+            slot_capacity_sum: 200,
+            slot_occupancy_hist: [2, 2, 0, 0, 0, 0, 0, 0],
+            slots_mode: 1,
             ..Default::default()
         };
         let mut newer = ServiceCounters {
@@ -1027,6 +1122,11 @@ mod tests {
             coalesced_hist: [1, 1, 0, 0, 0, 0],
             queue_wait_hist: [0, 1, 1, 0, 0, 0, 0, 0],
             exec_hist: [0, 0, 2, 0, 0, 0, 0, 0],
+            slot_admissions: 2,
+            slot_retires: 1,
+            slot_occupancy_sum: 30,
+            slot_capacity_sum: 100,
+            slot_occupancy_hist: [1, 1, 0, 0, 0, 0, 0, 0],
             ..Default::default()
         };
         newer.merge(&earlier);
@@ -1041,6 +1141,13 @@ mod tests {
         assert_eq!(newer.coalesced_hist, [2, 1, 1, 2, 0, 0]);
         assert_eq!(newer.queue_wait_hist, [1, 3, 1, 0, 0, 0, 0, 0]);
         assert_eq!(newer.exec_hist, [0, 1, 3, 0, 0, 0, 0, 0]);
+        assert_eq!(newer.slot_admissions, 6);
+        assert_eq!(newer.slot_retires, 5);
+        assert_eq!(newer.slot_occupancy_sum, 130);
+        assert_eq!(newer.slot_capacity_sum, 300);
+        assert_eq!(newer.slot_occupancy_hist, [3, 3, 0, 0, 0, 0, 0, 0]);
+        // The batching-mode gauge survives merging deadline-mode segments.
+        assert_eq!(newer.slots_mode, 1);
         // latest-value gauge: the newer generation's EWMA wins...
         assert!((newer.ewma_gap_s - 0.002).abs() < 1e-12);
         // ...unless it never observed a gap

@@ -41,6 +41,7 @@ pub const STEP_METRICS: &[(&str, fn(&StepRecord) -> f64)] = &[
     ("exec-p95", |s: &StepRecord| s.service_exec_p95_s),
     ("faults", |s: &StepRecord| s.service_faults as f64),
     ("retries", |s: &StepRecord| s.service_retries as f64),
+    ("slot-occupancy", |s: &StepRecord| s.slot_occupancy),
 ];
 
 /// Look up a per-step metric by its `--metric` name.
@@ -202,6 +203,7 @@ pub fn record_from_json(j: &Json) -> anyhow::Result<RunRecord> {
                 alloc_calibration: f("alloc_calibration"),
                 service_faults: f("service_faults") as u64,
                 service_retries: f("service_retries") as u64,
+                slot_occupancy: f("slot_occupancy"),
             });
         }
     }
@@ -303,6 +305,7 @@ mod tests {
             alloc_calibration: 0.02,
             service_faults: 2,
             service_retries: 5,
+            slot_occupancy: 0.6,
         });
         a.service = Some(ServiceCounters {
             calls: 4,
@@ -325,6 +328,7 @@ mod tests {
         assert!((s.alloc_calibration - 0.02).abs() < 1e-12);
         assert_eq!(s.service_faults, 2);
         assert_eq!(s.service_retries, 5);
+        assert!((s.slot_occupancy - 0.6).abs() < 1e-12);
         let svc = back.service.expect("service parsed");
         assert_eq!(svc.calls, 4);
         assert_eq!(svc.submissions, 9);
@@ -416,6 +420,7 @@ mod tests {
                 alloc_calibration: 0.0,
                 service_faults: 0,
                 service_retries: 0,
+                slot_occupancy: 0.0,
             });
         }
         let chart = step_chart(&[&a], "skip-rate", 30, 8).unwrap();
@@ -463,6 +468,7 @@ mod tests {
             alloc_calibration: 0.0,
             service_faults: 0,
             service_retries: 0,
+            slot_occupancy: 0.45,
         });
         let mut svc = ServiceCounters { calls: 6, submissions: 12, ..Default::default() };
         svc.engines = 2;
@@ -475,6 +481,11 @@ mod tests {
         svc.replica_rows[1] = 100;
         svc.queue_wait_hist[2] = 5;
         svc.exec_hist[3] = 6;
+        svc.slot_admissions = 6;
+        svc.slot_retires = 6;
+        svc.slot_occupancy_sum = 180;
+        svc.slot_capacity_sum = 384;
+        svc.slot_occupancy_hist[3] = 6;
         a.service = Some(svc);
         let back = record_from_json(&a.to_json()).unwrap();
         let s = &back.steps[0];
@@ -490,7 +501,58 @@ mod tests {
         assert_eq!(&svc.replica_rows[..2], &[200, 100]);
         assert_eq!(svc.queue_wait_hist[2], 5);
         assert_eq!(svc.exec_hist[3], 6);
+        assert!((s.slot_occupancy - 0.45).abs() < 1e-12);
+        assert_eq!(svc.slot_admissions, 6);
+        assert_eq!(svc.slot_retires, 6);
+        assert_eq!(svc.slot_occupancy_hist[3], 6);
         // pool_balance is derived from the dispatch counters, not stored
         assert!((svc.pool_balance() - 9.0 / 12.0).abs() < 1e-12);
+        // mean_slot_occupancy is likewise recomputed from the raw sums
+        assert!((svc.mean_slot_occupancy() - 180.0 / 384.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_pre_slot_records_with_zeroed_occupancy() {
+        // A fixture in the PR-8-era serviced format: steps and the service
+        // block predate the slot-occupancy telemetry entirely. The parser
+        // must fill zeros (deadline-mode semantics), not error — slots-era
+        // `speed-rl report --metric slot-occupancy` runs over old logs too.
+        let fixture = r#"{
+            "label": "pre-slots",
+            "steps": [
+                {"step": 0, "time_s": 80.5, "inference_s": 55.0, "update_s": 25.5,
+                 "train_pass_rate": 0.5, "grad_norm": 0.4, "loss": -0.5, "clip_frac": 0.0,
+                 "prompts_consumed": 32, "service_calls": 4, "service_fill": 0.8,
+                 "pool_balance": 0.4, "service_faults": 0, "service_retries": 0}
+            ],
+            "evals": [
+                {"step": 0, "time_s": 0, "benchmark": "dapo1k", "accuracy": 0.37}
+            ],
+            "service": {
+                "calls": 4, "submissions": 9, "rows_used": 300, "rows_capacity": 400,
+                "installs": 2, "deadline_dispatches": 1,
+                "coalesced_hist": [1, 0, 1, 2, 0, 0], "engines": 2, "steals": 1,
+                "pool_dispatches": 6, "pool_busy_sum": 3
+            }
+        }"#;
+        let rec = record_from_json(&Json::parse(fixture).unwrap()).unwrap();
+        let s = &rec.steps[0];
+        // present PR-8 fields survive
+        assert_eq!(s.service_calls, 4);
+        assert!((s.service_fill - 0.8).abs() < 1e-12);
+        // the absent slot delta defaults to zero and still charts
+        assert_eq!(s.slot_occupancy, 0.0);
+        let chart = step_chart(&[&rec], "slot-occupancy", 30, 8).unwrap();
+        assert!(chart.contains("slot-occupancy") && chart.contains("pre-slots"));
+        let svc = rec.service.expect("service parsed");
+        assert_eq!(svc.calls, 4);
+        assert_eq!(svc.steals, 1);
+        // absent slot counters parse as zeros: deadline-era records read
+        // as "nothing admitted", never as garbage or a parse failure
+        assert_eq!(svc.slot_admissions, 0);
+        assert_eq!(svc.slot_retires, 0);
+        assert_eq!(svc.slot_occupancy_hist, [0u64; 8]);
+        assert_eq!(svc.slots_mode, 0, "pre-slot records are deadline-mode");
+        assert_eq!(svc.mean_slot_occupancy(), 0.0);
     }
 }

@@ -41,6 +41,15 @@
 //!   [`ServiceCounters::replica_weight_version`]; the existing buffer
 //!   staleness telemetry bounds the lag.
 //!
+//! * batching modes — the router above is [`BatchingMode::Deadline`] (the
+//!   default and the bit-for-bit legacy rail). [`BatchingMode::Slots`]
+//!   replaces the micro-batch gather with slot-level continuous batching
+//!   (DESIGN.md §14): each leading submission is admitted into a replica
+//!   slot the moment the router sees it and retired on completion
+//!   (`slot-admit` / `slot-retire` trace instants), while the submit
+//!   quantum grows to full engine capacity so every admission already
+//!   packs one full call — fill without a staleness-priced gather window.
+//!
 //! Inference cost is apportioned to tickets by row share (the last ticket
 //! takes the exact remainder), so per-worker `InferenceCounters` still sum
 //! to the true engine cost. With a single producer the router dispatches
@@ -103,11 +112,58 @@ impl std::fmt::Display for ServiceError {
 
 impl std::error::Error for ServiceError {}
 
-/// Scheduler knobs (the `--coalesce-wait-ms` / `--fill-waterline` CLI
-/// flags). The deadline trades a little extra on-policy staleness for
-/// fuller calls; the waterline dispatches early once a call is full enough.
+/// How the router turns queued submissions into executable plans
+/// (the `--batching` CLI flag).
+///
+/// `Deadline` is the §8 micro-batch coalescer — wait up to
+/// `coalesce_wait_ms` for the fill waterline, then merge the leading run
+/// of submissions into one call. It stays the default and the bit-for-bit
+/// legacy rail. `Slots` is slot-level continuous batching (DESIGN.md
+/// §14): each leading submission is admitted into a replica slot the
+/// moment the router sees it and retired when it completes, so fill comes
+/// from full-capacity submission quanta instead of a staleness-priced
+/// gather window.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchingMode {
+    #[default]
+    Deadline,
+    Slots,
+}
+
+impl BatchingMode {
+    /// Every valid `--batching` mode, in display order.
+    pub const NAMES: [&'static str; 2] = ["deadline", "slots"];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchingMode::Deadline => "deadline",
+            BatchingMode::Slots => "slots",
+        }
+    }
+
+    /// Parse a `--batching` value, listing the valid modes on error.
+    pub fn parse_or_err(s: &str) -> Result<BatchingMode> {
+        match s {
+            "deadline" => Ok(BatchingMode::Deadline),
+            "slots" => Ok(BatchingMode::Slots),
+            other => Err(anyhow!(
+                "unknown batching mode '{other}' (valid: {})",
+                Self::NAMES.join(", ")
+            )),
+        }
+    }
+}
+
+/// Scheduler knobs (the `--batching` / `--coalesce-wait-ms` /
+/// `--fill-waterline` CLI flags). In deadline mode the deadline trades a
+/// little extra on-policy staleness for fuller calls and the waterline
+/// dispatches early once a call is full enough; slots mode ignores both
+/// (admission is immediate) and rejects overrides at validation time.
 #[derive(Clone, Copy, Debug)]
 pub struct ServiceConfig {
+    /// Dispatch discipline: deadline coalescing (legacy default) or
+    /// slot-level continuous batching.
+    pub batching: BatchingMode,
     /// After the first pending submission arrives, wait at most this long
     /// (real milliseconds) for more before executing. With `adaptive` on
     /// this becomes the upper bound of the adaptive deadline.
@@ -123,7 +179,12 @@ pub struct ServiceConfig {
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { coalesce_wait_ms: 2, fill_waterline: 0.85, adaptive: false }
+        ServiceConfig {
+            batching: BatchingMode::Deadline,
+            coalesce_wait_ms: 2,
+            fill_waterline: 0.85,
+            adaptive: false,
+        }
     }
 }
 
@@ -241,6 +302,9 @@ impl PoolState {
 struct Pool {
     state: Mutex<PoolState>,
     ready: Condvar,
+    /// Dispatch discipline the router runs. Replica-side code needs it
+    /// too: slot-retire trace instants only fire in slots mode.
+    batching: BatchingMode,
     /// Engine rows per call (for the quantum recomputed on degrade).
     capacity: usize,
     /// Producers the quantum divides capacity across.
@@ -428,15 +492,18 @@ impl InferenceService {
             spares.len()
         );
         let capacity = engines[0].rollout_capacity();
-        let quantum = Arc::new(AtomicUsize::new(
-            (capacity * e / producers.max(1)).max(min_quantum).clamp(1, capacity.max(1)),
-        ));
+        let q0 = quantum_for(cfg.batching, capacity, e, producers, min_quantum);
+        let quantum = Arc::new(AtomicUsize::new(q0));
         let gen_len = engines[0].gen_len();
         let label = engines[0].name().to_string();
         let mut installed: Vec<u64> = engines.iter().map(|en| en.serving_version()).collect();
         installed.extend(spares.iter().map(|en| en.serving_version()));
         let version = installed[0];
-        let mut stats = ServiceCounters { engines: e as u64, ..Default::default() };
+        let mut stats = ServiceCounters {
+            engines: e as u64,
+            slots_mode: (cfg.batching == BatchingMode::Slots) as u64,
+            ..Default::default()
+        };
         for (r, v) in installed.iter().take(e).enumerate() {
             stats.replica_weight_version[r] = *v;
         }
@@ -464,6 +531,7 @@ impl InferenceService {
                 closed: false,
             }),
             ready: Condvar::new(),
+            batching: cfg.batching,
             capacity,
             producers,
             min_quantum,
@@ -567,7 +635,7 @@ fn leading_rows(q: &VecDeque<Work>) -> usize {
 /// histogram.
 fn dispatch(pool: &Pool, shared: &Shared, plan: Plan) {
     let rows = plan_rows(&plan);
-    let busy = {
+    let (busy, occupancy) = {
         let mut ps = plock(&pool.state);
         let busy = (0..ps.slots())
             .filter(|&i| {
@@ -587,7 +655,7 @@ fn dispatch(pool: &Pool, shared: &Shared, plan: Plan) {
         };
         ps.queued_rows[r] += rows;
         ps.queues[r].push_back(plan);
-        busy
+        (busy, ps.queued_rows[r] + ps.inflight_rows[r])
     };
     pool.ready.notify_all();
     {
@@ -595,6 +663,18 @@ fn dispatch(pool: &Pool, shared: &Shared, plan: Plan) {
         stats.pool_dispatches += 1;
         stats.pool_busy_sum += busy as u64;
         stats.pool_hist[busy.min(stats.pool_hist.len() - 1)] += 1;
+        // Slot-occupancy telemetry (always on, in both batching modes):
+        // rollout rows resident on the chosen replica right after this
+        // admission, against its engine capacity. Pure row arithmetic —
+        // no clocks — so serviced records stay deterministic. Evaluation
+        // plans occupy no rollout slots and are excluded.
+        if rows > 0 {
+            stats.slot_admissions += 1;
+            stats.slot_occupancy_sum += occupancy as u64;
+            stats.slot_capacity_sum += pool.capacity as u64;
+            let b = ServiceCounters::occupancy_bucket(occupancy, pool.capacity);
+            stats.slot_occupancy_hist[b] += 1;
+        }
     }
     crate::trace::instant("dispatch", "scheduler", busy as i64);
 }
@@ -641,13 +721,30 @@ fn redispatch(pool: &Pool, shared: &Shared, plans: Vec<Plan>) {
     }
 }
 
+/// The submit quantum each producer's handle advertises for a pool with
+/// `live` healthy replicas. Deadline mode slices pool capacity across the
+/// K producers so their plans tile one coalesced call; slots mode hands
+/// every producer the full engine capacity, so each admitted submission
+/// already packs one full call and the router never needs to merge.
+fn quantum_for(
+    batching: BatchingMode,
+    capacity: usize,
+    live: usize,
+    producers: usize,
+    min_quantum: usize,
+) -> usize {
+    let base = match batching {
+        BatchingMode::Deadline => capacity * live / producers.max(1),
+        BatchingMode::Slots => capacity,
+    };
+    base.max(min_quantum).clamp(1, capacity.max(1))
+}
+
 /// Recompute the submit quantum from the live replica count (graceful
 /// degradation: producers size future submissions to the real capacity).
 fn recompute_quantum(pool: &Pool) {
     let live = plock(&pool.state).live_count().max(1);
-    let q = (pool.capacity * live / pool.producers.max(1))
-        .max(pool.min_quantum)
-        .clamp(1, pool.capacity.max(1));
+    let q = quantum_for(pool.batching, pool.capacity, live, pool.producers, pool.min_quantum);
     pool.quantum.store(q, Ordering::Release);
 }
 
@@ -980,6 +1077,17 @@ fn replica_loop(
         match outcome {
             ExecOutcome::Done => {
                 plock(&pool.state).inflight_rows[r] -= rows;
+                // Retire the slot: the admitted rollout rows completed and
+                // their capacity is free again. Counted in both batching
+                // modes (evaluation plans hold no slot rows); the trace
+                // instant is slots-mode-only — admit/retire pairs are the
+                // slots lifecycle, deadline traces keep their §12 shape.
+                if rows > 0 {
+                    plock(&shared.stats).slot_retires += 1;
+                    if pool.batching == BatchingMode::Slots {
+                        crate::trace::instant("slot-retire", "replica", r as i64);
+                    }
+                }
                 // A peer blocked in `dispatch`-order terms doesn't exist
                 // (the router never blocks on replicas), but idle peers
                 // wake to steal and the router's load view updates on its
@@ -1170,6 +1278,31 @@ fn scheduler_loop(
             };
             drop(guard);
             dispatch(&pool, &shared, Plan::Eval { tasks, tx });
+            continue;
+        }
+        // Phase 4/5 in slots mode: continuous batching. There is no gather
+        // window — the leading submission is admitted into a replica slot
+        // the moment the router sees it, as its own call (its quantum
+        // already packs full engine capacity; see [`quantum_for`]). The
+        // deadline/waterline/EWMA machinery below is the legacy rail: in
+        // slots mode fill is bought at admission time, not by making
+        // co-travellers wait, so the staleness/fill trade-off of §8
+        // disappears rather than being tuned (DESIGN.md §14).
+        if cfg.batching == BatchingMode::Slots {
+            let Some(Work::Generate(g)) = guard.q.pop_front() else {
+                unreachable!("install and evaluate fronts handled above");
+            };
+            drop(guard);
+            crate::trace::instant("slot-admit", "scheduler", g.rows as i64);
+            let rows = g.rows;
+            let plan = if rows > capacity {
+                // An oversized admission still chunks across successive
+                // engine calls on its replica (requests stay whole).
+                Plan::Split(g)
+            } else {
+                Plan::Call { subs: vec![g], rows_total: rows, deadline_fired: false }
+            };
+            dispatch(&pool, &shared, plan);
             continue;
         }
         // Phase 4: micro-batch — wait for the waterline until the deadline.
@@ -1776,7 +1909,11 @@ mod tests {
     #[test]
     fn concurrent_submissions_coalesce_and_split_correctly() {
         let (e, calls, _) = engine(64);
-        let cfg = ServiceConfig { coalesce_wait_ms: 200, fill_waterline: 1.0, adaptive: false };
+        let cfg = ServiceConfig {
+            coalesce_wait_ms: 200,
+            fill_waterline: 1.0,
+            ..ServiceConfig::default()
+        };
         let service = InferenceService::spawn(e, cfg, 4, 8);
         assert_eq!(service.quantum(), 16);
         let mut rng = Rng::new(2);
@@ -1806,7 +1943,8 @@ mod tests {
         let (e, calls, _) = engine(64);
         // Waterline requires 64 rows but only one 8-row submission will
         // ever arrive: the deadline must fire or the ticket starves.
-        let cfg = ServiceConfig { coalesce_wait_ms: 5, fill_waterline: 1.0, adaptive: false };
+        let cfg =
+            ServiceConfig { coalesce_wait_ms: 5, fill_waterline: 1.0, ..ServiceConfig::default() };
         let service = InferenceService::spawn(e, cfg, 4, 8);
         let mut rng = Rng::new(3);
         let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
@@ -1897,7 +2035,12 @@ mod tests {
     #[test]
     fn adaptive_deadline_serves_and_tracks_the_submission_gap() {
         let (e, calls, _) = engine(64);
-        let cfg = ServiceConfig { coalesce_wait_ms: 5, fill_waterline: 1.0, adaptive: true };
+        let cfg = ServiceConfig {
+            coalesce_wait_ms: 5,
+            fill_waterline: 1.0,
+            adaptive: true,
+            ..ServiceConfig::default()
+        };
         let service = InferenceService::spawn(e, cfg, 2, 8);
         let mut rng = Rng::new(9);
         for _ in 0..4 {
@@ -1919,7 +2062,11 @@ mod tests {
         // back to back: the second dispatch must see replica 0 loaded and
         // pick replica 1 (least-loaded routing).
         let (engines, calls, _) = pool_engines(16, &[30, 30]);
-        let cfg = ServiceConfig { coalesce_wait_ms: 50, fill_waterline: 1.0, adaptive: false };
+        let cfg = ServiceConfig {
+            coalesce_wait_ms: 50,
+            fill_waterline: 1.0,
+            ..ServiceConfig::default()
+        };
         let service = InferenceService::spawn_pool(engines, cfg, 2, 8);
         // quantum scales with the pool: capacity x E / producers
         assert_eq!(service.quantum(), 16);
@@ -1951,7 +2098,8 @@ mod tests {
         // the slow replica 0 (load tie, lowest index). Replica 1 drains
         // first and must steal s2 instead of idling.
         let (engines, calls, _) = pool_engines(16, &[100, 10]);
-        let cfg = ServiceConfig { coalesce_wait_ms: 1, fill_waterline: 1.0, adaptive: false };
+        let cfg =
+            ServiceConfig { coalesce_wait_ms: 1, fill_waterline: 1.0, ..ServiceConfig::default() };
         let service = InferenceService::spawn_pool(engines, cfg, 3, 8);
         let mut rng = Rng::new(12);
         let tickets: Vec<Ticket> =
@@ -1977,7 +2125,7 @@ mod tests {
         // must still receive ITS OWN groups — sizes pair up exactly with
         // the submission order, whatever replica executed it.
         let (engines, _, _) = pool_engines(8, &[3, 0]);
-        let cfg = ServiceConfig { coalesce_wait_ms: 2, fill_waterline: 0.85, adaptive: false };
+        let cfg = ServiceConfig::default();
         let service = InferenceService::spawn_pool(engines, cfg, 2, 4);
         let mut rng = Rng::new(13);
         let h = service.handle();
@@ -2236,5 +2384,100 @@ mod tests {
             .expect_err("post-crash submissions must fail");
         let msg = format!("{err:#}");
         assert!(msg.contains("scheduler panicked") || msg.contains("closed"), "{msg}");
+    }
+
+    #[test]
+    fn batching_mode_parse_lists_valid_modes() {
+        assert_eq!(BatchingMode::parse_or_err("deadline").unwrap(), BatchingMode::Deadline);
+        assert_eq!(BatchingMode::parse_or_err("slots").unwrap(), BatchingMode::Slots);
+        assert_eq!(BatchingMode::default(), BatchingMode::Deadline);
+        assert_eq!(BatchingMode::Slots.name(), "slots");
+        let err = BatchingMode::parse_or_err("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        for name in BatchingMode::NAMES {
+            assert!(err.contains(name), "mode '{name}' missing from the error: {err}");
+        }
+    }
+
+    #[test]
+    fn slots_mode_admits_each_submission_as_its_own_call() {
+        // Slots mode with 4 producers: the quantum grows to full engine
+        // capacity and every submission is admitted the moment the router
+        // sees it, as its own call — no coalescing, no deadline.
+        let (e, calls, _) = engine(64);
+        let cfg = ServiceConfig { batching: BatchingMode::Slots, ..ServiceConfig::default() };
+        let service = InferenceService::spawn(e, cfg, 4, 8);
+        assert_eq!(service.quantum(), 64, "slots mode advertises full capacity per producer");
+        let mut rng = Rng::new(30);
+        let tickets: Vec<Ticket> =
+            (0..4).map(|_| service.handle().submit(reqs(&mut rng, 4, 4), 1.0)).collect();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().rows_used, 16);
+        }
+        let stats = service.stats();
+        assert_eq!(stats.calls, 4, "one engine call per admitted submission");
+        assert_eq!(stats.submissions, 4);
+        assert_eq!(stats.coalesced_hist[0], 4, "every call carries exactly one submission");
+        assert_eq!(stats.deadline_dispatches, 0, "no gather deadline exists to fire");
+        assert_eq!(stats.slots_mode, 1);
+        assert_eq!(stats.slot_admissions, 4);
+        assert_eq!(stats.slot_retires, 4, "every admitted slot must retire");
+        assert!(stats.mean_slot_occupancy() > 0.0);
+        assert_eq!(calls.lock().unwrap().as_slice(), &[16, 16, 16, 16]);
+    }
+
+    #[test]
+    fn slot_admission_and_steal_preserve_each_producers_fifo_order() {
+        // The slots-mode twin of the deadline FIFO property test above: 20
+        // distinguishable submissions admitted one per call across two
+        // unevenly-paced replicas (stealing underneath). Every ticket must
+        // still receive ITS OWN groups, in submission order.
+        let (engines, _, _) = pool_engines(8, &[3, 0]);
+        let cfg = ServiceConfig { batching: BatchingMode::Slots, ..ServiceConfig::default() };
+        let service = InferenceService::spawn_pool(engines, cfg, 2, 4);
+        let mut rng = Rng::new(31);
+        let h = service.handle();
+        let submitted: Vec<(usize, Ticket)> = (0..20)
+            .map(|i| {
+                let n = (i % 5) + 1;
+                (n, h.submit(reqs(&mut rng, 1, n), 1.0))
+            })
+            .collect();
+        for (n, t) in submitted {
+            let res = t.wait().unwrap();
+            assert_eq!(res.rows_used, n, "ticket answered with another submission's rows");
+            assert_eq!(res.groups.len(), 1);
+            assert_eq!(res.groups[0].len(), n);
+        }
+        let stats = service.stats();
+        assert_eq!(stats.submissions, 20);
+        assert_eq!(stats.calls, 20, "slots mode never merges submissions");
+        assert_eq!(stats.rows_used, 60, "sum of 4 cycles of 1+2+3+4+5");
+        assert_eq!(stats.slot_admissions, 20);
+        assert_eq!(stats.slot_retires, 20);
+    }
+
+    #[test]
+    fn slots_mode_redispatches_a_seized_slot_exactly_once() {
+        // Replica 0's admitted slot fails with no retry budget: the slot
+        // must be re-admitted on the peer exactly once and the ticket
+        // still served — admissions count both placements, retires only
+        // the completion.
+        let (engines, _, _) = pool_engines(16, &[0, 0]);
+        let mut rec = recovery("err@0:0");
+        rec.retry_max = 0;
+        let cfg = ServiceConfig { batching: BatchingMode::Slots, ..ServiceConfig::default() };
+        let service =
+            InferenceService::spawn_pool_with_recovery(engines, Vec::new(), cfg, rec, 2, 4);
+        assert_eq!(service.quantum(), 16, "slots quantum is full engine capacity");
+        let mut rng = Rng::new(32);
+        let res = service.handle().submit(reqs(&mut rng, 2, 4), 1.0).wait().unwrap();
+        assert_eq!(res.groups.len(), 2, "redispatched slot served exactly once");
+        let stats = service.stats();
+        assert_eq!(stats.quarantines, 1);
+        assert_eq!(stats.redispatches, 1);
+        assert_eq!(stats.slot_admissions, 2, "original admission + the redispatch");
+        assert_eq!(stats.slot_retires, 1, "only the completed placement retires");
+        assert_eq!(service.quantum(), 16, "a degraded slots pool still advertises capacity");
     }
 }

@@ -3,9 +3,10 @@
 //!
 //! Three rails:
 //! * pool degeneracy — with one producer, an E=2 pool reproduces the plain
-//!   serial `RunRecord` bit for bit: the blocked producer means at most one
-//!   plan is ever in flight, and the least-loaded tie-break always picks
-//!   replica 0, so replica 1 never serves a row;
+//!   serial `RunRecord` bit for bit (in both batching modes): the blocked
+//!   producer means at most one plan is ever in flight, and the
+//!   least-loaded tie-break always picks replica 0, so replica 1 never
+//!   serves a row;
 //! * starvation safety at E=2 — the unreachable-waterline scenario from
 //!   `service_sim.rs` still completes when the plans fan out over two
 //!   replicas (the deadline dispatch and work-stealing must not deadlock);
@@ -19,7 +20,7 @@ use speed_rl::coordinator::trainer::TrainerConfig;
 use speed_rl::data::dataset::{Dataset, DatasetKind};
 use speed_rl::driver;
 use speed_rl::eval::benchmark_suite;
-use speed_rl::policy::service::ServiceConfig;
+use speed_rl::policy::service::{BatchingMode, ServiceConfig};
 use speed_rl::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
 use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
 
@@ -74,6 +75,63 @@ fn one_producer_e2_pool_reproduces_serial_runrecord_bit_for_bit() {
 }
 
 #[test]
+fn one_producer_e2_slots_pool_reproduces_serial_runrecord_bit_for_bit() {
+    // The pool-degeneracy rail in slots mode (DESIGN.md §14): with one
+    // blocked producer the slots router admits each submission into the
+    // least-loaded replica's free slot — always replica 0 — as one
+    // full-quantum call, so nothing about the executed stream changes.
+    let mut cfg = RunConfig::default();
+    cfg.max_steps = 15;
+    cfg.eval_every = 5;
+    cfg.dataset_size = 4000;
+    cfg.seed = 9;
+    let serial = driver::run_sim(&cfg).unwrap();
+    cfg.service = true;
+    cfg.engines = 2;
+    cfg.batching = BatchingMode::Slots;
+    let pooled = driver::run_sim(&cfg).unwrap();
+
+    assert_eq!(serial.steps.len(), pooled.steps.len());
+    for (a, b) in serial.steps.iter().zip(pooled.steps.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.inference_s, b.inference_s);
+        assert_eq!(a.update_s, b.update_s);
+        assert_eq!(a.train_pass_rate, b.train_pass_rate);
+        assert_eq!(a.grad_norm, b.grad_norm);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.prompts_consumed, b.prompts_consumed);
+        assert_eq!(a.buffer_len, b.buffer_len);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+    }
+    assert_eq!(serial.evals.len(), pooled.evals.len());
+    for (a, b) in serial.evals.iter().zip(pooled.evals.iter()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+    assert_eq!(serial.counters.calls, pooled.counters.calls);
+    assert_eq!(serial.counters.rows_used, pooled.counters.rows_used);
+    assert_eq!(serial.counters.rollouts, pooled.counters.rollouts);
+    assert_eq!(serial.counters.cost_s, pooled.counters.cost_s);
+
+    // Slot-level accounting of the degenerate stream: every admission
+    // lands on replica 0 and retires there; replica 1's slots stay free.
+    let svc = pooled.service.expect("service counters");
+    assert_eq!(svc.engines, 2);
+    assert_eq!(svc.slots_mode, 1);
+    assert_eq!(svc.submissions, svc.calls);
+    assert_eq!(svc.replica_calls[0], svc.calls);
+    assert_eq!(svc.replica_calls[1], 0);
+    assert_eq!(svc.replica_rows[0], svc.rows_used);
+    assert_eq!(svc.steals, 0);
+    assert_eq!(svc.slot_admissions, svc.calls);
+    assert_eq!(svc.slot_retires, svc.calls);
+    assert_eq!(svc.deadline_dispatches, 0);
+    assert!(svc.replica_weight_version[1] <= svc.replica_weight_version[0]);
+}
+
+#[test]
 fn e2_pool_under_unreachable_waterline_never_starves() {
     // The `service_sim.rs` starvation scenario, E=2: fill_waterline 1.0 is
     // only reachable with every worker's submission in flight, so the
@@ -101,7 +159,7 @@ fn e2_pool_under_unreachable_waterline_never_starves() {
             service_cfg: ServiceConfig {
                 coalesce_wait_ms: 1,
                 fill_waterline: 1.0,
-                adaptive: false,
+                ..ServiceConfig::default()
             },
         },
     )
@@ -162,8 +220,7 @@ fn pipelined_e2_pool_matches_e1_accuracy_with_no_extra_calls() {
                 service: true,
                 service_cfg: ServiceConfig {
                     coalesce_wait_ms: 100,
-                    fill_waterline: 0.85,
-                    adaptive: false,
+                    ..ServiceConfig::default()
                 },
             },
         )

@@ -3,7 +3,8 @@
 //!
 //! Three rails:
 //! * serial equivalence — a 1-producer serviced run reproduces the plain
-//!   serial `RunRecord` bit for bit (every step/eval/counter field);
+//!   serial `RunRecord` bit for bit (every step/eval/counter field), in
+//!   both batching modes (deadline coalescing and slot-level admission);
 //! * coalescing wins — with K=4 request producers, the service executes
 //!   strictly fewer engine calls at strictly higher mean fill than K
 //!   private per-worker engines, at matched final accuracy;
@@ -20,7 +21,7 @@ use speed_rl::data::dataset::{Dataset, DatasetKind};
 use speed_rl::driver;
 use speed_rl::eval::benchmark_suite;
 use speed_rl::metrics::RunRecord;
-use speed_rl::policy::service::ServiceConfig;
+use speed_rl::policy::service::{BatchingMode, ServiceConfig};
 use speed_rl::policy::sim::{SimCostModel, SimModelSpec, SimPolicy};
 use speed_rl::rl::algo::{AlgoConfig, BaseAlgo};
 
@@ -75,6 +76,62 @@ fn one_producer_service_reproduces_serial_runrecord_bit_for_bit() {
     assert!(svc.max_call_rows as usize <= cfg.batch_size * cfg.n_total());
 }
 
+#[test]
+fn one_producer_slots_service_reproduces_serial_runrecord_bit_for_bit() {
+    // The slots router admits the single producer's submission as one
+    // full-quantum call — exactly the call the deadline router's waterline
+    // dispatch forms — so the serial-equivalence rail must hold in slots
+    // mode too (DESIGN.md §14).
+    let mut cfg = RunConfig::default();
+    cfg.max_steps = 20;
+    cfg.eval_every = 5;
+    cfg.dataset_size = 4000;
+    cfg.seed = 9;
+    let serial = driver::run_sim(&cfg).unwrap();
+    cfg.service = true;
+    cfg.batching = BatchingMode::Slots;
+    let serviced = driver::run_sim(&cfg).unwrap();
+
+    assert_eq!(serial.steps.len(), serviced.steps.len());
+    for (a, b) in serial.steps.iter().zip(serviced.steps.iter()) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.inference_s, b.inference_s);
+        assert_eq!(a.update_s, b.update_s);
+        assert_eq!(a.train_pass_rate, b.train_pass_rate);
+        assert_eq!(a.grad_norm, b.grad_norm);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.clip_frac, b.clip_frac);
+        assert_eq!(a.prompts_consumed, b.prompts_consumed);
+        assert_eq!(a.buffer_len, b.buffer_len);
+        assert_eq!(a.mean_staleness, b.mean_staleness);
+    }
+    assert_eq!(serial.evals.len(), serviced.evals.len());
+    for (a, b) in serial.evals.iter().zip(serviced.evals.iter()) {
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+    assert_eq!(serial.counters.calls, serviced.counters.calls);
+    assert_eq!(serial.counters.rows_used, serviced.counters.rows_used);
+    assert_eq!(serial.counters.rows_capacity, serviced.counters.rows_capacity);
+    assert_eq!(serial.counters.rollouts, serviced.counters.rollouts);
+    assert_eq!(serial.counters.cost_s, serviced.counters.cost_s);
+
+    // Slots-mode lifecycle accounting: one admission and one retire per
+    // executed call, no gather deadline ever fires, and the always-on
+    // occupancy telemetry actually sampled.
+    let svc = serviced.service.expect("service counters");
+    assert_eq!(svc.slots_mode, 1);
+    assert_eq!(svc.submissions, svc.calls);
+    assert_eq!(svc.coalesced_hist[0], svc.calls);
+    assert_eq!(svc.slot_admissions, svc.calls);
+    assert_eq!(svc.slot_retires, svc.calls);
+    assert_eq!(svc.deadline_dispatches, 0);
+    assert!(svc.mean_slot_occupancy() > 0.0);
+}
+
 /// The pipelined scenario both modes share: K workers over a Uniform
 /// curriculum whose per-collect inference (B x N rows) fills only half of
 /// the compiled call — the regime where per-worker engines pay for
@@ -103,11 +160,7 @@ fn run_pipelined(workers: usize, service: bool, seed: u64) -> RunRecord {
             // slow/loaded CI runners too: the waterline still dispatches
             // immediately once K submissions are queued, so the deadline
             // only ever stretches the rare partial rounds.
-            service_cfg: ServiceConfig {
-                coalesce_wait_ms: 100,
-                fill_waterline: 0.85,
-                adaptive: false,
-            },
+            service_cfg: ServiceConfig { coalesce_wait_ms: 100, ..ServiceConfig::default() },
         },
     );
     let evals = benchmark_suite(123, 24);
@@ -196,7 +249,7 @@ fn unreachable_waterline_never_starves_tickets() {
             service_cfg: ServiceConfig {
                 coalesce_wait_ms: 1,
                 fill_waterline: 1.0,
-                adaptive: false,
+                ..ServiceConfig::default()
             },
         },
     );
