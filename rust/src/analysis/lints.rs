@@ -1,0 +1,859 @@
+//! The five invariant lints (L1–L5) of `speed-rl lint` (DESIGN.md §15).
+//!
+//! Every pass is a pure function over source text so the fixture tests can
+//! inject synthetic violations without touching the filesystem; the IO and
+//! file walking live in [`super::run_lints`].
+//!
+//! * **L1 lock discipline** — raw `.lock()` / `.wait(guard)` /
+//!   `.wait_timeout(` on `std::sync` primitives anywhere outside
+//!   `util/sync.rs` is an error (the poison-recovering `plock`/`pwait`
+//!   wrappers are the only sanctioned entry points), and nested
+//!   acquisitions in the files with a declared lock order must respect it.
+//! * **L2 counter-schema completeness** — every field of `ServiceCounters`
+//!   and `InferenceCounters` must appear in its `merge`, `to_json`, and
+//!   `from_json` bodies, and the declared wall-clock fields must be
+//!   normalized by the chaos smoke in `rust/ci.sh`.
+//! * **L3 harness registration** — every `rust/tests/*.rs` and
+//!   `benches/*.rs` file needs a matching `path = "..."` entry in
+//!   `Cargo.toml` (non-autodiscovered layout: an unregistered harness
+//!   silently never runs).
+//! * **L4 wall-clock hygiene** — `Instant::now` / `SystemTime` confined to
+//!   the allowlisted telemetry modules; everywhere else wall time leaks
+//!   nondeterminism into records the equivalence rails compare
+//!   byte-for-byte.
+//! * **L5 metric-table completeness** — every numeric `StepRecord` field
+//!   must be reachable from `STEP_METRICS` or listed (with a reason) in
+//!   `STEP_METRICS_EXEMPT`.
+
+use super::scanner::CleanSource;
+use super::Violation;
+
+/// The one file allowed to touch raw `std::sync` lock primitives.
+pub const SYNC_WRAPPER: &str = "src/util/sync.rs";
+
+/// L4: modules allowed to read wall clocks. Everything here is telemetry
+/// (trace spans, latency histograms, bench timings) or the real-engine
+/// cost accounting — none of it feeds the deterministic record fields the
+/// resume/trace/chaos rails diff byte-for-byte.
+pub const WALL_CLOCK_ALLOWLIST: &[&str] = &[
+    "src/bench/mod.rs",
+    "src/coordinator/pipeline.rs",
+    "src/main.rs",
+    "src/policy/fault.rs",
+    "src/policy/real.rs",
+    "src/policy/service.rs",
+    "src/runtime/exec.rs",
+    "src/trace/mod.rs",
+    "src/util/logging.rs",
+];
+
+/// A declared intra-file lock acquisition order: classes may only be
+/// acquired in increasing declared position while another is held, and a
+/// class may never nest inside itself.
+pub struct LockOrderSpec {
+    pub file_suffix: &'static str,
+    /// `(class name, substring pattern over the plock argument)`, in
+    /// declared acquisition order.
+    pub classes: &'static [(&'static str, &'static str)],
+    /// Class assumed for acquisitions matching no pattern. `None` makes an
+    /// unclassifiable acquisition an error (multi-lock files must keep the
+    /// patterns current).
+    pub default_class: Option<&'static str>,
+}
+
+/// The repo's declared lock orders. The only sanctioned nesting anywhere
+/// is the replica steal path in `policy/service.rs`, which takes
+/// `shared.stats` while holding `pool.state` — hence `state` before
+/// `stats`. `buffer.rs` and `predictor/store.rs` each own a single lock
+/// class, so any nesting there is a self-deadlock.
+pub const LOCK_ORDERS: &[LockOrderSpec] = &[
+    LockOrderSpec {
+        file_suffix: "src/policy/service.rs",
+        classes: &[
+            ("queue", ".queue"),
+            ("spares", ".spares"),
+            ("state", ".state"),
+            ("respawned", ".respawned"),
+            ("stats", ".stats"),
+        ],
+        default_class: None,
+    },
+    LockOrderSpec {
+        file_suffix: "src/coordinator/buffer.rs",
+        classes: &[("buffer_state", ".state")],
+        default_class: Some("buffer_state"),
+    },
+    LockOrderSpec {
+        file_suffix: "src/predictor/store.rs",
+        classes: &[("shard", "shard")],
+        default_class: Some("shard"),
+    },
+];
+
+// ---------------------------------------------------------------------------
+// L1a: raw std::sync primitives outside the wrapper module.
+
+pub fn lint_raw_locks(file: &str, cs: &CleanSource) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if file.ends_with(SYNC_WRAPPER) {
+        return out;
+    }
+    for (ln, line) in cs.shipping_lines() {
+        if line.contains(".lock()") {
+            out.push(Violation::new(
+                "L1",
+                file,
+                ln,
+                "raw Mutex::lock() outside util/sync.rs — use util::sync::plock \
+                 (poison-recovering)",
+            ));
+        }
+        if line.contains(".wait_timeout(") {
+            out.push(Violation::new(
+                "L1",
+                file,
+                ln,
+                "raw Condvar::wait_timeout() outside util/sync.rs — use \
+                 util::sync::pwait_timeout",
+            ));
+        }
+        if wait_with_guard_arg(line) {
+            out.push(Violation::new(
+                "L1",
+                file,
+                ln,
+                "raw Condvar::wait(guard) outside util/sync.rs — use util::sync::pwait",
+            ));
+        }
+    }
+    out
+}
+
+/// `.wait(` with a non-empty argument is a Condvar wait consuming a
+/// `MutexGuard`; argument-less `.wait()` (`Ticket::wait`, `JoinHandle`
+/// adjacents) is fine.
+fn wait_with_guard_arg(line: &str) -> bool {
+    let mut rest = line;
+    while let Some(p) = rest.find(".wait(") {
+        let after = &rest[p + ".wait(".len()..];
+        if !after.trim_start().starts_with(')') {
+            return true;
+        }
+        rest = after;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// L1b: nested acquisitions against a declared lock order.
+
+/// Track `let`-bound `plock` guards through a file and flag any
+/// acquisition that violates `spec`'s declared order. The tracker is
+/// textual: a guard is live from its whole-statement binding
+/// (`let [mut] name = plock(&...);` or `name = plock(&...);`) until
+/// `drop(name)` or its binding block closes; statement-temporary
+/// `plock(...)` chains count as instantaneous acquisition events.
+/// Cross-function nesting is invisible here by design — the exhaustive
+/// interleaving models in `tests/loom_sync.rs` cover the protocols
+/// themselves.
+pub fn lint_lock_order(file: &str, cs: &CleanSource, spec: &LockOrderSpec) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut depth: i32 = 0;
+    // (binding name, class index, depth at binding)
+    let mut guards: Vec<(String, usize, i32)> = Vec::new();
+    for (li, line) in cs.lines.iter().enumerate() {
+        let ln = li + 1;
+        if !cs.in_test[li] {
+            for name in call_args(line, "drop(") {
+                guards.retain(|g| g.0 != name);
+            }
+            for arg in call_args(line, "plock(") {
+                match classify(&arg, spec) {
+                    Some(ci) => {
+                        for (held_name, held_ci, _) in &guards {
+                            if *held_ci >= ci {
+                                let (new_class, _) = spec.classes[ci];
+                                let (held_class, _) = spec.classes[*held_ci];
+                                let msg = if *held_ci == ci {
+                                    format!(
+                                        "lock order violation: acquiring '{new_class}' while \
+                                         already holding '{held_class}' (guard `{held_name}`) — \
+                                         same-class nesting self-deadlocks"
+                                    )
+                                } else {
+                                    format!(
+                                        "lock order violation: acquiring '{new_class}' while \
+                                         holding '{held_class}' (guard `{held_name}`); declared \
+                                         order: {}",
+                                        order_string(spec)
+                                    )
+                                };
+                                out.push(Violation::new("L1", file, ln, &msg));
+                            }
+                        }
+                    }
+                    None => out.push(Violation::new(
+                        "L1",
+                        file,
+                        ln,
+                        &format!(
+                            "lock acquisition `plock({arg})` matches no class of the declared \
+                             lock order for this file — extend LOCK_ORDERS in analysis/lints.rs"
+                        ),
+                    )),
+                }
+            }
+            if let Some(name) = guard_binding(line) {
+                if let Some(arg) = call_args(line, "plock(").into_iter().next() {
+                    if let Some(ci) = classify(&arg, spec) {
+                        guards.retain(|g| g.0 != name);
+                        guards.push((name, ci, depth));
+                    }
+                }
+            }
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        guards.retain(|g| g.2 <= depth);
+    }
+    out
+}
+
+fn order_string(spec: &LockOrderSpec) -> String {
+    spec.classes.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(" < ")
+}
+
+fn classify(arg: &str, spec: &LockOrderSpec) -> Option<usize> {
+    for (i, (_, pat)) in spec.classes.iter().enumerate() {
+        if arg.contains(pat) {
+            return Some(i);
+        }
+    }
+    spec.default_class
+        .and_then(|d| spec.classes.iter().position(|(name, _)| *name == d))
+}
+
+/// All arguments of `needle`-calls on `line` (the text between the call's
+/// opening paren and its matching close, or end of line for multi-line
+/// calls). The char before the call must not be part of an identifier.
+fn call_args(line: &str, needle: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(needle) {
+        let abs = from + p;
+        let prev_ok = line[..abs]
+            .chars()
+            .next_back()
+            .map(|c| !c.is_alphanumeric() && c != '_')
+            .unwrap_or(true);
+        if prev_ok {
+            let body = &line[abs + needle.len()..];
+            out.push(paren_arg(body).to_string());
+        }
+        from = abs + needle.len();
+    }
+    out
+}
+
+/// The prefix of `body` up to the paren that closes an already-open call.
+fn paren_arg(body: &str) -> &str {
+    let mut depth = 1i32;
+    for (i, c) in body.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return &body[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    body
+}
+
+/// `Some(name)` when the line is a whole-statement guard binding:
+/// `let [mut] name = plock(&...);` or `name = plock(&...);`.
+fn guard_binding(line: &str) -> Option<String> {
+    let t = line.trim();
+    let rest = t.strip_prefix("let ").unwrap_or(t);
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let eq = rest.find('=')?;
+    let name = rest[..eq].trim();
+    if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+        return None;
+    }
+    let rhs = rest[eq + 1..].trim_start();
+    let body = rhs.strip_prefix("plock(")?;
+    let arg = paren_arg(body);
+    let tail = body[arg.len()..].strip_prefix(')')?;
+    if tail.trim() == ";" {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L2: counter-schema completeness.
+
+pub fn lint_counter_schema(
+    metrics_file: &str,
+    metrics_src: &str,
+    ci_file: &str,
+    ci_src: &str,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let cs = super::scanner::clean(metrics_src);
+    let mut service_fields: Vec<String> = Vec::new();
+    for struct_name in ["ServiceCounters", "InferenceCounters"] {
+        let Some((fields, _)) = struct_fields(&cs, struct_name) else {
+            out.push(Violation::new(
+                "L2",
+                metrics_file,
+                0,
+                &format!("struct {struct_name} not found — the schema lint cannot run"),
+            ));
+            continue;
+        };
+        if struct_name == "ServiceCounters" {
+            service_fields = fields.iter().map(|(f, _)| f.clone()).collect();
+        }
+        for method in ["merge", "to_json", "from_json"] {
+            let Some((body, decl_ln)) = impl_method_body(&cs, metrics_src, struct_name, method)
+            else {
+                out.push(Violation::new(
+                    "L2",
+                    metrics_file,
+                    0,
+                    &format!("{struct_name} has no `fn {method}` — counters must round-trip"),
+                ));
+                continue;
+            };
+            for (field, _) in &fields {
+                if !contains_word(&body, field) {
+                    out.push(Violation::new(
+                        "L2",
+                        metrics_file,
+                        decl_ln,
+                        &format!(
+                            "field `{field}` missing from {struct_name}::{method} — every \
+                             counter must merge and round-trip through JSON"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // Wall-clock declaration vs the chaos-smoke normalization set.
+    let declared = const_list_strings(metrics_src, "WALL_CLOCK_SERVICE_FIELDS:");
+    let ci_wall = const_list_strings(ci_src, "WALL");
+    if declared.is_empty() {
+        out.push(Violation::new(
+            "L2",
+            metrics_file,
+            0,
+            "WALL_CLOCK_SERVICE_FIELDS declaration not found or empty",
+        ));
+    }
+    if ci_wall.is_empty() {
+        out.push(Violation::new("L2", ci_file, 0, "chaos-smoke WALL normalization set not found"));
+    }
+    for f in &declared {
+        if !service_fields.iter().any(|s| s == f) {
+            out.push(Violation::new(
+                "L2",
+                metrics_file,
+                0,
+                &format!("WALL_CLOCK_SERVICE_FIELDS declares `{f}`, which is not a \
+                          ServiceCounters field"),
+            ));
+        }
+        if !ci_wall.iter().any(|s| s == f) {
+            out.push(Violation::new(
+                "L2",
+                ci_file,
+                0,
+                &format!(
+                    "wall-clock field `{f}` is not in the chaos-smoke WALL normalization set — \
+                     the --fault-plan none equivalence diff would flake on it"
+                ),
+            ));
+        }
+    }
+    for f in &ci_wall {
+        if service_fields.iter().any(|s| s == f) && !declared.iter().any(|s| s == f) {
+            out.push(Violation::new(
+                "L2",
+                metrics_file,
+                0,
+                &format!(
+                    "ci.sh normalizes ServiceCounters field `{f}` as wall-clock, but \
+                     WALL_CLOCK_SERVICE_FIELDS does not declare it"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Field `(name, type)` pairs of `pub struct name { ... }` plus the
+/// 1-based line of the struct header.
+fn struct_fields(cs: &CleanSource, name: &str) -> Option<(Vec<(String, String)>, usize)> {
+    let header = format!("pub struct {name} {{");
+    let start = cs.lines.iter().position(|l| !l.trim().is_empty() && l.trim() == header.trim())?;
+    let end = block_end(&cs.lines, start)?;
+    let mut fields = Vec::new();
+    for line in &cs.lines[start + 1..end] {
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let fname = rest[..colon].trim();
+                if fname.chars().all(|c| c.is_alphanumeric() || c == '_') && !fname.is_empty() {
+                    let ty = rest[colon + 1..].trim().trim_end_matches(',').to_string();
+                    fields.push((fname.to_string(), ty));
+                }
+            }
+        }
+    }
+    Some((fields, start + 1))
+}
+
+/// Raw text of `fn method` inside `impl name { ... }`, plus the 1-based
+/// line of the method header.
+fn impl_method_body(
+    cs: &CleanSource,
+    raw: &str,
+    name: &str,
+    method: &str,
+) -> Option<(String, usize)> {
+    let header = format!("impl {name} {{");
+    let impl_start = cs.lines.iter().position(|l| l.trim() == header.trim())?;
+    let impl_end = block_end(&cs.lines, impl_start)?;
+    let needle = format!("fn {method}(");
+    let decl = (impl_start..impl_end).find(|&i| cs.lines[i].contains(&needle))?;
+    let body_end = block_end(&cs.lines, decl)?;
+    let raw_lines: Vec<&str> = raw.lines().collect();
+    let body = raw_lines[decl..=body_end.min(raw_lines.len() - 1)].join("\n");
+    Some((body, decl + 1))
+}
+
+/// Index of the line whose `}` closes the block opened on `start`'s line.
+fn block_end(lines: &[String], start: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (i, line) in lines.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Does `hay` contain `word` delimited by non-identifier characters?
+fn contains_word(hay: &str, word: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(word) {
+        let abs = from + p;
+        let before_ok = hay[..abs]
+            .chars()
+            .next_back()
+            .map(|c| !c.is_alphanumeric() && c != '_')
+            .unwrap_or(true);
+        let after_ok = hay[abs + word.len()..]
+            .chars()
+            .next()
+            .map(|c| !c.is_alphanumeric() && c != '_')
+            .unwrap_or(true);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = abs + word.len();
+    }
+    false
+}
+
+/// Every `"quoted"` string in the list literal assigned at the first
+/// `anchor ... = [...]` / `= {...}` after `anchor` (line comments inside
+/// the list are skipped; the list ends at the first `]` or `}` outside a
+/// string). Works on both the Rust const declarations and the python
+/// `WALL = {...}` set embedded in `rust/ci.sh`.
+fn const_list_strings(src: &str, anchor: &str) -> Vec<String> {
+    let Some(start) = src.find(anchor) else {
+        return Vec::new();
+    };
+    let after = &src[start + anchor.len()..];
+    let Some(eq) = after.find('=') else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut chars = after[eq + 1..].chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                if in_str {
+                    out.push(std::mem::take(&mut cur));
+                }
+                in_str = !in_str;
+            }
+            '/' if !in_str && chars.peek() == Some(&'/') => {
+                for c2 in chars.by_ref() {
+                    if c2 == '\n' {
+                        break;
+                    }
+                }
+            }
+            ']' | '}' if !in_str => break,
+            _ => {
+                if in_str {
+                    cur.push(c);
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// L3: harness registration.
+
+pub fn lint_harness_registration(
+    cargo_file: &str,
+    cargo_src: &str,
+    test_files: &[String],
+    bench_files: &[String],
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let registered: Vec<String> = cargo_src
+        .lines()
+        .filter_map(|l| {
+            let t = l.trim();
+            t.strip_prefix("path = \"").and_then(|r| r.strip_suffix('"')).map(|s| s.to_string())
+        })
+        .collect();
+    for (files, kind) in [(test_files, "[[test]]"), (bench_files, "[[bench]]")] {
+        for f in files {
+            if !registered.iter().any(|r| r == f) {
+                out.push(Violation::new(
+                    "L3",
+                    cargo_file,
+                    0,
+                    &format!(
+                        "{f} has no {kind} entry in Cargo.toml — with autodiscovery off it \
+                         silently never runs"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// L4: wall-clock hygiene.
+
+pub fn lint_wall_clock(file: &str, cs: &CleanSource) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if WALL_CLOCK_ALLOWLIST.iter().any(|a| file.ends_with(a)) {
+        return out;
+    }
+    for (ln, line) in cs.shipping_lines() {
+        for tok in ["Instant::now", "SystemTime"] {
+            if line.contains(tok) {
+                out.push(Violation::new(
+                    "L4",
+                    file,
+                    ln,
+                    &format!(
+                        "{tok} outside the wall-clock allowlist — wall time leaks \
+                         nondeterminism into records the equivalence rails diff; route it \
+                         through telemetry or extend WALL_CLOCK_ALLOWLIST with a reason"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// L5: metric-table completeness.
+
+const NUMERIC_TYPES: &[&str] = &["usize", "u64", "u32", "i64", "f64", "f32"];
+
+pub fn lint_step_metrics(
+    metrics_file: &str,
+    metrics_src: &str,
+    report_file: &str,
+    report_src: &str,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let cs_m = super::scanner::clean(metrics_src);
+    let Some((fields, _)) = struct_fields(&cs_m, "StepRecord") else {
+        out.push(Violation::new("L5", metrics_file, 0, "struct StepRecord not found"));
+        return out;
+    };
+    let numeric: Vec<&String> =
+        fields.iter().filter(|(_, ty)| NUMERIC_TYPES.contains(&ty.as_str())).map(|(f, _)| f).collect();
+    let Some(table) = const_span(report_src, "STEP_METRICS:") else {
+        out.push(Violation::new("L5", report_file, 0, "STEP_METRICS table not found"));
+        return out;
+    };
+    let accessors = step_accessors(&table);
+    let exempt = const_list_strings(report_src, "STEP_METRICS_EXEMPT:");
+    for e in &exempt {
+        if !fields.iter().any(|(f, _)| f == e) {
+            out.push(Violation::new(
+                "L5",
+                report_file,
+                0,
+                &format!("STEP_METRICS_EXEMPT names `{e}`, which is not a StepRecord field"),
+            ));
+        }
+    }
+    for f in numeric {
+        if !accessors.iter().any(|a| a == f) && !exempt.iter().any(|e| e == f) {
+            out.push(Violation::new(
+                "L5",
+                report_file,
+                0,
+                &format!(
+                    "numeric StepRecord field `{f}` is unreachable from STEP_METRICS and not \
+                     exempted in STEP_METRICS_EXEMPT — charts silently miss it"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Raw text of the bracket-balanced `[...]` literal assigned at the first
+/// `anchor ... = ... [` (skipping past the `=` keeps the `[...]` of a type
+/// annotation like `&[StepMetric]` from being mistaken for the table).
+fn const_span(src: &str, anchor: &str) -> Option<String> {
+    let start = src.find(anchor)?;
+    let after = &src[start + anchor.len()..];
+    let eq = after.find('=')?;
+    let body = &after[eq + 1..];
+    let open = body.find('[')?;
+    let mut depth = 0i32;
+    for (i, c) in body[open..].char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(body[open..open + i + 1].to_string());
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Every `s.field` accessor in the (cleaned) table text.
+fn step_accessors(table: &str) -> Vec<String> {
+    let cs = super::scanner::clean(table);
+    let mut out = Vec::new();
+    for line in &cs.lines {
+        let mut from = 0usize;
+        while let Some(p) = line[from..].find("s.") {
+            let abs = from + p;
+            let before_ok = line[..abs]
+                .chars()
+                .next_back()
+                .map(|c| !c.is_alphanumeric() && c != '_')
+                .unwrap_or(true);
+            if before_ok {
+                let ident: String = line[abs + 2..]
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if !ident.is_empty() && ident.chars().next().is_some_and(|c| c.is_alphabetic()) {
+                    out.push(ident);
+                }
+            }
+            from = abs + 2;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::clean;
+    use super::*;
+
+    #[test]
+    fn l1_flags_raw_lock_wait_and_wait_timeout() {
+        let src = "fn f(m: &Mutex<u32>, cv: &Condvar) {\n\
+                   \x20   let g = m.lock().unwrap();\n\
+                   \x20   let g = cv.wait(g).unwrap();\n\
+                   \x20   let _ = cv.wait_timeout(g, d);\n\
+                   \x20   ticket.wait();\n\
+                   }\n";
+        let v = lint_raw_locks("rust/src/policy/other.rs", &clean(src));
+        assert_eq!(v.len(), 3, "{v:?}");
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].message.contains("plock"));
+        assert_eq!(v[1].line, 3);
+        assert!(v[1].message.contains("pwait"));
+        assert_eq!(v[2].line, 4);
+        assert!(v[2].message.contains("pwait_timeout"));
+    }
+
+    #[test]
+    fn l1_ignores_sync_wrapper_tests_and_comments() {
+        let src = "// m.lock() in a comment\n\
+                   let s = \".lock()\";\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   fn t() { let g = m.lock().unwrap(); }\n\
+                   }\n";
+        assert!(lint_raw_locks("rust/src/x.rs", &clean(src)).is_empty());
+        let raw = "fn plock() { m.lock().unwrap(); }\n";
+        assert!(lint_raw_locks("rust/src/util/sync.rs", &clean(raw)).is_empty());
+    }
+
+    #[test]
+    fn l1_lock_order_catches_inverted_nesting() {
+        let spec = &LOCK_ORDERS[0]; // policy/service.rs
+        let src = "fn f(pool: &Pool, shared: &Shared) {\n\
+                   \x20   let mut stats = plock(&shared.stats);\n\
+                   \x20   let mut ps = plock(&pool.state);\n\
+                   }\n";
+        let v = lint_lock_order("rust/src/policy/service.rs", &clean(src), spec);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+        assert!(v[0].message.contains("'state'"), "{}", v[0].message);
+        assert!(v[0].message.contains("'stats'"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn l1_lock_order_allows_declared_nesting_and_scoped_guards() {
+        let spec = &LOCK_ORDERS[0];
+        // The sanctioned steal-path shape: stats while holding state...
+        let ok = "fn f(pool: &Pool, shared: &Shared) {\n\
+                  \x20   let mut ps = plock(&pool.state);\n\
+                  \x20   {\n\
+                  \x20       let mut stats = plock(&shared.stats);\n\
+                  \x20   }\n\
+                  }\n";
+        assert!(lint_lock_order("x/policy/service.rs", &clean(ok), spec).is_empty());
+        // ...and sequential acquisition after drop() or scope exit.
+        let seq = "fn f(pool: &Pool, shared: &Shared) {\n\
+                   \x20   let mut stats = plock(&shared.stats);\n\
+                   \x20   drop(stats);\n\
+                   \x20   let mut ps = plock(&pool.state);\n\
+                   }\n";
+        assert!(lint_lock_order("x/policy/service.rs", &clean(seq), spec).is_empty());
+    }
+
+    #[test]
+    fn l1_lock_order_catches_same_class_self_deadlock() {
+        let spec = &LOCK_ORDERS[1]; // coordinator/buffer.rs, single class
+        let src = "fn f(&self) {\n\
+                   \x20   let mut g = plock(&self.state);\n\
+                   \x20   let n = plock(&self.state).q.len();\n\
+                   }\n";
+        let v = lint_lock_order("x/coordinator/buffer.rs", &clean(src), spec);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+        assert!(v[0].message.contains("self-deadlock"), "{}", v[0].message);
+    }
+
+    const METRICS_FIXTURE_OK: &str = "pub const WALL_CLOCK_SERVICE_FIELDS: &[&str] = \
+                                      &[\"wait_s\"];\n\
+        pub struct ServiceCounters {\n    pub calls: u64,\n    pub wait_s: f64,\n}\n\
+        impl ServiceCounters {\n\
+        \x20   pub fn merge(&mut self, o: &ServiceCounters) {\n\
+        \x20       self.calls += o.calls;\n        self.wait_s += o.wait_s;\n    }\n\
+        \x20   pub fn to_json(&self) -> Json {\n\
+        \x20       Json::obj(vec![(\"calls\", x), (\"wait_s\", y)])\n    }\n\
+        \x20   pub fn from_json(j: &Json) -> ServiceCounters {\n\
+        \x20       ServiceCounters { calls: g(\"calls\"), wait_s: g(\"wait_s\") }\n    }\n\
+        }\n\
+        pub struct InferenceCounters {\n    pub rollouts: u64,\n}\n\
+        impl InferenceCounters {\n\
+        \x20   pub fn merge(&mut self, o: &InferenceCounters) { self.rollouts += o.rollouts; }\n\
+        \x20   pub fn to_json(&self) -> Json { Json::obj(vec![(\"rollouts\", x)]) }\n\
+        \x20   pub fn from_json(j: &Json) -> InferenceCounters {\n\
+        \x20       InferenceCounters { rollouts: g(\"rollouts\") }\n    }\n\
+        }\n";
+
+    #[test]
+    fn l2_passes_on_complete_schema_and_flags_dropped_field() {
+        let ci = "WALL = {\"wait_s\"}\n";
+        assert!(lint_counter_schema("m.rs", METRICS_FIXTURE_OK, "ci.sh", ci).is_empty());
+        // Drop `wait_s` from merge: exactly one violation, pointing at merge.
+        let broken = METRICS_FIXTURE_OK.replace("self.wait_s += o.wait_s;", "");
+        let v = lint_counter_schema("m.rs", &broken, "ci.sh", ci);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("`wait_s`"), "{}", v[0].message);
+        assert!(v[0].message.contains("merge"), "{}", v[0].message);
+        // Drop it from the ci WALL set: the declaration check fires instead.
+        let v = lint_counter_schema("m.rs", METRICS_FIXTURE_OK, "ci.sh", "WALL = {\"other\"}\n");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("WALL normalization"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn l3_flags_unregistered_harness_files() {
+        let cargo = "[[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n\
+                     [[bench]]\nname = \"b\"\npath = \"benches/b.rs\"\n";
+        let tests = vec!["rust/tests/a.rs".to_string(), "rust/tests/ghost.rs".to_string()];
+        let benches = vec!["benches/b.rs".to_string()];
+        let v = lint_harness_registration("Cargo.toml", cargo, &tests, &benches);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("rust/tests/ghost.rs"), "{}", v[0].message);
+        assert!(v[0].message.contains("[[test]]"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn l4_flags_wall_clock_outside_allowlist() {
+        let src = "fn f() {\n    let t0 = std::time::Instant::now();\n}\n";
+        let v = lint_wall_clock("rust/src/coordinator/trainer.rs", &clean(src));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].message.contains("Instant::now"), "{}", v[0].message);
+        assert!(lint_wall_clock("rust/src/trace/mod.rs", &clean(src)).is_empty());
+    }
+
+    #[test]
+    fn l5_flags_unreachable_numeric_field() {
+        let metrics = "pub struct StepRecord {\n    pub loss: f64,\n    pub step: u64,\n\
+                       \x20   pub label: String,\n}\n";
+        let report = "pub const STEP_METRICS: &[StepMetric] = &[\n\
+                      \x20   StepMetric { name: \"loss\", get: |s| s.loss },\n];\n\
+                      pub const STEP_METRICS_EXEMPT: &[&str] = &[];\n";
+        let v = lint_step_metrics("m.rs", metrics, "r.rs", report);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].message.contains("`step`"), "{}", v[0].message);
+        // Exempting it silences the lint; a typo'd exemption is itself caught.
+        let exempted = report.replace("&[];", "&[\"step\"];");
+        assert!(lint_step_metrics("m.rs", metrics, "r.rs", &exempted).is_empty());
+        let typo = report.replace("&[];", "&[\"stpe\"];");
+        let v = lint_step_metrics("m.rs", metrics, "r.rs", &typo);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].message.contains("`stpe`"), "{}", v[0].message);
+    }
+}

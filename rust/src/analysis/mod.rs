@@ -1,0 +1,198 @@
+//! `speed-rl lint` — the repo's invariant linter (DESIGN.md §15).
+//!
+//! The codebase leans on conventions a compiler cannot check: every lock
+//! acquisition goes through the poison-recovering wrappers in
+//! `util/sync.rs`, multi-lock files respect a declared acquisition order,
+//! counter structs round-trip every field through merge/JSON, harness
+//! files are registered in the non-autodiscovered `Cargo.toml`, wall
+//! clocks stay inside telemetry, and every numeric step metric is either
+//! charted or exempted with a reason. Each of those conventions has
+//! silently broken a class of tooling when violated — so this module
+//! parses the repo's own source tree (via the line-preserving
+//! [`scanner`]) and enforces them as hard CI gates ahead of fmt/clippy.
+//!
+//! The passes themselves ([`lints`]) are pure functions over source text;
+//! this module owns the file walking and orchestration. [`model`] is the
+//! companion *dynamic* side of the same contract: an exhaustive
+//! interleaving explorer that model-checks the sync protocols the L1 lint
+//! guards statically.
+
+pub mod lints;
+pub mod model;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+/// One finding: which lint fired, where, and why. `line` is 1-based;
+/// 0 means the finding is file-scoped (e.g. a missing declaration).
+pub struct Violation {
+    pub lint: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Violation {
+    pub fn new(lint: &'static str, file: &str, line: usize, message: &str) -> Violation {
+        Violation { lint, file: file.to_string(), line, message: message.to_string() }
+    }
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line == 0 {
+            write!(f, "{}: [{}] {}", self.file, self.lint, self.message)
+        } else {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.message)
+        }
+    }
+}
+
+/// Result of a full lint run over the repository.
+pub struct LintReport {
+    /// All findings, sorted by `(file, line)`.
+    pub violations: Vec<Violation>,
+    /// Number of `.rs` files scanned under `rust/src/`.
+    pub files_scanned: usize,
+}
+
+/// Run every lint pass against the repository rooted at `root` (the
+/// directory holding `Cargo.toml`, `rust/`, and `benches/`).
+///
+/// * L1 (raw locks + lock order) and L4 (wall clocks) walk every `.rs`
+///   file under `rust/src/`.
+/// * L2 reads `rust/src/metrics/mod.rs` against the chaos smoke in
+///   `rust/ci.sh`.
+/// * L3 diffs the `rust/tests/` and `benches/` directory listings against
+///   the `path = "..."` entries in `Cargo.toml`.
+/// * L5 reads `StepRecord` out of `rust/src/metrics/mod.rs` against the
+///   metric tables in `rust/src/metrics/report.rs`.
+pub fn run_lints(root: &Path) -> anyhow::Result<LintReport> {
+    let src_dir = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk_rs(&src_dir, &mut files)
+        .with_context(|| format!("walking {}", src_dir.display()))?;
+    files.sort();
+
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let cs = scanner::clean(&src);
+        violations.extend(lints::lint_raw_locks(&rel, &cs));
+        if let Some(spec) = lints::LOCK_ORDERS.iter().find(|s| rel.ends_with(s.file_suffix)) {
+            violations.extend(lints::lint_lock_order(&rel, &cs, spec));
+        }
+        violations.extend(lints::lint_wall_clock(&rel, &cs));
+    }
+
+    let read_rel = |rel: &str| -> anyhow::Result<String> {
+        std::fs::read_to_string(root.join(rel)).with_context(|| format!("reading {rel}"))
+    };
+    let metrics_src = read_rel("rust/src/metrics/mod.rs")?;
+    let report_src = read_rel("rust/src/metrics/report.rs")?;
+    let ci_src = read_rel("rust/ci.sh")?;
+    let cargo_src = read_rel("Cargo.toml")?;
+    violations.extend(lints::lint_counter_schema(
+        "rust/src/metrics/mod.rs",
+        &metrics_src,
+        "rust/ci.sh",
+        &ci_src,
+    ));
+    violations.extend(lints::lint_step_metrics(
+        "rust/src/metrics/mod.rs",
+        &metrics_src,
+        "rust/src/metrics/report.rs",
+        &report_src,
+    ));
+    let test_files = list_rs(&root.join("rust").join("tests"), "rust/tests")?;
+    let bench_files = list_rs(&root.join("benches"), "benches")?;
+    violations.extend(lints::lint_harness_registration(
+        "Cargo.toml",
+        &cargo_src,
+        &test_files,
+        &bench_files,
+    ));
+
+    violations.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(LintReport { violations, files_scanned: files.len() })
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Non-recursive listing of `.rs` files in `dir` as `prefix/name.rs`
+/// strings, sorted. A missing directory lists as empty (the lint then has
+/// nothing to check rather than erroring).
+fn list_rs(dir: &Path, prefix: &str) -> anyhow::Result<Vec<String>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_file() && path.extension().is_some_and(|e| e == "rs") {
+            if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+                out.push(format!("{prefix}/{name}"));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// `path` relative to `root`, with forward slashes, as a display string.
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The linter's own acceptance gate: the repository must be clean.
+    /// Every new raw lock, misordered acquisition, dropped counter field,
+    /// unregistered harness, stray wall clock, or unchartered metric
+    /// fails this test (and the `speed-rl lint` CI gate) with a precise
+    /// location.
+    #[test]
+    fn repo_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run_lints(root).expect("lint run");
+        let rendered: Vec<String> =
+            report.violations.iter().map(|v| v.to_string()).collect();
+        assert!(
+            rendered.is_empty(),
+            "repository violates its own invariants:\n{}",
+            rendered.join("\n")
+        );
+        assert!(report.files_scanned > 20, "walker found too few files: {}", report.files_scanned);
+    }
+
+    #[test]
+    fn violations_render_with_and_without_line() {
+        let v = Violation::new("L1", "src/x.rs", 7, "msg");
+        assert_eq!(v.to_string(), "src/x.rs:7: [L1] msg");
+        let v = Violation::new("L2", "src/x.rs", 0, "msg");
+        assert_eq!(v.to_string(), "src/x.rs: [L2] msg");
+    }
+}

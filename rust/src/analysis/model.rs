@@ -1,0 +1,253 @@
+//! Exhaustive interleaving explorer for small concurrency models.
+//!
+//! The dynamic half of the sync-protocol contract (DESIGN.md §15): the L1
+//! lint proves lock *discipline* statically, this module proves the
+//! *protocols* built on those locks — the `SharedBuffer`
+//! push/pop/backpressure dance and the engine-pool's exactly-once
+//! seized-slot claim — hold under **every** schedule, not just the ones a
+//! stress test happens to hit.
+//!
+//! A model is a handful of threads, each a straight-line sequence of
+//! atomic [`Action`]s over a shared state `S`. An action is *enabled*
+//! when its guard passes — a disabled action models a thread blocked on a
+//! condvar, and becomes runnable again when another thread changes the
+//! state. [`explore`] runs a depth-first search over every interleaving:
+//! the invariant is checked after every action, a reachable state where
+//! unfinished threads exist but nothing is enabled is reported as a
+//! deadlock, and the terminal assertion runs at every leaf. Failures
+//! carry the exact schedule (the action trail) that produced them.
+//!
+//! This mirrors what `loom` does for real `std::sync` types, minus the
+//! memory-model modeling — the dependency cannot be vendored offline, so
+//! the protocols are lifted into guarded-action models instead, and the
+//! type aliases in `util::sync` remain the swap point for running the
+//! real structures under loom where it is available (see `rust/ci.sh`,
+//! `SPEED_RL_LOOM=1`).
+
+/// One atomic step of a modeled thread. `tag` is the thread's identity
+/// parameter (e.g. which producer), passed to both callbacks so one
+/// action table can serve several symmetric threads.
+pub struct Action<S> {
+    pub name: &'static str,
+    pub tag: usize,
+    /// May this action run in state `S`? A `false` models blocking (a
+    /// condvar wait whose predicate fails, a full buffer, ...).
+    pub enabled: fn(&S, usize) -> bool,
+    pub apply: fn(&mut S, usize),
+}
+
+impl<S> Action<S> {
+    pub fn new(
+        name: &'static str,
+        tag: usize,
+        enabled: fn(&S, usize) -> bool,
+        apply: fn(&mut S, usize),
+    ) -> Action<S> {
+        Action { name, tag, enabled, apply }
+    }
+
+    /// An action that is always runnable.
+    pub fn always(name: &'static str, tag: usize, apply: fn(&mut S, usize)) -> Action<S> {
+        Action { name, tag, enabled: |_, _| true, apply }
+    }
+}
+
+/// A modeled thread: a name (for schedule diagnostics) and its program —
+/// actions executed in order, one program counter per thread.
+pub struct ModelThread<S> {
+    pub name: &'static str,
+    pub actions: Vec<Action<S>>,
+}
+
+/// A complete model: threads, a safety invariant checked after every
+/// action, a terminal assertion checked when all threads finished, and a
+/// visited-state budget guarding against accidental explosion.
+pub struct Model<'a, S> {
+    pub threads: &'a [ModelThread<S>],
+    /// Checked after every action at every node. `Err` aborts the search
+    /// and reports the schedule that reached the bad state.
+    pub invariant: fn(&S) -> Result<(), String>,
+    /// Checked at every leaf (all program counters at the end).
+    pub terminal: fn(&S) -> Result<(), String>,
+    /// Abort if the search visits more than this many states.
+    pub max_states: u64,
+}
+
+/// Search statistics: `schedules` is the number of complete
+/// interleavings verified, `states` the number of visited nodes.
+#[derive(Debug, Clone, Copy)]
+pub struct Exploration {
+    pub schedules: u64,
+    pub states: u64,
+}
+
+/// Exhaustively explore every interleaving of `model` from `init`.
+///
+/// Returns the search statistics on success. Any invariant violation,
+/// deadlock, terminal failure, or budget exhaustion returns `Err` with
+/// the offending schedule spelled out as `thread.action` steps.
+pub fn explore<S: Clone>(model: &Model<S>, init: S) -> Result<Exploration, String> {
+    (model.invariant)(&init).map_err(|e| format!("invariant failed in initial state: {e}"))?;
+    let mut pcs = vec![0usize; model.threads.len()];
+    let mut trail: Vec<String> = Vec::new();
+    let mut stats = Exploration { schedules: 0, states: 0 };
+    dfs(model, &init, &mut pcs, &mut trail, &mut stats)?;
+    Ok(stats)
+}
+
+fn dfs<S: Clone>(
+    model: &Model<S>,
+    state: &S,
+    pcs: &mut [usize],
+    trail: &mut Vec<String>,
+    stats: &mut Exploration,
+) -> Result<(), String> {
+    stats.states += 1;
+    if stats.states > model.max_states {
+        return Err(format!(
+            "state budget exceeded ({} states) — model too large or non-terminating",
+            model.max_states
+        ));
+    }
+    let mut ran_any = false;
+    let mut unfinished = false;
+    for (ti, thread) in model.threads.iter().enumerate() {
+        let pc = pcs[ti];
+        if pc >= thread.actions.len() {
+            continue;
+        }
+        unfinished = true;
+        let action = &thread.actions[pc];
+        if !(action.enabled)(state, action.tag) {
+            continue;
+        }
+        ran_any = true;
+        let mut next = state.clone();
+        (action.apply)(&mut next, action.tag);
+        pcs[ti] += 1;
+        trail.push(format!("{}.{}", thread.name, action.name));
+        let checked = (model.invariant)(&next)
+            .map_err(|e| fail(trail, "invariant violated", &e))
+            .and_then(|()| dfs(model, &next, pcs, trail, stats));
+        trail.pop();
+        pcs[ti] -= 1;
+        checked?;
+    }
+    if !unfinished {
+        stats.schedules += 1;
+        (model.terminal)(state).map_err(|e| fail(trail, "terminal assertion failed", &e))?;
+    } else if !ran_any {
+        return Err(fail(trail, "deadlock", "unfinished threads exist but none is enabled"));
+    }
+    Ok(())
+}
+
+/// Render a failure with the schedule that produced it.
+fn fail(trail: &[String], kind: &str, msg: &str) -> String {
+    if trail.is_empty() {
+        format!("{kind} in initial state: {msg}")
+    } else {
+        format!("{kind} after schedule [{}]: {msg}", trail.join(" -> "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone)]
+    struct Counter {
+        n: usize,
+    }
+
+    fn bump(s: &mut Counter, _tag: usize) {
+        s.n += 1;
+    }
+
+    #[test]
+    fn two_increments_interleave_fully() {
+        // Two threads of two always-enabled steps each: C(4,2) = 6
+        // distinct interleavings, all reaching n == 4.
+        let threads = [
+            ModelThread {
+                name: "a",
+                actions: vec![Action::always("inc1", 0, bump), Action::always("inc2", 0, bump)],
+            },
+            ModelThread {
+                name: "b",
+                actions: vec![Action::always("inc1", 1, bump), Action::always("inc2", 1, bump)],
+            },
+        ];
+        let model = Model {
+            threads: &threads,
+            invariant: |s: &Counter| if s.n <= 4 { Ok(()) } else { Err("n > 4".into()) },
+            terminal: |s: &Counter| {
+                if s.n == 4 {
+                    Ok(())
+                } else {
+                    Err(format!("n = {} at leaf", s.n))
+                }
+            },
+            max_states: 10_000,
+        };
+        let ex = explore(&model, Counter { n: 0 }).expect("clean model");
+        assert_eq!(ex.schedules, 6);
+        assert!(ex.states > 6);
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        // One thread waits for n >= 1; nobody ever bumps n.
+        let threads = [ModelThread {
+            name: "waiter",
+            actions: vec![Action::new("wait", 0, |s: &Counter, _| s.n >= 1, |_, _| {})],
+        }];
+        let model = Model {
+            threads: &threads,
+            invariant: |_: &Counter| Ok(()),
+            terminal: |_: &Counter| Ok(()),
+            max_states: 100,
+        };
+        let err = explore(&model, Counter { n: 0 }).expect_err("must deadlock");
+        assert!(err.contains("deadlock"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn invariant_violation_reports_schedule() {
+        let threads = [ModelThread {
+            name: "t",
+            actions: vec![Action::always("bump", 0, bump), Action::always("bump2", 0, bump)],
+        }];
+        let model = Model {
+            threads: &threads,
+            invariant: |s: &Counter| if s.n < 2 { Ok(()) } else { Err("n reached 2".into()) },
+            terminal: |_: &Counter| Ok(()),
+            max_states: 100,
+        };
+        let err = explore(&model, Counter { n: 0 }).expect_err("invariant must fire");
+        assert!(err.contains("invariant violated"), "unexpected error: {err}");
+        assert!(err.contains("t.bump -> t.bump2"), "schedule missing from: {err}");
+    }
+
+    #[test]
+    fn state_budget_is_enforced() {
+        let threads = [
+            ModelThread {
+                name: "a",
+                actions: (0..6).map(|_| Action::always("inc", 0, bump)).collect(),
+            },
+            ModelThread {
+                name: "b",
+                actions: (0..6).map(|_| Action::always("inc", 1, bump)).collect(),
+            },
+        ];
+        let model = Model {
+            threads: &threads,
+            invariant: |_: &Counter| Ok(()),
+            terminal: |_: &Counter| Ok(()),
+            max_states: 10,
+        };
+        let err = explore(&model, Counter { n: 0 }).expect_err("budget must trip");
+        assert!(err.contains("state budget exceeded"), "unexpected error: {err}");
+    }
+}

@@ -1,0 +1,270 @@
+//! Line-preserving Rust source cleaner for the invariant lints.
+//!
+//! Deliberately *not* a parser: the L1–L5 passes only need to see code
+//! tokens with comments and literal contents out of the way, at their
+//! original line numbers. [`clean`] blanks comments and the *contents* of
+//! string/char literals with spaces (delimiters and newlines survive, so
+//! byte columns and line numbers are stable), and marks every line that
+//! sits inside a `#[cfg(test)]` item so lints can restrict themselves to
+//! shipping code. Anything this cleaner cannot see (macro-generated locks,
+//! cross-function lock nesting) is out of scope by design — DESIGN.md §15
+//! records those limits next to the invariants themselves.
+
+/// A cleaned view of one source file. `lines[i]` is source line `i + 1`
+/// with comments and literal contents blanked; `in_test[i]` is true when
+/// that line belongs to a `#[cfg(test)]` region (the attribute line, the
+/// item header, and everything through the item's closing brace).
+pub struct CleanSource {
+    pub lines: Vec<String>,
+    pub in_test: Vec<bool>,
+}
+
+impl CleanSource {
+    /// Iterate the cleaned lines of shipping (non-test) code as
+    /// `(1-based line number, cleaned text)`.
+    pub fn shipping_lines(&self) -> impl Iterator<Item = (usize, &str)> {
+        self.lines
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.in_test[*i])
+            .map(|(i, l)| (i + 1, l.as_str()))
+    }
+}
+
+/// Clean `src`: blank comments (line and nested block) and the contents of
+/// string / raw-string / char literals, preserving structure, then mark
+/// `#[cfg(test)]` regions.
+pub fn clean(src: &str) -> CleanSource {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if chars[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+        } else if !prev_ident && (c == 'r' || c == 'b') && raw_string_at(&chars, i).is_some() {
+            let (quote, hashes) = raw_string_at(&chars, i).expect("checked above");
+            for _ in i..=quote {
+                out.push(' ');
+            }
+            out.push('"');
+            i = quote + 1;
+            // Contents end at `"` followed by exactly `hashes` hashes.
+            while i < n {
+                if chars[i] == '"' && count_hashes(&chars, i + 1) >= hashes {
+                    out.push('"');
+                    for _ in 0..hashes {
+                        out.push(' ');
+                    }
+                    i += 1 + hashes;
+                    break;
+                }
+                out.push(if chars[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+        } else if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < n {
+                match chars[i] {
+                    '\\' if i + 1 < n => {
+                        out.push_str("  ");
+                        i += 2;
+                    }
+                    '"' => {
+                        out.push('"');
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        out.push('\n');
+                        i += 1;
+                    }
+                    _ => {
+                        out.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        } else if c == '\'' {
+            // Char literal vs lifetime: `'\...'` and `'x'` are literals,
+            // anything else (`'a`, `'static`, loop labels) passes through.
+            let is_escape = i + 1 < n && chars[i + 1] == '\\';
+            let is_plain = i + 2 < n && chars[i + 1] != '\'' && chars[i + 2] == '\'';
+            if is_escape {
+                out.push('\'');
+                i += 1;
+                while i < n {
+                    match chars[i] {
+                        '\\' if i + 1 < n => {
+                            out.push_str("  ");
+                            i += 2;
+                        }
+                        '\'' => {
+                            out.push('\'');
+                            i += 1;
+                            break;
+                        }
+                        _ => {
+                            out.push(' ');
+                            i += 1;
+                        }
+                    }
+                }
+            } else if is_plain {
+                out.push('\'');
+                out.push(' ');
+                out.push('\'');
+                i += 3;
+            } else {
+                out.push('\'');
+                i += 1;
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    let lines: Vec<String> = out.lines().map(|l| l.to_string()).collect();
+    let in_test = test_regions(&lines);
+    CleanSource { lines, in_test }
+}
+
+/// If a raw string starts at `i` (`r"`, `r#"`, `br"`, ...), return the
+/// index of its opening quote and the number of hashes.
+fn raw_string_at(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let hashes = count_hashes(chars, j);
+    j += hashes;
+    if chars.get(j) == Some(&'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+fn count_hashes(chars: &[char], from: usize) -> usize {
+    chars[from.min(chars.len())..].iter().take_while(|&&c| c == '#').count()
+}
+
+/// Mark the lines covered by `#[cfg(test)]` items: from the attribute
+/// through the closing brace of the item it gates (or through the `;` of a
+/// braceless item). Runs on cleaned lines, so braces in strings/comments
+/// cannot desync the depth tracking.
+fn test_regions(lines: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut depth: i32 = 0;
+    let mut pending = false;
+    let mut region_depth: Option<i32> = None;
+    for (li, line) in lines.iter().enumerate() {
+        if region_depth.is_some() || pending {
+            in_test[li] = true;
+        }
+        if line.contains("#[cfg(test)]") {
+            pending = true;
+            in_test[li] = true;
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    if pending && region_depth.is_none() {
+                        region_depth = Some(depth);
+                        pending = false;
+                        in_test[li] = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(rd) = region_depth {
+                        if depth <= rd {
+                            region_depth = None;
+                        }
+                    }
+                }
+                ';' if pending && region_depth.is_none() => {
+                    pending = false;
+                }
+                _ => {}
+            }
+        }
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let a = 1; // x.lock()\nlet b = \".lock()\";\n/* .lock()\n.lock() */ let c = 2;\n";
+        let cs = clean(src);
+        assert_eq!(cs.lines.len(), 4);
+        for l in &cs.lines {
+            assert!(!l.contains(".lock()"), "literal survived cleaning: {l}");
+        }
+        assert!(cs.lines[0].contains("let a = 1;"));
+        assert!(cs.lines[1].contains("let b = \""));
+        assert!(cs.lines[3].contains("let c = 2;"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a str) -> char { if x.is_empty() { '{' } else { '\\'' } }\n";
+        let cs = clean(src);
+        assert!(cs.lines[0].contains("<'a>"), "lifetime mangled: {}", cs.lines[0]);
+        assert!(!cs.lines[0].contains("'{'"), "char literal survived: {}", cs.lines[0]);
+        // The blanked brace literal must not perturb depth tracking:
+        let opens = cs.lines[0].matches('{').count();
+        let closes = cs.lines[0].matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let src = "let s = r#\"a \".lock()\" b\"#;\nlet t = 3;\n";
+        let cs = clean(src);
+        assert!(!cs.lines[0].contains(".lock()"));
+        assert!(cs.lines[1].contains("let t = 3;"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn ship() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn ship2() {}\n";
+        let cs = clean(src);
+        assert_eq!(cs.in_test, vec![false, true, true, true, true, false]);
+        let shipping: Vec<usize> = cs.shipping_lines().map(|(n, _)| n).collect();
+        assert_eq!(shipping, vec![1, 6]);
+    }
+}

@@ -15,9 +15,9 @@
 //!   which is what bounds staleness when inference outruns updates.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 
 use crate::rl::update::PromptGroup;
+use crate::util::sync::{plock, pwait, SyncCondvar, SyncMutex};
 use crate::warn_log;
 
 /// A completed group waiting for a training slot.
@@ -270,11 +270,16 @@ pub struct SharedBufferStats {
 /// workers push, the learner pops exactly-`B` batches. A full buffer blocks
 /// producers (backpressure bounds off-policy staleness); `close` wakes
 /// everyone for shutdown.
+///
+/// Declared through the [`crate::util::sync`] aliases and lock helpers:
+/// this is one of the two protocols modeled exhaustively by
+/// `analysis::model` (`rust/tests/loom_sync.rs`), and the aliases are the
+/// one-file swap point for a real loom build (DESIGN.md §15).
 #[derive(Debug)]
 pub struct SharedBuffer {
-    state: Mutex<SharedState>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    state: SyncMutex<SharedState>,
+    not_empty: SyncCondvar,
+    not_full: SyncCondvar,
     cap: usize,
 }
 
@@ -282,9 +287,9 @@ impl SharedBuffer {
     /// `cap` is the capacity in groups (clamped to >= 1).
     pub fn new(cap: usize) -> SharedBuffer {
         SharedBuffer {
-            state: Mutex::new(SharedState { demand: u64::MAX, ..Default::default() }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            state: SyncMutex::new(SharedState { demand: u64::MAX, ..Default::default() }),
+            not_empty: SyncCondvar::new(),
+            not_full: SyncCondvar::new(),
             cap: cap.max(1),
         }
     }
@@ -293,19 +298,19 @@ impl SharedBuffer {
     /// early-stop conditions are active) so workers don't run inference the
     /// learner will never consume.
     pub fn set_demand(&self, total: u64) {
-        self.state.lock().unwrap().demand = total;
+        plock(&self.state).demand = total;
     }
 
     /// Groups still wanted by the learner (`u64::MAX` when uncapped).
     pub fn remaining_demand(&self) -> u64 {
-        let g = self.state.lock().unwrap();
+        let g = plock(&self.state);
         g.demand.saturating_sub(g.pushed)
     }
 
     /// Blocking push; returns false when the buffer is closed or demand is
     /// exhausted (the producer should wind down).
     pub fn push(&self, group: PromptGroup, born_step: usize, born_version: u64) -> bool {
-        let mut g = self.state.lock().unwrap();
+        let mut g = plock(&self.state);
         // Span only when the producer actually blocked: a non-full buffer
         // records nothing (no zero-length event flood).
         let mut t_wait = None;
@@ -313,7 +318,7 @@ impl SharedBuffer {
             if t_wait.is_none() {
                 t_wait = crate::trace::start();
             }
-            g = self.not_full.wait(g).unwrap();
+            g = pwait(&self.not_full, g);
         }
         crate::trace::span("buffer-push-wait", "buffer", t_wait, g.q.len() as i64);
         if g.closed || g.pushed >= g.demand {
@@ -338,7 +343,7 @@ impl SharedBuffer {
         train_step: usize,
         version: u64,
     ) -> Option<Vec<PromptGroup>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = plock(&self.state);
         let mut t_wait = None;
         loop {
             if g.q.len() >= b {
@@ -360,7 +365,7 @@ impl SharedBuffer {
             if t_wait.is_none() {
                 t_wait = crate::trace::start();
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = pwait(&self.not_empty, g);
         }
     }
 
@@ -379,7 +384,7 @@ impl SharedBuffer {
         train_step: usize,
         version: u64,
     ) -> Option<Vec<PromptGroup>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = plock(&self.state);
         let mut t_wait = None;
         loop {
             let sizes = g.q.iter().map(|e| e.group.rollouts.len());
@@ -403,24 +408,24 @@ impl SharedBuffer {
             if t_wait.is_none() {
                 t_wait = crate::trace::start();
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = pwait(&self.not_empty, g);
         }
     }
 
     /// Wake all producers and consumers; pending pushes fail, pending pops
     /// drain what fits and then return None.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        plock(&self.state).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        plock(&self.state).closed
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().q.len()
+        plock(&self.state).q.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -429,7 +434,7 @@ impl SharedBuffer {
 
     /// Mean steps-in-buffer over all popped groups.
     pub fn mean_staleness(&self) -> f64 {
-        let g = self.state.lock().unwrap();
+        let g = plock(&self.state);
         if g.popped == 0 {
             0.0
         } else {
@@ -438,7 +443,7 @@ impl SharedBuffer {
     }
 
     pub fn stats(&self) -> SharedBufferStats {
-        let g = self.state.lock().unwrap();
+        let g = plock(&self.state);
         let denom = g.popped.max(1) as f64;
         SharedBufferStats {
             pushed: g.pushed,

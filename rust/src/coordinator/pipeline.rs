@@ -41,6 +41,7 @@ use crate::policy::fault::RecoveryConfig;
 use crate::policy::service::{InferenceService, ServiceConfig};
 use crate::policy::{ForkEngine, Policy, RolloutEngine, WeightSnapshot};
 use crate::rl::algo::AlgoConfig;
+use crate::util::sync::plock;
 use crate::util::threadpool::ThreadPool;
 
 /// Producer/consumer knobs (the `workers` / `pipeline` / `buffer_cap` /
@@ -91,7 +92,7 @@ impl WeightStore {
 
     pub fn publish(&self, snap: WeightSnapshot) {
         let version = snap.version;
-        *self.snap.lock().unwrap() = snap;
+        *plock(&self.snap) = snap;
         self.version.store(version, Ordering::Release);
     }
 
@@ -100,7 +101,7 @@ impl WeightStore {
     }
 
     pub fn get(&self) -> WeightSnapshot {
-        self.snap.lock().unwrap().clone()
+        plock(&self.snap).clone()
     }
 }
 
@@ -361,13 +362,13 @@ impl PipelinedTrainer {
         }
         drop(service);
         result?;
-        let errs = errors.lock().unwrap();
+        let errs = plock(&errors);
         if !errs.is_empty() {
             bail!("rollout worker failed: {}", errs.join("; "));
         }
         // Workers are joined: the loader is quiescent, and its state here
         // is what a warm resume must continue from.
-        let loader_out = Loader::from_state(&loader.lock().unwrap().state());
+        let loader_out = Loader::from_state(&plock(&loader).state());
         Ok((record, loader_out))
     }
 
@@ -507,7 +508,7 @@ impl PipelinedTrainer {
                 grad_norm: tr.grad_norm,
                 loss: tr.loss,
                 clip_frac: tr.clip_frac,
-                prompts_consumed: loader.lock().unwrap().consumed(),
+                prompts_consumed: plock(&loader).consumed(),
                 buffer_len: stats.len,
                 mean_staleness: stats.mean_staleness,
                 prompts_skipped: counter_snap.prompts_skipped,
@@ -565,9 +566,9 @@ struct PanicGuard {
 impl Drop for PanicGuard {
     fn drop(&mut self) {
         if std::thread::panicking() {
-            if let Ok(mut errs) = self.errors.lock() {
-                errs.push("rollout worker panicked".to_string());
-            }
+            // plock: a peer's poison must not stop this panic from being
+            // reported (the error list stays consistent — push-only).
+            plock(&self.errors).push("rollout worker panicked".to_string());
             self.shared.close();
         }
     }
@@ -638,7 +639,7 @@ fn rollout_worker(
                 }
             }
             Err(e) => {
-                errors.lock().unwrap().push(format!("{e:#}"));
+                plock(&errors).push(format!("{e:#}"));
                 shared.close();
                 return;
             }

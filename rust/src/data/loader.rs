@@ -10,6 +10,7 @@ use std::sync::{Arc, Mutex};
 use crate::data::dataset::Dataset;
 use crate::data::tasks::TaskInstance;
 use crate::util::rng::Rng;
+use crate::util::sync::plock;
 
 /// Where a curriculum pulls prompts from. Abstracts over the serial case
 /// (exclusive loader borrow) and the pipelined case (loader behind a mutex,
@@ -50,12 +51,12 @@ pub struct SharedSource {
 
 impl PromptSource for SharedSource {
     fn next_prompt(&mut self) -> (usize, TaskInstance) {
-        let idx = self.loader.lock().unwrap().next_index();
+        let idx = plock(&self.loader).next_index();
         (idx, self.dataset.instances[idx].clone())
     }
 
     fn consumed(&self) -> usize {
-        self.loader.lock().unwrap().consumed()
+        plock(&self.loader).consumed()
     }
 }
 

@@ -52,7 +52,13 @@
 //!                     (DESIGN.md §12). Zero-perturbation when off.
 //! * [`eval`]        — held-out benchmark evaluation.
 //! * [`bench`]       — in-tree benchmark harness (no criterion offline).
+//! * [`analysis`]    — the `speed-rl lint` invariant linter (lock
+//!                     discipline, counter schemas, harness registration,
+//!                     wall-clock hygiene, metric tables) and the
+//!                     exhaustive interleaving explorer that model-checks
+//!                     the sync protocols (DESIGN.md §15).
 
+pub mod analysis;
 pub mod bench;
 pub mod checkpoint;
 pub mod config;

@@ -9,6 +9,7 @@
 //!   report     ASCII accuracy-vs-time charts from run records
 //!   bench      coalescing / allocation / pool smoke benches
 //!   trace      summarize or re-export a --trace timeline
+//!   lint       run the repo's invariant linter over its own source tree
 //!
 //! Run `speed-rl <subcommand> --help` for options.
 
@@ -59,6 +60,7 @@ fn run() -> Result<()> {
         "report" => cmd_report(rest),
         "bench" => cmd_bench(rest),
         "trace" => cmd_trace(rest),
+        "lint" => cmd_lint(rest),
         "--help" | "-h" | "help" => {
             print_usage();
             Ok(())
@@ -78,7 +80,9 @@ fn print_usage() {
          \x20 info       print the artifact manifest summary\n\
          \x20 report     ASCII accuracy-vs-time charts from run records\n\
          \x20 bench      smoke benches: --mode coalesce (service) | alloc (budgets) | pool (engine scaling) | slots (continuous batching)\n\
-         \x20 trace      summarize a --trace timeline (per-phase breakdown, latency percentiles)\n"
+         \x20 trace      summarize a --trace timeline (per-phase breakdown, latency percentiles)\n\
+         \x20 lint       check the repo's own invariants: lock discipline, counter schemas,\n\
+         \x20            harness registration, wall-clock hygiene, metric tables (DESIGN.md 15)\n"
     );
 }
 
@@ -703,6 +707,32 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
         }
         other => bail!("unknown trace format '{other}' (valid: summary, chrome)"),
     }
+    Ok(())
+}
+
+/// `speed-rl lint` — run the L1–L5 invariant lints (DESIGN.md §15) over
+/// the repository's own source tree. Exit status is the gate: any
+/// violation prints as `file:line: [Lx] message` and fails the command,
+/// which is how `rust/ci.sh` hard-gates the invariants ahead of
+/// fmt/clippy.
+fn cmd_lint(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("speed-rl lint", "run the repo's invariant linter")
+        .opt("root", Some("."), "repository root (the directory holding Cargo.toml)");
+    let args = cli.parse(argv)?;
+    let root = PathBuf::from(args.string("root")?);
+    anyhow::ensure!(
+        root.join("Cargo.toml").is_file(),
+        "{} does not look like the repository root (no Cargo.toml)",
+        root.display()
+    );
+    let report = speed_rl::analysis::run_lints(&root)?;
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if !report.violations.is_empty() {
+        bail!("{} invariant violation(s) (see DESIGN.md 15)", report.violations.len());
+    }
+    info!("lint", "clean: {} source files scanned, 5 lint passes", report.files_scanned);
     Ok(())
 }
 

@@ -360,6 +360,17 @@ impl AtomicCounters {
 /// snapshots). The service and `--engines` validation both enforce it.
 pub const MAX_POOL: usize = 8;
 
+/// The wall-clock-valued [`ServiceCounters`] fields: real-time telemetry
+/// that differs between ANY two runs of the same seed, which the chaos
+/// smoke in `rust/ci.sh` strips from the `service` JSON block before its
+/// byte comparison (the python `WALL` normalization set there). This
+/// const is the single declaration the `speed-rl lint` L2 pass
+/// cross-checks — every name must be a real [`ServiceCounters`] field
+/// AND must appear in the ci.sh `WALL` set — so a new wall-clock counter
+/// cannot silently break the chaos equivalence rail (DESIGN.md §15).
+pub const WALL_CLOCK_SERVICE_FIELDS: &[&str] =
+    &["queue_wait_s", "ewma_gap_s", "queue_wait_hist", "exec_hist"];
+
 /// Cumulative counters of the shared [`InferenceService`]: an engine pool
 /// behind one submission queue, coalescing requests across rollout workers.
 /// `Copy` so per-step snapshots are cheap.

@@ -44,6 +44,33 @@ pub const STEP_METRICS: &[(&str, fn(&StepRecord) -> f64)] = &[
     ("slot-occupancy", |s: &StepRecord| s.slot_occupancy),
 ];
 
+/// Numeric [`StepRecord`] fields intentionally NOT charted by
+/// `speed-rl report --metric`: each already has a better surface — the
+/// x-axes of the charts themselves, the headline accuracy-vs-time
+/// curves, `print_summary` lines, or a charted per-step ratio derived
+/// from it. The `speed-rl lint` L5 pass requires every numeric
+/// [`StepRecord`] field to be reachable from [`STEP_METRICS`] or listed
+/// here, so per-step telemetry cannot land unreachable from every chart
+/// without an explicit exemption (DESIGN.md §15).
+pub const STEP_METRICS_EXEMPT: &[&str] = &[
+    "step",                  // the x-axis of every per-step chart
+    "time_s",                // the x-axis of the accuracy-vs-time charts
+    "inference_s",           // print_summary's time split
+    "update_s",              // print_summary's time split
+    "train_pass_rate",       // headline band-composition diagnostic
+    "grad_norm",             // Fig. 4-right comparison output
+    "loss",                  // print_summary
+    "clip_frac",             // print_summary
+    "prompts_consumed",      // feeds the skip-rate ratio
+    "buffer_len",            // staleness chart's companion gauge
+    "prompts_skipped",       // cumulative twin of skip-rate
+    "rollouts_saved",        // cumulative twin of skip-rate
+    "predictor_brier",       // print_summary calibration line
+    "service_calls",         // cumulative twin of service-fill
+    "service_queue_wait_s",  // mean twin of queue-wait-p95
+    "rollouts",              // the x-axis of the allocation comparison
+];
+
 /// Look up a per-step metric by its `--metric` name.
 pub fn step_metric(metric: &str) -> Option<fn(&StepRecord) -> f64> {
     STEP_METRICS.iter().find(|(name, _)| *name == metric).map(|(_, f)| *f)

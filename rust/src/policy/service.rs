@@ -61,7 +61,7 @@
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -74,7 +74,7 @@ use crate::policy::{
 };
 use crate::rl::algo::AlgoConfig;
 use crate::rl::update::PromptGroup;
-use crate::util::sync::{plock, pwait, pwait_timeout};
+use crate::util::sync::{plock, pwait, pwait_timeout, SyncCondvar, SyncMutex};
 
 /// Typed terminal failures the fault-tolerant service delivers to waiting
 /// tickets (via `anyhow`, so `Ticket::wait` callers see them as ordinary
@@ -216,12 +216,12 @@ struct ServiceQueue {
 }
 
 struct Shared {
-    queue: Mutex<ServiceQueue>,
-    work_ready: Condvar,
+    queue: SyncMutex<ServiceQueue>,
+    work_ready: SyncCondvar,
     /// Version the service serves once any pending install lands — what
     /// handles report as `serving_version`, deduping K workers' installs.
     version: AtomicU64,
-    stats: Mutex<ServiceCounters>,
+    stats: SyncMutex<ServiceCounters>,
     /// Test hook: when raised, the scheduler panics at the top of its next
     /// iteration (the containment regression: every waiter must unblock
     /// with a typed error, not hang). Never set outside tests.
@@ -299,9 +299,14 @@ impl PoolState {
     }
 }
 
+/// Declared through the [`crate::util::sync`] aliases: the exactly-once
+/// seized-slot claim protocol living under `state` is one of the two
+/// protocols modeled exhaustively by `analysis::model`
+/// (`rust/tests/loom_sync.rs`), and the aliases are the one-file swap
+/// point for a real loom build (DESIGN.md §15).
 struct Pool {
-    state: Mutex<PoolState>,
-    ready: Condvar,
+    state: SyncMutex<PoolState>,
+    ready: SyncCondvar,
     /// Dispatch discipline the router runs. Replica-side code needs it
     /// too: slot-retire trace instants only fire in slots mode.
     batching: BatchingMode,
@@ -318,10 +323,10 @@ struct Pool {
     /// Pre-forked spare engines `(slot, engine)`, activated into fresh
     /// slots at quarantine time when respawn is enabled. Never
     /// fault-wrapped. Popped in ascending slot order.
-    spares: Mutex<Vec<(usize, Box<dyn RolloutEngine + Send>)>>,
+    spares: SyncMutex<Vec<(usize, Box<dyn RolloutEngine + Send>)>>,
     /// `(slot, handle)` of respawned replica threads (the scheduler joins
     /// them at shutdown alongside the original replicas).
-    respawned: Mutex<Vec<(usize, std::thread::JoinHandle<()>)>>,
+    respawned: SyncMutex<Vec<(usize, std::thread::JoinHandle<()>)>>,
 }
 
 /// A pending reply for one submission. `wait` blocks until the scheduler
@@ -508,17 +513,17 @@ impl InferenceService {
             stats.replica_weight_version[r] = *v;
         }
         let shared = Arc::new(Shared {
-            queue: Mutex::new(ServiceQueue::default()),
-            work_ready: Condvar::new(),
+            queue: SyncMutex::new(ServiceQueue::default()),
+            work_ready: SyncCondvar::new(),
             version: AtomicU64::new(version),
-            stats: Mutex::new(stats),
+            stats: SyncMutex::new(stats),
             panic_scheduler: AtomicBool::new(false),
         });
         // Spares activate in ascending slot order (pop from the back).
         let spares: Vec<(usize, Box<dyn RolloutEngine + Send>)> =
             spares.into_iter().enumerate().map(|(i, en)| (e + i, en)).rev().collect();
         let pool = Arc::new(Pool {
-            state: Mutex::new(PoolState {
+            state: SyncMutex::new(PoolState {
                 queues: (0..slots).map(|_| VecDeque::new()).collect(),
                 queued_rows: vec![0; slots],
                 inflight_rows: vec![0; slots],
@@ -530,14 +535,14 @@ impl InferenceService {
                 snap: WeightSnapshot { version, values: Vec::new() },
                 closed: false,
             }),
-            ready: Condvar::new(),
+            ready: SyncCondvar::new(),
             batching: cfg.batching,
             capacity,
             producers,
             min_quantum,
             quantum: Arc::clone(&quantum),
-            spares: Mutex::new(spares),
-            respawned: Mutex::new(Vec::new()),
+            spares: SyncMutex::new(spares),
+            respawned: SyncMutex::new(Vec::new()),
         });
         let recovery = Arc::new(recovery);
         let replicas: Vec<std::thread::JoinHandle<()>> = engines
@@ -1771,6 +1776,7 @@ mod tests {
     use crate::rl::update::Rollout;
     use crate::util::rng::Rng;
     use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
 
     /// Deterministic engine: reward = 1.0 for every rollout, cost 1.0 per
     /// call + 0.1 per row; records per-call row counts and installs.

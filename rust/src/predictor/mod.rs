@@ -47,6 +47,7 @@ use std::sync::Mutex;
 use crate::coordinator::screening::ScreeningRule;
 use crate::data::tasks::TaskInstance;
 use crate::rl::advantage::pass_rate;
+use crate::util::sync::plock;
 use crate::util::rng::Rng;
 
 /// Knobs of the difficulty predictor (the `--skip-confidence`,
@@ -147,7 +148,7 @@ impl Predictor {
     /// pseudo-observations (all an unseen prompt has).
     pub fn predict(&self, task: &TaskInstance) -> Prediction {
         let obs = self.store.counts(task.identity()).unwrap_or_default();
-        let m = self.model.lock().unwrap().predict(task).clamp(1e-3, 1.0 - 1e-3);
+        let m = plock(&self.model).predict(task).clamp(1e-3, 1.0 - 1e-3);
         let a = self.cfg.prior_strength * m + obs.alpha;
         let b = self.cfg.prior_strength * (1.0 - m) + obs.beta;
         let accept_prob =
@@ -180,7 +181,7 @@ impl Predictor {
     /// posterior *and* the generalizing feature model.
     pub fn observe_screening(&self, task: &TaskInstance, rewards: &[f32]) {
         self.store.observe(task.identity(), rewards, self.cfg.discount);
-        self.model.lock().unwrap().update(task, pass_rate(rewards));
+        plock(&self.model).update(task, pass_rate(rewards));
     }
 
     /// Fold non-screening rollouts in (continuation rows; any training
@@ -202,7 +203,7 @@ impl Predictor {
         delta: &mut ObservationDelta,
     ) {
         delta.push(task.identity(), rewards);
-        self.model.lock().unwrap().update(task, pass_rate(rewards));
+        plock(&self.model).update(task, pass_rate(rewards));
     }
 
     /// [`observe_rollouts`](Self::observe_rollouts) deferred into a
@@ -239,7 +240,7 @@ impl Predictor {
     pub fn snapshot(&self) -> PredictorState {
         PredictorState {
             entries: self.store.snapshot(),
-            model: self.model.lock().unwrap().snapshot(),
+            model: plock(&self.model).snapshot(),
             instances: self.instances.load(Ordering::Relaxed),
         }
     }
@@ -250,7 +251,7 @@ impl Predictor {
     /// and rejects a mismatched resume before calling this.
     pub fn restore(&self, state: &PredictorState) {
         self.store.restore(&state.entries);
-        self.model.lock().unwrap().restore(&state.model);
+        plock(&self.model).restore(&state.model);
         self.instances.store(state.instances, Ordering::Relaxed);
     }
 }

@@ -21,6 +21,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::predictor::posterior::BetaPosterior;
+use crate::util::sync::plock;
 
 /// Worker-local batch of pending observations, kept in
 /// observation-sequence order. The discounted fold is order-dependent per
@@ -90,13 +91,13 @@ impl DifficultyStore {
 
     /// Fold a batch of binary rewards into `key`'s posterior.
     pub fn observe(&self, key: u64, rewards: &[f32], discount: f64) {
-        let mut shard = self.shard(key).lock().unwrap();
+        let mut shard = plock(self.shard(key));
         shard.entry(key).or_default().observe(rewards, discount);
     }
 
     /// Current discounted counts for `key` (`None` if never observed).
     pub fn counts(&self, key: u64) -> Option<BetaPosterior> {
-        self.shard(key).lock().unwrap().get(&key).copied()
+        plock(self.shard(key)).get(&key).copied()
     }
 
     /// Merge a worker-local observation batch, taking each shard lock at
@@ -123,7 +124,7 @@ impl DifficultyStore {
             if bucket.is_empty() {
                 continue;
             }
-            let mut shard = self.shards[i].lock().unwrap();
+            let mut shard = plock(&self.shards[i]);
             for (key, rewards) in bucket {
                 shard.entry(key).or_default().observe(&rewards, discount);
             }
@@ -136,7 +137,7 @@ impl DifficultyStore {
     pub fn snapshot(&self) -> Vec<(u64, BetaPosterior)> {
         let mut out: Vec<(u64, BetaPosterior)> = Vec::new();
         for shard in &self.shards {
-            let guard = shard.lock().unwrap();
+            let guard = plock(shard);
             out.extend(guard.iter().map(|(k, p)| (*k, *p)));
         }
         out.sort_unstable_by_key(|(k, _)| *k);
@@ -148,16 +149,16 @@ impl DifficultyStore {
     /// concurrent observes would interleave old and new evidence.
     pub fn restore(&self, entries: &[(u64, BetaPosterior)]) {
         for shard in &self.shards {
-            shard.lock().unwrap().clear();
+            plock(shard).clear();
         }
         for (key, post) in entries {
-            self.shard(*key).lock().unwrap().insert(*key, *post);
+            plock(self.shard(*key)).insert(*key, *post);
         }
     }
 
     /// Number of prompt identities tracked.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| plock(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -168,7 +169,7 @@ impl DifficultyStore {
     pub fn total_weight(&self) -> f64 {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().values().map(|p| p.weight()).sum::<f64>())
+            .map(|s| plock(s).values().map(|p| p.weight()).sum::<f64>())
             .sum()
     }
 }

@@ -7,6 +7,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::artifacts::{ArtifactSig, DType, Manifest};
+use crate::util::sync::plock;
 use super::tensor::{DTypeKind, Tensor};
 
 /// A compiled artifact with its signature; validates inputs before execute.
@@ -61,7 +62,7 @@ impl Executable {
             .collect::<Result<_>>()
             .with_context(|| format!("read outputs of {}", self.sig.name))?;
         let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.calls.lock().unwrap();
+        let mut stats = plock(&self.calls);
         stats.0 += 1;
         stats.1 += dt;
         Ok(out)
@@ -152,7 +153,7 @@ impl Executable {
 
     /// (call count, total seconds) since creation.
     pub fn stats(&self) -> (u64, f64) {
-        *self.calls.lock().unwrap()
+        *plock(&self.calls)
     }
 }
 
@@ -188,7 +189,7 @@ impl Runtime {
 
     /// Fetch (compiling + caching on first use) the artifact named `name`.
     pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = plock(&self.cache).get(name) {
             return Ok(Arc::clone(e));
         }
         let sig = self
@@ -206,7 +207,7 @@ impl Runtime {
         crate::info!("runtime", "compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
         let executable =
             Arc::new(Executable { sig, exe, calls: Mutex::new((0, 0.0)) });
-        self.cache.lock().unwrap().insert(name.to_string(), Arc::clone(&executable));
+        plock(&self.cache).insert(name.to_string(), Arc::clone(&executable));
         Ok(executable)
     }
 

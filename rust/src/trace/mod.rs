@@ -24,6 +24,7 @@ use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 use crate::util::logging;
+use crate::util::sync::plock;
 
 /// Per-thread ring capacity in events. Beyond it new events are dropped
 /// and counted — the buffer never grows past the cap.
@@ -98,7 +99,7 @@ pub fn enabled() -> bool {
 pub fn enable() {
     let _ = EPOCH.set(logging::epoch());
     GENERATION.fetch_add(1, Ordering::SeqCst);
-    REGISTRY.lock().unwrap().clear();
+    plock(&REGISTRY).clear();
     ENABLED.store(true, Ordering::SeqCst);
 }
 
@@ -111,11 +112,11 @@ pub fn finish() -> Option<TraceData> {
         return None;
     }
     GENERATION.fetch_add(1, Ordering::SeqCst);
-    let rings: Vec<Arc<Mutex<Ring>>> = std::mem::take(&mut *REGISTRY.lock().unwrap());
+    let rings: Vec<Arc<Mutex<Ring>>> = std::mem::take(&mut *plock(&REGISTRY));
     let mut threads = Vec::new();
     let mut dropped_events = 0u64;
     for ring in rings {
-        let mut g = ring.lock().unwrap();
+        let mut g = plock(&ring);
         dropped_events += g.dropped;
         threads.push(ThreadTrace {
             label: std::mem::take(&mut g.label),
@@ -146,11 +147,11 @@ fn with_ring(f: impl FnOnce(&mut Ring)) {
                 None => format!("{:?}", cur.id()),
             };
             let ring = Arc::new(Mutex::new(Ring::new(label, RING_CAP)));
-            REGISTRY.lock().unwrap().push(Arc::clone(&ring));
+            plock(&REGISTRY).push(Arc::clone(&ring));
             *slot = Some((generation, ring));
         }
         if let Some((_, ring)) = slot.as_ref() {
-            f(&mut ring.lock().unwrap());
+            f(&mut plock(ring));
         }
     });
 }

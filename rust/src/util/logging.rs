@@ -36,7 +36,7 @@ pub fn init() {
 /// The shared wall-clock epoch all log timestamps (and trace-event
 /// timestamps) are measured from, initializing it to "now" on first use.
 pub fn epoch() -> Instant {
-    *START.lock().unwrap().get_or_insert_with(Instant::now)
+    *crate::util::sync::plock(&START).get_or_insert_with(Instant::now)
 }
 
 /// Set the global log level (from `--log-level` or `SPEED_RL_LOG`).

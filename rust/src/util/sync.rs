@@ -1,4 +1,5 @@
-//! Poison-recovering lock primitives (DESIGN.md §13).
+//! Poison-recovering lock primitives (DESIGN.md §13) and the crate's
+//! concurrency abstraction point (DESIGN.md §15).
 //!
 //! A thread that panics while holding a `Mutex` poisons it; every later
 //! `lock().unwrap()` then panics too, cascading one replica's death into
@@ -13,25 +14,51 @@
 //! under the guard or performs only field-at-a-time writes that leave the
 //! invariants intact (queue push/pop, counter bumps, flag stores) — there
 //! are no multi-step updates that a mid-panic could tear.
+//!
+//! ## The loom swap point
+//!
+//! [`SyncMutex`], [`SyncCondvar`] and [`SyncArc`] are the primitives the
+//! two model-checked protocols — `SharedBuffer` push/pop/backpressure
+//! (`coordinator/buffer.rs`) and the pool's exactly-once seized-slot claim
+//! path (`policy/service.rs`) — declare their shared state with. They are
+//! plain aliases for the `std::sync` types today; when a vendored `loom`
+//! crate is available, flipping these aliases to `loom::sync::*` under
+//! `--cfg loom` (and re-targeting the helpers below at the alias types)
+//! swaps the model checker into both protocols without touching either
+//! module. Until then the exhaustive-interleaving explorer in
+//! `analysis::model` checks the same protocols as abstract state machines
+//! (`rust/tests/loom_sync.rs`), and `rust/ci.sh`'s loom leg soft-skips.
+//! The `speed-rl lint` L1 pass enforces that no raw `.lock()`/`.wait()`
+//! on these primitives appears outside this module.
 
 use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
 use std::time::Duration;
 
+/// The mutex type the modeled sync protocols are declared with — the
+/// single place a `--cfg loom` build would substitute `loom::sync::Mutex`.
+pub type SyncMutex<T> = Mutex<T>;
+
+/// The condvar type the modeled sync protocols are declared with.
+pub type SyncCondvar = Condvar;
+
+/// The shared-ownership type the modeled sync protocols are declared with.
+pub type SyncArc<T> = std::sync::Arc<T>;
+
 /// `m.lock()` that shrugs off poisoning: a panicked peer marks the mutex
 /// poisoned, but the data is still there and still consistent (see module
 /// docs) — take the guard and carry on.
-pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub fn plock<T>(m: &SyncMutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Poison-recovering [`Condvar::wait`].
-pub fn pwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+pub fn pwait<'a, T>(cv: &SyncCondvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
     cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// Poison-recovering [`Condvar::wait_timeout`].
 pub fn pwait_timeout<'a, T>(
-    cv: &Condvar,
+    cv: &SyncCondvar,
     guard: MutexGuard<'a, T>,
     dur: Duration,
 ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
@@ -91,5 +118,53 @@ mod tests {
             g = pwait(&pair.1, g);
         }
         waker.join().unwrap();
+    }
+
+    /// The cross-thread recovery scenario PR 8's containment story rests
+    /// on: a holder flips the protected flag, notifies, then dies with the
+    /// guard — poisoning the mutex on unwind. The waiter's wakeup
+    /// reacquisition therefore observes the poison (the holder's release
+    /// IS the panic-drop), and `pwait` must hand back a consistent guard
+    /// showing the completed write.
+    #[test]
+    fn pwait_recovers_when_the_holder_panics_mid_wait() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let holder = std::thread::spawn(move || {
+            let mut g = p2.0.lock().unwrap();
+            *g = true;
+            p2.1.notify_all();
+            // Unwind with the guard held: the release that lets the waiter
+            // reacquire is the poisoning drop itself.
+            panic!("injected holder death");
+        });
+        let mut g = plock(&pair.0);
+        while !*g {
+            g = pwait(&pair.1, g);
+        }
+        assert!(*g, "waiter recovered the guard but saw a torn write");
+        drop(g);
+        assert!(holder.join().is_err(), "holder was scripted to panic");
+        assert!(pair.0.is_poisoned());
+    }
+
+    /// Timeout-path twin of the test above: the holder poisons the mutex
+    /// with no notify at all, and a `pwait_timeout` waiter must both time
+    /// out AND recover the poisoned guard with the holder's write intact.
+    #[test]
+    fn pwait_timeout_recovers_a_lock_poisoned_by_another_thread() {
+        let pair = Arc::new((Mutex::new(0u32), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let holder = std::thread::spawn(move || {
+            let mut g = p2.0.lock().unwrap();
+            *g = 7;
+            panic!("injected holder death");
+        });
+        assert!(holder.join().is_err(), "holder was scripted to panic");
+        assert!(pair.0.is_poisoned());
+        let g = plock(&pair.0);
+        let (g, res) = pwait_timeout(&pair.1, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+        assert_eq!(*g, 7, "recovered guard must show the holder's last write");
     }
 }

@@ -28,7 +28,7 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("speedrl-worker-{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = { crate::util::sync::plock(&rx).recv() };
                         match job {
                             Ok(job) => job(),
                             Err(_) => break,

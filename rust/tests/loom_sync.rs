@@ -1,0 +1,383 @@
+//! Exhaustive model checks of the two sync protocols the repo's
+//! correctness leans on (DESIGN.md §15): the `SharedBuffer`
+//! push/pop/backpressure/close dance and the engine-pool's exactly-once
+//! seized-slot claim. Each protocol is lifted into a guarded-action model
+//! (`speed_rl::analysis::model`) whose atomic steps are exactly the
+//! critical sections of the real code — every action body below mirrors a
+//! `plock`-guarded region of `coordinator/buffer.rs` or
+//! `policy/service.rs` — and every interleaving is explored.
+//!
+//! `rust/ci.sh` runs this harness in its model-checking leg; the real
+//! `loom` build (swapping the `util::sync` aliases) is env-gated there
+//! behind `SPEED_RL_LOOM=1` because the dependency cannot be vendored
+//! offline.
+
+use speed_rl::analysis::model::{explore, Action, Model, ModelThread};
+
+// ---------------------------------------------------------------------------
+// SharedBuffer model: K producers pushing, one consumer popping exact
+// batches, one closer. Mirrors `SharedBuffer::push` / `pop_batch` /
+// `close`: the enabled-guard of an action is the predicate its condvar
+// wait blocks on, the body is what the real method does with the lock
+// held after the wait returns.
+// ---------------------------------------------------------------------------
+
+const PRODUCERS: usize = 2;
+
+#[derive(Clone)]
+struct Buf {
+    /// Queue entries: `(producer, per-producer sequence number)`.
+    q: Vec<(usize, usize)>,
+    cap: usize,
+    demand: usize,
+    pushed: usize,
+    popped: usize,
+    closed: bool,
+    /// Pushes refused (closed or demand exhausted) — the `false` returns.
+    refused: usize,
+    pushed_by: [usize; PRODUCERS],
+    last_popped: [Option<usize>; PRODUCERS],
+    fifo_ok: bool,
+    /// A pop observed `closed` with a short queue and returned `None`.
+    none_seen: bool,
+}
+
+impl Buf {
+    fn new(cap: usize, demand: usize) -> Buf {
+        Buf {
+            q: Vec::new(),
+            cap,
+            demand,
+            pushed: 0,
+            popped: 0,
+            closed: false,
+            refused: 0,
+            pushed_by: [0; PRODUCERS],
+            last_popped: [None; PRODUCERS],
+            fifo_ok: true,
+            none_seen: false,
+        }
+    }
+}
+
+/// `push` wakes from its not-full wait when there is room or the buffer
+/// closed; with the lock held it then refuses (closed / demand) or
+/// appends.
+fn push_enabled(s: &Buf, _p: usize) -> bool {
+    s.q.len() < s.cap || s.closed
+}
+
+fn push_apply(s: &mut Buf, p: usize) {
+    if s.closed || s.pushed >= s.demand {
+        s.refused += 1;
+        return;
+    }
+    s.q.push((p, s.pushed_by[p]));
+    s.pushed_by[p] += 1;
+    s.pushed += 1;
+}
+
+/// `pop_batch(b)` wakes when `b` entries are queued or the buffer closed
+/// (`tag` carries `b`); it then takes the whole batch atomically or
+/// returns `None`.
+fn pop_enabled(s: &Buf, b: usize) -> bool {
+    s.q.len() >= b || s.closed
+}
+
+fn pop_apply(s: &mut Buf, b: usize) {
+    if s.q.len() < b {
+        s.none_seen = true;
+        return;
+    }
+    for _ in 0..b {
+        let (p, seq) = s.q.remove(0);
+        if let Some(last) = s.last_popped[p] {
+            if seq != last + 1 {
+                s.fifo_ok = false;
+            }
+        } else if seq != 0 {
+            s.fifo_ok = false;
+        }
+        s.last_popped[p] = Some(seq);
+        s.popped += 1;
+    }
+}
+
+fn close_apply(s: &mut Buf, _t: usize) {
+    s.closed = true;
+}
+
+fn buf_invariant(s: &Buf) -> Result<(), String> {
+    if s.q.len() > s.cap {
+        return Err(format!("capacity exceeded: {} > {}", s.q.len(), s.cap));
+    }
+    if s.pushed != s.popped + s.q.len() {
+        return Err(format!(
+            "conservation violated: pushed {} != popped {} + len {}",
+            s.pushed,
+            s.popped,
+            s.q.len()
+        ));
+    }
+    if s.pushed > s.demand {
+        return Err(format!("demand exceeded: {} > {}", s.pushed, s.demand));
+    }
+    if !s.fifo_ok {
+        return Err("per-producer FIFO order violated".into());
+    }
+    Ok(())
+}
+
+fn producer(name: &'static str, p: usize, pushes: usize) -> ModelThread<Buf> {
+    ModelThread {
+        name,
+        actions: (0..pushes).map(|_| Action::new("push", p, push_enabled, push_apply)).collect(),
+    }
+}
+
+fn consumer(b: usize, pops: usize) -> ModelThread<Buf> {
+    ModelThread {
+        name: "consumer",
+        actions: (0..pops).map(|_| Action::new("pop", b, pop_enabled, pop_apply)).collect(),
+    }
+}
+
+fn closer() -> ModelThread<Buf> {
+    ModelThread { name: "closer", actions: vec![Action::always("close", 0, close_apply)] }
+}
+
+#[test]
+fn buffer_conserves_and_orders_under_every_schedule() {
+    // Two producers x two pushes, a consumer draining one at a time, and
+    // a closer racing everything: capacity, conservation, demand, and
+    // per-producer FIFO hold at every node of every interleaving.
+    let threads =
+        [producer("prod0", 0, 2), producer("prod1", 1, 2), consumer(1, 3), closer()];
+    let model = Model {
+        threads: &threads,
+        invariant: buf_invariant,
+        terminal: |s: &Buf| {
+            if s.pushed + s.refused == 4 {
+                Ok(())
+            } else {
+                Err(format!("push attempts unaccounted: {} + {}", s.pushed, s.refused))
+            }
+        },
+        max_states: 1_000_000,
+    };
+    let ex = explore(&model, Buf::new(2, usize::MAX)).expect("protocol holds");
+    assert!(ex.schedules > 50, "explorer barely explored: {ex:?}");
+    assert!(ex.states > ex.schedules);
+}
+
+#[test]
+fn buffer_pop_batches_are_atomic() {
+    // A consumer of exact 2-batches: at every leaf it has popped a
+    // multiple of two — no schedule lets a batch split around a close.
+    let threads = [producer("prod0", 0, 2), producer("prod1", 1, 1), consumer(2, 2), closer()];
+    let model = Model {
+        threads: &threads,
+        invariant: buf_invariant,
+        terminal: |s: &Buf| {
+            if s.popped % 2 != 0 {
+                return Err(format!("partial batch escaped: popped {}", s.popped));
+            }
+            if s.popped < 2 && !s.none_seen && !s.closed {
+                return Err("consumer finished without a batch or a refusal".into());
+            }
+            Ok(())
+        },
+        max_states: 1_000_000,
+    };
+    explore(&model, Buf::new(4, usize::MAX)).expect("protocol holds");
+}
+
+#[test]
+fn buffer_batch_above_capacity_without_close_deadlocks() {
+    // The known wedge the runtime validates against: a batch larger than
+    // the buffer capacity with nobody closing. The producer fills the
+    // one-slot buffer and blocks; the consumer waits for two entries that
+    // can never coexist. The explorer must report the deadlock (this is
+    // why run drivers validate `B <= cap` up front).
+    let threads = [producer("prod0", 0, 2), consumer(2, 1)];
+    let model = Model {
+        threads: &threads,
+        invariant: buf_invariant,
+        terminal: |_: &Buf| Ok(()),
+        max_states: 10_000,
+    };
+    let err = explore(&model, Buf::new(1, usize::MAX)).expect_err("must deadlock");
+    assert!(err.contains("deadlock"), "unexpected failure: {err}");
+}
+
+#[test]
+fn buffer_demand_cap_stops_producers_in_every_schedule() {
+    // Demand capped at 2 with 4 push attempts: exactly the surplus is
+    // refused, under every interleaving with the racing closer.
+    let threads = [producer("prod0", 0, 2), producer("prod1", 1, 2), consumer(1, 2), closer()];
+    let model = Model {
+        threads: &threads,
+        invariant: buf_invariant,
+        terminal: |s: &Buf| {
+            if s.pushed + s.refused != 4 {
+                return Err(format!("attempts unaccounted: {} + {}", s.pushed, s.refused));
+            }
+            Ok(())
+        },
+        max_states: 1_000_000,
+    };
+    explore(&model, Buf::new(4, 2)).expect("protocol holds");
+}
+
+// ---------------------------------------------------------------------------
+// Exactly-once seized-slot claim: the `claim_inflight` / watchdog-seize
+// protocol of `policy/service.rs`. One replica finishing an execution
+// races the watchdog deciding the same execution stalled. Both critical
+// sections run under the single pool-state lock, so each is one atomic
+// action; the model checks that exactly one party delivers the plan under
+// every schedule, and that a protocol missing the `abandoned` check
+// double-delivers (i.e. the flag is load-bearing, not ceremonial).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct Claim {
+    /// `exec_started[r].is_some()` — the replica is mid-execution.
+    exec_started: bool,
+    live: bool,
+    abandoned: bool,
+    /// `inflight_plan[r].is_some()` — the shadow plan is still parked.
+    inflight: bool,
+    by_replica: usize,
+    by_peer: usize,
+    discarded: usize,
+}
+
+fn claim_init() -> Claim {
+    // Mid-execution snapshot: the dispatcher parked the shadow plan and
+    // stamped exec_started before the engine call began.
+    Claim {
+        exec_started: true,
+        live: true,
+        abandoned: false,
+        inflight: true,
+        by_replica: 0,
+        by_peer: 0,
+        discarded: 0,
+    }
+}
+
+/// `claim_inflight`: the replica resolves its shadow at execution end.
+/// On `Ok` it owns the result and delivers; on `Err` (seized) it
+/// discards everything.
+fn finish_apply(s: &mut Claim, _t: usize) {
+    if s.abandoned {
+        s.abandoned = false;
+        s.discarded += 1;
+    } else {
+        s.exec_started = false;
+        s.inflight = false;
+        s.by_replica += 1;
+    }
+}
+
+/// A buggy `claim_inflight` with the `abandoned` check elided — delivers
+/// unconditionally. Used to prove the explorer actually catches the
+/// double-delivery this protocol exists to prevent.
+fn buggy_finish_apply(s: &mut Claim, _t: usize) {
+    s.exec_started = false;
+    s.inflight = false;
+    s.by_replica += 1;
+}
+
+/// One `watchdog_scan` visit to this replica with the timeout already
+/// expired: a live mid-execution replica is quarantined, its shadow
+/// seized and redispatched to a healthy peer (which then delivers it —
+/// counted here, since redispatch hands the plan over atomically under
+/// the same lock).
+fn scan_apply(s: &mut Claim, _t: usize) {
+    if s.exec_started && s.live {
+        s.live = false;
+        s.abandoned = true;
+        s.exec_started = false;
+        if s.inflight {
+            s.inflight = false;
+            s.by_peer += 1;
+        }
+    }
+}
+
+fn claim_invariant(s: &Claim) -> Result<(), String> {
+    if s.by_replica + s.by_peer > 1 {
+        return Err(format!(
+            "plan delivered {} times (replica {}, peer {})",
+            s.by_replica + s.by_peer,
+            s.by_replica,
+            s.by_peer
+        ));
+    }
+    Ok(())
+}
+
+fn claim_terminal(s: &Claim) -> Result<(), String> {
+    if s.by_replica + s.by_peer != 1 {
+        return Err(format!(
+            "plan delivered {} times at quiescence",
+            s.by_replica + s.by_peer
+        ));
+    }
+    if s.inflight {
+        return Err("shadow plan leaked".into());
+    }
+    if s.abandoned {
+        return Err("abandoned flag leaked past the replica's exit".into());
+    }
+    if s.by_peer != s.discarded {
+        return Err(format!(
+            "seizure/discard mismatch: peer delivered {} but the zombie discarded {}",
+            s.by_peer, s.discarded
+        ));
+    }
+    Ok(())
+}
+
+fn claim_threads(finish: fn(&mut Claim, usize)) -> [ModelThread<Claim>; 2] {
+    [
+        ModelThread { name: "replica", actions: vec![Action::always("finish", 0, finish)] },
+        ModelThread {
+            name: "watchdog",
+            actions: vec![Action::always("scan", 0, scan_apply), Action::always("scan2", 0, scan_apply)],
+        },
+    ]
+}
+
+#[test]
+fn seized_slot_claim_delivers_exactly_once() {
+    // Replica finish racing two watchdog scans (one may land before the
+    // finish, one after): every interleaving delivers the plan exactly
+    // once, leaks no shadow, and clears the abandoned flag.
+    let threads = claim_threads(finish_apply);
+    let model = Model {
+        threads: &threads,
+        invariant: claim_invariant,
+        terminal: claim_terminal,
+        max_states: 10_000,
+    };
+    let ex = explore(&model, claim_init()).expect("exactly-once claim holds");
+    assert_eq!(ex.schedules, 3, "3 orderings of finish among two scans");
+}
+
+#[test]
+fn buggy_claim_without_abandoned_flag_is_caught() {
+    // Elide the abandoned check and the seize/finish race double-delivers
+    // — the explorer must find that schedule and name it.
+    let threads = claim_threads(buggy_finish_apply);
+    let model = Model {
+        threads: &threads,
+        invariant: claim_invariant,
+        terminal: claim_terminal,
+        max_states: 10_000,
+    };
+    let err = explore(&model, claim_init()).expect_err("double delivery must surface");
+    assert!(err.contains("delivered"), "unexpected failure: {err}");
+    assert!(err.contains("watchdog.scan"), "schedule missing: {err}");
+}
